@@ -1,0 +1,61 @@
+//! Compression-for-free differential privacy (§5): SIGM vs the CSGM
+//! baseline at a matched privacy budget and bit budget, plus the
+//! aggregate-Gaussian-vs-DDG comparison of the less-trusted-server setting.
+//!
+//! Run: `cargo run --release --example dp_mean_estimation`
+
+use exact_comp::apps::mean_estimation::{evaluate, gen_data, DataKind};
+use exact_comp::baselines::{Csgm, Ddg};
+use exact_comp::dp::accountant::analytic_gaussian_sigma;
+use exact_comp::mechanisms::traits::MeanMechanism;
+use exact_comp::mechanisms::{AggregateGaussian, Sigm};
+
+fn main() {
+    let delta = 1e-5;
+
+    // --- trusted server: SIGM vs CSGM (the Fig. 5 setting) ---------------
+    println!("== trusted server: SIGM vs CSGM (n=500, d=100, gamma=0.5) ==");
+    let (n, d, gamma) = (500usize, 100usize, 0.5f64);
+    let c = 1.0 / (d as f64).sqrt();
+    let xs = gen_data(DataKind::BernoulliUniform { p: 0.8 }, n, d, 1);
+    println!("{:>5} {:>10} {:>12} {:>12} {:>8}", "eps", "sigma", "MSE SIGM", "MSE CSGM", "bits");
+    for eps in [0.5, 1.0, 2.0, 4.0] {
+        let sens = (gamma * d as f64).sqrt() * c / (gamma * n as f64);
+        let sigma = analytic_gaussian_sigma(eps, delta, sens);
+        let sigm = Sigm::new(sigma, gamma, c);
+        let r_sigm = evaluate(&sigm, &xs, 20, 100);
+        let probe = sigm.aggregate(&xs, 3);
+        let bits = (probe.bits.fixed_total.unwrap() / probe.bits.messages as f64).ceil();
+        let csgm = Csgm::new(sigma, gamma, c, bits as u32);
+        let r_csgm = evaluate(&csgm, &xs, 20, 100);
+        println!(
+            "{eps:>5} {sigma:>10.3e} {:>12.4e} {:>12.4e} {bits:>8}",
+            r_sigm.mse_mean, r_csgm.mse_mean
+        );
+    }
+
+    // --- less-trusted server: aggregate Gaussian vs DDG (Fig. 6) ---------
+    println!("\n== less-trusted server: aggregate Gaussian vs DDG (n=200, d=75) ==");
+    let (n, d) = (200usize, 75usize);
+    let radius = 10.0;
+    let xs = gen_data(DataKind::Sphere { radius }, n, d, 2);
+    println!(
+        "{:>5} {:>12} {:>10} {:>14} {:>14}",
+        "eps", "MSE agg", "agg bits/c", "MSE DDG b=12", "MSE DDG b=18"
+    );
+    for eps in [2.0, 4.0, 8.0] {
+        let sigma = analytic_gaussian_sigma(eps, delta, 2.0 * radius / n as f64);
+        let agg = evaluate(&AggregateGaussian::new(sigma, 2.0 * radius), &xs, 15, 200);
+        let ddg12 = evaluate(&Ddg::calibrated(eps, delta, radius, n, d, 12, 0.1), &xs, 8, 201);
+        let ddg18 = evaluate(&Ddg::calibrated(eps, delta, radius, n, d, 18, 0.1), &xs, 8, 202);
+        println!(
+            "{eps:>5} {:>12.4e} {:>10.2} {:>14.4e} {:>14.4e}",
+            agg.mse_mean,
+            agg.bits_var_per_client / d as f64,
+            ddg12.mse_mean,
+            ddg18.mse_mean
+        );
+    }
+    println!("\n(aggregate Gaussian matches the Gaussian mechanism at ~2-4 bits/coordinate;");
+    println!(" DDG needs 12-18 bits to approach the same utility — Fig. 6's headline)");
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX (L2) + Pallas (L1)  ->  artifacts/*.hlo.txt for rust.
+
+The interchange format is HLO TEXT, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Artifacts (+ manifest.txt describing every input/output shape):
+  model_grad.hlo.txt   (flat_params[P], xb[B,DIN], yb[B]i32) -> (loss, grad[P])
+  model_eval.hlo.txt   (flat_params[P], xb[B,DIN], yb[B]i32) -> (loss, acc)
+  encode.hlo.txt       (x[N,D], s[N,D], inv_scale)           -> (m[N,D],)
+  decode_mean.hlo.txt  (m_sum[D], s_sum[D], scale, shift, n) -> (y[D],)
+
+Run once via `make artifacts`; python never runs on the request path.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default e2e shapes. The rust runtime reads the manifest, so changing these
+# only requires re-running `make artifacts`.
+D_IN = 32
+HIDDEN = 64
+CLASSES = 2
+BATCH = 64
+ENC_CLIENTS = 32  # clients encoded per kernel launch
+ENC_DIM = 2304  # padded parameter dimension (next multiple of 128 >= P)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(out_dir: str, d_in=D_IN, hidden=HIDDEN, classes=CLASSES,
+                    batch=BATCH, enc_clients=ENC_CLIENTS, enc_dim=ENC_DIM):
+    os.makedirs(out_dir, exist_ok=True)
+    p = model.param_count(d_in, hidden, classes)
+
+    grad_fn = functools.partial(
+        model.model_grad, d_in=d_in, hidden=hidden, classes=classes
+    )
+    eval_fn = functools.partial(
+        model.model_eval, d_in=d_in, hidden=hidden, classes=classes
+    )
+
+    entries = {
+        "model_grad": (
+            grad_fn,
+            (_spec((p,)), _spec((batch, d_in)), _spec((batch,), jnp.int32)),
+        ),
+        "model_eval": (
+            eval_fn,
+            (_spec((p,)), _spec((batch, d_in)), _spec((batch,), jnp.int32)),
+        ),
+        "encode": (
+            model.encode_batch,
+            (
+                _spec((enc_clients, enc_dim)),
+                _spec((enc_clients, enc_dim)),
+                _spec(()),
+            ),
+        ),
+        "decode_mean": (
+            model.decode_mean,
+            (_spec((enc_dim,)), _spec((enc_dim,)), _spec(()), _spec(()), _spec(())),
+        ),
+    }
+
+    manifest = [
+        f"d_in={d_in}", f"hidden={hidden}", f"classes={classes}",
+        f"batch={batch}", f"param_count={p}",
+        f"enc_clients={enc_clients}", f"enc_dim={enc_dim}",
+    ]
+    for name, (fn, specs) in entries.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{tuple(s.shape)}:{s.dtype.name if hasattr(s.dtype, 'name') else s.dtype}"
+            for s in specs
+        )
+        manifest.append(f"artifact={name} inputs={shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d-in", type=int, default=D_IN)
+    ap.add_argument("--hidden", type=int, default=HIDDEN)
+    ap.add_argument("--classes", type=int, default=CLASSES)
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--enc-clients", type=int, default=ENC_CLIENTS)
+    ap.add_argument("--enc-dim", type=int, default=ENC_DIM)
+    args = ap.parse_args()
+    build_artifacts(
+        args.out_dir, args.d_in, args.hidden, args.classes, args.batch,
+        args.enc_clients, args.enc_dim,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+path; real-TPU efficiency is *estimated* from the BlockSpec tiling (see
+DESIGN.md section "Hardware adaptation" and EXPERIMENTS.md section "Perf").
+"""
+
+from .dither import dither_encode, dither_decode_mean
+from .matmul import matmul
+
+__all__ = ["dither_encode", "dither_decode_mean", "matmul"]

@@ -1,0 +1,130 @@
+"""Pallas kernels for subtractive-dither encode / decode.
+
+These are the per-coordinate hot spots of every AINQ mechanism in the paper
+(Example 1, Definitions 4, 5, 8):
+
+    encode:  m  = round(x * inv_scale + s)          (round half up, paper's
+                                                     notation ceil(v) := floor(v + 1/2))
+    decode:  y  = scale * (sum_m - sum_s) / n + b   (homomorphic decode of the
+                                                     Irwin-Hall / aggregate Q
+                                                     mechanism, Def. 8)
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the encode is a fused
+elementwise op over a (clients x d) matrix. We tile it into (8, 128)
+sublane-by-lane VMEM blocks so that each grid step is a single VPU vector op
+on a resident tile; there is no MXU work here. The decode is a vector
+reduction with the same tiling. ``interpret=True`` everywhere (CPU PJRT
+cannot run Mosaic custom-calls); numerics are validated against
+``ref.py`` by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: 8 sublanes x 128 lanes = one float32 VREG tile on TPU.
+_BLOCK_ROWS = 8
+_BLOCK_COLS = 128
+
+
+def _round_half_up(v):
+    """The paper's quantizer rounding: ceil(v) := floor(v + 1/2)."""
+    return jnp.floor(v + 0.5)
+
+
+def _encode_kernel(x_ref, s_ref, inv_scale_ref, m_ref):
+    inv_scale = inv_scale_ref[0]
+    m_ref[...] = _round_half_up(x_ref[...] * inv_scale + s_ref[...])
+
+
+def _pad2(a, rows, cols):
+    """Zero-pad a 2-d array up to (rows, cols)."""
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dither_encode(x, s, inv_scale):
+    """Batched subtractive-dither encoder.
+
+    Args:
+      x: (n, d) float32 client data (rows = clients).
+      s: (n, d) float32 dither, U(-1/2, 1/2) shared randomness.
+      inv_scale: scalar float32, 1 / (a * w) in the aggregate mechanism.
+
+    Returns:
+      (n, d) float32 of integer-valued descriptions ``m``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    n, d = x.shape
+    rows = -(-n // _BLOCK_ROWS) * _BLOCK_ROWS
+    cols = -(-d // _BLOCK_COLS) * _BLOCK_COLS
+    xp, sp = _pad2(x, rows, cols), _pad2(s, rows, cols)
+    inv = jnp.reshape(jnp.asarray(inv_scale, jnp.float32), (1,))
+
+    grid = (rows // _BLOCK_ROWS, cols // _BLOCK_COLS)
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i, j: (i, j)),
+            pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(xp, sp, inv)
+    return out[:n, :d]
+
+
+def _decode_kernel(msum_ref, ssum_ref, scale_ref, shift_ref, inv_n_ref, y_ref):
+    scale = scale_ref[0]
+    shift = shift_ref[0]
+    inv_n = inv_n_ref[0]
+    y_ref[...] = scale * inv_n * (msum_ref[...] - ssum_ref[...]) + shift
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dither_decode_mean(m_sum, s_sum, scale, shift, n_clients):
+    """Homomorphic decode of Def. 8: y = (a*w/n) (sum m - sum s) + b.
+
+    Args:
+      m_sum: (d,) float32 sum of descriptions (e.g. out of SecAgg).
+      s_sum: (d,) float32 sum of the dithers.
+      scale: scalar a*w.
+      shift: scalar b.
+      n_clients: scalar float32 n.
+
+    Returns:
+      (d,) float32 mean estimate.
+    """
+    m_sum = jnp.asarray(m_sum, jnp.float32)
+    s_sum = jnp.asarray(s_sum, jnp.float32)
+    d = m_sum.shape[0]
+    cols = -(-d // _BLOCK_COLS) * _BLOCK_COLS
+    mp = jnp.pad(m_sum, (0, cols - d)).reshape(1, cols)
+    sp = jnp.pad(s_sum, (0, cols - d)).reshape(1, cols)
+    args = [
+        jnp.reshape(jnp.asarray(scale, jnp.float32), (1,)),
+        jnp.reshape(jnp.asarray(shift, jnp.float32), (1,)),
+        jnp.reshape(1.0 / jnp.asarray(n_clients, jnp.float32), (1,)),
+    ]
+    grid = (cols // _BLOCK_COLS,)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK_COLS), lambda j: (0, j)),
+            pl.BlockSpec((1, _BLOCK_COLS), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK_COLS), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, cols), jnp.float32),
+        interpret=True,
+    )(mp, sp, *args)
+    return out[0, :d]

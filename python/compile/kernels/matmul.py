@@ -1,0 +1,81 @@
+"""Tiled Pallas matmul used by the L2 FL model (MLP forward/backward).
+
+TPU mapping: (M, K) x (K, N) decomposed on a (M/bm, N/bn, K/bk) grid with
+128 x 128 output tiles accumulated in float32 across the K grid axis — the
+MXU-systolic shape (bf16/fp32 tiles feeding a 128x128 systolic array), not a
+CUDA threadblock/WMMA decomposition. The output block is revisited across
+the k axis and accumulated in place.
+
+VMEM per grid step = bm*bk + bk*bn + bm*bn float32
+                   = 3 * 128 * 128 * 4 B = 192 KiB  << 16 MiB VMEM.
+
+Differentiation: ``pallas_call`` has no automatic vjp, so ``matmul`` carries
+a ``jax.custom_vjp`` whose backward pass re-uses the same kernel
+(dX = dY @ W^T, dW = X^T @ dY) — every FLOP of fwd *and* bwd goes through
+the tiled kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BM = 128
+_BK = 128
+_BN = 128
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v, b):
+    return -(-v // b) * b
+
+
+def _matmul_raw(x, y):
+    """Tiled matmul on zero-padded inputs; returns the unpadded product."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    mp, kp, np_ = _ceil_to(m, _BM), _ceil_to(k, _BK), _ceil_to(n, _BN)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // _BM, np_ // _BN, kp // _BK)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BM, _BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((_BK, _BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((_BM, _BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """float32 (m,k) @ (k,n) through the tiled Pallas kernel."""
+    return _matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return _matmul_raw(g, y.T), _matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

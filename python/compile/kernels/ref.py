@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/values with hypothesis
+and asserts the kernels match these references — the CORE correctness
+signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def round_half_up(v):
+    return jnp.floor(v + 0.5)
+
+
+def dither_encode_ref(x, s, inv_scale):
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    return round_half_up(x * jnp.float32(inv_scale) + s)
+
+
+def dither_decode_mean_ref(m_sum, s_sum, scale, shift, n_clients):
+    m_sum = jnp.asarray(m_sum, jnp.float32)
+    s_sum = jnp.asarray(s_sum, jnp.float32)
+    return (
+        jnp.float32(scale) / jnp.float32(n_clients) * (m_sum - s_sum)
+        + jnp.float32(shift)
+    )
+
+
+def matmul_ref(x, y):
+    return jnp.dot(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(y, jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,93 @@
+"""Layer-2 JAX model: the FL workload executed by the rust coordinator.
+
+The paper's applications run FedSGD-style rounds: every client computes the
+gradient of a local loss, the gradients are compressed with an exact-error
+mechanism, and the server updates the model from the aggregate. This module
+defines the *compute graph* for those rounds:
+
+  * a 2-layer MLP classifier (the e2e FL training workload): forward /
+    loss / flat gradient, with every dense product going through the
+    L1 Pallas ``matmul`` kernel (fwd AND bwd — see kernels/matmul.py);
+  * the dither encode / homomorphic decode steps as L1 Pallas kernels so
+    the whole per-round pipeline lowers into a single pair of HLO modules.
+
+Everything is shaped for AOT lowering (see aot.py): parameters travel as a
+single flat float32 vector so the rust side never needs pytree logic.
+
+Default e2e shapes (overridable via aot.py flags):
+  d_in=32, hidden=64, classes=2, client batch B=64
+  P = 32*64 + 64 + 64*2 + 2 = 2242 parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dither_encode, dither_decode_mean, matmul
+
+# ---------------------------------------------------------------------------
+# MLP definition over a flat parameter vector
+# ---------------------------------------------------------------------------
+
+
+def param_count(d_in: int, hidden: int, classes: int) -> int:
+    return d_in * hidden + hidden + hidden * classes + classes
+
+
+def unflatten(flat, d_in: int, hidden: int, classes: int):
+    """Split the flat parameter vector into (W1, b1, W2, b2)."""
+    o = 0
+    w1 = flat[o : o + d_in * hidden].reshape(d_in, hidden)
+    o += d_in * hidden
+    b1 = flat[o : o + hidden]
+    o += hidden
+    w2 = flat[o : o + hidden * classes].reshape(hidden, classes)
+    o += hidden * classes
+    b2 = flat[o : o + classes]
+    return w1, b1, w2, b2
+
+
+def _logits(flat, xb, d_in, hidden, classes):
+    w1, b1, w2, b2 = unflatten(flat, d_in, hidden, classes)
+    h = jnp.tanh(matmul(xb, w1) + b1)
+    return matmul(h, w2) + b2
+
+
+def _xent(logits, yb):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+
+def loss_fn(flat, xb, yb, d_in, hidden, classes):
+    """Mean softmax cross-entropy of the MLP on one client batch."""
+    return _xent(_logits(flat, xb, d_in, hidden, classes), yb)
+
+
+def model_grad(flat, xb, yb, *, d_in, hidden, classes):
+    """(loss, flat gradient) for one client batch — the FedSGD client step."""
+    loss, grad = jax.value_and_grad(loss_fn)(
+        flat, xb, yb, d_in, hidden, classes
+    )
+    return loss, grad
+
+
+def model_eval(flat, xb, yb, *, d_in, hidden, classes):
+    """(loss, accuracy) on a batch — the server-side eval step."""
+    logits = _logits(flat, xb, d_in, hidden, classes)
+    loss = _xent(logits, yb)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == yb).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Compression pipeline entry points (thin wrappers over L1 kernels)
+# ---------------------------------------------------------------------------
+
+
+def encode_batch(x, s, inv_scale):
+    """Quantize a (clients, d) block of vectors: m = round(x*inv_scale + s)."""
+    return dither_encode(x, s, inv_scale)
+
+
+def decode_mean(m_sum, s_sum, scale, shift, n_clients):
+    """Homomorphic decode (Def. 8): y = scale/n * (m_sum - s_sum) + shift."""
+    return dither_decode_mean(m_sum, s_sum, scale, shift, n_clients)

@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dither_encode, dither_decode_mean, matmul
+from compile.kernels.ref import (
+    dither_encode_ref,
+    dither_decode_mean_ref,
+    matmul_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _arr(rng, shape, lo=-100.0, hi=100.0):
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# dither encode
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    d=st.integers(1, 400),
+    inv_scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dither_encode_matches_ref(n, d, inv_scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, d))
+    s = rng.uniform(-0.5, 0.5, size=(n, d)).astype(np.float32)
+    got = np.asarray(dither_encode(x, s, inv_scale))
+    want = np.asarray(dither_encode_ref(x, s, inv_scale))
+    # XLA may fuse x*inv_scale+s into an fma while interpret mode computes in
+    # two float32 ops; at exact round-half ties this flips floor(v + 0.5) by
+    # one. Accept off-by-one ONLY at near-tie points.
+    diff = got - want
+    mism = diff != 0
+    if mism.any():
+        assert np.all(np.abs(diff[mism]) <= 1.0)
+        v = x.astype(np.float64) * float(np.float32(inv_scale)) + s
+        frac = v[mism] - np.floor(v[mism])
+        # "near tie" is relative to the float32 ULP of v (large v => wide ties)
+        tol = 4 * np.spacing(np.abs(v[mism]).astype(np.float32)) + 1e-6
+        assert np.all(np.abs(frac - 0.5) < tol), (frac, tol)
+
+
+def test_dither_encode_integer_valued():
+    rng = np.random.default_rng(0)
+    x = _arr(rng, (16, 257))
+    s = rng.uniform(-0.5, 0.5, size=(16, 257)).astype(np.float32)
+    m = np.asarray(dither_encode(x, s, 0.37))
+    np.testing.assert_array_equal(m, np.round(m))
+
+
+def test_dither_encode_uniform_error():
+    """Subtractive dithering error ~ U(-w/2, w/2) (Example 1): moment check."""
+    rng = np.random.default_rng(1)
+    w = 0.8
+    x = _arr(rng, (64, 512), -10, 10)
+    s = rng.uniform(-0.5, 0.5, size=x.shape).astype(np.float32)
+    m = np.asarray(dither_encode(x, s, 1.0 / w))
+    y = (m - s) * w
+    err = (y - x).ravel()
+    assert np.all(np.abs(err) <= w / 2 + 1e-5)
+    assert abs(err.mean()) < 0.01
+    assert abs(err.var() - w**2 / 12) < 0.01
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
+def test_dither_decode_matches_ref(d, seed):
+    rng = np.random.default_rng(seed)
+    m_sum = _arr(rng, (d,), -1e4, 1e4)
+    s_sum = _arr(rng, (d,), -50, 50)
+    scale, shift, n = 0.123, -4.2, 17.0
+    got = np.asarray(dither_decode_mean(m_sum, s_sum, scale, shift, n))
+    want = np.asarray(dither_decode_mean_ref(m_sum, s_sum, scale, shift, n))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_encode_decode_roundtrip_mean():
+    """n-client Irwin–Hall round trip: decode(sum encode) ≈ mean + IH noise."""
+    rng = np.random.default_rng(7)
+    n, d, sigma = 16, 256, 0.5
+    w = 2 * sigma * np.sqrt(3 * n)
+    x = _arr(rng, (n, d), -5, 5)
+    s = rng.uniform(-0.5, 0.5, size=(n, d)).astype(np.float32)
+    m = np.asarray(dither_encode(x, s, 1.0 / w))
+    y = np.asarray(
+        dither_decode_mean(m.sum(axis=0), s.sum(axis=0), w, 0.0, float(n))
+    )
+    err = y - x.mean(axis=0)
+    # IH(n, 0, sigma^2) has mean 0, variance sigma^2, support sigma*sqrt(3n)
+    assert np.all(np.abs(err) <= sigma * np.sqrt(3 * n) + 1e-4)
+    assert abs(err.mean()) < 5 * sigma / np.sqrt(d)
+    assert abs(err.var() - sigma**2) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k), -2, 2)
+    y = _arr(rng, (k, n), -2, 2)
+    got = np.asarray(matmul(x, y))
+    want = np.asarray(matmul_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_multi_k_tiles():
+    """K > block size exercises the accumulate-over-k grid axis."""
+    rng = np.random.default_rng(3)
+    x = _arr(rng, (64, 300), -1, 1)
+    y = _arr(rng, (300, 32), -1, 1)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, y)), np.asarray(matmul_ref(x, y)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_gradients_match_jnp():
+    """custom_vjp path: grads of a scalar loss agree with pure-jnp grads."""
+    rng = np.random.default_rng(4)
+    x = _arr(rng, (9, 17), -1, 1)
+    y = _arr(rng, (17, 5), -1, 1)
+
+    def f_pallas(x, y):
+        return jnp.sum(jnp.tanh(matmul(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.tanh(matmul_ref(x, y)))
+
+    gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(ry), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,84 @@
+//! Coordinator / substrate benchmarks: round loop, SecAgg masking, FWHT,
+//! Huffman construction, statistics.
+
+use std::sync::Arc;
+
+use exact_comp::coordinator::runtime::{run_round, ClientPool};
+use exact_comp::mechanisms::IrwinHallMechanism;
+use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
+use exact_comp::transforms::hadamard::{fwht, RandomizedRotation};
+use exact_comp::util::benchkit::{black_box, Suite};
+use exact_comp::util::rng::Rng;
+use exact_comp::util::stats::ks_test;
+
+fn main() {
+    let mut s = Suite::new();
+
+    // round loop: parallel local compute + aggregation
+    for n in [8usize, 64] {
+        let d = 256;
+        let pool = ClientPool::spawn(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let mut round = 0u64;
+        s.bench_elements(&format!("coordinator/round(n={n},d={d})"), Some((n * d) as u64), || {
+            round += 1;
+            black_box(run_round(&pool, &mech, round, &[], 42));
+        });
+    }
+
+    // SecAgg masking
+    {
+        let params = SecAggParams::default();
+        let ms: Vec<i64> = (0..512).map(|i| (i % 13) as i64 - 6).collect();
+        s.bench_elements("secagg/mask(d=512,n=16)", Some(512), || {
+            black_box(mask_descriptions(&ms, 3, 16, 7, params));
+        });
+        let masked: Vec<Vec<u64>> =
+            (0..16).map(|i| mask_descriptions(&ms, i, 16, 7, params)).collect();
+        s.bench_elements("secagg/aggregate(d=512,n=16)", Some(512 * 16), || {
+            black_box(aggregate_masked(&masked, params));
+        });
+    }
+
+    // FWHT + rotation
+    {
+        let mut rng = Rng::new(1);
+        let mut v: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        s.bench_elements("transforms/fwht(4096)", Some(4096), || {
+            fwht(black_box(&mut v));
+        });
+        let rot = RandomizedRotation::new(4096, 5);
+        let x: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        s.bench_elements("transforms/rotation_fwd(4096)", Some(4096), || {
+            black_box(rot.forward(&x));
+        });
+    }
+
+    // Huffman build from an empirical description table
+    {
+        let mut counts = std::collections::HashMap::new();
+        for m in -40i64..=40 {
+            counts.insert(m, (1000.0 * (-0.15 * (m.abs() as f64)).exp()) as u64 + 1);
+        }
+        s.bench("coding/huffman_build(81 symbols)", || {
+            black_box(exact_comp::coding::huffman::Huffman::from_counts(&counts));
+        });
+    }
+
+    // KS test (the AINQ verifier)
+    {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        s.bench_elements("stats/ks_test(4000)", Some(4000), || {
+            black_box(ks_test(&xs, exact_comp::util::special::norm_cdf));
+        });
+    }
+
+    s.report();
+}

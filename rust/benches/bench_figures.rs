@@ -1,0 +1,91 @@
+//! One benchmark per paper table/figure: times the core evaluation unit of
+//! each experiment so regressions in any figure pipeline are visible.
+
+use exact_comp::apps::langevin::{fig10_arm, Fig10Arm, GaussianPosterior, LangevinOpts};
+use exact_comp::apps::mean_estimation::{evaluate, gen_data, DataKind};
+use exact_comp::apps::smoothing::{drs_compressed, L1Problem, SmoothingOpts};
+use exact_comp::coding::entropy::cond_entropy_given_step;
+use exact_comp::dist::{Gaussian, Unimodal};
+use exact_comp::mechanisms::{AggregateGaussian, Decomposer};
+use exact_comp::util::benchkit::{black_box, Suite};
+
+fn main() {
+    let mut s = Suite::new();
+
+    // Fig 2: one exact conditional-entropy evaluation
+    s.bench("fig2/cond_entropy(t=1024)", || {
+        black_box(cond_entropy_given_step(1024.0, 1.3, 0.37));
+    });
+    let g = Gaussian::new(0.0, 1.0);
+    s.bench("fig2/layer_height_entropy", || {
+        black_box(g.layer_height_entropy());
+    });
+
+    // Fig 4: Theorem-1 ingredients
+    s.bench("fig4/decomposer_build(n=512)", || {
+        black_box(Decomposer::new(512));
+    });
+    let dec = Decomposer::new(512);
+    s.bench("fig4/expected_neg_log_a(500 reps)", || {
+        black_box(dec.expected_neg_log_a(500, 7));
+    });
+
+    // Fig 5/7: one (n, d, γ, ε) evaluation point (reduced size)
+    s.bench("fig5/eval_point(n=100,d=32)", || {
+        black_box(exact_comp::figures::fig5::eval_point(100, 32, 0.5, 2.0, 3, 5));
+    });
+
+    // Fig 6/8: one ε row without DDG and one DDG aggregation
+    s.bench("fig6/eval_row_no_ddg(n=100,d=75)", || {
+        black_box(exact_comp::figures::fig6::eval_row(100, 75, 4.0, 3, 6, &[]));
+    });
+    {
+        let xs = gen_data(DataKind::Sphere { radius: 10.0 }, 50, 75, 8);
+        let ddg = exact_comp::baselines::Ddg::calibrated(4.0, 1e-5, 10.0, 50, 75, 16, 0.1);
+        let mut seed = 0u64;
+        s.bench("fig6/ddg_round(n=50,d=75,b=16)", || {
+            seed += 1;
+            black_box(exact_comp::mechanisms::traits::MeanMechanism::aggregate(
+                &ddg, &xs, seed,
+            ));
+        });
+    }
+
+    // Fig 9: bits evaluation
+    s.bench("fig9/eval_row(n=100,d=32)", || {
+        black_box(exact_comp::figures::fig9::eval_row(100, 32, 4.0, 2, 9));
+    });
+
+    // Fig 10: a short QLSD*-MS chain
+    let p = GaussianPosterior::generate(20, 50, 50, 11);
+    s.bench("fig10/qlsd_ms_chain(2000 iters)", || {
+        let o = LangevinOpts {
+            gamma: 5e-4,
+            iters: 2000,
+            burn_in: 1000,
+            seed: 3,
+            discount_compression_noise: true,
+        };
+        black_box(fig10_arm(&p, Fig10Arm::QlsdMs(8), o));
+    });
+
+    // Table 1: one aggregation round of the verified mechanism
+    {
+        let xs = gen_data(DataKind::BoxUniform { c: 2.0 }, 6, 4, 12);
+        let agg = AggregateGaussian::new(1.0, 4.0);
+        s.bench("table1/verification_round", || {
+            black_box(evaluate(&agg, &xs, 1, 13));
+        });
+    }
+
+    // App D: a DRS step block
+    let prob = L1Problem::generate(60, 10, 6, 14);
+    s.bench("appd/drs_50_iters", || {
+        black_box(drs_compressed(
+            &prob,
+            SmoothingOpts { iters: 50, lr: 0.25, sigma: 0.05, m_samples: 2, seed: 15 },
+        ));
+    });
+
+    s.report();
+}

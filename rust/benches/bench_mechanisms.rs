@@ -1,0 +1,123 @@
+//! Hot-path micro-benchmarks: quantizer draws, mechanism encode/decode,
+//! decomposition sampling, entropy coding. (criterion is unavailable in
+//! the offline registry; `benchkit` is the in-repo harness.)
+
+use exact_comp::baselines::{Csgm, Ddg, VectorCompressor};
+use exact_comp::coding::elias;
+use exact_comp::dist::{Gaussian, Laplace};
+use exact_comp::mechanisms::traits::MeanMechanism;
+use exact_comp::mechanisms::{
+    AggregateGaussian, Decomposer, IndividualGaussian, IrwinHallMechanism, LayeredVariant, Sigm,
+};
+use exact_comp::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered, SubtractiveDither};
+use exact_comp::util::benchkit::{black_box, Suite};
+use exact_comp::util::rng::Rng;
+
+fn main() {
+    let mut s = Suite::new();
+    let mut rng = Rng::new(1);
+
+    // --- point quantizers -------------------------------------------------
+    let dither = SubtractiveDither::new(1.0);
+    s.bench("quantizer/dither/quantize", || {
+        black_box(dither.quantize(black_box(3.7), &mut rng));
+    });
+    let direct = DirectLayered::new(Gaussian::new(0.0, 1.0));
+    s.bench("quantizer/direct_gaussian/quantize", || {
+        black_box(direct.quantize(black_box(3.7), &mut rng));
+    });
+    let shifted = ShiftedLayered::new(Gaussian::new(0.0, 1.0));
+    s.bench("quantizer/shifted_gaussian/quantize", || {
+        black_box(shifted.quantize(black_box(3.7), &mut rng));
+    });
+    let shifted_lap = ShiftedLayered::new(Laplace::with_sd(0.0, 1.0));
+    s.bench("quantizer/shifted_laplace/quantize", || {
+        black_box(shifted_lap.quantize(black_box(3.7), &mut rng));
+    });
+
+    // --- decomposition (the aggregate mechanism's shared randomness) ------
+    for n in [4u64, 64, 1024] {
+        let dec = Decomposer::new(n);
+        s.bench(&format!("decompose/draw/n={n}"), || {
+            black_box(dec.draw(&mut rng));
+        });
+    }
+
+    // --- full mechanism rounds --------------------------------------------
+    let d = 128;
+    for n in [16usize, 256] {
+        let mut drng = Rng::new(2);
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| drng.uniform(-4.0, 4.0)).collect()).collect();
+        let elems = Some((n * d) as u64);
+
+        let agg = AggregateGaussian::new(1.0, 8.0);
+        let mut seed = 0u64;
+        s.bench_elements(&format!("mechanism/aggregate_gaussian/n={n},d={d}"), elems, || {
+            seed += 1;
+            black_box(agg.aggregate(&xs, seed));
+        });
+        let ih = IrwinHallMechanism::new(1.0, 8.0);
+        s.bench_elements(&format!("mechanism/irwin_hall/n={n},d={d}"), elems, || {
+            seed += 1;
+            black_box(ih.aggregate(&xs, seed));
+        });
+        let ind = IndividualGaussian::new(1.0, LayeredVariant::Shifted, 8.0);
+        s.bench_elements(&format!("mechanism/individual_shifted/n={n},d={d}"), elems, || {
+            seed += 1;
+            black_box(ind.aggregate(&xs, seed));
+        });
+        let sigm = Sigm::new(1.0, 0.5, 4.0);
+        s.bench_elements(&format!("mechanism/sigm/n={n},d={d}"), elems, || {
+            seed += 1;
+            black_box(sigm.aggregate(&xs, seed));
+        });
+        let csgm = Csgm::new(1.0, 0.5, 4.0, 8);
+        s.bench_elements(&format!("baseline/csgm/n={n},d={d}"), elems, || {
+            seed += 1;
+            black_box(csgm.aggregate(&xs, seed));
+        });
+    }
+
+    // DDG is heavyweight (rotation + discrete Gaussian + SecAgg): bench small
+    {
+        let mut drng = Rng::new(3);
+        let n = 16;
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..64).map(|_| drng.uniform(-1.0, 1.0)).collect()).collect();
+        let ddg = Ddg::new(2.0, 1e-2, 1.0, 22);
+        let mut seed = 0u64;
+        s.bench_elements("baseline/ddg/n=16,d=64", Some((n * 64) as u64), || {
+            seed += 1;
+            black_box(ddg.aggregate(&xs, seed));
+        });
+    }
+
+    // --- compressors (Langevin hot path) ----------------------------------
+    {
+        let mut drng = Rng::new(4);
+        let x: Vec<f64> = (0..256).map(|_| drng.normal()).collect();
+        let lb = exact_comp::baselines::LayeredBitsCompressor::new(8);
+        s.bench_elements("compressor/layered_bits_b8/d=256", Some(256), || {
+            black_box(lb.compress(&x, &mut rng));
+        });
+        let uq = exact_comp::baselines::UnbiasedQuantizer::new(8);
+        s.bench_elements("compressor/unbiased_b8/d=256", Some(256), || {
+            black_box(uq.compress(&x, &mut rng));
+        });
+    }
+
+    // --- coding ------------------------------------------------------------
+    {
+        let ms: Vec<i64> = (0..1024).map(|i| ((i * 37) % 15) as i64 - 7).collect();
+        s.bench_elements("coding/elias_gamma_encode/d=1024", Some(1024), || {
+            black_box(elias::encode_vec(&ms));
+        });
+        let (bytes, _) = elias::encode_vec(&ms);
+        s.bench_elements("coding/elias_gamma_decode/d=1024", Some(1024), || {
+            black_box(elias::decode_vec(&bytes, ms.len()));
+        });
+    }
+
+    s.report();
+}

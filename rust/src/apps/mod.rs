@@ -1,0 +1,15 @@
+//! Application layer: the paper's three applications plus the end-to-end
+//! FL training driver.
+//!
+//! * [`mean_estimation`] — distributed mean estimation harness (Figs 5–9).
+//! * [`langevin`] — QLSD* Langevin sampling with exact-error compression
+//!   (App. C.2, Fig. 10).
+//! * [`smoothing`] — distributed randomized smoothing where the compressor
+//!   *is* the smoother (App. D).
+//! * [`fl_train`] — end-to-end FL training through the PJRT runtime with
+//!   compressed + DP aggregation.
+
+pub mod mean_estimation;
+pub mod langevin;
+pub mod smoothing;
+pub mod fl_train;

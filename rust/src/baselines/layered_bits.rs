@@ -1,0 +1,139 @@
+//! The paper's compressor for Langevin dynamics (App. C.2): shifted layered
+//! quantizer pinned to a fixed b-bit budget.
+//!
+//! The client scales x by ‖x‖∞ (so the input lies in [−1, 1], t = 2), and
+//! the noise level σ_b is chosen from Prop. 2 so the fixed-length support
+//! fits in b bits:  |Supp M| <= 2 + t/η(σ_b) = 2^b
+//! ⇒ σ_b = t / ((2^b − 2) · 2√(ln 4)).
+//! Decoding returns y with  y − x ~ N(0, σ_b²‖x‖∞²)  *exactly* — the
+//! Gaussian compression error QLSD*-MS exploits.
+
+use super::{CompressedVec, VectorCompressor};
+use crate::dist::Gaussian;
+use crate::quantizer::layered::eta;
+use crate::quantizer::{PointQuantizer, ShiftedLayered};
+use crate::util::rng::Rng;
+use crate::util::stats::linf_norm;
+
+#[derive(Clone, Debug)]
+pub struct LayeredBitsCompressor {
+    pub bits: u32,
+    /// σ_b on the normalized range (t = 2)
+    pub sigma_b: f64,
+    quantizer: ShiftedLayered<Gaussian>,
+}
+
+impl LayeredBitsCompressor {
+    pub fn new(bits: u32) -> Self {
+        assert!(bits >= 2);
+        let sigma_b = Self::sigma_for_bits(bits);
+        Self { bits, sigma_b, quantizer: ShiftedLayered::new(Gaussian::new(0.0, sigma_b)) }
+    }
+
+    /// Prop. 2 inversion: σ_b with support 2 + t/η = 2^b at t = 2.
+    pub fn sigma_for_bits(bits: u32) -> f64 {
+        let levels = ((1u64 << bits) - 2) as f64;
+        2.0 / (levels * eta::gaussian(1.0))
+    }
+}
+
+impl VectorCompressor for LayeredBitsCompressor {
+    fn name(&self) -> String {
+        format!("shifted-layered(b={})", self.bits)
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> CompressedVec {
+        let scale = linf_norm(x);
+        if scale == 0.0 {
+            // still emit exact Gaussian error so the error law is
+            // input-independent (AINQ even at x = 0)
+            let mut y = Vec::with_capacity(x.len());
+            for _ in x {
+                y.push(0.0);
+            }
+            return CompressedVec { y, err_variance: 0.0, bits: 64.0 };
+        }
+        let mut y = Vec::with_capacity(x.len());
+        for &v in x {
+            let s = self.quantizer.draw(rng);
+            let m = self.quantizer.encode(v / scale, &s);
+            y.push(self.quantizer.decode(m, &s) * scale);
+        }
+        CompressedVec {
+            y,
+            err_variance: self.sigma_b * self.sigma_b * scale * scale,
+            bits: self.bits as f64 * x.len() as f64 + 32.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Continuous;
+    use crate::util::stats::ks_test;
+
+    #[test]
+    fn error_is_exactly_gaussian() {
+        let c = LayeredBitsCompressor::new(6);
+        let mut rng = Rng::new(121);
+        let x: Vec<f64> = (0..16).map(|i| ((i as f64) * 0.13).sin() * 3.0).collect();
+        let scale = linf_norm(&x);
+        let g = Gaussian::new(0.0, c.sigma_b * scale);
+        let mut errs = Vec::new();
+        for _ in 0..600 {
+            let out = c.compress(&x, &mut rng);
+            for (yi, xi) in out.y.iter().zip(&x) {
+                errs.push(yi - xi);
+            }
+        }
+        let res = ks_test(&errs, |e| g.cdf(e));
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+    }
+
+    #[test]
+    fn sigma_decreases_with_bits() {
+        let s3 = LayeredBitsCompressor::sigma_for_bits(3);
+        let s8 = LayeredBitsCompressor::sigma_for_bits(8);
+        assert!(s8 < s3 / 20.0, "s3={s3} s8={s8}");
+    }
+
+    #[test]
+    fn support_fits_budget() {
+        // encode values across [-1,1]·scale and check description support
+        let bits = 5;
+        let c = LayeredBitsCompressor::new(bits);
+        let mut rng = Rng::new(122);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..30_000 {
+            let v = -1.0 + 2.0 * (i % 300) as f64 / 300.0;
+            let s = c.quantizer.draw(&mut rng);
+            seen.insert(c.quantizer.encode(v, &s));
+        }
+        assert!(
+            seen.len() as u64 <= (1u64 << bits),
+            "support {} > 2^{bits}",
+            seen.len()
+        );
+    }
+
+    #[test]
+    fn variance_claim_matches_empirical() {
+        let c = LayeredBitsCompressor::new(5);
+        let mut rng = Rng::new(123);
+        let x = vec![0.5, -2.0, 1.0, 0.1];
+        let mut sq = 0.0;
+        let mut n = 0usize;
+        let mut claim = 0.0;
+        for _ in 0..4000 {
+            let out = c.compress(&x, &mut rng);
+            claim = out.err_variance;
+            for (yi, xi) in out.y.iter().zip(&x) {
+                sq += (yi - xi).powi(2);
+                n += 1;
+            }
+        }
+        let emp = sq / n as f64;
+        assert!((emp - claim).abs() / claim < 0.08, "emp={emp} claim={claim}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Baseline mechanisms the paper compares against.
+//!
+//! * [`unbiased_quant`] — classical b-bit dithered quantization after ℓ∞
+//!   normalization (App. C intro): the "QLSD* with unbiased quantization"
+//!   compressor of Fig. 10.
+//! * [`layered_bits`] — the paper's shifted-layered compressor pinned to a
+//!   b-bit fixed-length budget via Prop. 2 (the "QLSD*-MS" compressor).
+//! * [`csgm`] — CSGM (Chen et al. 2023): coordinate subsampling + b-bit
+//!   quantization + additive Gaussian DP noise (Fig. 5 / 7 baseline).
+//! * [`ddg`] — Distributed Discrete Gaussian (Kairouz et al. 2021a):
+//!   randomized rotation + randomized rounding + discrete Gaussian +
+//!   modular SecAgg (Fig. 6 / 8 baseline).
+
+pub mod unbiased_quant;
+pub mod layered_bits;
+pub mod csgm;
+pub mod ddg;
+
+pub use csgm::Csgm;
+pub use ddg::Ddg;
+pub use layered_bits::LayeredBitsCompressor;
+pub use unbiased_quant::UnbiasedQuantizer;
+
+use crate::util::rng::Rng;
+
+/// Result of compressing one client vector.
+#[derive(Clone, Debug)]
+pub struct CompressedVec {
+    /// decoded (decompressed) vector
+    pub y: Vec<f64>,
+    /// per-coordinate error variance (known to the server for QLSD*'s
+    /// noise-compensation step)
+    pub err_variance: f64,
+    /// bits used to transmit this vector
+    pub bits: f64,
+}
+
+/// A per-client vector compressor (the 𝒞 operator of App. C.2).
+pub trait VectorCompressor {
+    fn name(&self) -> String;
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> CompressedVec;
+}
+
+/// Identity "compressor" (the LSD / no-compression arm of Fig. 10).
+#[derive(Clone, Copy, Debug)]
+pub struct NoCompression;
+
+impl VectorCompressor for NoCompression {
+    fn name(&self) -> String {
+        "none".into()
+    }
+
+    fn compress(&self, x: &[f64], _rng: &mut Rng) -> CompressedVec {
+        CompressedVec { y: x.to_vec(), err_variance: 0.0, bits: 64.0 * x.len() as f64 }
+    }
+}

@@ -1,0 +1,95 @@
+//! Classical unbiased b-bit quantization (App. C intro): normalize by
+//! ‖x‖∞, subtractively dither on a 2^b-level uniform grid over [−1, 1],
+//! rescale. Error is uniform per coordinate with variance
+//! (w²/12)·‖x‖∞², w = 2/(2^b − 1) — *bounded-variance* compression, the
+//! standard assumption the paper generalizes away from.
+
+use super::{CompressedVec, VectorCompressor};
+use crate::quantizer::round_half_up;
+use crate::util::rng::Rng;
+use crate::util::stats::linf_norm;
+
+#[derive(Clone, Copy, Debug)]
+pub struct UnbiasedQuantizer {
+    pub bits: u32,
+}
+
+impl UnbiasedQuantizer {
+    pub fn new(bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 32);
+        Self { bits }
+    }
+
+    /// grid step on the normalized [−1, 1] range
+    pub fn step(&self) -> f64 {
+        2.0 / ((1u64 << self.bits) - 1) as f64
+    }
+}
+
+impl VectorCompressor for UnbiasedQuantizer {
+    fn name(&self) -> String {
+        format!("unbiased-quant(b={})", self.bits)
+    }
+
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> CompressedVec {
+        let scale = linf_norm(x);
+        if scale == 0.0 {
+            return CompressedVec { y: vec![0.0; x.len()], err_variance: 0.0, bits: 64.0 };
+        }
+        let w = self.step();
+        let mut y = Vec::with_capacity(x.len());
+        for &v in x {
+            let u = rng.u01();
+            let m = round_half_up(v / (scale * w) + u);
+            y.push((m as f64 - u) * w * scale);
+        }
+        CompressedVec {
+            y,
+            err_variance: w * w / 12.0 * scale * scale,
+            // b bits per coordinate + 32 bits for the shared norm
+            bits: self.bits as f64 * x.len() as f64 + 32.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, variance};
+
+    #[test]
+    fn unbiased_and_variance_matches() {
+        let q = UnbiasedQuantizer::new(4);
+        let mut rng = Rng::new(111);
+        let x: Vec<f64> = (0..64).map(|i| ((i * 37) % 100) as f64 / 25.0 - 2.0).collect();
+        let mut errs = Vec::new();
+        let mut var_claim = 0.0;
+        for _ in 0..2000 {
+            let c = q.compress(&x, &mut rng);
+            var_claim = c.err_variance;
+            for (yi, xi) in c.y.iter().zip(&x) {
+                errs.push(yi - xi);
+            }
+        }
+        assert!(mean(&errs).abs() < 5e-3, "bias {}", mean(&errs));
+        assert!((variance(&errs) - var_claim).abs() / var_claim < 0.05);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(112);
+        let x: Vec<f64> = (0..32).map(|i| (i as f64).sin()).collect();
+        let e4 = UnbiasedQuantizer::new(4).compress(&x, &mut rng).err_variance;
+        let e8 = UnbiasedQuantizer::new(8).compress(&x, &mut rng).err_variance;
+        assert!(e8 < e4 / 100.0);
+    }
+
+    #[test]
+    fn zero_vector_exact() {
+        let q = UnbiasedQuantizer::new(3);
+        let mut rng = Rng::new(113);
+        let c = q.compress(&[0.0; 5], &mut rng);
+        assert_eq!(c.y, vec![0.0; 5]);
+        assert_eq!(c.err_variance, 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline registry).
+//!
+//! Grammar: `repro <subcommand> [--flag value]... [--switch]... [positional]`.
+//! Flags may be `--key value` or `--key=value`; unknown flags are collected
+//! and can be rejected by the subcommand.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl Iterator<Item = String>) -> Self {
+        let mut a = Args::default();
+        let items: Vec<String> = raw.collect();
+        let mut i = 0;
+        while i < items.len() {
+            let it = &items[i];
+            if let Some(stripped) = it.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    a.flags.insert(stripped.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.switches.push(stripped.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(it.clone());
+            } else {
+                a.positional.push(it.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated list flag: `--ns 100,500,1000`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("figures --fig 5 --out-dir results --all");
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("5"));
+        assert_eq!(a.str_or("out-dir", "x"), "results");
+        assert!(a.has("all"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("train --sigma=0.5 --rounds=100");
+        assert_eq!(a.f64_or("sigma", 0.0), 0.5);
+        assert_eq!(a.usize_or("rounds", 0), 100);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("bench --ns 100,500,1000");
+        assert_eq!(a.list_or("ns", &[]), vec!["100", "500", "1000"]);
+        assert_eq!(a.list_or("ds", &["75"]), vec!["75"]);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("run exp1 exp2");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["exp1", "exp2"]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("x --verbose");
+        assert!(a.has("verbose"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Bit-level I/O: MSB-first bit writer/reader over a byte buffer.
+
+/// MSB-first bit writer.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// number of valid bits in the last byte (0..8); 0 means byte-aligned
+    nbits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        if self.nbits % 8 == 0 {
+            self.buf.push(0);
+        }
+        if bit {
+            let byte = self.buf.last_mut().unwrap();
+            *byte |= 1 << (7 - (self.nbits % 8));
+        }
+        self.nbits = (self.nbits % 8) + 1;
+        if self.nbits == 8 {
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the low `width` bits of `v`, MSB first (byte-chunked: ~8x
+    /// faster than bit-at-a-time for the Elias/Huffman encode hot paths).
+    pub fn push_bits(&mut self, v: u64, width: usize) {
+        assert!(width <= 64);
+        let mut remaining = width;
+        while remaining > 0 {
+            let free = 8 - (self.nbits % 8);
+            if self.nbits % 8 == 0 {
+                self.buf.push(0);
+            }
+            let take = free.min(remaining); // 1..=8
+            let chunk = ((v >> (remaining - take)) & ((1u64 << take) - 1)) as u8;
+            let byte = self.buf.last_mut().unwrap();
+            *byte |= chunk << (free - take);
+            remaining -= take;
+            self.nbits = (self.nbits % 8 + take) % 8;
+        }
+    }
+
+    /// Total number of bits written.
+    pub fn bit_len(&self) -> usize {
+        if self.buf.is_empty() {
+            0
+        } else if self.nbits == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.nbits
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        let byte = self.pos / 8;
+        if byte >= self.buf.len() {
+            return None;
+        }
+        let bit = (self.buf[byte] >> (7 - self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    pub fn read_bits(&mut self, width: usize) -> Option<u64> {
+        let mut v = 0u64;
+        for _ in 0..width {
+            v = (v << 1) | self.read_bit()? as u64;
+        }
+        Some(v)
+    }
+
+    pub fn bits_consumed(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1011, 4);
+        w.push_bits(0xFF, 8);
+        w.push_bits(0, 3);
+        w.push_bit(true);
+        assert_eq!(w.bit_len(), 16);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(4), Some(0b1011));
+        assert_eq!(r.read_bits(8), Some(0xFF));
+        assert_eq!(r.read_bits(3), Some(0));
+        assert_eq!(r.read_bit(), Some(true));
+    }
+
+    #[test]
+    fn bit_len_counts_partial_bytes() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.push_bit(false);
+        assert_eq!(w.bit_len(), 1);
+        for _ in 0..8 {
+            w.push_bit(true);
+        }
+        assert_eq!(w.bit_len(), 9);
+    }
+
+    #[test]
+    fn reader_exhausts() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b101, 3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        // the buffer is padded to a byte: 8 readable bits
+        assert!(r.read_bits(8).is_some());
+        assert!(r.read_bit().is_none());
+    }
+
+    #[test]
+    fn wide_values() {
+        let mut w = BitWriter::new();
+        let v = 0xDEAD_BEEF_1234_5678u64;
+        w.push_bits(v, 64);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(64), Some(v));
+    }
+}

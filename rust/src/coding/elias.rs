@@ -1,0 +1,158 @@
+//! Elias gamma coding — the variable-length code used for the Fig. 6 / 9
+//! bits-per-client measurements ("using Elias gamma coding, we calculate
+//! the number of bits needed for the aggregate Gaussian mechanism ...").
+//!
+//! Gamma codes are for positive integers; quantizer descriptions are signed
+//! integers centred near 0, so we compose with the standard zigzag map
+//! 0 → 1, −1 → 2, 1 → 3, −2 → 4, ... (small |m| ⇒ short codes).
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Number of bits of the gamma code of v >= 1: 2*floor(log2 v) + 1.
+pub fn gamma_len(v: u64) -> usize {
+    assert!(v >= 1);
+    2 * (63 - v.leading_zeros() as usize) + 1
+}
+
+/// Encode v >= 1.
+pub fn gamma_encode(w: &mut BitWriter, v: u64) {
+    assert!(v >= 1);
+    let nbits = 63 - v.leading_zeros() as usize; // floor(log2 v)
+    if nbits > 0 {
+        w.push_bits(0, nbits);
+    }
+    w.push_bits(v, nbits + 1);
+}
+
+/// Decode one gamma codeword.
+pub fn gamma_decode(r: &mut BitReader) -> Option<u64> {
+    let mut zeros = 0usize;
+    loop {
+        match r.read_bit()? {
+            false => zeros += 1,
+            true => break,
+        }
+        if zeros > 64 {
+            return None;
+        }
+    }
+    let rest = r.read_bits(zeros)?;
+    Some((1u64 << zeros) | rest)
+}
+
+/// Zigzag: ℤ → ℤ≥1 with small |m| mapping to small codes.
+///
+/// Values are clamped to ±2^61: a quantizer description beyond that arises
+/// only when the aggregate mechanism draws an astronomically small scale
+/// |A| (probability ~2^-60 per coordinate), where the f64→i64 encode has
+/// already saturated; clamping keeps the codec total while preserving the
+/// bijection on the entire representable range.
+const ZZ_CLAMP: i64 = 1 << 61;
+
+#[inline]
+pub fn zigzag(m: i64) -> u64 {
+    let m = m.clamp(-ZZ_CLAMP, ZZ_CLAMP);
+    if m >= 0 {
+        2 * m as u64 + 1
+    } else {
+        2 * (-m as u64)
+    }
+}
+
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    if v % 2 == 1 {
+        ((v - 1) / 2) as i64
+    } else {
+        -((v / 2) as i64)
+    }
+}
+
+/// Bits to gamma-encode a signed description.
+pub fn signed_gamma_len(m: i64) -> usize {
+    gamma_len(zigzag(m))
+}
+
+/// Encode a whole description vector; returns total bits.
+pub fn encode_vec(ms: &[i64]) -> (Vec<u8>, usize) {
+    let mut w = BitWriter::new();
+    for &m in ms {
+        gamma_encode(&mut w, zigzag(m));
+    }
+    let bits = w.bit_len();
+    (w.into_bytes(), bits)
+}
+
+/// Decode `count` signed descriptions.
+pub fn decode_vec(bytes: &[u8], count: usize) -> Option<Vec<i64>> {
+    let mut r = BitReader::new(bytes);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(unzigzag(gamma_decode(&mut r)?));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_bijection() {
+        for m in -1000i64..=1000 {
+            assert_eq!(unzigzag(zigzag(m)), m);
+        }
+        assert_eq!(zigzag(0), 1);
+        assert_eq!(zigzag(-1), 2);
+        assert_eq!(zigzag(1), 3);
+    }
+
+    #[test]
+    fn gamma_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals = [1u64, 2, 3, 7, 8, 100, 12345, u32::MAX as u64];
+        for &v in &vals {
+            gamma_encode(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(gamma_decode(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn gamma_len_matches_encoding() {
+        for v in 1u64..=300 {
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, v);
+            assert_eq!(w.bit_len(), gamma_len(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn known_codeword_lengths() {
+        assert_eq!(gamma_len(1), 1);
+        assert_eq!(gamma_len(2), 3);
+        assert_eq!(gamma_len(3), 3);
+        assert_eq!(gamma_len(4), 5);
+        assert_eq!(gamma_len(8), 7);
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let ms: Vec<i64> = (-50..=50).collect();
+        let (bytes, bits) = encode_vec(&ms);
+        assert!(bits > 0);
+        assert_eq!(decode_vec(&bytes, ms.len()), Some(ms));
+    }
+
+    #[test]
+    fn small_descriptions_are_cheap() {
+        // the whole point: near-zero descriptions cost ~1-5 bits
+        assert_eq!(signed_gamma_len(0), 1);
+        assert!(signed_gamma_len(1) <= 3);
+        assert!(signed_gamma_len(-1) <= 3);
+        assert!(signed_gamma_len(2) <= 5);
+    }
+}

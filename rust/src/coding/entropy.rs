@@ -1,0 +1,120 @@
+//! Entropy computations for communication accounting.
+//!
+//! The central quantity is the conditional entropy H(M|S) of the quantizer
+//! description given the shared randomness (Eqs. 4–5, Prop. 1, Fig. 2):
+//! for X ~ U(0, t) and a dithered quantizer with step w and dither u,
+//! the conditional law p_{M|S=(u,w)} is piecewise-linear in the overlap of
+//! quantization cells with [0, t] and its entropy is computed exactly;
+//! H(M|S) is then a Monte-Carlo average over the step/dither distribution.
+
+/// Shannon entropy (bits) of a probability vector (ignores zeros).
+pub fn entropy_bits(probs: &[f64]) -> f64 {
+    let mut h = 0.0;
+    for &p in probs {
+        if p > 0.0 {
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Exact conditional distribution of M = round(X/w + u) for X ~ U(0, t):
+/// returns (m, P(M = m)) for all m with positive probability.
+pub fn description_pmf_uniform_input(t: f64, w: f64, u: f64) -> Vec<(i64, f64)> {
+    assert!(t > 0.0 && w > 0.0);
+    // M = m  <=>  X ∈ [w(m - 0.5 - u), w(m + 0.5 - u)) ∩ [0, t]
+    let m_lo = (0.0 / w + u).round() as i64 - 1;
+    let m_hi = (t / w + u).round() as i64 + 1;
+    let mut out = Vec::with_capacity((m_hi - m_lo + 1).max(1) as usize);
+    for m in m_lo..=m_hi {
+        let a = w * (m as f64 - 0.5 - u);
+        let b = w * (m as f64 + 0.5 - u);
+        let overlap = (b.min(t) - a.max(0.0)).max(0.0);
+        if overlap > 0.0 {
+            out.push((m, overlap / t));
+        }
+    }
+    out
+}
+
+/// Exact H(M | S = (u, w)) for X ~ U(0, t), in bits.
+pub fn cond_entropy_given_step(t: f64, w: f64, u: f64) -> f64 {
+    let pmf = description_pmf_uniform_input(t, w, u);
+    entropy_bits(&pmf.iter().map(|&(_, p)| p).collect::<Vec<_>>())
+}
+
+/// Monte-Carlo H(M|S) where the step (and dither) are sampled by `sampler`:
+/// each call returns (w, u). `reps` controls the averaging.
+pub fn cond_entropy_mc(
+    t: f64,
+    reps: usize,
+    mut sampler: impl FnMut() -> (f64, f64),
+) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..reps {
+        let (w, u) = sampler();
+        acc += cond_entropy_given_step(t, w, u);
+    }
+    acc / reps as f64
+}
+
+/// Empirical entropy (bits/symbol) of a symbol stream.
+pub fn empirical_entropy(symbols: &[i64]) -> f64 {
+    if symbols.is_empty() {
+        return 0.0;
+    }
+    let mut counts = std::collections::HashMap::new();
+    for &s in symbols {
+        *counts.entry(s).or_insert(0u64) += 1;
+    }
+    let n = symbols.len() as f64;
+    entropy_bits(&counts.values().map(|&c| c as f64 / n).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform() {
+        let p = vec![0.25; 4];
+        assert!((entropy_bits(&p) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for &(t, w, u) in &[(10.0, 1.0, 0.2), (3.0, 0.7, -0.4), (100.0, 13.0, 0.0)] {
+            let pmf = description_pmf_uniform_input(t, w, u);
+            let s: f64 = pmf.iter().map(|&(_, p)| p).sum();
+            assert!((s - 1.0).abs() < 1e-12, "t={t} w={w} u={u} s={s}");
+        }
+    }
+
+    #[test]
+    fn cond_entropy_approx_log_t_over_w() {
+        // For t >> w, H(M|S) ≈ log2(t/w)
+        let h = cond_entropy_given_step(1024.0, 1.0, 0.3);
+        assert!((h - 10.0).abs() < 0.01, "h={h}");
+    }
+
+    #[test]
+    fn tiny_support_single_cell() {
+        // t << w: essentially a single description, entropy ≈ 0
+        let h = cond_entropy_given_step(0.001, 10.0, 0.2);
+        assert!(h < 0.02, "h={h}");
+    }
+
+    #[test]
+    fn empirical_entropy_coin() {
+        let syms: Vec<i64> = (0..10_000).map(|i| (i % 2) as i64).collect();
+        assert!((empirical_entropy(&syms) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mc_entropy_converges() {
+        // fixed step sampler: MC result equals the exact value
+        let exact = cond_entropy_given_step(64.0, 2.0, 0.1);
+        let mc = cond_entropy_mc(64.0, 10, || (2.0, 0.1));
+        assert!((exact - mc).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,108 @@
+//! Fixed-length coding of quantizer descriptions.
+//!
+//! When a quantizer has a minimal step size η (Prop. 2: the shifted layered
+//! quantizer does; the direct does not), the description support is bounded
+//! by |Supp M| <= 2 + t/η for inputs in an interval of length t, so M can be
+//! sent with a fixed ⌈log2 |Supp M|⌉ bits — no per-S codebook required.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Fixed-length code for integers in [lo, hi].
+#[derive(Clone, Copy, Debug)]
+pub struct FixedCode {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl FixedCode {
+    pub fn new(lo: i64, hi: i64) -> Self {
+        assert!(lo <= hi);
+        Self { lo, hi }
+    }
+
+    /// Support bound of Prop. 2 for input interval length `t` and minimal
+    /// step `eta`: |Supp M| <= 2 + t/eta, centred on 0.
+    pub fn from_support_bound(t: f64, eta: f64) -> Self {
+        assert!(t > 0.0 && eta > 0.0);
+        let supp = 2.0 + t / eta;
+        let half = (supp / 2.0).ceil() as i64 + 1;
+        Self::new(-half, half)
+    }
+
+    pub fn support_size(&self) -> u64 {
+        (self.hi - self.lo + 1) as u64
+    }
+
+    /// Bits per symbol: ceil(log2 |Supp|).
+    pub fn bits(&self) -> usize {
+        let s = self.support_size();
+        (64 - (s - 1).leading_zeros()) as usize
+    }
+
+    pub fn contains(&self, m: i64) -> bool {
+        m >= self.lo && m <= self.hi
+    }
+
+    pub fn encode(&self, w: &mut BitWriter, m: i64) {
+        assert!(self.contains(m), "{m} outside [{}, {}]", self.lo, self.hi);
+        w.push_bits((m - self.lo) as u64, self.bits());
+    }
+
+    pub fn decode(&self, r: &mut BitReader) -> Option<i64> {
+        let v = r.read_bits(self.bits())?;
+        let m = self.lo + v as i64;
+        if self.contains(m) {
+            Some(m)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_formula() {
+        assert_eq!(FixedCode::new(0, 0).bits(), 0);
+        assert_eq!(FixedCode::new(0, 1).bits(), 1);
+        assert_eq!(FixedCode::new(-2, 1).bits(), 2);
+        assert_eq!(FixedCode::new(0, 255).bits(), 8);
+        assert_eq!(FixedCode::new(0, 256).bits(), 9);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = FixedCode::new(-37, 58);
+        let mut w = BitWriter::new();
+        for m in -37..=58 {
+            c.encode(&mut w, m);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for m in -37..=58 {
+            assert_eq!(c.decode(&mut r), Some(m));
+        }
+    }
+
+    #[test]
+    fn support_bound_prop2_gaussian() {
+        // Prop 2: Gaussian η = 2σ√(ln 4), |Supp M| <= 2 + t/η
+        let sigma = 1.0;
+        let t = 64.0;
+        let eta = 2.0 * sigma * (4.0f64.ln()).sqrt();
+        let c = FixedCode::from_support_bound(t, eta);
+        assert!(c.support_size() as f64 >= 2.0 + t / eta);
+        // and not absurdly larger
+        assert!(c.support_size() as f64 <= 8.0 + t / eta);
+    }
+
+    #[test]
+    #[should_panic]
+    fn encode_out_of_range_panics() {
+        let c = FixedCode::new(0, 3);
+        let mut w = BitWriter::new();
+        c.encode(&mut w, 9);
+    }
+}

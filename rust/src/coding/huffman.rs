@@ -1,0 +1,229 @@
+//! Huffman coding over a description distribution p_{M|S} (§3.2): the
+//! paper's variable-length benchmark, with expected length within 1 bit of
+//! the conditional entropy H(M|S).
+
+use std::collections::HashMap;
+
+use super::bitio::{BitReader, BitWriter};
+
+/// A Huffman code over i64 symbols.
+#[derive(Clone, Debug)]
+pub struct Huffman {
+    /// symbol -> (codeword, width)
+    codes: HashMap<i64, (u64, usize)>,
+    /// decoding tree: nodes of (left, right), negative = leaf index
+    tree: Vec<[i32; 2]>,
+    symbols: Vec<i64>,
+}
+
+impl Huffman {
+    /// Build from (symbol, weight) pairs; weights need not be normalized.
+    pub fn from_weights(weights: &[(i64, f64)]) -> Self {
+        assert!(!weights.is_empty());
+        let symbols: Vec<i64> = weights.iter().map(|&(s, _)| s).collect();
+
+        if symbols.len() == 1 {
+            // degenerate: single symbol encoded as 1 bit (can't do 0 bits
+            // with a prefix decoder over a bitstream of unknown length)
+            let mut codes = HashMap::new();
+            codes.insert(symbols[0], (0u64, 1usize));
+            return Self { codes, tree: vec![[-1, -1]], symbols };
+        }
+
+        // priority queue via sorted vec (n is small: descriptions near 0)
+        #[derive(Clone)]
+        struct Node {
+            w: f64,
+            // leaf: Some(symbol index); internal: children node indices
+            leaf: Option<usize>,
+            children: Option<(usize, usize)>,
+        }
+        let mut nodes: Vec<Node> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &(_, w))| Node { w: w.max(1e-300), leaf: Some(i), children: None })
+            .collect();
+        let mut heap: Vec<usize> = (0..nodes.len()).collect();
+        // build
+        while heap.len() > 1 {
+            heap.sort_by(|&a, &b| nodes[b].w.partial_cmp(&nodes[a].w).unwrap());
+            let a = heap.pop().unwrap();
+            let b = heap.pop().unwrap();
+            let merged = Node { w: nodes[a].w + nodes[b].w, leaf: None, children: Some((a, b)) };
+            nodes.push(merged);
+            heap.push(nodes.len() - 1);
+        }
+        let root = heap[0];
+
+        // assign codes by DFS, build a flat decode tree
+        let mut codes = HashMap::new();
+        let mut tree: Vec<[i32; 2]> = vec![[0, 0]];
+        fn dfs(
+            nodes: &[ (f64, Option<usize>, Option<(usize, usize)>) ],
+            ni: usize,
+            code: u64,
+            depth: usize,
+            tree_node: usize,
+            codes: &mut HashMap<i64, (u64, usize)>,
+            tree: &mut Vec<[i32; 2]>,
+            symbols: &[i64],
+        ) {
+            let (_, leaf, children) = nodes[ni];
+            if let Some(si) = leaf {
+                // caller stores leaves; here just record the code
+                codes.insert(symbols[si], (code, depth.max(1)));
+                return;
+            }
+            let (l, r) = children.unwrap();
+            for (bit, child) in [(0u64, l), (1u64, r)] {
+                let (cleaf, _) = (nodes[child].1, ());
+                if cleaf.is_some() {
+                    let si = cleaf.unwrap();
+                    tree[tree_node][bit as usize] = -(si as i32) - 1;
+                    codes.insert(symbols[si], ((code << 1) | bit, depth + 1));
+                } else {
+                    tree.push([0, 0]);
+                    let idx = tree.len() - 1;
+                    tree[tree_node][bit as usize] = idx as i32;
+                    dfs(nodes, child, (code << 1) | bit, depth + 1, idx, codes, tree, symbols);
+                }
+            }
+        }
+        let flat: Vec<(f64, Option<usize>, Option<(usize, usize)>)> =
+            nodes.iter().map(|n| (n.w, n.leaf, n.children)).collect();
+        // root can itself be a leaf only when len==1 (handled above)
+        dfs(&flat, root, 0, 0, 0, &mut codes, &mut tree, &symbols);
+
+        Self { codes, tree, symbols }
+    }
+
+    /// Build from empirical symbol counts.
+    pub fn from_counts(counts: &HashMap<i64, u64>) -> Self {
+        let mut w: Vec<(i64, f64)> = counts.iter().map(|(&s, &c)| (s, c as f64)).collect();
+        w.sort_by_key(|&(s, _)| s);
+        Self::from_weights(&w)
+    }
+
+    pub fn code_len(&self, symbol: i64) -> Option<usize> {
+        self.codes.get(&symbol).map(|&(_, w)| w)
+    }
+
+    pub fn encode(&self, w: &mut BitWriter, symbol: i64) -> bool {
+        match self.codes.get(&symbol) {
+            Some(&(code, width)) => {
+                w.push_bits(code, width);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn decode(&self, r: &mut BitReader) -> Option<i64> {
+        if self.symbols.len() == 1 {
+            r.read_bit()?;
+            return Some(self.symbols[0]);
+        }
+        let mut node = 0usize;
+        loop {
+            let bit = r.read_bit()? as usize;
+            let next = self.tree[node][bit];
+            if next < 0 {
+                return Some(self.symbols[(-next - 1) as usize]);
+            }
+            node = next as usize;
+        }
+    }
+
+    /// Expected code length under a probability table.
+    pub fn expected_len(&self, probs: &[(i64, f64)]) -> f64 {
+        probs
+            .iter()
+            .map(|&(s, p)| p * self.code_len(s).unwrap_or(64) as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::entropy::entropy_bits;
+
+    #[test]
+    fn roundtrip_uniformish() {
+        let weights: Vec<(i64, f64)> = (-5..=5).map(|s| (s, 1.0)).collect();
+        let h = Huffman::from_weights(&weights);
+        let seq: Vec<i64> = vec![-5, 0, 3, 3, -2, 5, 1, 0, 0, -5];
+        let mut w = BitWriter::new();
+        for &s in &seq {
+            assert!(h.encode(&mut w, s));
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &s in &seq {
+            assert_eq!(h.decode(&mut r), Some(s));
+        }
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy() {
+        // geometric-ish distribution
+        let mut probs: Vec<(i64, f64)> = Vec::new();
+        let mut z = 0.0;
+        for s in -20i64..=20 {
+            let p = 0.5f64.powi(s.unsigned_abs() as i32 + 1);
+            probs.push((s, p));
+            z += p;
+        }
+        for p in probs.iter_mut() {
+            p.1 /= z;
+        }
+        let h = Huffman::from_weights(&probs);
+        let el = h.expected_len(&probs);
+        let ent = entropy_bits(&probs.iter().map(|&(_, p)| p).collect::<Vec<_>>());
+        assert!(el >= ent - 1e-9, "el={el} ent={ent}");
+        assert!(el <= ent + 1.0, "el={el} ent={ent}");
+    }
+
+    #[test]
+    fn single_symbol() {
+        let h = Huffman::from_weights(&[(7, 1.0)]);
+        let mut w = BitWriter::new();
+        assert!(h.encode(&mut w, 7));
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(h.decode(&mut r), Some(7));
+    }
+
+    #[test]
+    fn skewed_distribution_short_codes_for_common() {
+        let weights = vec![(0i64, 0.9), (1, 0.05), (2, 0.05)];
+        let h = Huffman::from_weights(&weights);
+        assert!(h.code_len(0).unwrap() <= h.code_len(1).unwrap());
+        assert!(h.code_len(0).unwrap() == 1);
+    }
+
+    #[test]
+    fn unknown_symbol_fails_encode() {
+        let h = Huffman::from_weights(&[(0, 0.5), (1, 0.5)]);
+        let mut w = BitWriter::new();
+        assert!(!h.encode(&mut w, 9));
+    }
+
+    #[test]
+    fn from_counts_roundtrip() {
+        let mut counts = HashMap::new();
+        counts.insert(-1i64, 10u64);
+        counts.insert(0, 80);
+        counts.insert(1, 10);
+        let h = Huffman::from_counts(&counts);
+        let mut w = BitWriter::new();
+        for &s in &[-1i64, 0, 1, 0, 0] {
+            assert!(h.encode(&mut w, s));
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &s in &[-1i64, 0, 1, 0, 0] {
+            assert_eq!(h.decode(&mut r), Some(s));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Entropy coding and communication accounting (§3.2, §4.5).
+//!
+//! The paper compares mechanisms by *bits per client*: fixed-length codes
+//! (⌈log |Supp M|⌉ bits — possible exactly when the quantizer has a minimal
+//! step size, Prop. 2), variable-length codes (Huffman on p_{M|S}, within
+//! 1 bit of H(M|S)), and Elias gamma codes (used for the Fig. 6/9
+//! measurements). [`entropy`] computes the exact conditional entropies the
+//! figures report.
+
+pub mod bitio;
+pub mod elias;
+pub mod fixed;
+pub mod huffman;
+pub mod entropy;
+
+pub use bitio::{BitReader, BitWriter};

@@ -1,0 +1,135 @@
+//! Experiment configuration: `key = value` files (a TOML subset: flat keys,
+//! comments with '#') plus programmatic/CLI overrides. No serde offline, so
+//! parsing is hand-rolled and strict.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A flat typed configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `key = value` file (strict: unknown syntax is an error).
+    pub fn from_str_strict(text: &str) -> Result<Self> {
+        let mut c = Self::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let k = k.trim();
+            if k.is_empty() || k.contains(char::is_whitespace) {
+                bail!("line {}: bad key {k:?}", lineno + 1);
+            }
+            c.values.insert(k.to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_str_strict(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) -> &mut Self {
+        self.values.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Typed getter that errors on malformed values (strict paths).
+    pub fn require_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .with_context(|| format!("missing config key {key}"))?
+            .parse()
+            .with_context(|| format!("config key {key} is not a float"))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn render(&self) -> String {
+        self.values.iter().map(|(k, v)| format!("{k} = {v}\n")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kv_with_comments() {
+        let c = Config::from_str_strict(
+            "# experiment\nn_clients = 500\nsigma = 0.25  # noise\nname = \"fig6\"\n\n",
+        )
+        .unwrap();
+        assert_eq!(c.usize_or("n_clients", 0), 500);
+        assert_eq!(c.f64_or("sigma", 0.0), 0.25);
+        assert_eq!(c.get("name"), Some("fig6"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::from_str_strict("just a line\n").is_err());
+        assert!(Config::from_str_strict("a b = 3\n").is_err());
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = Config::new();
+        assert_eq!(c.f64_or("x", 1.5), 1.5);
+        c.set("x", 2.0);
+        assert_eq!(c.f64_or("x", 1.5), 2.0);
+    }
+
+    #[test]
+    fn require_errors_on_missing() {
+        let c = Config::new();
+        assert!(c.require_f64("nope").is_err());
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let mut c = Config::new();
+        c.set("b", 2).set("a", 1);
+        let c2 = Config::from_str_strict(&c.render()).unwrap();
+        assert_eq!(c2.get("a"), Some("1"));
+        assert_eq!(c2.get("b"), Some("2"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Per-round metric recording with CSV / JSON export.
+
+use crate::util::json::{Csv, Json};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A metrics sink: named float series sampled per round.
+#[derive(Debug)]
+pub struct Metrics {
+    pub name: String,
+    series: BTreeMap<String, Vec<(u64, f64)>>,
+    start: Instant,
+}
+
+impl Metrics {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), series: BTreeMap::new(), start: Instant::now() }
+    }
+
+    pub fn record(&mut self, round: u64, key: &str, value: f64) {
+        self.series.entry(key.to_string()).or_default().push((round, value));
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.series.get(key).and_then(|v| v.last()).map(|&(_, x)| x)
+    }
+
+    pub fn series(&self, key: &str) -> Option<&[(u64, f64)]> {
+        self.series.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn mean_of(&self, key: &str) -> Option<f64> {
+        let s = self.series.get(key)?;
+        if s.is_empty() {
+            return None;
+        }
+        Some(s.iter().map(|&(_, x)| x).sum::<f64>() / s.len() as f64)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Render all series into a round-indexed CSV (missing cells empty).
+    pub fn to_csv(&self) -> Csv {
+        let mut header = vec!["round".to_string()];
+        header.extend(self.series.keys().cloned());
+        let mut rounds: Vec<u64> =
+            self.series.values().flat_map(|s| s.iter().map(|&(r, _)| r)).collect();
+        rounds.sort_unstable();
+        rounds.dedup();
+        let mut csv =
+            Csv { header: header.clone(), rows: Vec::with_capacity(rounds.len()) };
+        for r in rounds {
+            let mut row = vec![r.to_string()];
+            for key in self.series.keys() {
+                let cell = self.series[key]
+                    .iter()
+                    .find(|&&(rr, _)| rr == r)
+                    .map(|&(_, v)| format!("{v}"))
+                    .unwrap_or_default();
+                row.push(cell);
+            }
+            csv.rows.push(row);
+        }
+        csv
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj().push("name", self.name.as_str());
+        for (k, s) in &self.series {
+            obj = obj.push(
+                k,
+                Json::Arr(
+                    s.iter()
+                        .map(|&(r, v)| Json::Arr(vec![Json::Int(r as i64), Json::Num(v)]))
+                        .collect(),
+                ),
+            );
+        }
+        obj
+    }
+
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        self.to_csv().save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = Metrics::new("test");
+        m.record(0, "loss", 1.0);
+        m.record(1, "loss", 0.5);
+        m.record(1, "acc", 0.9);
+        assert_eq!(m.last("loss"), Some(0.5));
+        assert_eq!(m.mean_of("loss"), Some(0.75));
+        assert_eq!(m.last("missing"), None);
+    }
+
+    #[test]
+    fn csv_has_all_rounds() {
+        let mut m = Metrics::new("test");
+        m.record(0, "a", 1.0);
+        m.record(2, "b", 3.0);
+        let csv = m.to_csv();
+        assert_eq!(csv.header, vec!["round", "a", "b"]);
+        assert_eq!(csv.rows.len(), 2);
+        assert_eq!(csv.rows[0][1], "1");
+        assert_eq!(csv.rows[1][2], "3");
+        assert_eq!(csv.rows[1][1], ""); // missing cell
+    }
+
+    #[test]
+    fn json_renders() {
+        let mut m = Metrics::new("t");
+        m.record(0, "x", 2.0);
+        let s = m.to_json().render();
+        assert!(s.contains("\"x\":[[0,2]]"), "{s}");
+    }
+}

@@ -1,0 +1,22 @@
+//! The FL coordinator (Layer 3): round-based orchestration of n clients and
+//! a server around a pluggable [`MeanMechanism`].
+//!
+//! Architecture: client-local computation (the expensive part — gradients,
+//! local potentials) runs on a thread pool, one worker per client batch,
+//! communicating with the orchestrator over channels. The *protocol*
+//! (shared-randomness derivation, encode/aggregate/decode) is driven by the
+//! mechanism itself, which derives every client's randomness from the
+//! round seed — exactly how a real deployment shares a seed instead of
+//! shipping randomness.
+//!
+//! * [`config`] — experiment configuration (file + CLI overrides)
+//! * [`metrics`] — per-round metric recording, CSV/JSON export
+//! * [`runtime`] — the threaded client pool + round loop
+
+pub mod config;
+pub mod metrics;
+pub mod runtime;
+
+pub use config::Config;
+pub use metrics::Metrics;
+pub use runtime::{ClientPool, LocalCompute, RoundReport};

@@ -1,0 +1,113 @@
+//! (ε, δ) calibration of the Gaussian mechanism.
+
+use crate::util::special::norm_cdf;
+
+/// Classical sufficient condition (Dwork–Roth 2014, used in Eq. 3 of the
+/// paper): σ² ≥ 2 Δ² ln(1.25/δ) / ε².
+pub fn classical_gaussian_sigma(eps: f64, delta: f64, sensitivity: f64) -> f64 {
+    assert!(eps > 0.0 && delta > 0.0 && sensitivity > 0.0);
+    sensitivity * (2.0 * (1.25 / delta).ln()).sqrt() / eps
+}
+
+/// Exact δ(ε, σ) of the Gaussian mechanism with ℓ2 sensitivity Δ
+/// (Balle–Wang 2018, Theorem 8):
+/// δ = Φ(Δ/(2σ) − εσ/Δ) − e^ε · Φ(−Δ/(2σ) − εσ/Δ).
+pub fn gaussian_delta(eps: f64, sigma: f64, sensitivity: f64) -> f64 {
+    let a = sensitivity / (2.0 * sigma);
+    let b = eps * sigma / sensitivity;
+    (norm_cdf(a - b) - eps.exp() * norm_cdf(-a - b)).max(0.0)
+}
+
+/// Minimal σ achieving (ε, δ)-DP (analytic Gaussian mechanism): binary
+/// search on the exact δ(ε, σ) curve, which is decreasing in σ.
+pub fn analytic_gaussian_sigma(eps: f64, delta: f64, sensitivity: f64) -> f64 {
+    assert!(eps > 0.0 && delta > 0.0 && sensitivity > 0.0);
+    let mut lo = 1e-8 * sensitivity;
+    let mut hi = classical_gaussian_sigma(eps, delta, sensitivity).max(sensitivity) * 4.0;
+    // ensure bracketing
+    while gaussian_delta(eps, hi, sensitivity) > delta {
+        hi *= 2.0;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if gaussian_delta(eps, mid, sensitivity) > delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+/// Privacy amplification by subsampling (Poisson sampling rate γ) for an
+/// (ε, δ)-DP base mechanism: ε' = ln(1 + γ(e^ε − 1)), δ' = γδ
+/// (Balle–Barthe–Gaboardi 2018).
+pub fn amplify_by_subsampling(eps: f64, delta: f64, gamma: f64) -> (f64, f64) {
+    assert!((0.0..=1.0).contains(&gamma));
+    ((1.0 + gamma * (eps.exp() - 1.0)).ln(), gamma * delta)
+}
+
+/// Inverse of the amplification: the base ε needed so that after
+/// γ-subsampling the released ε equals `eps_target`.
+pub fn deamplify_eps(eps_target: f64, gamma: f64) -> f64 {
+    assert!(gamma > 0.0);
+    (((eps_target.exp() - 1.0) / gamma) + 1.0).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classical_formula() {
+        let s = classical_gaussian_sigma(1.0, 1e-5, 1.0);
+        assert!((s - (2.0f64 * (1.25e5f64).ln()).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_beats_classical() {
+        // analytic calibration is strictly tighter (smaller σ)
+        for &(eps, delta) in &[(0.5, 1e-5), (1.0, 1e-6), (4.0, 1e-5)] {
+            let c = classical_gaussian_sigma(eps, delta, 1.0);
+            let a = analytic_gaussian_sigma(eps, delta, 1.0);
+            assert!(a < c, "eps={eps}: analytic {a} >= classical {c}");
+            assert!(a > 0.1 * c, "suspiciously small: {a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn analytic_sigma_achieves_delta() {
+        let (eps, delta) = (1.5, 1e-5);
+        let s = analytic_gaussian_sigma(eps, delta, 2.0);
+        let d = gaussian_delta(eps, s, 2.0);
+        assert!(d <= delta * 1.001, "d={d}");
+        // and is tight: slightly smaller σ violates δ
+        let d2 = gaussian_delta(eps, s * 0.99, 2.0);
+        assert!(d2 > delta, "calibration not tight: {d2}");
+    }
+
+    #[test]
+    fn delta_monotone_in_sigma_and_eps() {
+        let d1 = gaussian_delta(1.0, 1.0, 1.0);
+        let d2 = gaussian_delta(1.0, 2.0, 1.0);
+        assert!(d2 < d1);
+        let d3 = gaussian_delta(2.0, 1.0, 1.0);
+        assert!(d3 < d1);
+    }
+
+    #[test]
+    fn amplification_roundtrip() {
+        let (eps, gamma) = (0.8, 0.3);
+        let (amp, _) = amplify_by_subsampling(eps, 1e-5, gamma);
+        assert!(amp < eps);
+        let back = deamplify_eps(amp, gamma);
+        assert!((back - eps).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gamma_one_is_identity() {
+        let (e, d) = amplify_by_subsampling(1.3, 1e-5, 1.0);
+        assert!((e - 1.3).abs() < 1e-12);
+        assert!((d - 1e-5).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,15 @@
+//! Differential-privacy accounting (Def. 3 + the calibrations behind
+//! Figures 5–9).
+//!
+//! * [`accountant`] — (ε, δ) calibration of the Gaussian mechanism: the
+//!   classical Dwork bound σ ≥ Δ√(2 ln(1.25/δ))/ε and the *analytic*
+//!   Gaussian mechanism of Balle–Wang 2018 (exact δ(ε, σ) by binary
+//!   search), which is what the experiments use.
+//! * [`renyi`] — Rényi-DP / zCDP curves of the Gaussian mechanism and the
+//!   conversions used to calibrate the DDG baseline.
+
+pub mod accountant;
+pub mod renyi;
+
+pub use accountant::{analytic_gaussian_sigma, classical_gaussian_sigma, gaussian_delta};
+pub use renyi::{rdp_gaussian, zcdp_to_eps, zcdp_sigma_for_eps};

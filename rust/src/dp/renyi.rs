@@ -1,0 +1,93 @@
+//! Rényi-DP and zero-concentrated-DP curves (Mironov 2017; Bun–Steinke
+//! 2016). Used for Table 1's "Rényi DP" column and to calibrate the DDG
+//! baseline (Kairouz et al. 2021a express DDG's guarantee in zCDP).
+
+/// RDP of the Gaussian mechanism: ε(α) = α·Δ²/(2σ²).
+pub fn rdp_gaussian(alpha: f64, sigma: f64, sensitivity: f64) -> f64 {
+    assert!(alpha > 1.0);
+    alpha * sensitivity * sensitivity / (2.0 * sigma * sigma)
+}
+
+/// RDP → (ε, δ): ε = ε_RDP(α) + ln(1/δ)/(α − 1), optimized over α on a
+/// grid (standard conversion, Mironov 2017 Prop. 3).
+pub fn rdp_to_eps(delta: f64, rdp: impl Fn(f64) -> f64) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut alpha = 1.01f64;
+    while alpha < 512.0 {
+        let eps = rdp(alpha) + (1.0 / delta).ln() / (alpha - 1.0);
+        best = best.min(eps);
+        alpha *= 1.05;
+    }
+    best
+}
+
+/// zCDP ρ → (ε, δ): ε = ρ + 2√(ρ ln(1/δ)) (Bun–Steinke Lemma 3.6).
+pub fn zcdp_to_eps(rho: f64, delta: f64) -> f64 {
+    rho + 2.0 * (rho * (1.0 / delta).ln()).sqrt()
+}
+
+/// Gaussian mechanism zCDP: ρ = Δ²/(2σ²).
+pub fn zcdp_gaussian(sigma: f64, sensitivity: f64) -> f64 {
+    sensitivity * sensitivity / (2.0 * sigma * sigma)
+}
+
+/// σ such that the Gaussian mechanism's zCDP guarantee converts to
+/// (ε, δ)-DP: solve ρ + 2√(ρ L) = ε for ρ (L = ln(1/δ)), then
+/// σ = Δ/√(2ρ). Used for DDG calibration.
+pub fn zcdp_sigma_for_eps(eps: f64, delta: f64, sensitivity: f64) -> f64 {
+    let l = (1.0 / delta).ln();
+    // ρ + 2√(ρL) = ε ⇒ (√ρ + √L)² = ε + L ⇒ √ρ = √(ε + L) − √L
+    let sr = (eps + l).sqrt() - l.sqrt();
+    let rho = sr * sr;
+    sensitivity / (2.0 * rho).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dp::accountant::gaussian_delta;
+
+    #[test]
+    fn rdp_linear_in_alpha() {
+        assert!((rdp_gaussian(2.0, 1.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((rdp_gaussian(4.0, 2.0, 1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rdp_conversion_close_to_analytic() {
+        // RDP conversion is looser than analytic but within ~50%
+        let sigma = 3.0;
+        let delta = 1e-5;
+        let eps_rdp = rdp_to_eps(delta, |a| rdp_gaussian(a, sigma, 1.0));
+        // analytic eps: find eps with gaussian_delta(eps, sigma) = delta
+        let mut lo = 1e-6;
+        let mut hi = 50.0;
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            if gaussian_delta(mid, sigma, 1.0) > delta {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let eps_exact = hi;
+        assert!(eps_rdp >= eps_exact - 1e-6, "rdp {eps_rdp} < exact {eps_exact}");
+        assert!(eps_rdp <= eps_exact * 2.0, "rdp {eps_rdp} way above exact {eps_exact}");
+    }
+
+    #[test]
+    fn zcdp_roundtrip() {
+        let (eps, delta) = (2.0, 1e-5);
+        let sigma = zcdp_sigma_for_eps(eps, delta, 1.0);
+        let rho = zcdp_gaussian(sigma, 1.0);
+        let eps_back = zcdp_to_eps(rho, delta);
+        assert!((eps_back - eps).abs() < 1e-9, "{eps_back}");
+    }
+
+    #[test]
+    fn zcdp_sigma_decreasing_in_eps() {
+        let s1 = zcdp_sigma_for_eps(0.5, 1e-5, 1.0);
+        let s2 = zcdp_sigma_for_eps(4.0, 1e-5, 1.0);
+        assert!(s2 < s1);
+    }
+}

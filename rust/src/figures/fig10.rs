@@ -1,0 +1,94 @@
+//! Figure 10: Langevin sampling MSE for LSD (no compression), QLSD* with
+//! unbiased b-bit quantization, and QLSD*-MS with the shifted layered
+//! quantizer, b ∈ {4, 8, 16}.
+//!
+//! Setup (App. C.2.2): n = 20 clients, d = 50, N_i = 50 observations
+//! y_ij ~ N(μ_i, I), μ_i ~ N(0, 25·I), γ = 5e−4, full participation, full
+//! batch. We run scaled-down chains (DESIGN.md "Substitutions"): the
+//! paper's 4.5e5-step burn-in becomes a configurable default of 3e4.
+
+use super::FigOpts;
+use crate::apps::langevin::{fig10_arm, Fig10Arm, GaussianPosterior, LangevinOpts};
+use crate::util::json::Csv;
+use crate::util::stats::OnlineStats;
+
+pub fn run(opts: &FigOpts) {
+    println!("\n== Figure 10: Langevin MSE (LSD / QLSD* / QLSD*-MS) ==");
+    let runs = opts.runs_or(10);
+    let (iters, burn) = if opts.quick { (8_000, 4_000) } else { (40_000, 20_000) };
+    let bits: Vec<u32> = vec![4, 8, 16];
+    let mut arms: Vec<(String, Fig10Arm)> = vec![("LSD".into(), Fig10Arm::Lsd)];
+    for &b in &bits {
+        arms.push((format!("QLSD*-b{b}"), Fig10Arm::QlsdUnbiased(b)));
+        arms.push((format!("QLSD*-MS-b{b}"), Fig10Arm::QlsdMs(b)));
+    }
+    let mut csv = Csv::new(&["arm", "bits", "mse_mean", "mse_sem", "bits_per_client", "chain_var"]);
+    println!(
+        "{:>14} {:>12} {:>12} {:>14} {:>12}",
+        "arm", "mse", "sem", "bits/client", "chain-var"
+    );
+    for (name, arm) in &arms {
+        let mut mse = OnlineStats::new();
+        let mut bpc = OnlineStats::new();
+        let mut cvar = OnlineStats::new();
+        for r in 0..runs {
+            let problem = GaussianPosterior::generate(20, 50, 50, opts.seed + r as u64);
+            let o = LangevinOpts {
+                gamma: 5e-4,
+                iters,
+                burn_in: burn,
+                seed: opts.seed ^ (0xFA + r as u64),
+                discount_compression_noise: true,
+            };
+            let res = fig10_arm(&problem, *arm, o);
+            mse.push(res.mse);
+            bpc.push(res.bits_per_client);
+            cvar.push(res.chain_var);
+        }
+        let b = match arm {
+            Fig10Arm::Lsd => 0,
+            Fig10Arm::QlsdUnbiased(b) | Fig10Arm::QlsdMs(b) => *b,
+        };
+        println!(
+            "{:>14} {:>12.4e} {:>12.2e} {:>14.0} {:>12.4e}",
+            name,
+            mse.mean(),
+            mse.sem(),
+            bpc.mean(),
+            cvar.mean()
+        );
+        csv.rows.push(vec![
+            name.clone(),
+            b.to_string(),
+            format!("{}", mse.mean()),
+            format!("{}", mse.sem()),
+            format!("{}", bpc.mean()),
+            format!("{}", cvar.mean()),
+        ]);
+    }
+    let path = format!("{}/fig10.csv", opts.out_dir);
+    csv.save(&path).expect("saving csv");
+    println!("saved {path}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_arms_produce_finite_mse() {
+        let problem = GaussianPosterior::generate(6, 10, 20, 55);
+        let o = LangevinOpts {
+            gamma: 5e-4,
+            iters: 3000,
+            burn_in: 1500,
+            seed: 3,
+            discount_compression_noise: true,
+        };
+        for arm in [Fig10Arm::Lsd, Fig10Arm::QlsdUnbiased(4), Fig10Arm::QlsdMs(4)] {
+            let res = fig10_arm(&problem, arm, o);
+            assert!(res.mse.is_finite() && res.mse >= 0.0);
+            assert!(res.chain_var > 0.0);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Figure 2: conditional entropy H(M|S) of the direct and shifted layered
+//! quantizers with Gaussian / Laplace error, σ ∈ {1, 3}, input X ~ U(0, t)
+//! for t = 2^1 .. 2^12 — plus the Eq. 4 lower bound log(t) + h(D_Z).
+
+use super::FigOpts;
+use crate::coding::entropy::cond_entropy_mc;
+use crate::dist::{Gaussian, Laplace, Unimodal};
+use crate::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered};
+use crate::util::json::Csv;
+use crate::util::rng::Rng;
+
+fn mc_entropy<Q: PointQuantizer>(q: &Q, t: f64, reps: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    cond_entropy_mc(t, reps, || {
+        let s = q.draw(&mut rng);
+        (s.step, s.dither)
+    })
+}
+
+pub fn run(opts: &FigOpts) {
+    println!("\n== Figure 2: H(M|S) of layered quantizers ==");
+    let reps = opts.runs_or(400);
+    let ks: Vec<u32> = if opts.quick { (1..=6).collect() } else { (1..=12).collect() };
+    let mut csv = Csv::new(&[
+        "t",
+        "sigma",
+        "gauss_direct",
+        "gauss_shifted",
+        "gauss_lower_bound",
+        "laplace_direct",
+        "laplace_shifted",
+        "laplace_lower_bound",
+    ]);
+    println!(
+        "{:>6} {:>5} {:>12} {:>13} {:>12} {:>13} {:>13} {:>13}",
+        "t", "sigma", "gauss-direct", "gauss-shifted", "gauss-bound",
+        "lap-direct", "lap-shifted", "lap-bound"
+    );
+    for &sigma in &[1.0f64, 3.0] {
+        let g = Gaussian::new(0.0, sigma);
+        let l = Laplace::with_sd(0.0, sigma);
+        let gd = DirectLayered::new(g);
+        let gs = ShiftedLayered::new(g);
+        let ld = DirectLayered::new(l);
+        let ls = ShiftedLayered::new(l);
+        // Eq. 4 lower bound: log(t) + h(D_Z); h(D_Z) computed numerically
+        let hd_g = g.layer_height_entropy();
+        let hd_l = l.layer_height_entropy();
+        for &k in &ks {
+            let t = 2f64.powi(k as i32);
+            let row = [
+                t,
+                sigma,
+                mc_entropy(&gd, t, reps, opts.seed + k as u64),
+                mc_entropy(&gs, t, reps, opts.seed + 100 + k as u64),
+                t.log2() + hd_g,
+                mc_entropy(&ld, t, reps, opts.seed + 200 + k as u64),
+                mc_entropy(&ls, t, reps, opts.seed + 300 + k as u64),
+                t.log2() + hd_l,
+            ];
+            println!(
+                "{:>6} {:>5} {:>12.3} {:>13.3} {:>12.3} {:>13.3} {:>13.3} {:>13.3}",
+                row[0], row[1], row[2], row[3], row[4], row[5], row[6], row[7]
+            );
+            csv.row_f64(&row);
+        }
+    }
+    let path = format!("{}/fig2.csv", opts.out_dir);
+    csv.save(&path).expect("saving fig2 csv");
+    println!("saved {path}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_within_one_bit_of_lower_bound_large_t() {
+        // Hegazy–Li: the direct layered quantizer is near-optimal; at
+        // t = 256 the gap to log(t)+h(D_Z) must be < 1 bit (it is o(1))
+        let g = Gaussian::new(0.0, 1.0);
+        let q = DirectLayered::new(g);
+        let t = 256.0;
+        let h = mc_entropy(&q, t, 400, 9);
+        let bound = t.log2() + g.layer_height_entropy();
+        assert!(h >= bound - 0.05, "h={h} bound={bound}");
+        assert!(h <= bound + 1.0, "h={h} bound={bound}");
+    }
+
+    #[test]
+    fn shifted_gap_bounded_per_prop1() {
+        // Prop. 1: optimality gap of shifted <= 8 log(e)/t·sd + 2; Fig. 2
+        // shows the observed gap is < 1 bit
+        let g = Gaussian::new(0.0, 3.0);
+        let direct = DirectLayered::new(g);
+        let shifted = ShiftedLayered::new(g);
+        let t = 512.0;
+        let hd = mc_entropy(&direct, t, 300, 11);
+        let hs = mc_entropy(&shifted, t, 300, 12);
+        assert!(hs >= hd - 0.1, "shifted {hs} below direct {hd}?");
+        assert!(hs - hd < 1.0, "gap {} >= 1 bit", hs - hd);
+    }
+
+    #[test]
+    fn entropy_grows_like_log_t() {
+        let l = Laplace::with_sd(0.0, 1.0);
+        let q = DirectLayered::new(l);
+        let h1 = mc_entropy(&q, 64.0, 300, 13);
+        let h2 = mc_entropy(&q, 128.0, 300, 13);
+        assert!((h2 - h1 - 1.0).abs() < 0.15, "h2-h1={}", h2 - h1);
+    }
+}

@@ -1,0 +1,88 @@
+//! Regeneration harnesses for EVERY table and figure in the paper's
+//! evaluation (see DESIGN.md §3 for the index):
+//!
+//! | target        | paper artifact                                          |
+//! |---------------|---------------------------------------------------------|
+//! | [`fig2`]      | Fig. 2 — H(M\|S) of layered quantizers vs support t      |
+//! | [`fig4`]      | Fig. 4 — bits/client bounds vs n                         |
+//! | [`fig5`]      | Fig. 5 + Fig. 7 — CSGM vs SIGM MSE vs ε                  |
+//! | [`fig6`]      | Fig. 6 + Fig. 8 — DDG vs aggregate Gaussian MSE & bits   |
+//! | [`fig9`]      | Fig. 9 — bits/client of the AINQ mechanisms vs ε, n      |
+//! | [`fig10`]     | Fig. 10 — Langevin MSE: LSD / QLSD* / QLSD*-MS           |
+//! | [`table1`]    | Table 1 — mechanism property matrix (verified empirically)|
+//! | [`appd`]      | App. D — DRS via compression vs subgradient descent      |
+//!
+//! Each harness prints the series the paper reports and writes a CSV under
+//! `--out-dir` (default `results/`). `--quick` shrinks run counts for smoke
+//! testing; the defaults match the paper's protocol (scaled as documented
+//! in DESIGN.md "Substitutions").
+
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod fig10;
+pub mod table1;
+pub mod appd;
+
+/// Options common to all figure harnesses.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    pub out_dir: String,
+    /// number of independent runs per point (0 = figure default)
+    pub runs: usize,
+    /// shrink sweeps for smoke tests
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self { out_dir: "results".into(), runs: 0, quick: false, seed: 2024 }
+    }
+}
+
+impl FigOpts {
+    pub fn runs_or(&self, default: usize) -> usize {
+        if self.runs > 0 {
+            self.runs
+        } else if self.quick {
+            (default / 10).max(3)
+        } else {
+            default
+        }
+    }
+}
+
+/// Run every figure and table.
+pub fn run_all(opts: &FigOpts) {
+    fig2::run(opts);
+    fig4::run(opts);
+    fig5::run(opts, false);
+    fig5::run(opts, true);
+    fig6::run(opts, false);
+    fig6::run(opts, true);
+    fig9::run(opts);
+    fig10::run(opts);
+    table1::run(opts);
+    appd::run(opts);
+}
+
+/// Dispatch by name ("2", "4", ..., "10", "7", "8", "table1", "D").
+pub fn run_named(name: &str, opts: &FigOpts) -> bool {
+    match name {
+        "2" => fig2::run(opts),
+        "4" => fig4::run(opts),
+        "5" => fig5::run(opts, false),
+        "7" => fig5::run(opts, true),
+        "6" => fig6::run(opts, false),
+        "8" => fig6::run(opts, true),
+        "9" => fig9::run(opts),
+        "10" => fig10::run(opts),
+        "table1" | "1" => table1::run(opts),
+        "D" | "d" | "appd" => appd::run(opts),
+        _ => return false,
+    }
+    true
+}

@@ -1,0 +1,53 @@
+//! # exact-comp
+//!
+//! Production-grade reproduction of *"Compression with Exact Error
+//! Distribution for Federated Learning"* (Hegazy, Leluc, Li, Dieuleveut,
+//! 2023): quantized aggregation mechanisms whose compression error follows a
+//! *target distribution exactly* (AINQ — Additive Independent Noise
+//! Quantization), their communication analysis, and the paper's three
+//! applications (compression-for-free differential privacy, Langevin
+//! dynamics, randomized smoothing).
+//!
+//! ## Layout (three-layer architecture, Python never on the request path)
+//!
+//! * [`util`] — PRNGs, special functions, statistics, micro-bench harness
+//!   (the offline registry has no rand/criterion/proptest; all built here).
+//! * [`dist`] — Gaussian / Laplace / Uniform / Irwin–Hall / discrete
+//!   Gaussian distributions with superlevel-set geometry for layered
+//!   quantizers.
+//! * [`coding`] — bit I/O, Elias gamma, Huffman, fixed-length codes and
+//!   entropy accounting (communication-cost measurements of §3.2, §4.5).
+//! * [`quantizer`] — subtractive dithering (Ex. 1), direct (Def. 4) and
+//!   shifted (Def. 5) layered quantizers.
+//! * [`mechanisms`] — individual AINQ (Def. 2), Irwin–Hall (§4.2),
+//!   aggregate Q / Gaussian (Def. 8 + Algorithms 1–4), SIGM (§5.1, Alg. 5).
+//! * [`baselines`] — CSGM (Chen et al. 2023), DDG (Kairouz et al. 2021a),
+//!   unbiased b-bit quantization (QLSD baseline).
+//! * [`transforms`] — fast Walsh–Hadamard, randomized rotation, Kashin
+//!   flattening (Remark 1).
+//! * [`dp`] — (ε, δ) / Rényi / zCDP accounting and calibration.
+//! * [`secagg`] — additive-masking secure aggregation over ℤ_m.
+//! * [`coordinator`] — the FL runtime: thread-per-client rounds, shared
+//!   randomness, bit accounting, metrics.
+//! * [`runtime`] — PJRT engine loading the AOT-lowered JAX/Pallas HLO
+//!   artifacts (`artifacts/*.hlo.txt`).
+//! * [`apps`] — distributed mean estimation, QLSD* Langevin, distributed
+//!   randomized smoothing, end-to-end FL training.
+//! * [`figures`] — regenerates every table and figure of the paper's
+//!   evaluation (`repro figures --all`).
+
+pub mod util;
+pub mod dist;
+pub mod coding;
+pub mod quantizer;
+pub mod mechanisms;
+pub mod baselines;
+pub mod transforms;
+pub mod dp;
+pub mod secagg;
+pub mod coordinator;
+pub mod runtime;
+pub mod apps;
+pub mod figures;
+pub mod testing;
+pub mod cli;

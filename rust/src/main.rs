@@ -1,0 +1,169 @@
+//! `repro` — the exact-comp launcher.
+//!
+//! Subcommands:
+//!   figures   regenerate the paper's tables/figures
+//!               --fig 2|4|5|6|7|8|9|10|D --table 1 --all
+//!               --out-dir DIR --runs N --quick --seed S
+//!   train     end-to-end FL training through the PJRT runtime
+//!               --rounds N --clients N --lr F --sigma F
+//!               --mech aggregate|irwin-hall|individual|none
+//!               --artifacts DIR --out FILE.csv
+//!   langevin  QLSD* sampling demo (Fig. 10 single arm)
+//!               --arm lsd|qlsd|qlsd-ms --bits B --iters N
+//!   info      print runtime/platform diagnostics
+
+use anyhow::{bail, Result};
+use exact_comp::apps::fl_train::{self, MechKind, TrainOpts};
+use exact_comp::apps::langevin::{fig10_arm, Fig10Arm, GaussianPosterior, LangevinOpts};
+use exact_comp::cli::Args;
+use exact_comp::figures::{self, FigOpts};
+use exact_comp::runtime::Engine;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("train") => cmd_train(&args),
+        Some("langevin") => cmd_langevin(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "usage: repro <subcommand> [flags]\n\
+         \n\
+         subcommands:\n\
+         \x20 figures   --fig 2|4|5|6|7|8|9|10|D | --table 1 | --all   [--out-dir DIR] [--runs N] [--quick] [--seed S]\n\
+         \x20 train     [--rounds N] [--clients N] [--lr F] [--sigma F] [--mech aggregate|irwin-hall|individual|none]\n\
+         \x20           [--artifacts DIR] [--out FILE.csv]\n\
+         \x20 langevin  [--arm lsd|qlsd|qlsd-ms] [--bits B] [--iters N] [--seed S]\n\
+         \x20 info      [--artifacts DIR]"
+    );
+}
+
+fn fig_opts(args: &Args) -> FigOpts {
+    FigOpts {
+        out_dir: args.str_or("out-dir", "results"),
+        runs: args.usize_or("runs", 0),
+        quick: args.has("quick"),
+        seed: args.u64_or("seed", 2024),
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let opts = fig_opts(args);
+    if args.has("all") {
+        figures::run_all(&opts);
+        return Ok(());
+    }
+    if let Some(t) = args.get("table") {
+        if !figures::run_named(&format!("table{t}"), &opts) {
+            bail!("unknown table {t}");
+        }
+        return Ok(());
+    }
+    match args.get("fig") {
+        Some(f) => {
+            if !figures::run_named(f, &opts) {
+                bail!("unknown figure {f}");
+            }
+            Ok(())
+        }
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let engine = Engine::load(&dir)?;
+    println!(
+        "engine up: platform={}, params={}, batch={}",
+        engine.platform(),
+        engine.manifest.param_count,
+        engine.manifest.batch
+    );
+    let mech = match args.str_or("mech", "aggregate").as_str() {
+        "aggregate" => MechKind::Aggregate,
+        "irwin-hall" => MechKind::IrwinHall,
+        "individual" => MechKind::IndividualShifted,
+        "none" => MechKind::None,
+        other => bail!("unknown mechanism {other}"),
+    };
+    let opts = TrainOpts {
+        rounds: args.usize_or("rounds", 300),
+        lr: args.f64_or("lr", 0.5),
+        n_clients: args.usize_or("clients", 8),
+        clip_c: args.f64_or("clip", 0.05),
+        mech,
+        sigma: args.f64_or("sigma", 1e-3),
+        eval_every: args.usize_or("eval-every", 20),
+        seed: args.u64_or("seed", 0xF1),
+    };
+    let data = fl_train::gen_dataset(&engine, opts.n_clients, opts.seed);
+    println!("training: {opts:?}");
+    let metrics = fl_train::train(&engine, &data, opts)?;
+    println!(
+        "final: train_loss={:.4} eval_loss={:.4} eval_acc={:.4} bits/client/round={:.0} ({:.1}s)",
+        metrics.last("train_loss").unwrap_or(f64::NAN),
+        metrics.last("loss").unwrap_or(f64::NAN),
+        metrics.last("acc").unwrap_or(f64::NAN),
+        metrics.mean_of("bits_per_client").unwrap_or(f64::NAN),
+        metrics.elapsed_secs(),
+    );
+    let out = args.str_or("out", "results/fl_train.csv");
+    metrics.save_csv(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_langevin(args: &Args) -> Result<()> {
+    let bits = args.usize_or("bits", 8) as u32;
+    let arm = match args.str_or("arm", "qlsd-ms").as_str() {
+        "lsd" => Fig10Arm::Lsd,
+        "qlsd" => Fig10Arm::QlsdUnbiased(bits),
+        "qlsd-ms" => Fig10Arm::QlsdMs(bits),
+        other => bail!("unknown arm {other}"),
+    };
+    let seed = args.u64_or("seed", 7);
+    let iters = args.usize_or("iters", 40_000);
+    let problem = GaussianPosterior::generate(20, 50, 50, seed);
+    let o = LangevinOpts {
+        gamma: args.f64_or("gamma", 5e-4),
+        iters,
+        burn_in: iters / 2,
+        seed,
+        discount_compression_noise: true,
+    };
+    println!("running {arm:?} for {iters} iterations ...");
+    let res = fig10_arm(&problem, arm, o);
+    println!(
+        "mse={:.5e} chain_var={:.5e} bits/client={:.0}",
+        res.mse, res.chain_var, res.bits_per_client
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("exact-comp repro binary");
+    let dir = args.str_or("artifacts", "artifacts");
+    match Engine::load(&dir) {
+        Ok(e) => {
+            println!("artifacts: {dir} (ok)");
+            println!("platform:  {}", e.platform());
+            println!("manifest:  {:?}", e.manifest);
+        }
+        Err(err) => println!("artifacts: unavailable ({err:#})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,256 @@
+//! Algorithms DecomposeUnif + Decompose (Appendix A.2 / A.4): decompose the
+//! target noise Q = N(0, 1) into a mixture of shifted & scaled copies of
+//! P = IH(n, 0, 1), producing the global shared randomness T = (A, B) of
+//! the aggregate Q mechanism (Def. 8): if (A, B) ⊥ Z ~ P then A·Z + B ~ Q.
+//!
+//! Step 1 (`decompose_unif`): express U(−1/2, 1/2) as a mixture of
+//! shifted/scaled copies of the standardized f̃ (P rescaled to support
+//! [−1/2, 1/2]). Each loop iteration either stops inside the f̃ layer (with
+//! prob 1/f̃(0)) or recurses into a shorter uniform — a.s. terminating
+//! geometric recursion.
+//!
+//! Step 2 (`draw`): split g = λf + (1−λ)ψ with
+//! λ = inf_{x>0} g′(x)/f′(x) (n ≥ 3; λ = 0 for n ≤ 2 where IH is not
+//! smooth enough), sample a height layer of ψ — an interval (−s, s) — and
+//! delegate U(−s, s) to Step 1.
+
+use crate::dist::{Continuous, Gaussian, IrwinHall, Unimodal};
+use crate::util::rng::Rng;
+
+/// Mixture sampler for Q = N(0,1), P = IH(n, 0, 1).
+#[derive(Clone, Debug)]
+pub struct Decomposer {
+    pub n: u64,
+    f: IrwinHall,
+    g: Gaussian,
+    /// λ = inf_{x>0} g'(x)/f'(x) (0 for n <= 2)
+    pub lambda: f64,
+    /// support length L = 2·sup{x : f(x) > 0} = 2√(3n)
+    pub support_l: f64,
+}
+
+impl Decomposer {
+    pub fn new(n: u64) -> Self {
+        assert!(n >= 1);
+        let f = IrwinHall::standard(n);
+        let g = Gaussian::standard();
+        let support_l = 2.0 * f.support_half_width();
+        let lambda = if n >= 3 { Self::compute_lambda(&f, &g) } else { 0.0 };
+        Self { n, f, g, lambda, support_l }
+    }
+
+    /// λ = inf_{x>0} g'(x)/f'(x) on a dense grid of the interior of supp f,
+    /// clamped so that g − λf stays nonnegative at the mode.
+    ///
+    /// The grid stops where f falls below 1e-7·f(0): beyond that point the
+    /// CF-quadrature tail of the IH grid is numerical noise, while the TRUE
+    /// f, f' there are vanishingly small compared to g, g' (IH tails are
+    /// (c−x)^{n−1}-light), so (g − λf)' ≈ g' < 0 holds for any λ ≤ 1 and
+    /// unimodality of ψ is unaffected.
+    fn compute_lambda(f: &IrwinHall, g: &Gaussian) -> f64 {
+        let c = f.support_half_width();
+        let f0 = f.pdf(0.0);
+        let mut lam = g.pdf(0.0) / f0;
+        let grid = 4000;
+        let floor = 1e-7 * f0;
+        for i in 1..grid {
+            let x = c * i as f64 / grid as f64;
+            if f.pdf(x) < floor {
+                break; // tail: below the quadrature noise floor
+            }
+            let fp = f.pdf_deriv(x);
+            if fp < -floor / c {
+                let gp = -x * g.pdf(x); // N(0,1): g'(x) = -x g(x)
+                lam = lam.min(gp / fp);
+            }
+        }
+        lam.max(0.0)
+    }
+
+    /// ψ-layer boundary: s = sup{x ≥ 0 : v <= g(x) − λ f(x)} by bisection
+    /// (h = g − λf is symmetric, nonincreasing on x > 0 by choice of λ).
+    fn psi_layer_boundary(&self, v: f64) -> f64 {
+        let h = |x: f64| self.g.pdf(x) - self.lambda * self.f.pdf(x);
+        // expanding upper bracket: h decays like the Gaussian tail
+        let mut hi = self.f.support_half_width().max(8.0);
+        while h(hi) > v && hi < 1e6 {
+            hi *= 2.0;
+        }
+        // 60 halvings reach ~1e-18 relative bracket width
+        crate::util::interp::bisect_monotone(h, v, 0.0, hi, true, 60)
+    }
+
+    /// DecomposeUnif (Algorithm 1) on the standardized f̃ supported on
+    /// [−1/2, 1/2]: returns (a, b) with a·X̃ + b ~ U(−1/2, 1/2),
+    /// X̃ = X / L, X ~ P.
+    pub fn decompose_unif(&self, rng: &mut Rng) -> (f64, f64) {
+        let l = self.support_l;
+        // f̃(x) = L · f(L x); f̃⁻¹(y) = b⁺(y / L) / L
+        let f0 = l * self.f.pdf(0.0);
+        let mut a = 1.0f64;
+        let mut b = 0.0f64;
+        for _ in 0..10_000 {
+            let u = rng.u01() - 0.5;
+            let v = rng.u01();
+            let fu = l * self.f.pdf(l * u);
+            if v <= fu / f0 {
+                return (a, b);
+            }
+            // recurse into U(s, 1/2) (u > 0) or U(-1/2, -s) (u < 0):
+            // centre ± (s + 1/2)/2, width (1/2 − s)
+            let s = self.f.b_plus(v * f0 / l) / l;
+            b += a * u.signum() * (s + 0.5) / 2.0;
+            a *= 0.5 - s;
+        }
+        // unreachable in practice: termination prob per loop is 1/f̃(0)
+        (a, b)
+    }
+
+    /// Decompose (Algorithm 2): draw (A, B) with A·Z + B ~ N(0,1), Z ~ P.
+    pub fn draw(&self, rng: &mut Rng) -> (f64, f64) {
+        let x = self.g.sample(rng);
+        let v = self.g.pdf(x) * rng.u01();
+        if v > self.g.pdf(x) - self.lambda * self.f.pdf(x) {
+            // the λf(x) component: noise is P itself
+            return (1.0, 0.0);
+        }
+        // the (1−λ)ψ component: height-v layer is U(−s, s) = 2s·U(−1/2,1/2)
+        let s = self.psi_layer_boundary(v);
+        let (a, b) = self.decompose_unif(rng);
+        (2.0 * a * s / self.support_l, 2.0 * b * s)
+    }
+
+    /// Monte-Carlo estimate of E[−log2 |A|] — the communication overhead
+    /// term of Theorem 1 (−h_M(Q‖P) is its infimum over mixtures).
+    pub fn expected_neg_log_a(&self, reps: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            let (a, _) = self.draw(&mut rng);
+            acc -= a.abs().log2();
+        }
+        acc / reps as f64
+    }
+
+    /// The Theorem 2 lower bound on h_M(Q‖P):
+    /// h_M >= −(1−λ)(L f(0) + log2( e·L·(g(0) − λ f(0)) / (2(1−λ)) )).
+    pub fn theorem2_lower_bound(&self) -> f64 {
+        let l = self.support_l;
+        let f0 = self.f.pdf(0.0);
+        let g0 = self.g.pdf(0.0);
+        let lam = self.lambda;
+        if lam >= 1.0 {
+            return 0.0;
+        }
+        let inner = std::f64::consts::E * l * (g0 - lam * f0) / (2.0 * (1.0 - lam));
+        -(1.0 - lam) * (l * f0 + inner.log2())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::ks_test;
+
+    #[test]
+    fn lambda_properties() {
+        for &n in &[3u64, 5, 20, 100] {
+            let d = Decomposer::new(n);
+            assert!(d.lambda > 0.0 && d.lambda < 1.0, "n={n} λ={}", d.lambda);
+            // ψ = (g − λf)/(1−λ) must be nonnegative on a grid
+            let c = d.f.support_half_width();
+            for i in 0..200 {
+                let x = c * i as f64 / 200.0;
+                let h = d.g.pdf(x) - d.lambda * d.f.pdf(x);
+                assert!(h >= -1e-10, "n={n} x={x} h={h}");
+            }
+            // λ grows towards 1 as IH(n) → N(0,1)
+        }
+        let l3 = Decomposer::new(3).lambda;
+        let l100 = Decomposer::new(100).lambda;
+        assert!(l100 > l3, "λ(100)={l100} <= λ(3)={l3}");
+        assert!(Decomposer::new(2).lambda == 0.0);
+    }
+
+    #[test]
+    fn decompose_unif_reconstructs_uniform() {
+        // a·X̃ + b with X̃ = X/L must be exactly U(−1/2, 1/2)
+        for &n in &[3u64, 16] {
+            let d = Decomposer::new(n);
+            let mut rng = Rng::new(200 + n);
+            let mut samples = Vec::with_capacity(6000);
+            for _ in 0..6000 {
+                let (a, b) = d.decompose_unif(&mut rng);
+                let x = d.f.sample(&mut rng) / d.support_l;
+                samples.push(a * x + b);
+            }
+            let res = ks_test(&samples, |x| (x + 0.5).clamp(0.0, 1.0));
+            assert!(res.p_value > 0.003, "n={n} p={}", res.p_value);
+        }
+    }
+
+    #[test]
+    fn draw_reconstructs_standard_gaussian() {
+        // THE theorem: A·Z + B ~ N(0, 1) — validates the whole §4.4 pipeline
+        for &n in &[2u64, 3, 10, 50] {
+            let d = Decomposer::new(n);
+            let mut rng = Rng::new(300 + n);
+            let mut samples = Vec::with_capacity(8000);
+            for _ in 0..8000 {
+                let (a, b) = d.draw(&mut rng);
+                let z = d.f.sample(&mut rng);
+                samples.push(a * z + b);
+            }
+            let res = ks_test(&samples, crate::util::special::norm_cdf);
+            assert!(res.p_value > 0.003, "n={n} p={} d={}", res.p_value, res.statistic);
+        }
+    }
+
+    #[test]
+    fn scale_a_never_exceeds_one() {
+        // every mixture component shrinks: |A| <= 1
+        let d = Decomposer::new(8);
+        let mut rng = Rng::new(400);
+        for _ in 0..5000 {
+            let (a, _) = d.draw(&mut rng);
+            assert!(a.abs() <= 1.0 + 1e-12, "a={a}");
+            assert!(a != 0.0);
+        }
+    }
+
+    #[test]
+    fn expected_neg_log_a_shrinks_with_n() {
+        // as IH(n) → Gaussian, the λ component dominates: A = 1 mostly,
+        // so E[−log A] → 0 — this is exactly why aggregate Gaussian gets
+        // cheaper with many clients (Fig. 4)
+        let small = Decomposer::new(3).expected_neg_log_a(4000, 1);
+        let large = Decomposer::new(200).expected_neg_log_a(4000, 2);
+        assert!(large < small, "E[-log A]: n=200 {large} >= n=3 {small}");
+        assert!(large < 0.5, "n=200 E[-log A]={large}");
+    }
+
+    #[test]
+    fn theorem2_bound_is_consistent() {
+        // -h_M <= E[-log2 |A|] for OUR mixture (Def. 9: h_M is the sup of
+        // E[log |A|]), so E[-log|A|] >= -h_M >= -(upper bounds)...
+        // concretely: MC E[-log|A|] must be >= -theorem2_lower_bound is the
+        // wrong direction; the right check: -thm2_bound is an upper bound
+        // on achievable E[-log A] infimum, so our MC must be >= -(h_M upper)
+        // = -(h(Q) - h(P)) ... we check the weaker sanity: thm2 <= 0 and
+        // finite, and our MC cost is >= -thm2_bound - slack is NOT implied;
+        // instead check MC >= 0 and thm2 <= 0.
+        for &n in &[3u64, 50] {
+            let d = Decomposer::new(n);
+            let b = d.theorem2_lower_bound();
+            assert!(b <= 1e-9, "n={n} bound={b}");
+            assert!(b.is_finite());
+            let mc = d.expected_neg_log_a(2000, 3);
+            assert!(mc >= -1e-9, "n={n} mc={mc}");
+            // the MC cost of our constructive mixture cannot beat the
+            // optimal −h_M, which Theorem 2 bounds by −b ... i.e. mc can be
+            // at most slightly below −b only if thm2 is loose; sanity: the
+            // achievable cost should be within a few bits of the bound.
+            assert!(mc <= -b + 4.0, "n={n} mc={mc} -bound={}", -b);
+        }
+    }
+}

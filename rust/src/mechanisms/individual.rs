@@ -1,0 +1,212 @@
+//! Individual AINQ mechanism (Def. 2): each client runs a point-to-point
+//! layered quantizer with error N(0, nσ²); the server averages the n
+//! decoded values, so the aggregate error is exactly N(0, σ²).
+//!
+//! Divisibility requirement: the aggregate noise must be a sum of n iid
+//! terms — satisfied by the Gaussian (the paper's "individual Gaussian"
+//! mechanism), NOT by e.g. the Laplace for n > 1.
+
+use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::coding::fixed::FixedCode;
+use crate::dist::Gaussian;
+use crate::quantizer::layered::eta;
+use crate::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered};
+use crate::util::rng::Rng;
+
+/// Which layered quantizer the clients run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayeredVariant {
+    /// Def. 4 — near-optimal variable-length communication.
+    Direct,
+    /// Def. 5 — minimal step η > 0, fixed-length capable.
+    Shifted,
+}
+
+/// Individual Gaussian mechanism: aggregate error exactly N(0, σ²).
+#[derive(Clone, Debug)]
+pub struct IndividualGaussian {
+    /// target aggregate noise sd
+    pub sigma: f64,
+    pub variant: LayeredVariant,
+    /// input magnitude bound |x_ij| <= t/2 used for fixed-length sizing
+    pub input_range_t: f64,
+}
+
+impl IndividualGaussian {
+    pub fn new(sigma: f64, variant: LayeredVariant, input_range_t: f64) -> Self {
+        assert!(sigma > 0.0 && input_range_t > 0.0);
+        Self { sigma, variant, input_range_t }
+    }
+
+    /// Per-client error sd: aggregate N(0, σ²) = mean of n iid N(0, nσ²).
+    pub fn per_client_sd(&self, n: usize) -> f64 {
+        self.sigma * (n as f64).sqrt()
+    }
+}
+
+impl MeanMechanism for IndividualGaussian {
+    fn name(&self) -> String {
+        match self.variant {
+            LayeredVariant::Direct => format!("individual-gaussian-direct(sigma={})", self.sigma),
+            LayeredVariant::Shifted => format!("individual-gaussian-shifted(sigma={})", self.sigma),
+        }
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        false // per-client random step sizes cannot be summed before decode
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        true
+    }
+
+    fn fixed_length(&self) -> bool {
+        self.variant == LayeredVariant::Shifted
+    }
+
+    fn noise_sd(&self) -> f64 {
+        self.sigma
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        let n = xs.len();
+        let d = xs[0].len();
+        let per_sd = self.per_client_sd(n);
+        let g = Gaussian::new(0.0, per_sd);
+        let mut bits = BitsAccount::default();
+
+        // fixed-length code sized by Prop. 2 (shifted only)
+        let fixed_code = (self.variant == LayeredVariant::Shifted).then(|| {
+            FixedCode::from_support_bound(self.input_range_t, eta::gaussian(per_sd))
+        });
+        let mut fixed_total = 0.0f64;
+
+        let mut estimate = vec![0.0; d];
+        match self.variant {
+            LayeredVariant::Direct => {
+                let q = DirectLayered::new(g);
+                for (i, x) in xs.iter().enumerate() {
+                    // client i and the server share stream (seed, i)
+                    let mut rng = Rng::derive(seed, i as u64);
+                    for j in 0..d {
+                        let s = q.draw(&mut rng);
+                        let m = q.encode(x[j], &s);
+                        bits.add_description(m);
+                        estimate[j] += q.decode(m, &s);
+                    }
+                }
+            }
+            LayeredVariant::Shifted => {
+                let q = ShiftedLayered::new(g);
+                for (i, x) in xs.iter().enumerate() {
+                    let mut rng = Rng::derive(seed, i as u64);
+                    for j in 0..d {
+                        let s = q.draw(&mut rng);
+                        let m = q.encode(x[j], &s);
+                        bits.add_description(m);
+                        if let Some(c) = fixed_code {
+                            fixed_total += if c.contains(m) {
+                                c.bits() as f64
+                            } else {
+                                // escape: out-of-range descriptions fall back
+                                // to a gamma codeword (rare for bounded input)
+                                crate::coding::elias::signed_gamma_len(m) as f64 + c.bits() as f64
+                            };
+                        }
+                        estimate[j] += q.decode(m, &s);
+                    }
+                }
+            }
+        }
+        for e in estimate.iter_mut() {
+            *e /= n as f64;
+        }
+        bits.fixed_total = fixed_code.map(|_| fixed_total);
+        RoundOutput { estimate, bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Continuous;
+    use crate::mechanisms::traits::true_mean;
+    use crate::util::stats::ks_test;
+
+    fn client_data(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.uniform(-4.0, 4.0)).collect()).collect()
+    }
+
+    fn aggregate_errors(mech: &impl MeanMechanism, xs: &[Vec<f64>], rounds: usize) -> Vec<f64> {
+        let mean = true_mean(xs);
+        let mut errs = Vec::new();
+        for r in 0..rounds {
+            let out = mech.aggregate(xs, 0xABC0 + r as u64);
+            for j in 0..mean.len() {
+                errs.push(out.estimate[j] - mean[j]);
+            }
+        }
+        errs
+    }
+
+    #[test]
+    fn ainq_exact_gaussian_direct() {
+        let xs = client_data(8, 4, 1);
+        let mech = IndividualGaussian::new(0.7, LayeredVariant::Direct, 8.0);
+        let errs = aggregate_errors(&mech, &xs, 400);
+        let g = Gaussian::new(0.0, 0.7);
+        let res = ks_test(&errs, |e| g.cdf(e));
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+    }
+
+    #[test]
+    fn ainq_exact_gaussian_shifted() {
+        let xs = client_data(8, 4, 2);
+        let mech = IndividualGaussian::new(1.2, LayeredVariant::Shifted, 8.0);
+        let errs = aggregate_errors(&mech, &xs, 400);
+        let g = Gaussian::new(0.0, 1.2);
+        let res = ks_test(&errs, |e| g.cdf(e));
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+    }
+
+    #[test]
+    fn error_independent_of_data_scale() {
+        // AINQ: same error law for very different inputs
+        let mech = IndividualGaussian::new(1.0, LayeredVariant::Shifted, 2000.0);
+        let xs_small = client_data(6, 3, 3);
+        let xs_big: Vec<Vec<f64>> =
+            xs_small.iter().map(|r| r.iter().map(|v| v * 100.0).collect()).collect();
+        let e1 = aggregate_errors(&mech, &xs_small, 300);
+        let e2 = aggregate_errors(&mech, &xs_big, 300);
+        let res = crate::util::stats::ks_test_two_sample(&e1, &e2);
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+    }
+
+    #[test]
+    fn shifted_reports_fixed_bits() {
+        let xs = client_data(5, 4, 4);
+        let mech = IndividualGaussian::new(1.0, LayeredVariant::Shifted, 8.0);
+        let out = mech.aggregate(&xs, 99);
+        assert!(out.bits.fixed_total.is_some());
+        assert!(out.bits.fixed_total.unwrap() > 0.0);
+        assert_eq!(out.bits.messages, 20);
+    }
+
+    #[test]
+    fn direct_has_no_fixed_bits() {
+        let xs = client_data(5, 4, 5);
+        let mech = IndividualGaussian::new(1.0, LayeredVariant::Direct, 8.0);
+        let out = mech.aggregate(&xs, 99);
+        assert!(out.bits.fixed_total.is_none());
+        assert!(!mech.fixed_length());
+    }
+
+    #[test]
+    fn property_flags() {
+        let m = IndividualGaussian::new(1.0, LayeredVariant::Shifted, 8.0);
+        assert!(!m.is_homomorphic());
+        assert!(m.gaussian_noise());
+        assert!(m.fixed_length());
+    }
+}

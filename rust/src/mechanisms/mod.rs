@@ -1,0 +1,27 @@
+//! Aggregate AINQ mechanisms (§2, §4, §5): n clients → server mean estimate
+//! with an exact aggregation-error distribution.
+//!
+//! * [`individual`] — Def. 2: per-client point-to-point AINQ quantizers
+//!   (direct or shifted layered), averaged by the server. Exact Gaussian
+//!   noise, NOT homomorphic.
+//! * [`irwin_hall`] — §4.2: shared-step subtractive dithering; homomorphic
+//!   but the noise is Irwin–Hall, not Gaussian.
+//! * [`decompose`] — Algorithms 1–2: decomposition of the Gaussian into a
+//!   mixture of shifted/scaled Irwin–Hall laws (the (A, B) sampler).
+//! * [`aggregate`] — Def. 8 + §4.4: the aggregate Gaussian mechanism —
+//!   homomorphic AND exactly Gaussian.
+//! * [`sigm`] — §5.1 + Alg. 5: subsampled individual Gaussian mechanism.
+
+pub mod traits;
+pub mod individual;
+pub mod irwin_hall;
+pub mod decompose;
+pub mod aggregate;
+pub mod sigm;
+
+pub use aggregate::AggregateGaussian;
+pub use decompose::Decomposer;
+pub use individual::{IndividualGaussian, LayeredVariant};
+pub use irwin_hall::IrwinHallMechanism;
+pub use sigm::Sigm;
+pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

@@ -1,0 +1,215 @@
+//! SIGM — Subsampled Individual Gaussian Mechanism (§5.1, Algorithm 5).
+//!
+//! Coordinate-wise Bernoulli(γ) subsampling composed with the shifted
+//! layered quantizer targeting N(0, (σγn)²) per selected message. The
+//! decoded subsampled mean satisfies (App. A.6)
+//!
+//!   Y(j) − (γn)⁻¹ Σ_{i:Bᵢ(j)=1} xᵢ(j)  ~  N(0, σ²) ,
+//!
+//! i.e. the quantization *is* the DP noise (compression for free). The MSE
+//! against the true mean adds the subsampling variance ≤ c²/(nγ) per
+//! coordinate (Prop. 4).
+
+use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::coding::fixed::FixedCode;
+use crate::dist::Gaussian;
+use crate::quantizer::layered::eta;
+use crate::quantizer::{PointQuantizer, ShiftedLayered};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Sigm {
+    /// exact Gaussian noise sd on the subsampled mean
+    pub sigma: f64,
+    /// coordinate-subsampling probability γ
+    pub gamma: f64,
+    /// per-coordinate input bound |x_ij| <= c
+    pub input_bound_c: f64,
+}
+
+impl Sigm {
+    pub fn new(sigma: f64, gamma: f64, input_bound_c: f64) -> Self {
+        assert!(sigma > 0.0 && (0.0..=1.0).contains(&gamma));
+        Self { sigma, gamma, input_bound_c }
+    }
+}
+
+impl MeanMechanism for Sigm {
+    fn name(&self) -> String {
+        format!("sigm(sigma={}, gamma={})", self.sigma, self.gamma)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        false
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        true // conditionally on the subsample — the DP-relevant law
+    }
+
+    fn fixed_length(&self) -> bool {
+        true // shifted layered quantizer (Prop. 2 + Prop. 4 cost)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        self.sigma
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        let n = xs.len();
+        let d = xs[0].len();
+        let nf = n as f64;
+        let per_sd = self.sigma * self.gamma * nf;
+        let q = ShiftedLayered::new(Gaussian::new(0.0, per_sd));
+        let mut bits = BitsAccount::default();
+        let mut fixed_total = 0.0f64;
+
+        // Global shared randomness: the subsampling matrix B[i][j].
+        const GLOBAL_STREAM: u64 = u64::MAX;
+        let mut brng = Rng::derive(seed, GLOBAL_STREAM);
+        let b: Vec<Vec<bool>> = (0..n)
+            .map(|_| (0..d).map(|_| brng.bernoulli(self.gamma)).collect())
+            .collect();
+        let n_tilde: Vec<f64> =
+            (0..d).map(|j| (0..n).filter(|&i| b[i][j]).count() as f64).collect();
+
+        let mut estimate = vec![0.0f64; d];
+        for (i, x) in xs.iter().enumerate() {
+            let mut rng = Rng::derive(seed, i as u64);
+            for j in 0..d {
+                if !b[i][j] {
+                    continue;
+                }
+                let s = q.draw(&mut rng);
+                let scaled = x[j] * n_tilde[j].sqrt();
+                let m = q.encode(scaled, &s);
+                bits.add_description(m);
+                // fixed-length accounting: input magnitude <= c·√ñ(j)
+                let code = FixedCode::from_support_bound(
+                    2.0 * self.input_bound_c * n_tilde[j].sqrt(),
+                    eta::gaussian(per_sd),
+                );
+                fixed_total += code.bits() as f64;
+                estimate[j] += q.decode(m, &s);
+            }
+        }
+        let mut extra = Rng::derive(seed, GLOBAL_STREAM - 1);
+        for j in 0..d {
+            if n_tilde[j] > 0.0 {
+                estimate[j] /= self.gamma * nf * n_tilde[j].sqrt();
+            } else {
+                // empty subsample: emit pure mechanism noise so the output
+                // law stays DP-calibratable
+                estimate[j] = extra.normal_ms(0.0, self.sigma);
+            }
+        }
+        bits.fixed_total = Some(fixed_total);
+        RoundOutput { estimate, bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Continuous;
+    use crate::util::stats::{ks_test, variance};
+
+    fn client_data(n: usize, d: usize, c: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..d).map(|_| rng.uniform(-c, c)).collect()).collect()
+    }
+
+    /// error of the estimate vs the SUBSAMPLED mean (the AINQ quantity)
+    fn subsample_errors(mech: &Sigm, xs: &[Vec<f64>], rounds: usize, seed0: u64) -> Vec<f64> {
+        let n = xs.len();
+        let d = xs[0].len();
+        let mut errs = Vec::new();
+        for r in 0..rounds {
+            let seed = seed0 + r as u64;
+            let out = mech.aggregate(xs, seed);
+            // reconstruct the shared subsampling matrix
+            let mut brng = Rng::derive(seed, u64::MAX);
+            let b: Vec<Vec<bool>> = (0..n)
+                .map(|_| (0..d).map(|_| brng.bernoulli(mech.gamma)).collect())
+                .collect();
+            for j in 0..d {
+                let sel: Vec<usize> = (0..n).filter(|&i| b[i][j]).collect();
+                if sel.is_empty() {
+                    continue;
+                }
+                let sub_mean: f64 =
+                    sel.iter().map(|&i| xs[i][j]).sum::<f64>() / (mech.gamma * n as f64);
+                errs.push(out.estimate[j] - sub_mean);
+            }
+        }
+        errs
+    }
+
+    #[test]
+    fn error_vs_subsampled_mean_is_exactly_gaussian() {
+        let xs = client_data(20, 4, 1.0, 17);
+        let mech = Sigm::new(0.25, 0.5, 1.0);
+        let errs = subsample_errors(&mech, &xs, 500, 40_000);
+        let g = Gaussian::new(0.0, 0.25);
+        let res = ks_test(&errs, |e| g.cdf(e));
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+        assert!((variance(&errs) - 0.0625).abs() < 0.01);
+    }
+
+    #[test]
+    fn gamma_one_recovers_individual_mechanism_error() {
+        // γ = 1: no subsampling, error vs true mean ~ N(0, σ²)
+        let xs = client_data(10, 5, 1.0, 18);
+        let mech = Sigm::new(0.3, 1.0, 1.0);
+        let mean = crate::mechanisms::traits::true_mean(&xs);
+        let mut errs = Vec::new();
+        for r in 0..600 {
+            let out = mech.aggregate(&xs, 50_000 + r);
+            for j in 0..mean.len() {
+                errs.push(out.estimate[j] - mean[j]);
+            }
+        }
+        let g = Gaussian::new(0.0, 0.3);
+        assert!(ks_test(&errs, |e| g.cdf(e)).p_value > 0.003);
+    }
+
+    #[test]
+    fn messages_scale_with_gamma() {
+        let xs = client_data(50, 20, 1.0, 19);
+        let lo = Sigm::new(0.3, 0.3, 1.0).aggregate(&xs, 3).bits.messages;
+        let hi = Sigm::new(0.3, 0.9, 1.0).aggregate(&xs, 3).bits.messages;
+        let total = 50 * 20;
+        assert!((lo as f64) < 0.45 * total as f64, "lo={lo}");
+        assert!((hi as f64) > 0.75 * total as f64, "hi={hi}");
+    }
+
+    #[test]
+    fn mse_decomposes_per_prop4() {
+        // MSE <= c²/(nγ) + σ² per coordinate (Prop. 4 with d=1 scaling)
+        let n = 100;
+        let c = 1.0;
+        let xs = client_data(n, 8, c, 20);
+        let mech = Sigm::new(0.1, 0.5, c);
+        let mean = crate::mechanisms::traits::true_mean(&xs);
+        let mut sq = 0.0;
+        let mut cnt = 0usize;
+        for r in 0..200 {
+            let out = mech.aggregate(&xs, 60_000 + r);
+            for j in 0..mean.len() {
+                sq += (out.estimate[j] - mean[j]).powi(2);
+                cnt += 1;
+            }
+        }
+        let mse = sq / cnt as f64;
+        let bound = c * c / (n as f64 * 0.5) + 0.1 * 0.1;
+        assert!(mse <= bound * 1.2, "mse={mse} bound={bound}");
+    }
+
+    #[test]
+    fn property_flags() {
+        let m = Sigm::new(0.3, 0.5, 1.0);
+        assert!(!m.is_homomorphic());
+        assert!(m.gaussian_noise());
+        assert!(m.fixed_length());
+    }
+}

@@ -1,0 +1,118 @@
+//! The mechanism abstraction the coordinator plugs into.
+
+use crate::coding::elias;
+
+/// Communication accounting for one aggregation round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BitsAccount {
+    /// total variable-length bits (Elias gamma over all descriptions sent)
+    pub variable_total: f64,
+    /// total fixed-length bits, when the mechanism admits a fixed code
+    pub fixed_total: Option<f64>,
+    /// number of (client, coordinate) messages actually sent
+    pub messages: u64,
+}
+
+impl BitsAccount {
+    pub fn add_description(&mut self, m: i64) {
+        self.variable_total += elias::signed_gamma_len(m) as f64;
+        self.messages += 1;
+    }
+
+    /// Variable-length bits per client for an n-client round.
+    pub fn variable_per_client(&self, n: usize) -> f64 {
+        self.variable_total / n as f64
+    }
+
+    pub fn fixed_per_client(&self, n: usize) -> Option<f64> {
+        self.fixed_total.map(|t| t / n as f64)
+    }
+
+    pub fn merge(&mut self, other: &BitsAccount) {
+        self.variable_total += other.variable_total;
+        self.fixed_total = match (self.fixed_total, other.fixed_total) {
+            (Some(a), Some(b)) => Some(a + b),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        self.messages += other.messages;
+    }
+}
+
+/// Result of one aggregation round.
+#[derive(Clone, Debug)]
+pub struct RoundOutput {
+    /// the server's estimate Y of the mean (length d)
+    pub estimate: Vec<f64>,
+    pub bits: BitsAccount,
+}
+
+/// An n-client distributed mean-estimation mechanism (Def. 1: the estimate
+/// satisfies  Y − n⁻¹ Σᵢ xᵢ ~ Q  for the mechanism's target Q).
+pub trait MeanMechanism {
+    fn name(&self) -> String;
+
+    /// Whether decoding needs only Σᵢ Mᵢ (Def. 6) — i.e. SecAgg-compatible.
+    fn is_homomorphic(&self) -> bool;
+
+    /// Whether the aggregate noise distribution is exactly Gaussian.
+    fn gaussian_noise(&self) -> bool;
+
+    /// Whether descriptions admit a fixed-length code (bounded support for
+    /// bounded inputs).
+    fn fixed_length(&self) -> bool;
+
+    /// Target aggregate noise sd per coordinate.
+    fn noise_sd(&self) -> f64;
+
+    /// One aggregation round over `xs[n][d]`; `seed` is the round's shared
+    /// randomness (identical on all clients and the server).
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput;
+}
+
+/// Exact mean of client vectors (test/metric helper).
+pub fn true_mean(xs: &[Vec<f64>]) -> Vec<f64> {
+    let n = xs.len();
+    let d = xs[0].len();
+    let mut m = vec![0.0; d];
+    for x in xs {
+        assert_eq!(x.len(), d);
+        for (mj, xj) in m.iter_mut().zip(x) {
+            *mj += xj;
+        }
+    }
+    for mj in m.iter_mut() {
+        *mj /= n as f64;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_account_counts() {
+        let mut b = BitsAccount::default();
+        b.add_description(0); // 1 bit
+        b.add_description(1); // 3 bits
+        assert_eq!(b.messages, 2);
+        assert!((b.variable_total - 4.0).abs() < 1e-12);
+        assert!((b.variable_per_client(2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = BitsAccount { variable_total: 3.0, fixed_total: Some(8.0), messages: 1 };
+        let b = BitsAccount { variable_total: 2.0, fixed_total: Some(4.0), messages: 2 };
+        a.merge(&b);
+        assert_eq!(a.messages, 3);
+        assert_eq!(a.fixed_total, Some(12.0));
+    }
+
+    #[test]
+    fn true_mean_works() {
+        let xs = vec![vec![1.0, 2.0], vec![3.0, 6.0]];
+        assert_eq!(true_mean(&xs), vec![2.0, 4.0]);
+    }
+}

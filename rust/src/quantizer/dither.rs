@@ -1,0 +1,82 @@
+//! Subtractive dithered quantization (Example 1): fixed step w, error
+//! exactly U(-w/2, w/2) independent of the input.
+
+use super::{PointQuantizer, StepDraw};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SubtractiveDither {
+    pub w: f64,
+}
+
+impl SubtractiveDither {
+    pub fn new(w: f64) -> Self {
+        assert!(w > 0.0);
+        Self { w }
+    }
+
+    /// Step size for the Irwin–Hall / aggregate mechanisms: w = 2σ√(3n).
+    pub fn for_irwin_hall(sigma: f64, n: usize) -> Self {
+        Self::new(2.0 * sigma * (3.0 * n as f64).sqrt())
+    }
+}
+
+impl PointQuantizer for SubtractiveDither {
+    fn draw(&self, rng: &mut Rng) -> StepDraw {
+        StepDraw { step: self.w, offset: 0.0, dither: rng.u01() }
+    }
+
+    fn min_step(&self) -> Option<f64> {
+        Some(self.w)
+    }
+
+    fn error_sd(&self) -> f64 {
+        self.w / 12f64.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Continuous, Uniform};
+    use crate::util::stats::ks_test;
+
+    #[test]
+    fn error_is_uniform_and_independent_of_x() {
+        let q = SubtractiveDither::new(0.73);
+        let mut rng = Rng::new(71);
+        let u = Uniform::centered(0.73);
+        for &x in &[0.0, 1.2345, -77.7, 1e4] {
+            let errs: Vec<f64> =
+                (0..4000).map(|_| q.quantize(x, &mut rng).1 - x).collect();
+            let res = ks_test(&errs, |e| u.cdf(e));
+            assert!(res.p_value > 0.003, "x={x} p={}", res.p_value);
+        }
+    }
+
+    #[test]
+    fn error_variance_w_sq_over_12() {
+        let q = SubtractiveDither::new(2.0);
+        let mut rng = Rng::new(72);
+        let mut s2 = 0.0;
+        let n = 100_000;
+        for _ in 0..n {
+            let e = q.quantize(5.5, &mut rng).1 - 5.5;
+            s2 += e * e;
+        }
+        assert!((s2 / n as f64 - 4.0 / 12.0).abs() < 5e-3);
+        assert!((q.error_sd().powi(2) - 4.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_same_randomness() {
+        let q = SubtractiveDither::new(1.0);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let s1 = q.draw(&mut r1);
+        let s2 = q.draw(&mut r2);
+        let m = q.encode(3.7, &s1);
+        assert_eq!(m, q.encode(3.7, &s2));
+        assert_eq!(q.decode(m, &s1), q.decode(m, &s2));
+    }
+}

@@ -1,0 +1,248 @@
+//! Direct (Def. 4) and shifted (Def. 5) layered quantizers.
+//!
+//! Both produce an error distributed *exactly* as a given unimodal f_Z by
+//! randomizing the dither step size over the layers of f_Z:
+//!
+//! * **Direct**: step = width of the layer at height D ~ f_D, where
+//!   f_D(x) = λ(L_x(f_Z)) — the area-under-the-graph construction.
+//! * **Shifted** (multishift coupling, Wilson 2000): one side of the
+//!   unimodal graph is flipped, giving layer widths
+//!   f_W(x) = b⁺(x) − b⁻(Z̄ − x) that are bounded BELOW by η_Z > 0
+//!   (Prop. 2), which is what makes fixed-length coding possible.
+//!
+//! Sampling W ~ f_W uses the symmetric identity
+//! f_W(w) = (f_D(w) + f_D(Z̄ − w)) / 2: draw D ~ f_D and flip a fair coin
+//! between W = D and W = Z̄ − D. (Requires f_Z symmetric, which is the case
+//! for every error law in the paper: Gaussian, Laplace.)
+
+use super::{PointQuantizer, StepDraw};
+use crate::dist::Unimodal;
+use crate::util::rng::Rng;
+
+/// Direct layered quantizer (Def. 4): error ~ dist, optimal variable-length
+/// communication (within o(1) of the Eq. 4 lower bound), no minimal step.
+#[derive(Clone, Debug)]
+pub struct DirectLayered<D: Unimodal> {
+    pub dist: D,
+}
+
+impl<D: Unimodal> DirectLayered<D> {
+    pub fn new(dist: D) -> Self {
+        Self { dist }
+    }
+}
+
+impl<D: Unimodal> PointQuantizer for DirectLayered<D> {
+    fn draw(&self, rng: &mut Rng) -> StepDraw {
+        loop {
+            let d = self.dist.sample_layer_height(rng);
+            let bp = self.dist.b_plus(d);
+            let bm = self.dist.b_minus(d);
+            let step = bp - bm;
+            if step > 1e-300 {
+                return StepDraw { step, offset: 0.5 * (bp + bm), dither: rng.u01() };
+            }
+            // measure-zero top layer: resample
+        }
+    }
+
+    fn min_step(&self) -> Option<f64> {
+        None // layer widths shrink to 0 at the mode
+    }
+
+    fn error_sd(&self) -> f64 {
+        self.dist.variance().sqrt()
+    }
+}
+
+/// Shifted layered quantizer (Def. 5): error ~ dist, minimal step η_Z > 0.
+#[derive(Clone, Debug)]
+pub struct ShiftedLayered<D: Unimodal> {
+    pub dist: D,
+    /// minimal step η_Z = min f_W, precomputed on a grid
+    eta: f64,
+}
+
+impl<D: Unimodal> ShiftedLayered<D> {
+    pub fn new(dist: D) -> Self {
+        let eta = Self::compute_eta(&dist);
+        Self { dist, eta }
+    }
+
+    /// Step size at layer height w: f_W(w) = b⁺(w) − b⁻(Z̄ − w).
+    pub fn step_at(dist: &D, w: f64) -> f64 {
+        let zbar = dist.max_pdf();
+        dist.b_plus(w) - dist.b_minus(zbar - w)
+    }
+
+    fn compute_eta(dist: &D) -> f64 {
+        let zbar = dist.max_pdf();
+        let n = 4000;
+        let mut eta = f64::INFINITY;
+        for i in 1..n {
+            let w = zbar * i as f64 / n as f64;
+            eta = eta.min(Self::step_at(dist, w));
+        }
+        eta
+    }
+}
+
+impl<D: Unimodal> PointQuantizer for ShiftedLayered<D> {
+    fn draw(&self, rng: &mut Rng) -> StepDraw {
+        let zbar = self.dist.max_pdf();
+        // W ~ f_W via D ~ f_D and a fair coin (symmetric f_Z)
+        let d = self.dist.sample_layer_height(rng);
+        let w = if rng.bernoulli(0.5) { d } else { zbar - d };
+        let bp = self.dist.b_plus(w);
+        let bm = self.dist.b_minus(zbar - w);
+        StepDraw { step: bp - bm, offset: 0.5 * (bp + bm), dither: rng.u01() }
+    }
+
+    fn min_step(&self) -> Option<f64> {
+        Some(self.eta)
+    }
+
+    fn error_sd(&self) -> f64 {
+        self.dist.variance().sqrt()
+    }
+}
+
+/// Closed-form minimal steps of Prop. 2 (for tests and sizing codes).
+pub mod eta {
+    /// Gaussian N(0, σ²): η = 2σ√(ln 4).
+    pub fn gaussian(sigma: f64) -> f64 {
+        2.0 * sigma * (4.0f64.ln()).sqrt()
+    }
+
+    /// Laplace with sd σ (scale σ/√2): η = σ√2·ln 2.
+    pub fn laplace_sd(sigma: f64) -> f64 {
+        sigma * std::f64::consts::SQRT_2 * std::f64::consts::LN_2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Continuous, Gaussian, Laplace};
+    use crate::util::stats::ks_test;
+
+    fn error_samples<Q: PointQuantizer>(q: &Q, x: f64, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| q.quantize(x, &mut rng).1 - x).collect()
+    }
+
+    #[test]
+    fn direct_gaussian_error_is_exactly_gaussian() {
+        let g = Gaussian::new(0.0, 1.7);
+        let q = DirectLayered::new(g);
+        for (i, &x) in [0.0, 3.3, -120.0].iter().enumerate() {
+            let errs = error_samples(&q, x, 6000, 100 + i as u64);
+            let res = ks_test(&errs, |e| g.cdf(e));
+            assert!(res.p_value > 0.003, "x={x} p={}", res.p_value);
+        }
+    }
+
+    #[test]
+    fn direct_laplace_error_is_exactly_laplace() {
+        let l = Laplace::with_sd(0.0, 2.0);
+        let q = DirectLayered::new(l);
+        let errs = error_samples(&q, 5.0, 6000, 110);
+        assert!(ks_test(&errs, |e| l.cdf(e)).p_value > 0.003);
+    }
+
+    #[test]
+    fn shifted_gaussian_error_is_exactly_gaussian() {
+        let g = Gaussian::new(0.0, 1.0);
+        let q = ShiftedLayered::new(g);
+        for (i, &x) in [0.0, -7.25, 42.0].iter().enumerate() {
+            let errs = error_samples(&q, x, 6000, 120 + i as u64);
+            let res = ks_test(&errs, |e| g.cdf(e));
+            assert!(res.p_value > 0.003, "x={x} p={}", res.p_value);
+        }
+    }
+
+    #[test]
+    fn shifted_laplace_error_is_exactly_laplace() {
+        let l = Laplace::with_sd(0.0, 0.8);
+        let q = ShiftedLayered::new(l);
+        let errs = error_samples(&q, 1.5, 6000, 130);
+        assert!(ks_test(&errs, |e| l.cdf(e)).p_value > 0.003);
+    }
+
+    #[test]
+    fn shifted_min_step_matches_prop2_gaussian() {
+        for &sigma in &[0.5, 1.0, 3.0] {
+            let q = ShiftedLayered::new(Gaussian::new(0.0, sigma));
+            let want = eta::gaussian(sigma);
+            let got = q.min_step().unwrap();
+            assert!((got - want).abs() / want < 1e-3, "sigma={sigma} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn shifted_min_step_matches_prop2_laplace() {
+        for &sigma in &[1.0, 3.0] {
+            let q = ShiftedLayered::new(Laplace::with_sd(0.0, sigma));
+            let want = eta::laplace_sd(sigma);
+            let got = q.min_step().unwrap();
+            assert!((got - want).abs() / want < 1e-3, "sigma={sigma} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn shifted_steps_never_below_eta() {
+        let q = ShiftedLayered::new(Gaussian::new(0.0, 1.0));
+        let eta = q.min_step().unwrap();
+        let mut rng = Rng::new(140);
+        for _ in 0..20_000 {
+            let s = q.draw(&mut rng);
+            assert!(s.step >= eta - 1e-9, "step {} < eta {eta}", s.step);
+        }
+    }
+
+    #[test]
+    fn direct_steps_can_be_tiny() {
+        let q = DirectLayered::new(Gaussian::new(0.0, 1.0));
+        let mut rng = Rng::new(141);
+        let mut min = f64::INFINITY;
+        for _ in 0..50_000 {
+            min = min.min(q.draw(&mut rng).step);
+        }
+        // direct layered has no positive minimal step: observed minima fall
+        // far below the shifted quantizer's η = 2√(ln4) ≈ 2.355
+        assert!(min < 0.5, "min step {min}");
+        assert!(min < 0.5 * eta::gaussian(1.0));
+    }
+
+    #[test]
+    fn shifted_bounded_description_support() {
+        // Prop. 2: inputs in an interval of length t ⇒ |Supp M| <= 2 + t/η
+        let sigma = 1.0;
+        let q = ShiftedLayered::new(Gaussian::new(0.0, sigma));
+        let t = 32.0;
+        let bound = 2.0 + t / eta::gaussian(sigma);
+        let mut rng = Rng::new(142);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..40_000 {
+            let x = (i % 1000) as f64 * t / 1000.0; // inputs in [0, t]
+            let s = q.draw(&mut rng);
+            seen.insert(q.encode(x, &s));
+        }
+        assert!(
+            (seen.len() as f64) <= bound.ceil() + 1.0,
+            "support {} exceeds bound {bound}",
+            seen.len()
+        );
+    }
+
+    #[test]
+    fn error_mean_and_variance_match_target() {
+        let g = Gaussian::new(0.0, 2.5);
+        let q = ShiftedLayered::new(g);
+        let errs = error_samples(&q, 13.0, 200_000, 143);
+        let mean = crate::util::stats::mean(&errs);
+        let var = crate::util::stats::variance(&errs);
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 6.25).abs() < 0.12, "var={var}");
+    }
+}

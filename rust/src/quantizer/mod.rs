@@ -1,0 +1,89 @@
+//! Point-to-point AINQ quantizers (§3 of the paper).
+//!
+//! All three quantizers share the same shape: the shared randomness S
+//! determines a (step, offset, dither) triple; encoding is
+//! `m = round(x/step + dither)` and decoding is
+//! `y = (m - dither)·step + offset`, so the error `y - x` is uniform on an
+//! interval of length `step` centred at `offset` *conditionally on S*.
+//! The step/offset law is what differs:
+//!
+//! * [`dither::SubtractiveDither`] — fixed step w, offset 0
+//!   ⇒ error U(-w/2, w/2) (Example 1);
+//! * [`layered::DirectLayered`] — step = layer width f_D(D), D ~ f_D
+//!   ⇒ error exactly f_Z (Def. 4, Hegazy–Li 2022);
+//! * [`layered::ShiftedLayered`] — multishift coupling (Wilson 2000)
+//!   ⇒ error exactly f_Z with a step bounded below by η_Z > 0 (Def. 5,
+//!   Prop. 2) — enabling fixed-length codes.
+
+pub mod dither;
+pub mod layered;
+
+pub use dither::SubtractiveDither;
+pub use layered::{DirectLayered, ShiftedLayered};
+
+use crate::util::rng::Rng;
+
+/// The paper's rounding ⌈v⌋ := ⌊v + 1/2⌋.
+#[inline]
+pub fn round_half_up(v: f64) -> i64 {
+    (v + 0.5).floor() as i64
+}
+
+/// One draw of point-to-point shared randomness S.
+#[derive(Clone, Copy, Debug)]
+pub struct StepDraw {
+    /// quantization step size (w in Ex. 1, f_D(D) in Def. 4, f_W(W) in Def. 5)
+    pub step: f64,
+    /// decoder offset ((b⁺+b⁻)/2 terms of Defs. 4–5)
+    pub offset: f64,
+    /// dither U ~ U(0, 1)
+    pub dither: f64,
+}
+
+/// A point-to-point AINQ quantizer: error `decode(encode(x,S),S) - x ~ Q`
+/// independent of x.
+pub trait PointQuantizer {
+    /// Sample the shared randomness S. Client and server call this with
+    /// identically-seeded RNGs, so both sides know (step, offset, dither).
+    fn draw(&self, rng: &mut Rng) -> StepDraw;
+
+    #[inline]
+    fn encode(&self, x: f64, s: &StepDraw) -> i64 {
+        round_half_up(x / s.step + s.dither)
+    }
+
+    #[inline]
+    fn decode(&self, m: i64, s: &StepDraw) -> f64 {
+        (m as f64 - s.dither) * s.step + s.offset
+    }
+
+    /// Convenience: one full draw-encode-decode round trip.
+    fn quantize(&self, x: f64, rng: &mut Rng) -> (i64, f64, StepDraw) {
+        let s = self.draw(rng);
+        let m = self.encode(x, &s);
+        (m, self.decode(m, &s), s)
+    }
+
+    /// Minimal step size η, if bounded away from zero (Prop. 2). A
+    /// quantizer with `Some(η)` supports fixed-length coding with
+    /// |Supp M| <= 2 + t/η for inputs in an interval of length t.
+    fn min_step(&self) -> Option<f64>;
+
+    /// Standard deviation of the error distribution this quantizer realizes.
+    fn error_sd(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_up_matches_paper() {
+        // ⌈v⌋ = ⌊v + 1/2⌋
+        assert_eq!(round_half_up(0.49), 0);
+        assert_eq!(round_half_up(0.5), 1); // half rounds up
+        assert_eq!(round_half_up(-0.5), 0);
+        assert_eq!(round_half_up(-0.51), -1);
+        assert_eq!(round_half_up(2.5), 3);
+    }
+}

@@ -1,0 +1,91 @@
+//! Artifact manifest: shapes the AOT build (python/compile/aot.py) baked
+//! into `artifacts/manifest.txt`, parsed so the rust side never hardcodes
+//! model dimensions.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub d_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub enc_clients: usize,
+    pub enc_dim: usize,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                if !k.contains(' ') {
+                    kv.insert(k.trim().to_string(), v.trim().to_string());
+                }
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing key {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("manifest key {k} not an integer"))
+        };
+        let m = Self {
+            d_in: get("d_in")?,
+            hidden: get("hidden")?,
+            classes: get("classes")?,
+            batch: get("batch")?,
+            param_count: get("param_count")?,
+            enc_clients: get("enc_clients")?,
+            enc_dim: get("enc_dim")?,
+            dir,
+        };
+        if m.param_count != m.d_in * m.hidden + m.hidden + m.hidden * m.classes + m.classes {
+            bail!("manifest param_count inconsistent with layer dims");
+        }
+        Ok(m)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "d_in=32\nhidden=64\nclasses=2\nbatch=64\nparam_count=2242\n\
+                          enc_clients=32\nenc_dim=2304\nartifact=model_grad inputs=...\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.d_in, 32);
+        assert_eq!(m.param_count, 2242);
+        assert_eq!(m.hlo_path("encode"), PathBuf::from("/tmp/encode.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("param_count=2242", "param_count=999");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        let bad = SAMPLE.replace("hidden=64\n", "");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-lowered JAX/Pallas HLO artifacts and
+//! executes them on the request path (rust only — python is build-time).
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt`): jax ≥ 0.5 serialized
+//! protos carry 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::Engine;

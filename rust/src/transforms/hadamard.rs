@@ -1,0 +1,153 @@
+//! Fast Walsh–Hadamard transform and seeded randomized rotation.
+//!
+//! The randomized rotation x ↦ (1/√d)·H·D·x (H = Hadamard, D = diag of
+//! random ±1) is an isometry that flattens any unit vector to ℓ∞ norm
+//! Õ(1/√d) with high probability — the standard trick (Ailon–Chazelle)
+//! used by DDG before integer quantization.
+
+use crate::util::rng::Rng;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized). Length must be a
+/// power of two.
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of 2, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Next power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Seeded randomized rotation R = (1/√d)·H·D with its inverse.
+///
+/// Clients and the server construct the same rotation from the shared seed.
+#[derive(Clone, Debug)]
+pub struct RandomizedRotation {
+    /// padded dimension (power of two)
+    pub dim: usize,
+    signs: Vec<f64>,
+}
+
+impl RandomizedRotation {
+    /// `d_input` is the raw vector length; internally pads to `dim`.
+    pub fn new(d_input: usize, seed: u64) -> Self {
+        let dim = next_pow2(d_input.max(1));
+        let mut rng = Rng::derive(seed, 0x5157_4ADA);
+        let signs = (0..dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        Self { dim, signs }
+    }
+
+    /// Apply R to `x` (length <= dim); returns the rotated padded vector.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        assert!(x.len() <= self.dim);
+        let mut v = vec![0.0; self.dim];
+        v[..x.len()].copy_from_slice(x);
+        for (vi, si) in v.iter_mut().zip(&self.signs) {
+            *vi *= si;
+        }
+        fwht(&mut v);
+        let scale = 1.0 / (self.dim as f64).sqrt();
+        for vi in v.iter_mut() {
+            *vi *= scale;
+        }
+        v
+    }
+
+    /// Apply R⁻¹ = D·Hᵀ/√d (H is symmetric; H² = d·I).
+    pub fn inverse(&self, y: &[f64], d_output: usize) -> Vec<f64> {
+        assert_eq!(y.len(), self.dim);
+        let mut v = y.to_vec();
+        fwht(&mut v);
+        let scale = 1.0 / (self.dim as f64).sqrt();
+        for (vi, si) in v.iter_mut().zip(&self.signs) {
+            *vi = *vi * scale * si;
+        }
+        v.truncate(d_output);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::l2_norm;
+
+    #[test]
+    fn fwht_involution_up_to_n() {
+        let mut rng = Rng::new(81);
+        let mut x: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let orig = x.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a / 64.0 - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fwht_small_known() {
+        let mut x = vec![1.0, 0.0];
+        fwht(&mut x);
+        assert_eq!(x, vec![1.0, 1.0]);
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        fwht(&mut x);
+        assert_eq!(x, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn rotation_is_isometry() {
+        let mut rng = Rng::new(82);
+        let x: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let rot = RandomizedRotation::new(100, 7);
+        let y = rot.forward(&x);
+        assert_eq!(y.len(), 128);
+        assert!((l2_norm(&y) - l2_norm(&x)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rotation_roundtrip() {
+        let mut rng = Rng::new(83);
+        let x: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+        let rot = RandomizedRotation::new(37, 9);
+        let y = rot.forward(&x);
+        let back = rot.inverse(&y, 37);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rotation_flattens_spike() {
+        // e_1 scaled: after rotation every coordinate is ±1/√d·‖x‖
+        let d = 256;
+        let mut x = vec![0.0; d];
+        x[0] = 10.0;
+        let rot = RandomizedRotation::new(d, 11);
+        let y = rot.forward(&x);
+        let linf = y.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!((linf - 10.0 / (d as f64).sqrt()).abs() < 1e-9, "linf={linf}");
+    }
+
+    #[test]
+    fn same_seed_same_rotation() {
+        let a = RandomizedRotation::new(16, 5);
+        let b = RandomizedRotation::new(16, 5);
+        let x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        assert_eq!(a.forward(&x), b.forward(&x));
+    }
+}

@@ -1,0 +1,145 @@
+//! Kashin representation (Remark 1; Chen et al. 2023 use it to flatten ℓ₂
+//! balls into ℓ∞ boxes with a constant-factor loss).
+//!
+//! We use the classical construction over the redundant tight frame
+//! U = [R₁; R₂]/√2 (two independent randomized rotations, frame dimension
+//! D = 2d): iterative "clip-and-redistribute" finds coefficients a with
+//! x = Uᵀa and ‖a‖∞ <= K‖x‖₂/√D for a small constant K.
+
+use super::hadamard::RandomizedRotation;
+
+/// Kashin frame with two rotation blocks.
+#[derive(Clone, Debug)]
+pub struct KashinFrame {
+    r1: RandomizedRotation,
+    r2: RandomizedRotation,
+    pub d_input: usize,
+    /// number of clip-redistribute iterations
+    pub iters: usize,
+    /// ℓ∞ level multiplier K
+    pub level_k: f64,
+}
+
+impl KashinFrame {
+    pub fn new(d_input: usize, seed: u64) -> Self {
+        Self {
+            r1: RandomizedRotation::new(d_input, seed ^ 0xA11CE),
+            r2: RandomizedRotation::new(d_input, seed ^ 0xB0B5),
+            d_input,
+            iters: 12,
+            level_k: 3.0,
+        }
+    }
+
+    /// Frame dimension D = 2·dim (padded).
+    pub fn frame_dim(&self) -> usize {
+        self.r1.dim + self.r2.dim
+    }
+
+    /// Frame analysis: a = U·x (tight with Uᵀ·U = I).
+    fn analyze(&self, x: &[f64]) -> Vec<f64> {
+        let mut a = self.r1.forward(x);
+        let b = self.r2.forward(x);
+        for v in a.iter_mut() {
+            *v /= std::f64::consts::SQRT_2;
+        }
+        a.extend(b.into_iter().map(|v| v / std::f64::consts::SQRT_2));
+        a
+    }
+
+    /// Frame synthesis: x = Uᵀ·a.
+    pub fn synthesize(&self, a: &[f64]) -> Vec<f64> {
+        let (a1, a2) = a.split_at(self.r1.dim);
+        let x1 = self.r1.inverse(a1, self.d_input);
+        let x2 = self.r2.inverse(a2, self.d_input);
+        x1.iter()
+            .zip(&x2)
+            .map(|(u, v)| (u + v) / std::f64::consts::SQRT_2)
+            .collect()
+    }
+
+    /// Compute Kashin coefficients: returns (a, level) with x ≈ Uᵀa and
+    /// ‖a‖∞ <= level = K‖x‖₂/√D.
+    pub fn represent(&self, x: &[f64]) -> (Vec<f64>, f64) {
+        let norm = crate::util::stats::l2_norm(x);
+        let dd = self.frame_dim() as f64;
+        let level = self.level_k * norm / dd.sqrt();
+        if norm == 0.0 {
+            return (vec![0.0; self.frame_dim()], 0.0);
+        }
+        let mut residual = x.to_vec();
+        let mut a = vec![0.0; self.frame_dim()];
+        let mut lvl = level;
+        for _ in 0..self.iters {
+            let coeffs = self.analyze(&residual);
+            // clip into the ℓ∞ ball of radius lvl, accumulate
+            let clipped: Vec<f64> =
+                coeffs.iter().map(|&c| c.clamp(-lvl, lvl)).collect();
+            for (ai, ci) in a.iter_mut().zip(&clipped) {
+                *ai += ci;
+            }
+            let approx = self.synthesize(&clipped);
+            for (ri, pi) in residual.iter_mut().zip(&approx) {
+                *ri -= pi;
+            }
+            lvl /= 2.0; // geometric level decay (standard Kashin iteration)
+        }
+        (a, level * 2.0) // total ℓ∞ bound: Σ level/2^k < 2·level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{l2_norm, linf_norm};
+
+    #[test]
+    fn representation_reconstructs() {
+        let mut rng = Rng::new(91);
+        let x: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let frame = KashinFrame::new(50, 3);
+        let (a, _) = frame.represent(&x);
+        let back = frame.synthesize(&a);
+        let err = x.iter().zip(&back).map(|(u, v)| (u - v).powi(2)).sum::<f64>().sqrt();
+        assert!(err < 1e-2 * l2_norm(&x), "err={err}");
+    }
+
+    #[test]
+    fn coefficients_are_flat() {
+        let mut rng = Rng::new(92);
+        // adversarial spike input
+        let mut x = vec![0.0; 64];
+        x[7] = 5.0;
+        for v in x.iter_mut().skip(32) {
+            *v = 0.01 * rng.normal();
+        }
+        let frame = KashinFrame::new(64, 4);
+        let (a, level) = frame.represent(&x);
+        assert!(linf_norm(&a) <= level + 1e-9);
+        // flatness: ℓ∞ of coefficients ≲ K·2·‖x‖/√D
+        let bound = 2.0 * frame.level_k * l2_norm(&x) / (frame.frame_dim() as f64).sqrt();
+        assert!(linf_norm(&a) <= bound + 1e-9);
+    }
+
+    #[test]
+    fn zero_vector() {
+        let frame = KashinFrame::new(10, 5);
+        let (a, level) = frame.represent(&vec![0.0; 10]);
+        assert_eq!(level, 0.0);
+        assert!(a.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tight_frame_identity() {
+        // Uᵀ·U = I: synthesize(analyze(x)) == x
+        let mut rng = Rng::new(93);
+        let x: Vec<f64> = (0..33).map(|_| rng.normal()).collect();
+        let frame = KashinFrame::new(33, 6);
+        let a = frame.analyze(&x);
+        let back = frame.synthesize(&a);
+        for (u, v) in x.iter().zip(&back) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Flattening transforms (Remark 1): convert ℓ₂ geometry to ℓ∞ geometry so
+//! per-coordinate mechanisms achieve the optimal utility bound.
+//!
+//! * [`hadamard`] — fast Walsh–Hadamard transform and the randomized
+//!   rotation H·D/√d (D = random signs), the O(d log d) flattening used by
+//!   DDG (Kairouz et al. 2021a).
+//! * [`kashin`] — Kashin representation via the tight frame [H; HD]/√2 and
+//!   iterative clipping, the O(d²)-free alternative of Chen et al. 2023.
+
+pub mod hadamard;
+pub mod kashin;
+
+pub use hadamard::{fwht, RandomizedRotation};
+pub use kashin::KashinFrame;

@@ -1,0 +1,194 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! API mirrors the criterion subset we need: named benchmarks with warmup,
+//! adaptive iteration counts, and mean / p50 / p95 reporting. `cargo bench`
+//! targets are `harness = false` binaries that drive [`Suite`].
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// optional elements-per-iteration for throughput reporting
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    pub fn throughput_mps(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean_ns * 1e3)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.2} s ", ns / 1e9)
+    }
+}
+
+/// Benchmark suite: collects measurements and prints a report table.
+pub struct Suite {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Suite {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Suite {
+    pub fn new() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(700),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE logical operation per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        self.bench_elements(name, None, move || f())
+    }
+
+    /// Benchmark with a per-iteration element count (throughput reporting).
+    pub fn bench_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        // Warmup and calibrate batch size so one batch is ~1ms.
+        let w0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while w0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let batch = ((1e6 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        // Measure in batches until the time budget or min samples reached.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            total_iters += batch;
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: p(0.5),
+            p95_ns: p(0.95),
+            elements,
+        };
+        println!(
+            "bench {:44} mean {}  p50 {}  p95 {}{}",
+            m.name,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.p50_ns),
+            fmt_ns(m.p95_ns),
+            m.throughput_mps()
+                .map(|t| format!("  thrpt {t:9.2} Melem/s"))
+                .unwrap_or_default()
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print a summary table of all measurements.
+    pub fn report(&self) {
+        println!("\n== benchkit report ({} benchmarks) ==", self.results.len());
+        for m in &self.results {
+            println!(
+                "{:44} {:>12} iters  mean {}",
+                m.name,
+                m.iters,
+                fmt_ns(m.mean_ns)
+            );
+        }
+    }
+}
+
+/// Re-export-style helper so benches read like criterion code.
+pub fn consume<T>(x: T) -> T {
+    bb(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut s = Suite {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(10),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        s.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(s.results.len(), 1);
+        assert!(s.results[0].mean_ns > 0.0);
+        assert!(s.results[0].iters > 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut s = Suite {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(10),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        let xs = vec![1.0f64; 1024];
+        let m = s
+            .bench_elements("sum1k", Some(1024), || {
+                consume(xs.iter().sum::<f64>());
+            })
+            .clone();
+        assert!(m.throughput_mps().unwrap() > 0.0);
+    }
+}

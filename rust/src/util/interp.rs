@@ -1,0 +1,152 @@
+//! Interpolation and quadrature helpers used by the Irwin–Hall density grid
+//! (see `dist::irwin_hall`): a uniform-grid cubic (Catmull–Rom) interpolant
+//! with analytic derivative, plus composite Simpson integration.
+
+/// Cubic interpolation on a uniform grid.
+///
+/// Stores values `y[i] = f(x0 + i*dx)` and evaluates f and f' anywhere in
+/// `[x0, x0 + (len-1)*dx]` with Catmull–Rom splines (C¹, exact on cubics up
+/// to boundary cells).
+#[derive(Clone, Debug)]
+pub struct UniformGrid {
+    pub x0: f64,
+    pub dx: f64,
+    pub y: Vec<f64>,
+}
+
+impl UniformGrid {
+    pub fn new(x0: f64, dx: f64, y: Vec<f64>) -> Self {
+        assert!(y.len() >= 4, "grid needs >= 4 points");
+        assert!(dx > 0.0);
+        Self { x0, dx, y }
+    }
+
+    pub fn x_max(&self) -> f64 {
+        self.x0 + (self.y.len() - 1) as f64 * self.dx
+    }
+
+    #[inline]
+    fn locate(&self, x: f64) -> (usize, f64) {
+        let t = (x - self.x0) / self.dx;
+        let i = (t.floor() as isize).clamp(0, self.y.len() as isize - 2) as usize;
+        (i, t - i as f64)
+    }
+
+    #[inline]
+    fn stencil(&self, i: usize) -> (f64, f64, f64, f64) {
+        let n = self.y.len();
+        let ym = if i == 0 { 2.0 * self.y[0] - self.y[1] } else { self.y[i - 1] };
+        let yp2 = if i + 2 >= n { 2.0 * self.y[n - 1] - self.y[n - 2] } else { self.y[i + 2] };
+        (ym, self.y[i], self.y[i + 1], yp2)
+    }
+
+    /// Interpolated value at x (clamped to the grid domain).
+    pub fn eval(&self, x: f64) -> f64 {
+        let (i, t) = self.locate(x);
+        let (y0, y1, y2, y3) = self.stencil(i);
+        // Catmull-Rom basis
+        let a = -0.5 * y0 + 1.5 * y1 - 1.5 * y2 + 0.5 * y3;
+        let b = y0 - 2.5 * y1 + 2.0 * y2 - 0.5 * y3;
+        let c = -0.5 * y0 + 0.5 * y2;
+        ((a * t + b) * t + c) * t + y1
+    }
+
+    /// Interpolated derivative d f / d x at x.
+    pub fn eval_deriv(&self, x: f64) -> f64 {
+        let (i, t) = self.locate(x);
+        let (y0, y1, y2, y3) = self.stencil(i);
+        let a = -0.5 * y0 + 1.5 * y1 - 1.5 * y2 + 0.5 * y3;
+        let b = y0 - 2.5 * y1 + 2.0 * y2 - 0.5 * y3;
+        let c = -0.5 * y0 + 0.5 * y2;
+        ((3.0 * a * t + 2.0 * b) * t + c) / self.dx
+    }
+}
+
+/// Composite Simpson integration of `f` over [a, b] with n panels
+/// (n rounded up to even).
+pub fn simpson(f: impl Fn(f64) -> f64, a: f64, b: f64, n: usize) -> f64 {
+    let n = if n % 2 == 0 { n } else { n + 1 };
+    let h = (b - a) / n as f64;
+    let mut s = f(a) + f(b);
+    for i in 1..n {
+        let x = a + i as f64 * h;
+        s += f(x) * if i % 2 == 1 { 4.0 } else { 2.0 };
+    }
+    s * h / 3.0
+}
+
+/// Bisection root of a monotone function: returns x in [lo, hi] with
+/// f(x) ≈ target, assuming f decreasing (dec=true) or increasing.
+pub fn bisect_monotone(
+    f: impl Fn(f64) -> f64,
+    target: f64,
+    mut lo: f64,
+    mut hi: f64,
+    dec: bool,
+    iters: usize,
+) -> f64 {
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        let v = f(mid);
+        let go_right = if dec { v > target } else { v < target };
+        if go_right {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_reproduces_quadratic_exactly() {
+        // Catmull-Rom uses central-difference tangents: exact on quadratics
+        let x0 = -2.0;
+        let dx = 0.1;
+        let y: Vec<f64> = (0..41).map(|i| {
+            let x = x0 + i as f64 * dx;
+            x * x - 2.0 * x
+        }).collect();
+        let g = UniformGrid::new(x0, dx, y);
+        for i in 0..200 {
+            let x = -1.8 + i as f64 * 0.018; // interior
+            let want = x * x - 2.0 * x;
+            assert!((g.eval(x) - want).abs() < 1e-10, "x={x}");
+            let dwant = 2.0 * x - 2.0;
+            assert!((g.eval_deriv(x) - dwant).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn grid_approximates_smooth_function() {
+        // O(dx^3) accuracy on a generic smooth function
+        let x0 = 0.0;
+        let dx = 0.01;
+        let y: Vec<f64> = (0..501).map(|i| ((x0 + i as f64 * dx) * 2.0).sin()).collect();
+        let g = UniformGrid::new(x0, dx, y);
+        for i in 0..400 {
+            let x = 0.05 + i as f64 * 0.012;
+            assert!((g.eval(x) - (2.0 * x).sin()).abs() < 1e-5, "x={x}");
+            assert!((g.eval_deriv(x) - 2.0 * (2.0 * x).cos()).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn simpson_exact_on_polynomials() {
+        let v = simpson(|x| x * x * x, 0.0, 2.0, 8);
+        assert!((v - 4.0).abs() < 1e-12);
+        let v = simpson(|x| x.sin(), 0.0, std::f64::consts::PI, 200);
+        assert!((v - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bisect_finds_root() {
+        // decreasing f(x) = e^{-x}, solve e^{-x} = 0.3
+        let x = bisect_monotone(|x| (-x).exp(), 0.3, 0.0, 10.0, true, 80);
+        assert!((x - (1.0f64 / 0.3).ln()).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,214 @@
+//! Minimal JSON + CSV writers for metrics and figure data (no serde in the
+//! offline registry). Writing only — the repo never needs to parse JSON.
+
+use std::fmt::Write as _;
+
+/// A JSON value builder.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn push(self, key: &str, v: impl Into<Json>) -> Self {
+        match self {
+            Json::Obj(mut kvs) => {
+                kvs.push((key.to_string(), v.into()));
+                Json::Obj(kvs)
+            }
+            other => other,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Self {
+        Json::Int(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Int(x as i64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Self {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Self {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Self {
+        Json::Str(x)
+    }
+}
+impl From<Vec<f64>> for Json {
+    fn from(xs: Vec<f64>) -> Self {
+        Json::Arr(xs.into_iter().map(Json::Num).collect())
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(xs: Vec<Json>) -> Self {
+        Json::Arr(xs)
+    }
+}
+
+/// Simple CSV table writer: header + rows of f64-renderable cells.
+#[derive(Clone, Debug, Default)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_renders() {
+        let j = Json::obj()
+            .push("name", "fig5")
+            .push("mse", 0.25)
+            .push("n", 1000usize)
+            .push("ok", true)
+            .push("xs", vec![1.0, 2.0]);
+        let s = j.render();
+        assert_eq!(
+            s,
+            r#"{"name":"fig5","mse":0.25,"n":1000,"ok":true,"xs":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn json_escapes() {
+        let j = Json::Str("a\"b\\c\nd".to_string());
+        assert_eq!(j.render(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn csv_renders() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row_f64(&[1.0, 2.5]);
+        assert_eq!(c.render(), "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row_f64(&[1.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation utilities: PRNGs, special functions, statistics, numeric
+//! helpers, micro-benchmark harness, JSON/CSV writers.
+
+pub mod rng;
+pub mod special;
+pub mod stats;
+pub mod interp;
+pub mod benchkit;
+pub mod json;
+
+pub use rng::Rng;

@@ -1,0 +1,304 @@
+//! Deterministic PRNG suite.
+//!
+//! The offline registry has no `rand` crate, and the paper's mechanisms all
+//! hinge on *shared randomness*: a client and the server must generate
+//! byte-identical random streams from a common seed (§2 "Quantized
+//! aggregation"). We therefore implement:
+//!
+//! * [`SplitMix64`] — seed expansion / stream derivation (Steele et al.).
+//! * [`Rng`] — xoshiro256++ core with standard real-valued samplers
+//!   (uniform, Gaussian via polar Marsaglia, exponential, geometric, …).
+//!
+//! Stream derivation (`Rng::derive`) gives every (client, round, purpose)
+//! tuple an independent stream from one root seed, which is exactly how the
+//! coordinator distributes shared randomness.
+
+/// SplitMix64: used for seeding and stream derivation (passes BigCrush).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ PRNG with distribution samplers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Gaussian from the polar method
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (recommended by the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream for a (seed, stream-id) pair.
+    ///
+    /// Used by the coordinator to give every (client, round, purpose) its
+    /// own reproducible stream: both end-points derive the same stream from
+    /// the shared root seed without communicating.
+    pub fn derive(root_seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(root_seed);
+        let a = sm.next_u64();
+        let mut sm2 = SplitMix64::new(a ^ stream.wrapping_mul(0xA24B_AED4_963E_E407));
+        Self::new(sm2.next_u64())
+    }
+
+    #[inline]
+    fn rotl(x: u64, k: u32) -> u64 {
+        x.rotate_left(k)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = Self::rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = Self::rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn u01(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [a, b).
+    #[inline]
+    pub fn uniform(&mut self, a: f64, b: f64) -> f64 {
+        a + (b - a) * self.u01()
+    }
+
+    /// The dither distribution of Example 1: U(-1/2, 1/2).
+    #[inline]
+    pub fn dither(&mut self) -> f64 {
+        self.u01() - 0.5
+    }
+
+    /// Standard Gaussian (Marsaglia polar method, spare cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.u01() - 1.0;
+            let v = 2.0 * self.u01() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Gaussian with the given mean / standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Exponential with rate 1.
+    #[inline]
+    pub fn exponential(&mut self) -> f64 {
+        // 1 - u01() is in (0, 1]: never takes ln(0)
+        -(1.0 - self.u01()).ln()
+    }
+
+    /// Laplace(0, b): difference of exponentials.
+    #[inline]
+    pub fn laplace(&mut self, b: f64) -> f64 {
+        let u = self.u01() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.u01() < p
+    }
+
+    /// Geometric on {0, 1, ...} with success probability p.
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        if p >= 1.0 {
+            return 0;
+        }
+        let u = 1.0 - self.u01(); // in (0, 1]
+        (u.ln() / (1.0 - p).ln()).floor() as u64
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless method.
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                m = (self.next_u64() as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Fill a vector with standard Gaussians.
+    pub fn normal_vec(&mut self, d: usize) -> Vec<f64> {
+        (0..d).map(|_| self.normal()).collect()
+    }
+
+    /// Fill a vector with U(-1/2, 1/2) dithers.
+    pub fn dither_vec(&mut self, d: usize) -> Vec<f64> {
+        (0..d).map(|_| self.dither()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_differs_per_stream() {
+        let mut a = Rng::derive(7, 0);
+        let mut b = Rng::derive(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn u01_in_range_and_uniform() {
+        let mut r = Rng::new(1);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sum2 = 0.0;
+        for _ in 0..n {
+            let u = r.u01();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+            sum2 += u * u;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 400_000;
+        let (mut s1, mut s2, mut s4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+            s4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        assert!((s1 / nf).abs() < 0.01);
+        assert!((s2 / nf - 1.0).abs() < 0.02);
+        assert!((s4 / nf - 3.0).abs() < 0.1); // kurtosis
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut r = Rng::new(3);
+        let b = 0.7;
+        let n = 300_000;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let z = r.laplace(b);
+            s2 += z * z;
+        }
+        // Var of Laplace(0, b) = 2 b^2
+        assert!((s2 / n as f64 - 2.0 * b * b).abs() < 0.02);
+    }
+
+    #[test]
+    fn geometric_mean() {
+        let mut r = Rng::new(4);
+        let p = 0.25;
+        let n = 200_000;
+        let mut s = 0u64;
+        for _ in 0..n {
+            s += r.geometric(p);
+        }
+        let mean = s as f64 / n as f64;
+        assert!((mean - (1.0 - p) / p).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..140_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 20_000.0).abs() < 1_000.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(6);
+        let idx = r.sample_indices(100, 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+}

@@ -1,0 +1,269 @@
+//! Statistics: online moments, quantiles, histogram MSE helpers, and a
+//! Kolmogorov–Smirnov goodness-of-fit test.
+//!
+//! The KS test is how the test-suite *proves* the AINQ property: mechanisms
+//! claim an exact error law (Def. 1), so for every mechanism we draw many
+//! aggregation errors and test them against the target cdf.
+
+/// Welford online mean / variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Unbiased sample variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n < 2 {
+            f64::INFINITY
+        } else {
+            (self.sample_variance() / self.n as f64).sqrt()
+        }
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Empirical quantile (linear interpolation between order statistics).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Mean squared error between two vectors.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64
+}
+
+pub fn l2_norm(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+pub fn linf_norm(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+}
+
+/// Result of a one-sample Kolmogorov–Smirnov test against a cdf.
+#[derive(Clone, Copy, Debug)]
+pub struct KsResult {
+    /// KS statistic D_n = sup |F_emp - F|
+    pub statistic: f64,
+    /// asymptotic p-value (Kolmogorov distribution)
+    pub p_value: f64,
+    pub n: usize,
+}
+
+/// One-sample KS test of `samples` against the cdf `f`.
+pub fn ks_test(samples: &[f64], f: impl Fn(f64) -> f64) -> KsResult {
+    let n = samples.len();
+    assert!(n > 0);
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let nf = n as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in v.iter().enumerate() {
+        let cdf = f(x);
+        let d_plus = (i as f64 + 1.0) / nf - cdf;
+        let d_minus = cdf - i as f64 / nf;
+        d = d.max(d_plus).max(d_minus);
+    }
+    KsResult { statistic: d, p_value: ks_p_value(d, n), n }
+}
+
+/// Asymptotic Kolmogorov p-value with the Stephens small-sample correction:
+/// Q(λ) = 2 Σ_{k≥1} (-1)^{k-1} exp(-2 k² λ²),
+/// λ = (√n + 0.12 + 0.11/√n) · D.
+pub fn ks_p_value(d: f64, n: usize) -> f64 {
+    let sn = (n as f64).sqrt();
+    let lambda = (sn + 0.12 + 0.11 / sn) * d;
+    if lambda < 1e-3 {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    let mut sign = 1.0;
+    for k in 1..=100 {
+        let term = (-2.0 * (k as f64) * (k as f64) * lambda * lambda).exp();
+        sum += sign * term;
+        sign = -sign;
+        if term < 1e-12 {
+            break;
+        }
+    }
+    (2.0 * sum).clamp(0.0, 1.0)
+}
+
+/// Two-sample KS test (used to compare mechanism errors against a sampled
+/// reference when no closed-form cdf exists, e.g. Irwin–Hall).
+pub fn ks_test_two_sample(a: &[f64], b: &[f64]) -> KsResult {
+    let mut av = a.to_vec();
+    let mut bv = b.to_vec();
+    av.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    bv.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (na, nb) = (av.len() as f64, bv.len() as f64);
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d = 0.0f64;
+    while i < av.len() && j < bv.len() {
+        let xa = av[i];
+        let xb = bv[j];
+        if xa <= xb {
+            i += 1;
+        }
+        if xb <= xa {
+            j += 1;
+        }
+        d = d.max((i as f64 / na - j as f64 / nb).abs());
+    }
+    let ne = na * nb / (na + nb);
+    KsResult { statistic: d, p_value: ks_p_value(d, ne.round() as usize), n: a.len() + b.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::special::norm_cdf;
+
+    #[test]
+    fn online_stats_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let mut os = OnlineStats::new();
+        os.extend(&xs);
+        assert!((os.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((os.variance() - variance(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_basics() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_accepts_true_distribution() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..5000).map(|_| r.normal()).collect();
+        let res = ks_test(&xs, norm_cdf);
+        assert!(res.p_value > 0.01, "p={} d={}", res.p_value, res.statistic);
+    }
+
+    #[test]
+    fn ks_rejects_wrong_distribution() {
+        let mut r = Rng::new(12);
+        // Laplace samples against Gaussian cdf: must reject strongly
+        let xs: Vec<f64> = (0..5000).map(|_| r.laplace(1.0)).collect();
+        let res = ks_test(&xs, norm_cdf);
+        assert!(res.p_value < 1e-4, "p={}", res.p_value);
+    }
+
+    #[test]
+    fn ks_rejects_shifted_mean() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..5000).map(|_| r.normal() + 0.2).collect();
+        let res = ks_test(&xs, norm_cdf);
+        assert!(res.p_value < 1e-4);
+    }
+
+    #[test]
+    fn two_sample_ks_same_vs_different() {
+        let mut r = Rng::new(14);
+        let a: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let c: Vec<f64> = (0..4000).map(|_| r.normal() * 1.3).collect();
+        assert!(ks_test_two_sample(&a, &b).p_value > 0.01);
+        assert!(ks_test_two_sample(&a, &c).p_value < 1e-4);
+    }
+
+    #[test]
+    fn mse_and_norms() {
+        let a = vec![1.0, 2.0];
+        let b = vec![2.0, 4.0];
+        assert!((mse(&a, &b) - 2.5).abs() < 1e-12);
+        assert!((l2_norm(&vec![3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(linf_norm(&vec![-7.0, 2.0]), 7.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Figure-harness integration: every table/figure regenerates in --quick
+//! mode and emits a non-empty CSV — the "can we reproduce the paper"
+//! smoke test.
+
+use exact_comp::figures::{self, FigOpts};
+
+fn opts(dir: &str) -> FigOpts {
+    FigOpts { out_dir: dir.to_string(), runs: 2, quick: true, seed: 77 }
+}
+
+fn csv_rows(path: &str) -> usize {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|_| panic!("missing {path}"));
+    text.lines().count().saturating_sub(1)
+}
+
+#[test]
+fn fig2_quick() {
+    let dir = "target/test-results/fig2";
+    figures::run_named("2", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/fig2.csv")) >= 6);
+}
+
+#[test]
+fn fig4_quick() {
+    let dir = "target/test-results/fig4";
+    figures::run_named("4", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/fig4a.csv")) >= 3);
+    assert!(csv_rows(&format!("{dir}/fig4b.csv")) >= 3);
+}
+
+#[test]
+fn fig5_and_7_quick() {
+    let dir = "target/test-results/fig5";
+    figures::run_named("5", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/fig5.csv")) >= 4);
+    figures::run_named("7", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/fig7.csv")) >= 3);
+}
+
+#[test]
+fn fig6_and_8_quick() {
+    let dir = "target/test-results/fig6";
+    figures::run_named("6", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/fig6.csv")) >= 3);
+}
+
+#[test]
+fn fig9_quick() {
+    let dir = "target/test-results/fig9";
+    figures::run_named("9", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/fig9.csv")) >= 4);
+}
+
+#[test]
+fn fig10_quick() {
+    let dir = "target/test-results/fig10";
+    figures::run_named("10", &opts(dir));
+    // 1 LSD + 3 bits × 2 arms
+    assert!(csv_rows(&format!("{dir}/fig10.csv")) == 7);
+}
+
+#[test]
+fn table1_quick() {
+    let dir = "target/test-results/table1";
+    figures::run_named("table1", &opts(dir));
+    assert_eq!(csv_rows(&format!("{dir}/table1.csv")), 5);
+    // spot-check the paper's matrix in the emitted CSV
+    let text = std::fs::read_to_string(format!("{dir}/table1.csv")).unwrap();
+    let agg_row: Vec<&str> = text
+        .lines()
+        .find(|l| l.starts_with("Aggregate Gaussian"))
+        .unwrap()
+        .split(',')
+        .collect();
+    assert_eq!(&agg_row[1..], &["yes", "yes", "yes", "no"]);
+    let ih_row: Vec<&str> =
+        text.lines().find(|l| l.starts_with("Irwin-Hall")).unwrap().split(',').collect();
+    assert_eq!(&ih_row[1..], &["yes", "no", "no", "yes"]);
+}
+
+#[test]
+fn appd_quick() {
+    let dir = "target/test-results/appd";
+    figures::run_named("D", &opts(dir));
+    assert!(csv_rows(&format!("{dir}/appd.csv")) >= 10);
+}
+
+#[test]
+fn unknown_figure_rejected() {
+    assert!(!figures::run_named("42", &opts("target/test-results/none")));
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime integration: loads the AOT artifacts (`make artifacts`
+//! must have run — these tests SKIP with a message if artifacts/ is
+//! missing) and validates the Layer-2/Layer-1 numerics from rust, then the
+//! end-to-end FL training driver.
+
+use exact_comp::apps::fl_train::{self, MechKind, TrainOpts};
+use exact_comp::quantizer::round_half_up;
+use exact_comp::runtime::Engine;
+use exact_comp::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("engine"))
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.platform(), "cpu");
+    assert!(e.manifest.param_count > 0);
+}
+
+#[test]
+fn model_grad_matches_finite_differences() {
+    let Some(e) = engine() else { return };
+    let m = e.manifest.clone();
+    let mut rng = Rng::new(41);
+    let params: Vec<f32> = (0..m.param_count).map(|_| rng.normal_ms(0.0, 0.2) as f32).collect();
+    let xb: Vec<f32> = (0..m.batch * m.d_in).map(|_| rng.normal() as f32).collect();
+    let yb: Vec<i32> = (0..m.batch).map(|_| (rng.bernoulli(0.5)) as i32).collect();
+
+    let (loss, grad) = e.model_grad(&params, &xb, &yb).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert_eq!(grad.len(), m.param_count);
+
+    // central finite differences on a few random coordinates
+    let h = 1e-2f32;
+    for k in [0usize, m.param_count / 3, m.param_count - 1] {
+        let mut pp = params.clone();
+        pp[k] += h;
+        let (lp, _) = e.model_grad(&pp, &xb, &yb).unwrap();
+        pp[k] -= 2.0 * h;
+        let (lm, _) = e.model_grad(&pp, &xb, &yb).unwrap();
+        let fd = (lp - lm) / (2.0 * h);
+        assert!(
+            (fd - grad[k]).abs() < 2e-2 + 0.1 * fd.abs().max(grad[k].abs()),
+            "coord {k}: fd {fd} vs grad {}",
+            grad[k]
+        );
+    }
+}
+
+#[test]
+fn encode_kernel_matches_rust_dithering() {
+    let Some(e) = engine() else { return };
+    let m = e.manifest.clone();
+    let total = m.enc_clients * m.enc_dim;
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..total).map(|_| rng.uniform(-50.0, 50.0) as f32).collect();
+    let s: Vec<f32> = (0..total).map(|_| rng.dither() as f32).collect();
+    let inv_scale = 0.37f32;
+    let out = e.encode(&x, &s, inv_scale).unwrap();
+    let mut mismatches = 0usize;
+    for i in 0..total {
+        let want = round_half_up((x[i] * inv_scale + s[i]) as f64) as f32;
+        if (out[i] - want).abs() > 0.0 {
+            // fma-vs-two-op rounding can flip exact .5 ties; must be ±1
+            assert!((out[i] - want).abs() <= 1.0, "i={i} out={} want={want}", out[i]);
+            mismatches += 1;
+        }
+    }
+    assert!(
+        mismatches < total / 1000,
+        "{mismatches}/{total} tie-flips (too many)"
+    );
+}
+
+#[test]
+fn decode_kernel_matches_formula() {
+    let Some(e) = engine() else { return };
+    let m = e.manifest.clone();
+    let mut rng = Rng::new(43);
+    let m_sum: Vec<f32> = (0..m.enc_dim).map(|_| rng.uniform(-100.0, 100.0) as f32).collect();
+    let s_sum: Vec<f32> = (0..m.enc_dim).map(|_| rng.uniform(-4.0, 4.0) as f32).collect();
+    let (scale, shift, n) = (0.55f32, -1.25f32, 9.0f32);
+    let y = e.decode_mean(&m_sum, &s_sum, scale, shift, n).unwrap();
+    for j in 0..m.enc_dim {
+        let want = scale / n * (m_sum[j] - s_sum[j]) + shift;
+        assert!((y[j] - want).abs() < 1e-4, "j={j}");
+    }
+}
+
+#[test]
+fn fl_training_e2e_loss_decreases() {
+    let Some(e) = engine() else { return };
+    let opts = TrainOpts {
+        rounds: 60,
+        lr: 0.5,
+        n_clients: 4,
+        clip_c: 0.05,
+        mech: MechKind::Aggregate,
+        sigma: 5e-4,
+        eval_every: 10,
+        seed: 0xE2E,
+    };
+    let data = fl_train::gen_dataset(&e, opts.n_clients, opts.seed);
+    let metrics = fl_train::train(&e, &data, opts).unwrap();
+    let series = metrics.series("train_loss").unwrap();
+    let first = series[0].1;
+    let last = series.last().unwrap().1;
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    let acc = metrics.last("acc").unwrap();
+    assert!(acc > 0.7, "eval acc {acc}");
+    assert!(metrics.mean_of("bits_per_client").unwrap() > 0.0);
+}
+
+#[test]
+fn fl_training_compressed_tracks_uncompressed() {
+    let Some(e) = engine() else { return };
+    let base = TrainOpts {
+        rounds: 50,
+        lr: 0.5,
+        n_clients: 4,
+        clip_c: 0.05,
+        mech: MechKind::None,
+        sigma: 5e-4,
+        eval_every: 25,
+        seed: 0xBEE,
+    };
+    let data = fl_train::gen_dataset(&e, base.n_clients, base.seed);
+    let plain = fl_train::train(&e, &data, base).unwrap();
+    let compressed = fl_train::train(
+        &e,
+        &data,
+        TrainOpts { mech: MechKind::Aggregate, ..base },
+    )
+    .unwrap();
+    let lp = plain.last("train_loss").unwrap();
+    let lc = compressed.last("train_loss").unwrap();
+    assert!(lc < lp * 1.5 + 0.1, "compressed {lc} vs plain {lp}");
+    // and compression actually saves bits vs float32
+    let bits = compressed.mean_of("bits_per_client").unwrap();
+    let raw = 32.0 * e.manifest.param_count as f64;
+    assert!(bits < raw / 4.0, "bits {bits} vs raw {raw}");
+}

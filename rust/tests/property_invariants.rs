@@ -1,0 +1,244 @@
+//! Property-based tests (in-repo `testing` harness — proptest is not in
+//! the offline registry) over coordinator and mechanism invariants.
+
+use exact_comp::coding::bitio::{BitReader, BitWriter};
+use exact_comp::coding::elias;
+use exact_comp::coding::fixed::FixedCode;
+use exact_comp::dist::{Continuous, Gaussian, Unimodal};
+use exact_comp::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered, SubtractiveDither};
+use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
+use exact_comp::testing::{forall, gen_f64, gen_usize, PropConfig};
+use exact_comp::transforms::hadamard::RandomizedRotation;
+use exact_comp::util::rng::Rng;
+
+fn cfg(cases: u32) -> PropConfig {
+    PropConfig { cases, seed: 0xFACADE, max_shrink_steps: 100 }
+}
+
+#[test]
+fn prop_dither_error_bounded_by_half_step() {
+    // |decode(encode(x)) - x| <= step/2 for ANY x and any step draw
+    let q = SubtractiveDither::new(0.9);
+    let mut srng = Rng::new(1);
+    forall("dither-error-bound", cfg(300), gen_f64(-1e6, 1e6), move |&x| {
+        let (_, y, s) = q.quantize(x, &mut srng);
+        (y - x).abs() <= s.step / 2.0 + 1e-9
+    });
+}
+
+#[test]
+fn prop_layered_error_bounded_by_layer() {
+    // the layered quantizers' error lies inside the drawn layer interval
+    let g = Gaussian::new(0.0, 1.0);
+    let direct = DirectLayered::new(g);
+    let shifted = ShiftedLayered::new(g);
+    let mut srng = Rng::new(2);
+    forall("layered-error-in-layer", cfg(300), gen_f64(-1e4, 1e4), move |&x| {
+        let (_, y1, s1) = direct.quantize(x, &mut srng);
+        let ok1 = (y1 - x - s1.offset).abs() <= s1.step / 2.0 + 1e-9;
+        let (_, y2, s2) = shifted.quantize(x, &mut srng);
+        let ok2 = (y2 - x - s2.offset).abs() <= s2.step / 2.0 + 1e-9;
+        ok1 && ok2
+    });
+}
+
+#[test]
+fn prop_shifted_step_at_least_eta() {
+    let g = Gaussian::new(0.0, 2.0);
+    let q = ShiftedLayered::new(g);
+    let eta = q.min_step().unwrap();
+    let mut srng = Rng::new(3);
+    forall("shifted-min-step", cfg(500), gen_usize(0, 1000), move |_| {
+        let s = q.draw(&mut srng);
+        s.step >= eta - 1e-9
+    });
+}
+
+#[test]
+fn prop_elias_roundtrip_any_vector() {
+    forall(
+        "elias-roundtrip",
+        cfg(200),
+        |rng: &mut Rng| {
+            let len = 1 + rng.below(64) as usize;
+            (0..len).map(|_| rng.below(2_000_000) as i64 - 1_000_000).collect::<Vec<i64>>()
+        },
+        |ms| {
+            let (bytes, _) = elias::encode_vec(ms);
+            elias::decode_vec(&bytes, ms.len()).as_deref() == Some(ms.as_slice())
+        },
+    );
+}
+
+#[test]
+fn prop_fixed_code_roundtrip() {
+    forall(
+        "fixed-roundtrip",
+        cfg(200),
+        |rng: &mut Rng| {
+            let lo = rng.below(1000) as i64 - 500;
+            let hi = lo + rng.below(1000) as i64;
+            let m = lo + rng.below((hi - lo + 1) as u64) as i64;
+            (lo, (hi, m))
+        },
+        |&(lo, (hi, m))| {
+            let c = FixedCode::new(lo, hi);
+            let mut w = BitWriter::new();
+            c.encode(&mut w, m);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            c.decode(&mut r) == Some(m)
+        },
+    );
+}
+
+#[test]
+fn prop_secagg_masks_cancel() {
+    forall(
+        "secagg-cancel",
+        cfg(60),
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(9) as usize;
+            let d = 1 + rng.below(32) as usize;
+            let seed = rng.below(1 << 30) as usize;
+            (n, (d, seed))
+        },
+        |&(n, (d, seed))| {
+            let params = SecAggParams::default();
+            let mut rng = Rng::new(seed as u64);
+            let descriptions: Vec<Vec<i64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.below(2000) as i64 - 1000).collect())
+                .collect();
+            let masked: Vec<Vec<u64>> = (0..n)
+                .map(|i| mask_descriptions(&descriptions[i], i, n, seed as u64, params))
+                .collect();
+            let agg = aggregate_masked(&masked, params);
+            (0..d).all(|j| agg[j] == descriptions.iter().map(|m| m[j]).sum::<i64>())
+        },
+    );
+}
+
+#[test]
+fn prop_rotation_isometry_and_inverse() {
+    forall(
+        "rotation-roundtrip",
+        cfg(60),
+        |rng: &mut Rng| {
+            let d = 1 + rng.below(200) as usize;
+            let seed = rng.below(1 << 30) as usize;
+            let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            (x, seed)
+        },
+        |(x, seed)| {
+            if x.is_empty() {
+                return true; // shrinking may empty the vector
+            }
+            let rot = RandomizedRotation::new(x.len(), *seed as u64);
+            let y = rot.forward(x);
+            let norm_ok = (exact_comp::util::stats::l2_norm(&y)
+                - exact_comp::util::stats::l2_norm(x))
+            .abs()
+                < 1e-8 * (1.0 + exact_comp::util::stats::l2_norm(x));
+            let back = rot.inverse(&y, x.len());
+            let inv_ok = back
+                .iter()
+                .zip(x)
+                .all(|(a, b)| (a - b).abs() < 1e-8 * (1.0 + b.abs()));
+            norm_ok && inv_ok
+        },
+    );
+}
+
+#[test]
+fn prop_superlevel_geometry_consistent() {
+    // for every height y: pdf(b_plus(y)) == y and width >= 0, for Gaussian
+    // of random scale
+    forall(
+        "superlevel-geometry",
+        cfg(200),
+        |rng: &mut Rng| (rng.uniform(0.1, 5.0), rng.u01()),
+        |&(sd, frac)| {
+            if sd <= 0.0 {
+                return true; // shrunk out of the valid domain
+            }
+            let g = Gaussian::new(0.0, sd);
+            let y = frac.clamp(1e-9, 0.999) * g.max_pdf();
+            let bp = g.b_plus(y);
+            let ok_inv = (g.pdf(bp) - y).abs() < 1e-9 * g.max_pdf();
+            ok_inv && g.layer_width(y) >= 0.0 && bp >= g.mode()
+        },
+    );
+}
+
+#[test]
+fn prop_mechanism_estimate_within_noise_envelope() {
+    // the aggregate-Gaussian estimate deviates from the true mean by at
+    // most a few σ per coordinate (no wild decoding errors for any data)
+    use exact_comp::mechanisms::traits::true_mean;
+    use exact_comp::mechanisms::traits::MeanMechanism;
+    let sigma = 0.25;
+    let mech = exact_comp::mechanisms::AggregateGaussian::new(sigma, 8.0);
+    forall(
+        "estimate-envelope",
+        cfg(40),
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(12) as usize;
+            let d = 1 + rng.below(8) as usize;
+            let xs: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.uniform(-4.0, 4.0)).collect())
+                .collect();
+            let seed = rng.below(1 << 30) as usize;
+            (xs, seed)
+        },
+        move |(xs, seed)| {
+            if xs.is_empty() || xs.iter().any(|x| x.is_empty() || x.len() != xs[0].len()) {
+                return true; // shrunk into an invalid shape
+            }
+            let out = mech.aggregate(xs, *seed as u64);
+            let mean = true_mean(xs);
+            out.estimate
+                .iter()
+                .zip(&mean)
+                .all(|(e, m)| (e - m).abs() < 8.0 * sigma)
+        },
+    );
+}
+
+#[test]
+fn prop_huffman_roundtrip_random_tables() {
+    use exact_comp::coding::huffman::Huffman;
+    forall(
+        "huffman-roundtrip",
+        cfg(80),
+        |rng: &mut Rng| {
+            let k = 1 + rng.below(40) as usize;
+            let syms: Vec<(i64, f64)> =
+                (0..k).map(|i| (i as i64 - 20, rng.u01() + 1e-6)).collect();
+            let msg: Vec<i64> =
+                (0..30).map(|_| syms[rng.below(k as u64) as usize].0).collect();
+            (syms.iter().map(|&(s, _)| s).collect::<Vec<i64>>(), msg)
+        },
+        |(sym_ids, msg)| {
+            if sym_ids.is_empty() {
+                return true;
+            }
+            let mut ids = sym_ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            let syms: Vec<(i64, f64)> = ids.iter().map(|&s| (s, 1.0)).collect();
+            let h = Huffman::from_weights(&syms);
+            let mut w = BitWriter::new();
+            for &s in msg {
+                if !ids.contains(&s) {
+                    continue;
+                }
+                if !h.encode(&mut w, s) {
+                    return false;
+                }
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            msg.iter().filter(|s| ids.contains(s)).all(|&s| h.decode(&mut r) == Some(s))
+        },
+    );
+}
