@@ -3,7 +3,8 @@
 
 use std::sync::Arc;
 
-use exact_comp::coordinator::runtime::{run_round, ClientPool};
+use exact_comp::coordinator::runtime::{run_round, run_round_mech, ClientPool};
+use exact_comp::mechanisms::pipeline::Plain;
 use exact_comp::mechanisms::IrwinHallMechanism;
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
 use exact_comp::transforms::hadamard::{fwht, RandomizedRotation};
@@ -14,15 +15,17 @@ use exact_comp::util::stats::ks_test;
 fn main() {
     let mut s = Suite::new();
 
-    // round loop: parallel local compute + aggregation
+    // round loop: parallel local compute + aggregation. Worker count is
+    // pinned so numbers are comparable across machines.
     for n in [8usize, 64] {
         let d = 256;
-        let pool = ClientPool::spawn(
+        let pool = ClientPool::spawn_with_threads(
             n,
             Arc::new(move |c: usize, r: u64, _s: &[f64]| {
                 let mut rng = Rng::derive(r, c as u64);
                 (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
             }),
+            Some(4),
         );
         let mech = IrwinHallMechanism::new(0.5, 4.0);
         let mut round = 0u64;
@@ -30,6 +33,16 @@ fn main() {
             round += 1;
             black_box(run_round(&pool, &mech, round, &[], 42));
         });
+        // pipeline shape: per-shard encode, O(d) orchestrator folding
+        let mut round2 = 0u64;
+        s.bench_elements(
+            &format!("coordinator/round_encoded(n={n},d={d})"),
+            Some((n * d) as u64),
+            || {
+                round2 += 1;
+                black_box(run_round_mech(&pool, &mech, Arc::new(Plain), round2, &[], 42));
+            },
+        );
     }
 
     // SecAgg masking

@@ -9,10 +9,19 @@
 //! *shapes* the quantization error itself into the exact Gaussian. With
 //! the bit budget matched, CSGM's MSE is strictly larger by the
 //! quantization variance.
+//!
+//! Pipeline shape: the fixed shared step makes the decode a function of
+//! Σᵢ mᵢ (the dithers and the subsampling matrix are shared randomness the
+//! server re-derives), so CSGM is homomorphic: clients emit a dense
+//! description vector (0 on unselected coordinates, which drop out of the
+//! sum) and the mechanism rides the sum-only transports, SecAgg included.
 
+use crate::mechanisms::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
+    ServerDecoder, SharedRound,
+};
 use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::quantizer::round_half_up;
-use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct Csgm {
@@ -24,21 +33,31 @@ pub struct Csgm {
     pub input_bound_c: f64,
     /// quantization bits per selected coordinate (matched to SIGM's budget)
     pub bits: u32,
+    /// round-derived shared subsampling matrix
+    round_b: RoundCache<Vec<Vec<bool>>>,
 }
 
 impl Csgm {
     pub fn new(sigma: f64, gamma: f64, input_bound_c: f64, bits: u32) -> Self {
         assert!(sigma > 0.0 && (0.0..=1.0).contains(&gamma) && bits >= 1);
-        Self { sigma, gamma, input_bound_c, bits }
+        Self { sigma, gamma, input_bound_c, bits, round_b: RoundCache::new() }
     }
 
     /// quantization step over [−c, c] with 2^b levels
     pub fn step(&self) -> f64 {
         2.0 * self.input_bound_c / ((1u64 << self.bits) - 1) as f64
     }
+
+    /// Shared subsampling matrix — the same `SharedRound::bernoulli_matrix`
+    /// derivation SIGM uses, so the two mechanisms see identical subsamples
+    /// for a given seed.
+    fn subsample(&self, round: &SharedRound) -> std::sync::Arc<Vec<Vec<bool>>> {
+        let gamma = self.gamma;
+        self.round_b.get_or(round, || round.bernoulli_matrix(gamma))
+    }
 }
 
-impl MeanMechanism for Csgm {
+impl MechSpec for Csgm {
     fn name(&self) -> String {
         format!("csgm(sigma={}, gamma={}, b={})", self.sigma, self.gamma, self.bits)
     }
@@ -58,45 +77,93 @@ impl MeanMechanism for Csgm {
     fn noise_sd(&self) -> f64 {
         self.sigma
     }
+}
 
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        let n = xs.len();
-        let d = xs[0].len();
-        let nf = n as f64;
+impl ClientEncoder for Csgm {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let b = self.subsample(round);
         let w = self.step();
+        let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
-
-        // shared subsampling matrix (same derivation scheme as SIGM so the
-        // two mechanisms see identical subsamples for a given seed)
-        const GLOBAL_STREAM: u64 = u64::MAX;
-        let mut brng = Rng::derive(seed, GLOBAL_STREAM);
-        let b: Vec<Vec<bool>> = (0..n)
-            .map(|_| (0..d).map(|_| brng.bernoulli(self.gamma)).collect())
-            .collect();
-
-        let mut acc = vec![0.0f64; d];
-        for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
-            for j in 0..d {
-                if !b[i][j] {
-                    continue;
+        let ms: Vec<i64> = x
+            .iter()
+            .enumerate()
+            .map(|(j, &xj)| {
+                if !b[client][j] {
+                    // unselected coordinates transmit nothing; a zero in
+                    // the dense vector leaves Σm untouched
+                    return 0;
                 }
                 let u = rng.u01();
-                let m = round_half_up(x[j] / w + u);
+                let m = round_half_up(xj / w + u);
                 bits.add_description(m);
                 fixed_total += self.bits as f64;
-                acc[j] += (m as f64 - u) * w;
-            }
-        }
-        // server: divide by γn and add the calibrated Gaussian noise
-        let mut nrng = Rng::derive(seed, GLOBAL_STREAM - 2);
-        let estimate: Vec<f64> = acc
-            .into_iter()
-            .map(|s| s / (self.gamma * nf) + nrng.normal_ms(0.0, self.sigma))
+                m
+            })
             .collect();
         bits.fixed_total = Some(fixed_total);
-        RoundOutput { estimate, bits }
+        Descriptions { ms, aux: vec![], bits }
+    }
+}
+
+impl ServerDecoder for Csgm {
+    fn sum_decodable(&self) -> bool {
+        true
+    }
+
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let n = round.n_clients;
+        let d = round.dim;
+        let nf = n as f64;
+        let w = self.step();
+        let b = self.subsample(round);
+        let m_sum = payload.description_sum();
+        assert_eq!(m_sum.len(), d);
+        // re-derive the selected clients' dithers (shared randomness)
+        let mut s_sum = vec![0.0f64; d];
+        for i in 0..n {
+            let mut rng = round.client_rng(i);
+            for (j, sj) in s_sum.iter_mut().enumerate() {
+                if b[i][j] {
+                    *sj += rng.u01();
+                }
+            }
+        }
+        // divide by γn and add the calibrated server-side Gaussian noise
+        let mut nrng = round.aux_rng(2);
+        (0..d)
+            .map(|j| {
+                (m_sum[j] as f64 - s_sum[j]) * w / (self.gamma * nf)
+                    + nrng.normal_ms(0.0, self.sigma)
+            })
+            .collect()
+    }
+}
+
+impl MeanMechanism for Csgm {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(self, &Plain, self, xs, seed)
     }
 }
 
@@ -105,6 +172,7 @@ mod tests {
     use super::*;
     use crate::mechanisms::traits::true_mean;
     use crate::mechanisms::Sigm;
+    use crate::util::rng::Rng;
     use crate::util::stats::mean as vmean;
 
     fn client_data(n: usize, d: usize, c: f64, seed: u64) -> Vec<Vec<f64>> {
@@ -177,8 +245,9 @@ mod tests {
 
     #[test]
     fn property_flags() {
-        let m = Csgm::new(0.1, 0.5, 1.0, 8);
+        let m: &dyn MeanMechanism = &Csgm::new(0.1, 0.5, 1.0, 8);
         assert!(!m.gaussian_noise());
         assert!(m.fixed_length());
+        assert!(m.is_homomorphic());
     }
 }

@@ -3,9 +3,12 @@
 //!
 //!  client: clip to ℓ2 ball c → randomized Hadamard rotation → scale by
 //!          1/γ_q → unbiased stochastic rounding to ℤ → + discrete
-//!          Gaussian N_ℤ(0, (σ/γ_q)²) → reduce mod 2^b → SecAgg masking
-//!  server: SecAgg sum mod 2^b → signed representative → ·γ_q/n → inverse
-//!          rotation
+//!          Gaussian N_ℤ(0, (σ/γ_q)²)  (= the [`ClientEncoder`])
+//!  transport: reduce mod 2^b + SecAgg masking — the server observes only
+//!          Σᵢ mᵢ mod 2^b
+//!  server: signed representative mod 2^b → ·γ_q/n → inverse rotation
+//!          (= the [`ServerDecoder`]; it re-applies the 2^b reduction, so
+//!          plain summation and SecAgg decode bit-identically)
 //!
 //! DP guarantee against the *server* (stronger than less-trusted): the
 //! summed discrete Gaussian noise gives zCDP ρ ≈ Δ̃²/(2σ²) with the
@@ -18,10 +21,13 @@
 //! DDG needs b up to 18 where aggregate Gaussian needs ~2 bits.
 
 use crate::dist::discrete_gaussian::discrete_gaussian;
+use crate::mechanisms::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, SecAgg,
+    ServerDecoder, SharedRound,
+};
 use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
-use crate::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
+use crate::secagg::{from_field, to_field, SecAggParams};
 use crate::transforms::hadamard::RandomizedRotation;
-use crate::util::rng::Rng;
 use crate::util::stats::l2_norm;
 
 #[derive(Clone, Debug)]
@@ -34,12 +40,14 @@ pub struct Ddg {
     pub clip_c: f64,
     /// bits per coordinate: modulus = 2^bits
     pub bits: u32,
+    /// round-derived shared rotation (clients + server)
+    round_rot: RoundCache<RandomizedRotation>,
 }
 
 impl Ddg {
     pub fn new(sigma_lattice: f64, gamma_q: f64, clip_c: f64, bits: u32) -> Self {
         assert!(sigma_lattice > 0.0 && gamma_q > 0.0 && bits >= 2 && bits <= 40);
-        Self { sigma_lattice, gamma_q, clip_c, bits }
+        Self { sigma_lattice, gamma_q, clip_c, bits, round_rot: RoundCache::new() }
     }
 
     /// Calibrate for (ε, δ)-DP at n clients, dimension d: pick the total
@@ -86,9 +94,19 @@ impl Ddg {
     fn modulus(&self) -> u64 {
         1u64 << self.bits
     }
+
+    fn rotation(&self, round: &SharedRound) -> std::sync::Arc<RandomizedRotation> {
+        self.round_rot
+            .get_or(round, || RandomizedRotation::new(round.dim, round.seed ^ 0xDD6))
+    }
+
+    /// The transport DDG is meant to run over: SecAgg over ℤ_{2^b}.
+    pub fn transport(&self) -> SecAgg {
+        SecAgg::with_params(SecAggParams { modulus: self.modulus() })
+    }
 }
 
-impl MeanMechanism for Ddg {
+impl MechSpec for Ddg {
     fn name(&self) -> String {
         format!("ddg(sigma={}, gq={}, b={})", self.sigma_lattice, self.gamma_q, self.bits)
     }
@@ -109,55 +127,94 @@ impl MeanMechanism for Ddg {
         // continuous-equivalent sd of the summed lattice noise per client
         self.sigma_lattice * self.gamma_q
     }
+}
+
+impl ClientEncoder for Ddg {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let rot = self.rotation(round);
+        let dim = rot.dim;
+        let mut rng = round.client_rng(client);
+        // clip to the l2 ball of radius c
+        let norm = l2_norm(x);
+        let scale = if norm > self.clip_c { self.clip_c / norm } else { 1.0 };
+        let clipped: Vec<f64> = x.iter().map(|v| v * scale).collect();
+        // rotate + lattice-scale
+        let rotated = rot.forward(&clipped);
+        let mut bits = BitsAccount::default();
+        let mut ms: Vec<i64> = Vec::with_capacity(dim);
+        for &v in &rotated {
+            let z = v / self.gamma_q;
+            // unbiased stochastic rounding
+            let fl = z.floor();
+            let frac = z - fl;
+            let r = fl as i64 + if rng.u01() < frac { 1 } else { 0 };
+            // + discrete Gaussian on the lattice
+            let noise = discrete_gaussian(&mut rng, self.sigma_lattice);
+            let m = r + noise;
+            bits.add_description(m);
+            ms.push(m);
+        }
+        bits.fixed_total = Some(self.bits as f64 * dim as f64);
+        Descriptions { ms, aux: vec![], bits }
+    }
+}
+
+impl ServerDecoder for Ddg {
+    fn sum_decodable(&self) -> bool {
+        true
+    }
+
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let rot = self.rotation(round);
+        let m = self.modulus();
+        let sum = payload.description_sum();
+        assert_eq!(sum.len(), rot.dim);
+        // modular semantics of the 2^b uplink: reduce the (possibly exact)
+        // sum to its signed representative mod 2^b. Under the SecAgg
+        // transport configured with this modulus the value is already
+        // reduced and this is the identity — so plain summation and SecAgg
+        // decode bit-identically (wraparound happens HERE if b too small).
+        let scaled: Vec<f64> = sum
+            .iter()
+            .map(|&v| from_field(to_field(v, m), m) as f64 * self.gamma_q / round.n_clients as f64)
+            .collect();
+        rot.inverse(&scaled, round.dim)
+    }
+}
+
+impl MeanMechanism for Ddg {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
 
     fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        let n = xs.len();
-        let d = xs[0].len();
-        let rot = RandomizedRotation::new(d, seed ^ 0xDD6);
-        let dim = rot.dim;
-        let params = SecAggParams { modulus: self.modulus() };
-        let mut bits = BitsAccount::default();
-
-        let mut masked_all: Vec<Vec<u64>> = Vec::with_capacity(n);
-        for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
-            // clip to the l2 ball of radius c
-            let norm = l2_norm(x);
-            let scale = if norm > self.clip_c { self.clip_c / norm } else { 1.0 };
-            let clipped: Vec<f64> = x.iter().map(|v| v * scale).collect();
-            // rotate + lattice-scale
-            let rotated = rot.forward(&clipped);
-            let mut lattice: Vec<i64> = Vec::with_capacity(dim);
-            for &v in &rotated {
-                let z = v / self.gamma_q;
-                // unbiased stochastic rounding
-                let fl = z.floor();
-                let frac = z - fl;
-                let r = fl as i64 + if rng.u01() < frac { 1 } else { 0 };
-                // + discrete Gaussian on the lattice
-                let noise = discrete_gaussian(&mut rng, self.sigma_lattice);
-                let m = r + noise;
-                bits.add_description(m);
-                lattice.push(m);
-            }
-            bits.fixed_total =
-                Some(bits.fixed_total.unwrap_or(0.0) + self.bits as f64 * dim as f64);
-            masked_all.push(mask_descriptions(&lattice, i, n, seed ^ 0x5EC, params));
-        }
-
-        // server: SecAgg sum mod 2^b (wraparound happens HERE if b too small)
-        let summed = aggregate_masked(&masked_all, params);
-        let scaled: Vec<f64> =
-            summed.iter().map(|&v| v as f64 * self.gamma_q / n as f64).collect();
-        let estimate = rot.inverse(&scaled, d);
-        RoundOutput { estimate, bits }
+        // §5.2 semantics: the masked modular uplink IS the mechanism
+        run_pipeline(self, &self.transport(), self, xs, seed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mechanisms::pipeline::Plain;
     use crate::mechanisms::traits::true_mean;
+    use crate::util::rng::Rng;
     use crate::util::stats::mse;
 
     fn sphere_data(n: usize, d: usize, radius: f64, seed: u64) -> Vec<Vec<f64>> {
@@ -235,5 +292,19 @@ mod tests {
         let o1 = mech.aggregate(&xs, 555);
         let o2 = mech.aggregate(&xs, 555);
         assert_eq!(o1.estimate, o2.estimate);
+    }
+
+    #[test]
+    fn plain_and_secagg_bit_identical_even_under_wraparound() {
+        // the decoder owns the 2^b reduction, so the exact i64 sum (Plain)
+        // and the masked modular sum (SecAgg) decode identically — also in
+        // the wraparound regime where the modulus actually bites
+        let xs = sphere_data(12, 16, 1.0, 145);
+        for bits in [10u32, 24] {
+            let mech = Ddg::new(2.0, 1e-3, 1.0, bits);
+            let plain = run_pipeline(&mech, &Plain, &mech, &xs, 770);
+            let masked = run_pipeline(&mech, &mech.transport(), &mech, &xs, 770);
+            assert_eq!(plain.estimate, masked.estimate, "bits={bits}");
+        }
     }
 }

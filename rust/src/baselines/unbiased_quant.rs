@@ -3,8 +3,21 @@
 //! rescale. Error is uniform per coordinate with variance
 //! (w²/12)·‖x‖∞², w = 2/(2^b − 1) — *bounded-variance* compression, the
 //! standard assumption the paper generalizes away from.
+//!
+//! Two roles:
+//! * [`VectorCompressor`] — the QLSD* compressor of the Langevin app
+//!   (caller-supplied RNG, transmitted per-vector norm);
+//! * pipeline mean mechanism — the same scheme as an n-client aggregation
+//!   baseline. The per-client ‖x‖∞ is *data*, not shared randomness: it
+//!   travels in the message's `aux` slot, so the mechanism is NOT
+//!   homomorphic and rides the Unicast transport.
 
 use super::{CompressedVec, VectorCompressor};
+use crate::mechanisms::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, ServerDecoder, SharedRound,
+    Unicast,
+};
+use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::quantizer::round_half_up;
 use crate::util::rng::Rng;
 use crate::util::stats::linf_norm;
@@ -52,6 +65,115 @@ impl VectorCompressor for UnbiasedQuantizer {
     }
 }
 
+impl MechSpec for UnbiasedQuantizer {
+    fn name(&self) -> String {
+        VectorCompressor::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        false // per-client norm scaling: descriptions don't share a grid
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        false // uniform quantization error
+    }
+
+    fn fixed_length(&self) -> bool {
+        true
+    }
+
+    fn noise_sd(&self) -> f64 {
+        0.0 // data-dependent error, no fixed aggregate target
+    }
+}
+
+impl ClientEncoder for UnbiasedQuantizer {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let scale = linf_norm(x);
+        let mut bits = BitsAccount::default();
+        if scale == 0.0 {
+            // nothing to send beyond the (zero) norm: 32 bits on both
+            // accountings, same convention as the non-zero branch
+            bits.variable_total += 32.0;
+            bits.fixed_total = Some(32.0);
+            return Descriptions { ms: vec![0; x.len()], aux: vec![0.0], bits };
+        }
+        let w = self.step();
+        let mut rng = round.client_rng(client);
+        let ms: Vec<i64> = x
+            .iter()
+            .map(|&v| {
+                let u = rng.u01();
+                let m = round_half_up(v / (scale * w) + u);
+                bits.add_description(m);
+                m
+            })
+            .collect();
+        // 32 bits for the transmitted norm, on both accountings
+        bits.variable_total += 32.0;
+        bits.fixed_total = Some(self.bits as f64 * x.len() as f64 + 32.0);
+        Descriptions { ms, aux: vec![scale], bits }
+    }
+}
+
+impl ServerDecoder for UnbiasedQuantizer {
+    fn sum_decodable(&self) -> bool {
+        false
+    }
+
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let n = round.n_clients;
+        let d = round.dim;
+        let w = self.step();
+        let list = payload.per_client();
+        assert_eq!(list.len(), n);
+        let mut estimate = vec![0.0f64; d];
+        for (i, (ms, aux)) in list.iter().enumerate() {
+            let scale = aux[0];
+            if scale == 0.0 {
+                // the zero vector transmitted nothing; no dither stream was
+                // consumed on the client either
+                continue;
+            }
+            let mut rng = round.client_rng(i);
+            for (ej, &m) in estimate.iter_mut().zip(ms) {
+                let u = rng.u01();
+                *ej += (m as f64 - u) * w * scale;
+            }
+        }
+        for e in estimate.iter_mut() {
+            *e /= n as f64;
+        }
+        estimate
+    }
+}
+
+impl MeanMechanism for UnbiasedQuantizer {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(self, &Unicast, self, xs, seed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +213,48 @@ mod tests {
         let c = q.compress(&[0.0; 5], &mut rng);
         assert_eq!(c.y, vec![0.0; 5]);
         assert_eq!(c.err_variance, 0.0);
+    }
+
+    #[test]
+    fn mean_mechanism_is_unbiased() {
+        // the pipeline port: averaged decode is an unbiased mean estimate
+        let mut drng = Rng::new(114);
+        let n = 40;
+        let d = 6;
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| drng.uniform(-2.0, 2.0)).collect()).collect();
+        let m = crate::mechanisms::traits::true_mean(&xs);
+        let mech = UnbiasedQuantizer::new(6);
+        let mut acc = vec![0.0; d];
+        let rounds = 2000;
+        for r in 0..rounds {
+            let out = mech.aggregate(&xs, 500 + r);
+            for j in 0..d {
+                acc[j] += out.estimate[j];
+            }
+        }
+        for j in 0..d {
+            let avg = acc[j] / rounds as f64;
+            assert!((avg - m[j]).abs() < 0.02, "j={j} avg={avg} want={}", m[j]);
+        }
+    }
+
+    #[test]
+    fn mean_mechanism_handles_zero_clients_vectors() {
+        let xs = vec![vec![0.0; 4], vec![1.0, -1.0, 0.5, 2.0]];
+        let mech = UnbiasedQuantizer::new(5);
+        let out = mech.aggregate(&xs, 9);
+        assert_eq!(out.estimate.len(), 4);
+        assert!(out.estimate.iter().all(|v| v.is_finite()));
+        // only the non-zero client sent descriptions
+        assert_eq!(out.bits.messages, 4);
+    }
+
+    #[test]
+    fn property_flags() {
+        let m: &dyn MeanMechanism = &UnbiasedQuantizer::new(8);
+        assert!(!m.is_homomorphic());
+        assert!(!m.gaussian_noise());
+        assert!(m.fixed_length());
     }
 }

@@ -1,17 +1,19 @@
 //! The FL coordinator (Layer 3): round-based orchestration of n clients and
-//! a server around a pluggable [`MeanMechanism`].
+//! a server around the client-encode / transport / server-decode pipeline.
 //!
 //! Architecture: client-local computation (the expensive part — gradients,
-//! local potentials) runs on a thread pool, one worker per client batch,
-//! communicating with the orchestrator over channels. The *protocol*
-//! (shared-randomness derivation, encode/aggregate/decode) is driven by the
-//! mechanism itself, which derives every client's randomness from the
-//! round seed — exactly how a real deployment shares a seed instead of
-//! shipping randomness.
+//! local potentials) runs on a thread pool, one worker per client shard,
+//! communicating with the orchestrator over channels. In the pipeline
+//! round shape ([`runtime::run_round_encoded`]) the *encoder* runs inside
+//! the shard too: client vectors never leave their worker, shards fold
+//! description sums and bit accounting locally, and the orchestrator only
+//! merges O(d) partials and decodes. Shared randomness is derived from the
+//! round seed on both ends — exactly how a real deployment shares a seed
+//! instead of shipping randomness.
 //!
 //! * [`config`] — experiment configuration (file + CLI overrides)
 //! * [`metrics`] — per-round metric recording, CSV/JSON export
-//! * [`runtime`] — the threaded client pool + round loop
+//! * [`runtime`] — the threaded client pool + round loops
 
 pub mod config;
 pub mod metrics;
@@ -19,4 +21,6 @@ pub mod runtime;
 
 pub use config::Config;
 pub use metrics::Metrics;
-pub use runtime::{ClientPool, LocalCompute, RoundReport};
+pub use runtime::{
+    run_round, run_round_encoded, run_round_mech, ClientPool, LocalCompute, RoundReport,
+};

@@ -1,22 +1,32 @@
 //! The threaded FL round runtime: a persistent pool of client workers that
-//! compute local updates in parallel, plus the round loop that feeds those
-//! updates through a [`MeanMechanism`] and applies the aggregated result.
+//! compute local updates in parallel, plus the round loops that feed those
+//! updates through a mechanism and apply the aggregated result.
 //!
-//! Threading model: one long-lived worker thread per client (the paper's
-//! experiments use n up to a few thousand; workers are multiplexed onto
-//! min(n, num_cpus·2) threads, each owning a contiguous shard of clients).
-//! Per round:
+//! Threading model: clients are multiplexed onto
+//! min(n_clients, `std::thread::available_parallelism()`) long-lived worker
+//! threads (override with [`ClientPool::spawn_with_threads`], e.g. to pin
+//! bench runs), each owning a contiguous shard of clients.
 //!
-//!   1. the orchestrator broadcasts (round, global state) to every shard;
-//!   2. each shard computes its clients' local vectors (gradients etc.);
-//!   3. the mechanism aggregates the vectors under the round's shared seed;
-//!   4. the orchestrator applies the update and records metrics.
+//! Two round shapes:
+//!
+//! * [`run_round`] — legacy/monolithic: shards compute local vectors, the
+//!   orchestrator materializes all of them and calls
+//!   [`MeanMechanism::aggregate`]. O(n·d) orchestrator memory.
+//! * [`run_round_encoded`] — the pipeline shape: shards *encode* their own
+//!   clients ([`ClientEncoder`] runs inside the worker), fold the messages
+//!   into a per-shard [`TransportPartial`] and fold bit accounting
+//!   locally; the orchestrator only merges shard partials and decodes.
+//!   With a summing transport the orchestrator state is O(d) — it never
+//!   sees a client vector or a per-client description.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::mechanisms::traits::{MeanMechanism, RoundOutput};
+use crate::mechanisms::pipeline::{
+    ClientEncoder, ServerDecoder, SharedRound, Transport, TransportPartial,
+};
+use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
 
 /// Client-local computation: produce this round's vector from the broadcast
 /// global state. Implementations must be deterministic in (round, state)
@@ -36,8 +46,33 @@ where
 }
 
 enum ShardMsg {
-    Compute { round: u64, state: Arc<Vec<f64>> },
+    Compute {
+        round: u64,
+        state: Arc<Vec<f64>>,
+    },
+    /// Compute AND encode: the per-client vectors never leave the shard.
+    Encode {
+        round: u64,
+        state: Arc<Vec<f64>>,
+        seed: u64,
+        encoder: Arc<dyn ClientEncoder>,
+        transport: Arc<dyn Transport>,
+    },
     Shutdown,
+}
+
+enum ShardResult {
+    Computed {
+        start: usize,
+        vecs: Vec<Vec<f64>>,
+    },
+    Encoded {
+        start: usize,
+        partial: TransportPartial,
+        bits: BitsAccount,
+        /// Σ of this shard's client vectors (true-mean metric folding)
+        x_sum: Vec<f64>,
+    },
 }
 
 struct Shard {
@@ -48,17 +83,29 @@ struct Shard {
 /// Persistent pool of client workers.
 pub struct ClientPool {
     shards: Vec<Shard>,
-    results_rx: mpsc::Receiver<(usize, Vec<Vec<f64>>)>,
+    results_rx: mpsc::Receiver<ShardResult>,
     pub n_clients: usize,
 }
 
 impl ClientPool {
-    /// Spawn a pool over `n_clients` clients evaluating `compute`.
+    /// Spawn a pool over `n_clients` clients evaluating `compute`, with
+    /// min(n_clients, available_parallelism) workers.
     pub fn spawn(n_clients: usize, compute: Arc<dyn LocalCompute>) -> Self {
+        Self::spawn_with_threads(n_clients, compute, None)
+    }
+
+    /// Like [`Self::spawn`] but with an explicit worker-thread count
+    /// (benches pin this for stable numbers across machines).
+    pub fn spawn_with_threads(
+        n_clients: usize,
+        compute: Arc<dyn LocalCompute>,
+        threads: Option<usize>,
+    ) -> Self {
         assert!(n_clients > 0);
-        let threads = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(4)
+        let threads = threads
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+            })
             .min(n_clients)
             .max(1);
         let per = n_clients.div_ceil(threads);
@@ -80,11 +127,48 @@ impl ClientPool {
                     while let Ok(msg) = rx.recv() {
                         match msg {
                             ShardMsg::Compute { round, state } => {
-                                let out: Vec<Vec<f64>> = range2
+                                let vecs: Vec<Vec<f64>> = range2
                                     .clone()
                                     .map(|c| compute.local_update(c, round, &state))
                                     .collect();
-                                if results_tx.send((range2.start, out)).is_err() {
+                                if results_tx
+                                    .send(ShardResult::Computed { start: range2.start, vecs })
+                                    .is_err()
+                                {
+                                    return;
+                                }
+                            }
+                            ShardMsg::Encode { round, state, seed, encoder, transport } => {
+                                let mut partial: Option<TransportPartial> = None;
+                                let mut bits = BitsAccount::default();
+                                let mut x_sum: Vec<f64> = Vec::new();
+                                for c in range2.clone() {
+                                    let x = compute.local_update(c, round, &state);
+                                    if x_sum.is_empty() {
+                                        x_sum = vec![0.0; x.len()];
+                                    }
+                                    for (a, v) in x_sum.iter_mut().zip(&x) {
+                                        *a += v;
+                                    }
+                                    let shared =
+                                        SharedRound::new(seed, n_clients, x.len());
+                                    let part = partial
+                                        .get_or_insert_with(|| transport.empty(&shared));
+                                    let d = encoder.encode(c, &x, &shared);
+                                    bits.merge(&d.bits);
+                                    transport.submit(part, c, &d, &shared);
+                                }
+                                let partial =
+                                    partial.expect("shard ranges are never empty");
+                                if results_tx
+                                    .send(ShardResult::Encoded {
+                                        start: range2.start,
+                                        partial,
+                                        bits,
+                                        x_sum,
+                                    })
+                                    .is_err()
+                                {
                                     return;
                                 }
                             }
@@ -109,9 +193,15 @@ impl ClientPool {
         }
         let mut out: Vec<Option<Vec<f64>>> = vec![None; self.n_clients];
         for _ in 0..self.shards.len() {
-            let (start, vecs) = self.results_rx.recv().expect("shard result");
-            for (off, v) in vecs.into_iter().enumerate() {
-                out[start + off] = Some(v);
+            match self.results_rx.recv().expect("shard result") {
+                ShardResult::Computed { start, vecs } => {
+                    for (off, v) in vecs.into_iter().enumerate() {
+                        out[start + off] = Some(v);
+                    }
+                }
+                ShardResult::Encoded { .. } => {
+                    unreachable!("encode result during a compute round")
+                }
             }
         }
         out.into_iter().map(|v| v.expect("missing client result")).collect()
@@ -141,7 +231,13 @@ pub struct RoundReport {
     pub true_mean: Vec<f64>,
 }
 
-/// Run one round: parallel local compute + mechanism aggregation.
+/// Per-round seed derivation shared by both round shapes.
+fn round_seed(root_seed: u64, round: u64) -> u64 {
+    root_seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run one round, monolith shape: parallel local compute, then the
+/// mechanism's in-process aggregate. O(n·d) orchestrator memory.
 pub fn run_round(
     pool: &ClientPool,
     mech: &dyn MeanMechanism,
@@ -151,15 +247,99 @@ pub fn run_round(
 ) -> RoundReport {
     let xs = pool.compute_round(round, state);
     let true_mean = crate::mechanisms::traits::true_mean(&xs);
-    let seed = root_seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    let output = mech.aggregate(&xs, seed);
+    let output = mech.aggregate(&xs, round_seed(root_seed, round));
     RoundReport { round, output, true_mean }
+}
+
+/// Run one round, pipeline shape: clients encode inside their worker
+/// shards, shard partials and bit accounts fold on the orchestrator, the
+/// decoder runs once on the final payload. With a summing transport the
+/// orchestrator holds O(d) state (one partial + one bits account).
+pub fn run_round_encoded(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    round: u64,
+    state: &[f64],
+    root_seed: u64,
+) -> RoundReport {
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    let seed = round_seed(root_seed, round);
+    let state = Arc::new(state.to_vec());
+    for shard in &pool.shards {
+        shard
+            .tx
+            .send(ShardMsg::Encode {
+                round,
+                state: state.clone(),
+                seed,
+                encoder: encoder.clone(),
+                transport: transport.clone(),
+            })
+            .expect("shard died");
+    }
+    // collect shard partials; fold x-sums in shard order so the true-mean
+    // metric is deterministic regardless of arrival order
+    let mut pieces: Vec<(usize, TransportPartial, BitsAccount, Vec<f64>)> =
+        Vec::with_capacity(pool.shards.len());
+    for _ in 0..pool.shards.len() {
+        match pool.results_rx.recv().expect("shard result") {
+            ShardResult::Encoded { start, partial, bits, x_sum } => {
+                pieces.push((start, partial, bits, x_sum));
+            }
+            ShardResult::Computed { .. } => {
+                unreachable!("compute result during an encoded round")
+            }
+        }
+    }
+    pieces.sort_by_key(|&(start, _, _, _)| start);
+    let dim = pieces[0].3.len();
+    let mut bits = BitsAccount::default();
+    let mut x_sum = vec![0.0f64; dim];
+    let mut total: Option<TransportPartial> = None;
+    let shared = SharedRound::new(seed, pool.n_clients, dim);
+    for (_, partial, b, xs) in pieces {
+        bits.merge(&b);
+        for (a, v) in x_sum.iter_mut().zip(&xs) {
+            *a += v;
+        }
+        match &mut total {
+            None => total = Some(partial),
+            Some(t) => transport.merge(t, partial),
+        }
+    }
+    let payload = transport.finish(total.expect("no shards"), &shared);
+    let estimate = decoder.decode(&payload, &shared);
+    let true_mean: Vec<f64> = x_sum.into_iter().map(|v| v / pool.n_clients as f64).collect();
+    RoundReport { round, output: RoundOutput { estimate, bits }, true_mean }
+}
+
+/// Convenience wrapper for mechanisms that implement both pipeline ends
+/// (every mechanism in this crate does).
+pub fn run_round_mech<M>(
+    pool: &ClientPool,
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    round: u64,
+    state: &[f64],
+    root_seed: u64,
+) -> RoundReport
+where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+    run_round_encoded(pool, encoder, transport, mech, round, state, root_seed)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mechanisms::{IrwinHallMechanism, MeanMechanism};
+    use crate::mechanisms::pipeline::{Plain, SecAgg};
+    use crate::mechanisms::{AggregateGaussian, IrwinHallMechanism, MeanMechanism};
 
     #[test]
     fn pool_computes_all_clients() {
@@ -208,5 +388,73 @@ mod tests {
     fn single_client_pool() {
         let pool = ClientPool::spawn(1, Arc::new(|_: usize, _: u64, _: &[f64]| vec![1.0]));
         assert_eq!(pool.compute_round(0, &[]), vec![vec![1.0]]);
+    }
+
+    #[test]
+    fn threads_override_respected_and_equivalent() {
+        // same round under different worker counts: identical estimates
+        // (integer partials are order-free, x-sums fold in shard order)
+        let compute = |c: usize, _: u64, _: &[f64]| {
+            let mut rng = crate::util::rng::Rng::derive(4242, c as u64);
+            (0..6).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+        };
+        let mech = IrwinHallMechanism::new(0.2, 4.0);
+        let mut estimates = Vec::new();
+        for threads in [1usize, 3, 7] {
+            let pool =
+                ClientPool::spawn_with_threads(13, Arc::new(compute), Some(threads));
+            assert!(pool.shards.len() <= threads);
+            let rep = run_round_mech(&pool, &mech, Arc::new(Plain), 2, &[], 77);
+            estimates.push(rep.output.estimate.clone());
+        }
+        assert_eq!(estimates[0], estimates[1]);
+        assert_eq!(estimates[0], estimates[2]);
+    }
+
+    #[test]
+    fn encoded_round_matches_monolithic_round() {
+        // per-shard encoding must reproduce MeanMechanism::aggregate bit
+        // for bit (same streams, same integer sums)
+        let compute = |c: usize, r: u64, _: &[f64]| {
+            let mut rng = crate::util::rng::Rng::derive(900 + r, c as u64);
+            (0..5).map(|_| rng.uniform(-3.0, 3.0)).collect::<Vec<f64>>()
+        };
+        let pool = ClientPool::spawn(11, Arc::new(compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        for round in 0..4u64 {
+            let mono = run_round(&pool, &mech, round, &[], 5);
+            let enc = run_round_mech(&pool, &mech, Arc::new(Plain), round, &[], 5);
+            assert_eq!(mono.output.estimate, enc.output.estimate, "round {round}");
+            assert_eq!(mono.output.bits.messages, enc.output.bits.messages);
+            assert!(
+                (mono.output.bits.variable_total - enc.output.bits.variable_total).abs()
+                    < 1e-9
+            );
+            for (a, b) in mono.true_mean.iter().zip(&enc.true_mean) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_round_through_secagg_matches_plain() {
+        let compute = |c: usize, _: u64, _: &[f64]| {
+            let mut rng = crate::util::rng::Rng::derive(31, c as u64);
+            (0..4).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+        };
+        let pool = ClientPool::spawn(9, Arc::new(compute));
+        let mech = AggregateGaussian::new(0.4, 4.0);
+        let plain = run_round_mech(&pool, &mech, Arc::new(Plain), 1, &[], 11);
+        let masked = run_round_mech(&pool, &mech, Arc::new(SecAgg::new()), 1, &[], 11);
+        assert_eq!(plain.output.estimate, masked.output.estimate);
+    }
+
+    #[test]
+    fn pool_drop_joins_threads() {
+        for _ in 0..3 {
+            let pool = ClientPool::spawn(9, Arc::new(|_: usize, _: u64, _: &[f64]| vec![1.0]));
+            let _ = pool.compute_round(0, &[]);
+            drop(pool);
+        }
     }
 }

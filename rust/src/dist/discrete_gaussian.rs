@@ -1,0 +1,95 @@
+//! Exact discrete Gaussian sampler N_ℤ(0, σ²) ∝ exp(−k²/(2σ²)) on the
+//! integers — the per-client noise of the DDG baseline (Kairouz et al.
+//! 2021a). Canonne–Kamath–Steinke (2020) rejection sampler: propose from a
+//! two-sided geometric (discrete Laplace) of scale t = ⌊σ⌋ + 1 and accept
+//! with exp(−(|y| − σ²/t)²/(2σ²)); acceptance probability is Θ(1)
+//! uniformly in σ.
+
+use crate::util::rng::Rng;
+
+/// One draw of N_ℤ(0, σ²).
+pub fn discrete_gaussian(rng: &mut Rng, sigma: f64) -> i64 {
+    assert!(sigma > 0.0, "sigma must be positive, got {sigma}");
+    let t = sigma.floor() + 1.0;
+    let q = 1.0 - (-1.0 / t).exp(); // geometric success probability
+    let s2 = sigma * sigma;
+    loop {
+        // discrete Laplace(t): sign × geometric magnitude, rejecting the
+        // double-counted (−, 0) so every integer has the right mass
+        let negative = rng.bernoulli(0.5);
+        let mag = rng.geometric(q) as i64;
+        if negative && mag == 0 {
+            continue;
+        }
+        let y = if negative { -mag } else { mag };
+        let d = y.abs() as f64 - s2 / t;
+        if rng.u01() < (-(d * d) / (2.0 * s2)).exp() {
+            return y;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(sigma: f64, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Rng::new(seed);
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = discrete_gaussian(&mut rng, sigma) as f64;
+            s1 += v;
+            s2 += v * v;
+        }
+        let m = s1 / n as f64;
+        (m, s2 / n as f64 - m * m)
+    }
+
+    #[test]
+    fn zero_mean_and_near_continuous_variance() {
+        // for σ ≳ 1 the discrete Gaussian variance is within O(e^{−2π²σ²})
+        // of σ² (theta-function correction) — indistinguishable here
+        for &sigma in &[1.0, 2.5, 10.0] {
+            let (m, v) = moments(sigma, 200_000, 19 + sigma as u64);
+            assert!(m.abs() < 0.02 * sigma.max(1.0), "sigma={sigma} mean={m}");
+            assert!(
+                (v - sigma * sigma).abs() < 0.02 * sigma * sigma,
+                "sigma={sigma} var={v}"
+            );
+        }
+    }
+
+    #[test]
+    fn pmf_ratio_matches_target() {
+        // empirical P(k)/P(0) ≈ exp(−k²/2σ²)
+        let sigma = 1.5;
+        let mut rng = Rng::new(77);
+        let mut counts = std::collections::HashMap::new();
+        let n = 400_000;
+        for _ in 0..n {
+            *counts.entry(discrete_gaussian(&mut rng, sigma)).or_insert(0u64) += 1;
+        }
+        let c0 = counts[&0] as f64;
+        for k in [1i64, 2, 3] {
+            let want = (-(k * k) as f64 / (2.0 * sigma * sigma)).exp();
+            let got = *counts.get(&k).unwrap_or(&0) as f64 / c0;
+            assert!((got - want).abs() < 0.05 * want + 0.01, "k={k} got={got} want={want}");
+            // symmetry
+            let gotn = *counts.get(&-k).unwrap_or(&0) as f64 / c0;
+            assert!((got - gotn).abs() < 0.05 * want + 0.01, "asym at {k}");
+        }
+    }
+
+    #[test]
+    fn small_sigma_concentrates() {
+        let mut rng = Rng::new(5);
+        let mut zeros = 0;
+        for _ in 0..10_000 {
+            if discrete_gaussian(&mut rng, 0.2) == 0 {
+                zeros += 1;
+            }
+        }
+        // P(0) for σ = 0.2 is ≈ 1 − 2e^{−12.5} ≈ 0.999993
+        assert!(zeros > 9_950, "zeros={zeros}");
+    }
+}

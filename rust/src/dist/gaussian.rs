@@ -1,0 +1,125 @@
+//! Gaussian N(μ, σ²) with closed-form superlevel-set geometry.
+
+use super::{Continuous, Unimodal};
+use crate::util::rng::Rng;
+use crate::util::special::norm_cdf;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Gaussian {
+    pub mean: f64,
+    pub sd: f64,
+}
+
+impl Gaussian {
+    pub fn new(mean: f64, sd: f64) -> Self {
+        assert!(sd > 0.0, "sd must be positive, got {sd}");
+        Self { mean, sd }
+    }
+
+    pub fn standard() -> Self {
+        Self::new(0.0, 1.0)
+    }
+
+    /// E|X − μ| = σ√(2/π).
+    pub fn mean_abs(&self) -> f64 {
+        self.sd * (2.0 / std::f64::consts::PI).sqrt()
+    }
+
+    /// Half-width r(y) of the superlevel set {f ≥ y}: f(μ ± r) = y gives
+    /// r = σ√(−2 ln(y/Z̄)).
+    fn superlevel_half_width(&self, y: f64) -> f64 {
+        let zbar = self.max_pdf();
+        if y >= zbar {
+            return 0.0;
+        }
+        // clamp: y = 0 would give an infinite layer (measure-zero draw)
+        let ratio = (y / zbar).max(1e-300);
+        self.sd * (-2.0 * ratio.ln()).sqrt()
+    }
+}
+
+impl Continuous for Gaussian {
+    fn pdf(&self, x: f64) -> f64 {
+        let z = (x - self.mean) / self.sd;
+        (-0.5 * z * z).exp() / (self.sd * (2.0 * std::f64::consts::PI).sqrt())
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        norm_cdf((x - self.mean) / self.sd)
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.normal_ms(self.mean, self.sd)
+    }
+}
+
+impl Unimodal for Gaussian {
+    fn mode(&self) -> f64 {
+        self.mean
+    }
+
+    fn max_pdf(&self) -> f64 {
+        1.0 / (self.sd * (2.0 * std::f64::consts::PI).sqrt())
+    }
+
+    fn b_plus(&self, y: f64) -> f64 {
+        self.mean + self.superlevel_half_width(y)
+    }
+
+    fn b_minus(&self, y: f64) -> f64 {
+        self.mean - self.superlevel_half_width(y)
+    }
+
+    fn variance(&self) -> f64 {
+        self.sd * self.sd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{ks_test, mean, variance};
+
+    #[test]
+    fn pdf_cdf_known_values() {
+        let g = Gaussian::standard();
+        assert!((g.pdf(0.0) - 0.398_942_280_401_432_7).abs() < 1e-14);
+        assert!((g.cdf(0.0) - 0.5).abs() < 1e-14);
+        assert!((g.cdf(1.96) - 0.975_002_104_851_78).abs() < 1e-9);
+        let h = Gaussian::new(2.0, 3.0);
+        assert!((h.cdf(2.0) - 0.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn superlevel_inverts_pdf() {
+        let g = Gaussian::new(1.0, 2.2);
+        let zbar = g.max_pdf();
+        for i in 1..60 {
+            let y = zbar * i as f64 / 60.0;
+            let bp = g.b_plus(y);
+            assert!((g.pdf(bp) - y).abs() < 1e-12 * zbar, "y={y}");
+            assert!((g.b_minus(y) - (2.0 * g.mean - bp)).abs() < 1e-12);
+            assert!(bp >= g.mode());
+        }
+        assert_eq!(g.b_plus(zbar * 2.0), g.mode());
+    }
+
+    #[test]
+    fn samples_match_cdf() {
+        let g = Gaussian::new(-1.0, 0.7);
+        let mut rng = Rng::new(31);
+        let xs: Vec<f64> = (0..6000).map(|_| g.sample(&mut rng)).collect();
+        assert!(ks_test(&xs, |x| g.cdf(x)).p_value > 0.003);
+        assert!((mean(&xs) + 1.0).abs() < 0.05);
+        assert!((variance(&xs) - 0.49).abs() < 0.05);
+    }
+
+    #[test]
+    fn mean_abs_matches_monte_carlo() {
+        let g = Gaussian::new(0.0, 1.8);
+        let mut rng = Rng::new(32);
+        let m: f64 =
+            (0..200_000).map(|_| g.sample(&mut rng).abs()).sum::<f64>() / 200_000.0;
+        assert!((m - g.mean_abs()).abs() < 0.01, "mc {m} vs {}", g.mean_abs());
+    }
+}

@@ -1,0 +1,388 @@
+//! Irwin–Hall IH(n, μ, σ): the centered sum of n iid U(−1/2, 1/2) scaled to
+//! standard deviation σ and shifted to mean μ — the aggregate error law of
+//! the shared-step dithered mechanism (§4.2) and the P of the Gaussian
+//! decomposition (Algorithms 1–2).
+//!
+//! Density evaluation is the numerically delicate part:
+//!
+//! * n ≤ 16 — the exact piecewise-polynomial
+//!   f(u) = (n−1)!⁻¹ Σ_k (−1)^k C(n,k)(u−k)₊^{n−1} with compensated
+//!   summation (cancellation grows like C(n, n/2)(n/2)^{n−1}/(n−1)! ≈ 10⁵
+//!   at n = 16 — still 10+ accurate digits in f64);
+//! * n ≥ 17 — characteristic-function quadrature
+//!   f_S(s) = (2/π)∫₀^T sinc(τ)ⁿ cos(2τs) dτ (sinc decays like a Gaussian
+//!   of scale √(6/n), so T = max(1, 10^{18/n}) truncates below 1e−18),
+//!   evaluated over the whole grid with a cosine rotation recurrence.
+//!
+//! Either way the density is tabulated once on a uniform grid (a
+//! [`UniformGrid`] cubic interpolant) in standardized-sum coordinates
+//! s ∈ [0, s_max]; pdf/cdf/derivative/superlevel queries interpolate. The
+//! tail beyond 16 standard deviations (possible only for n ≥ 86) is
+//! truncated — it sits below 1e−56, far under the 1e−7 floors every
+//! consumer applies.
+
+use super::{Continuous, Unimodal};
+use crate::util::interp::{bisect_monotone, UniformGrid};
+use crate::util::rng::Rng;
+
+/// Largest n evaluated with the exact alternating sum.
+const N_EXACT_MAX: u64 = 16;
+/// Grid resolution (points on [0, s_max]).
+const GRID_POINTS: usize = 2001;
+
+#[derive(Clone, Debug)]
+pub struct IrwinHall {
+    pub n: u64,
+    pub mean: f64,
+    pub sd: f64,
+    /// x = mean + s·scale maps standardized-sum coordinates to X
+    scale: f64,
+    /// density of the centered sum S = Σ(Uᵢ − 1/2) on s ∈ [0, s_max]
+    grid: UniformGrid,
+    /// cumulative ∫₀^{s_i} f_S, normalized so the last entry is exactly 1/2
+    cum: Vec<f64>,
+}
+
+impl IrwinHall {
+    pub fn new(n: u64, mean: f64, sd: f64) -> Self {
+        assert!(n >= 1, "need at least one summand");
+        assert!(sd > 0.0, "sd must be positive, got {sd}");
+        let nf = n as f64;
+        let scale = sd * (12.0 / nf).sqrt();
+        // sum sd is √(n/12); truncate the grid at 16 sum-sds (only ever
+        // shorter than the true support n/2 for n >= 86)
+        let s_max = (nf / 2.0).min(16.0 * (nf / 12.0).sqrt());
+        let dx = s_max / (GRID_POINTS - 1) as f64;
+        let ys: Vec<f64> = if n <= N_EXACT_MAX {
+            (0..GRID_POINTS).map(|i| exact_sum_density(n, i as f64 * dx)).collect()
+        } else {
+            let pts: Vec<f64> = (0..GRID_POINTS).map(|i| i as f64 * dx).collect();
+            cf_sum_density(n, &pts)
+        };
+        let grid = UniformGrid::new(0.0, dx, ys);
+        // cumulative trapezoid, then normalize the half-mass to exactly 1/2
+        let mut cum = Vec::with_capacity(GRID_POINTS);
+        let mut acc = 0.0f64;
+        cum.push(0.0);
+        for i in 1..GRID_POINTS {
+            acc += 0.5 * (grid.y[i - 1] + grid.y[i]) * dx;
+            cum.push(acc);
+        }
+        let half = cum[GRID_POINTS - 1].max(1e-300);
+        for c in cum.iter_mut() {
+            *c *= 0.5 / half;
+        }
+        Self { n, mean, sd, scale, grid, cum }
+    }
+
+    /// IH(n, 0, 1) — the standardized law used by the decomposition.
+    pub fn standard(n: u64) -> Self {
+        Self::new(n, 0.0, 1.0)
+    }
+
+    /// Half-width of the (true) support: σ√(3n).
+    pub fn support_half_width(&self) -> f64 {
+        self.sd * (3.0 * self.n as f64).sqrt()
+    }
+
+    /// Grid edge in standardized-sum coordinates.
+    fn s_edge(&self) -> f64 {
+        self.grid.x_max()
+    }
+
+    /// Density of the centered standardized sum at |s| (0 outside).
+    fn sum_pdf(&self, s_abs: f64) -> f64 {
+        if s_abs >= self.s_edge() {
+            0.0
+        } else {
+            self.grid.eval(s_abs).max(0.0)
+        }
+    }
+
+    /// d f_X / d x — used by the decomposition's λ computation.
+    pub fn pdf_deriv(&self, x: f64) -> f64 {
+        let s = (x - self.mean) / self.scale;
+        let a = s.abs();
+        if a >= self.s_edge() {
+            return 0.0;
+        }
+        let d = self.grid.eval_deriv(a);
+        let signed = if s >= 0.0 { d } else { -d };
+        signed / (self.scale * self.scale)
+    }
+
+    /// E|X − μ| by quadrature of the tabulated density.
+    pub fn mean_abs(&self) -> f64 {
+        let dx = self.grid.dx;
+        let mut acc = 0.0;
+        for i in 1..self.grid.y.len() {
+            let s0 = (i - 1) as f64 * dx;
+            let s1 = i as f64 * dx;
+            acc += 0.5 * (s0 * self.grid.y[i - 1] + s1 * self.grid.y[i]) * dx;
+        }
+        2.0 * acc * self.scale
+    }
+}
+
+/// Exact density of the centered sum of n U(−1/2, 1/2) at s (n ≤ 16):
+/// the alternating B-spline sum with Kahan compensation.
+fn exact_sum_density(n: u64, s: f64) -> f64 {
+    let nf = n as f64;
+    if n == 1 {
+        // discontinuous at the edges; the grid stores the interior value so
+        // cubic interpolation stays exact inside the support
+        return if s.abs() <= 0.5 { 1.0 } else { 0.0 };
+    }
+    let u = s + nf / 2.0;
+    if u <= 0.0 || u >= nf {
+        return 0.0;
+    }
+    // (n−1)! and C(n, k) are exact in f64 for n ≤ 16
+    let mut fact = 1.0f64;
+    for i in 1..n {
+        fact *= i as f64;
+    }
+    let k_max = u.floor() as u64;
+    let mut sum = 0.0f64;
+    let mut comp = 0.0f64; // Kahan compensation
+    let mut binom = 1.0f64; // C(n, k)
+    for k in 0..=k_max.min(n) {
+        let base = u - k as f64;
+        let term = if base > 0.0 { base.powi(n as i32 - 1) } else { 0.0 };
+        let signed = if k % 2 == 0 { binom * term } else { -binom * term };
+        let y = signed - comp;
+        let t = sum + y;
+        comp = (t - sum) - y;
+        sum = t;
+        binom = binom * (n - k) as f64 / (k + 1) as f64;
+    }
+    (sum / fact).max(0.0)
+}
+
+/// Characteristic-function quadrature of the centered-sum density at every
+/// grid point (n ≥ 17): f_S(s) = (2/π) ∫₀^T sinc(τ)ⁿ cos(2τs) dτ, Simpson
+/// weights precomputed once and the cos(2τ_k s) stream generated with the
+/// rotation recurrence (no trig in the inner loop).
+fn cf_sum_density(n: u64, s_pts: &[f64]) -> Vec<f64> {
+    let nf = n as f64;
+    // T with |sinc(τ)|ⁿ < 1e−18 for τ ≥ T: |sinc| ≤ min(1, 1/τ)
+    let t_max = (1e18f64.powf(1.0 / nf)).max(1.0);
+    let s_big = s_pts.last().copied().unwrap_or(1.0);
+    // resolve the cos oscillation (period π/s_big in τ) with ≥ ~40 points
+    let mut panels = ((t_max * s_big * 2.0 / std::f64::consts::PI * 40.0).ceil() as usize)
+        .clamp(1024, 20_000);
+    if panels % 2 == 1 {
+        panels += 1;
+    }
+    let dt = t_max / panels as f64;
+    // Simpson-weighted CF samples w_k = c_k · sinc(τ_k)ⁿ · dt/3 · (2/π)
+    let front = 2.0 / std::f64::consts::PI * dt / 3.0;
+    let weights: Vec<f64> = (0..=panels)
+        .map(|k| {
+            let tau = k as f64 * dt;
+            let sinc = if tau == 0.0 { 1.0 } else { tau.sin() / tau };
+            let c = if k == 0 || k == panels {
+                1.0
+            } else if k % 2 == 1 {
+                4.0
+            } else {
+                2.0
+            };
+            front * c * sinc.powi(n as i32)
+        })
+        .collect();
+    s_pts
+        .iter()
+        .map(|&s| {
+            // cos(2·dt·k·s) via the rotation recurrence
+            let theta = 2.0 * dt * s;
+            let c1 = theta.cos();
+            let mut c_prev = 1.0f64; // cos(0)
+            let mut c_cur = c1;
+            let mut acc = weights[0]; // k = 0 term (cos = 1)
+            for w in &weights[1..] {
+                acc += w * c_cur;
+                let c_next = 2.0 * c1 * c_cur - c_prev;
+                c_prev = c_cur;
+                c_cur = c_next;
+            }
+            acc.max(0.0)
+        })
+        .collect()
+}
+
+impl Continuous for IrwinHall {
+    fn pdf(&self, x: f64) -> f64 {
+        let s = ((x - self.mean) / self.scale).abs();
+        self.sum_pdf(s) / self.scale
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        let s = (x - self.mean) / self.scale;
+        let a = s.abs();
+        let half = if a >= self.s_edge() {
+            0.5
+        } else {
+            let pos = a / self.grid.dx;
+            let i = (pos.floor() as usize).min(self.cum.len() - 2);
+            let frac = pos - i as f64;
+            self.cum[i] + frac * (self.cum[i + 1] - self.cum[i])
+        };
+        if s >= 0.0 {
+            0.5 + half
+        } else {
+            0.5 - half
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        let mut acc = 0.0f64;
+        for _ in 0..self.n {
+            acc += rng.u01();
+        }
+        self.mean + (acc - self.n as f64 / 2.0) * self.scale
+    }
+}
+
+impl Unimodal for IrwinHall {
+    fn mode(&self) -> f64 {
+        self.mean
+    }
+
+    fn max_pdf(&self) -> f64 {
+        self.sum_pdf(0.0) / self.scale
+    }
+
+    fn b_plus(&self, y: f64) -> f64 {
+        // superlevel of f_X at y ↔ superlevel of f_S at y·scale
+        let ys = y * self.scale;
+        if self.n == 1 {
+            // uniform: layers are the full support
+            let r = if ys > self.sum_pdf(0.0) { 0.0 } else { 0.5 };
+            return self.mean + r * self.scale;
+        }
+        if ys >= self.sum_pdf(0.0) {
+            return self.mean;
+        }
+        let edge = self.s_edge();
+        let edge_value = *self.grid.y.last().expect("non-empty grid");
+        let s = if ys <= edge_value {
+            // below the tabulated range (possible only when the grid is
+            // tail-truncated, n >= 86): the true support edge
+            self.n as f64 / 2.0
+        } else {
+            bisect_monotone(|s| self.sum_pdf(s), ys, 0.0, edge, true, 80)
+        };
+        self.mean + s * self.scale
+    }
+
+    fn b_minus(&self, y: f64) -> f64 {
+        2.0 * self.mean - self.b_plus(y)
+    }
+
+    fn variance(&self) -> f64 {
+        self.sd * self.sd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{ks_test, variance};
+
+    #[test]
+    fn exact_matches_known_small_n() {
+        // n = 2: triangle on [−1, 1] with apex 1
+        assert!((exact_sum_density(2, 0.0) - 1.0).abs() < 1e-12);
+        assert!((exact_sum_density(2, 0.5) - 0.5).abs() < 1e-12);
+        assert!(exact_sum_density(2, 1.0).abs() < 1e-12);
+        // n = 3: f(0) = 3/4 (sum of 3 uniforms at its mode)
+        assert!((exact_sum_density(3, 0.0) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cf_branch_agrees_with_exact_branch() {
+        // the two evaluation paths must agree where both are accurate;
+        // compare n = 16 exact vs the CF quadrature run at the same points
+        let pts: Vec<f64> = (0..200).map(|i| i as f64 * 0.04).collect();
+        let cf = cf_sum_density(16, &pts);
+        for (i, &s) in pts.iter().enumerate() {
+            let ex = exact_sum_density(16, s);
+            assert!((cf[i] - ex).abs() < 2e-6, "s={s} cf={} exact={ex}", cf[i]);
+        }
+    }
+
+    #[test]
+    fn density_integrates_to_one_and_matches_gaussian_for_large_n() {
+        for &n in &[2u64, 5, 17, 64, 300] {
+            let ih = IrwinHall::standard(n);
+            // mass via the cdf at the edges
+            assert!((ih.cdf(ih.support_half_width()) - 1.0).abs() < 1e-9, "n={n}");
+            assert!(ih.cdf(-ih.support_half_width()).abs() < 1e-9, "n={n}");
+            // sd-1 law: pdf(0) → 1/√(2π) as n grows
+            if n >= 64 {
+                let want = 1.0 / (2.0 * std::f64::consts::PI).sqrt();
+                assert!((ih.max_pdf() - want).abs() < 0.01 / (n as f64).sqrt() + 2e-3, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn samples_match_cdf_and_moments() {
+        for &n in &[1u64, 2, 3, 12, 40] {
+            let ih = IrwinHall::new(n, 0.5, 1.4);
+            let mut rng = Rng::new(600 + n);
+            let xs: Vec<f64> = (0..6000).map(|_| ih.sample(&mut rng)).collect();
+            let res = ks_test(&xs, |x| ih.cdf(x));
+            assert!(res.p_value > 0.003, "n={n} p={}", res.p_value);
+            assert!((variance(&xs) - 1.96).abs() < 0.15, "n={n}");
+        }
+    }
+
+    #[test]
+    fn superlevel_inverts_pdf() {
+        for &n in &[2u64, 7, 25] {
+            let ih = IrwinHall::standard(n);
+            let zbar = ih.max_pdf();
+            for i in 1..40 {
+                let y = zbar * i as f64 / 41.0;
+                let bp = ih.b_plus(y);
+                assert!(
+                    (ih.pdf(bp) - y).abs() < 1e-6 * zbar,
+                    "n={n} y={y} pdf(b+)={}",
+                    ih.pdf(bp)
+                );
+                assert!((ih.b_minus(y) - (2.0 * ih.mean - bp)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn support_half_width_formula() {
+        let ih = IrwinHall::new(12, 0.0, 2.0);
+        assert!((ih.support_half_width() - 2.0 * 6.0).abs() < 1e-12);
+        assert!(ih.pdf(ih.support_half_width() + 0.1) == 0.0);
+    }
+
+    #[test]
+    fn deriv_matches_finite_differences() {
+        for &n in &[3u64, 30] {
+            let ih = IrwinHall::standard(n);
+            let h = 1e-5;
+            for &x in &[0.3, 1.0, -0.7, 2.0] {
+                let fd = (ih.pdf(x + h) - ih.pdf(x - h)) / (2.0 * h);
+                let d = ih.pdf_deriv(x);
+                assert!((fd - d).abs() < 1e-4 + 1e-3 * fd.abs(), "n={n} x={x} fd={fd} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_abs_matches_monte_carlo() {
+        let ih = IrwinHall::new(9, 0.0, 1.0);
+        let mut rng = Rng::new(777);
+        let mc: f64 =
+            (0..100_000).map(|_| ih.sample(&mut rng).abs()).sum::<f64>() / 100_000.0;
+        assert!((mc - ih.mean_abs()).abs() < 0.02, "mc={mc} quad={}", ih.mean_abs());
+    }
+}

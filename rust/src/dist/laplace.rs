@@ -1,0 +1,128 @@
+//! Laplace(μ, b) with closed-form superlevel-set geometry.
+
+use super::{Continuous, Unimodal};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Laplace {
+    pub mean: f64,
+    /// scale b (sd = b√2)
+    pub b: f64,
+}
+
+impl Laplace {
+    pub fn new(mean: f64, b: f64) -> Self {
+        assert!(b > 0.0, "scale must be positive, got {b}");
+        Self { mean, b }
+    }
+
+    /// Construct from a target standard deviation: b = sd/√2.
+    pub fn with_sd(mean: f64, sd: f64) -> Self {
+        Self::new(mean, sd / std::f64::consts::SQRT_2)
+    }
+
+    pub fn sd(&self) -> f64 {
+        self.b * std::f64::consts::SQRT_2
+    }
+
+    /// E|X − μ| = b.
+    pub fn mean_abs(&self) -> f64 {
+        self.b
+    }
+
+    /// Half-width of {f ≥ y}: f(μ ± r) = y gives r = −b ln(y/Z̄).
+    fn superlevel_half_width(&self, y: f64) -> f64 {
+        let zbar = self.max_pdf();
+        if y >= zbar {
+            return 0.0;
+        }
+        let ratio = (y / zbar).max(1e-300);
+        -self.b * ratio.ln()
+    }
+}
+
+impl Continuous for Laplace {
+    fn pdf(&self, x: f64) -> f64 {
+        (-(x - self.mean).abs() / self.b).exp() / (2.0 * self.b)
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        let z = (x - self.mean) / self.b;
+        if z < 0.0 {
+            0.5 * z.exp()
+        } else {
+            1.0 - 0.5 * (-z).exp()
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.mean + rng.laplace(self.b)
+    }
+}
+
+impl Unimodal for Laplace {
+    fn mode(&self) -> f64 {
+        self.mean
+    }
+
+    fn max_pdf(&self) -> f64 {
+        1.0 / (2.0 * self.b)
+    }
+
+    fn b_plus(&self, y: f64) -> f64 {
+        self.mean + self.superlevel_half_width(y)
+    }
+
+    fn b_minus(&self, y: f64) -> f64 {
+        self.mean - self.superlevel_half_width(y)
+    }
+
+    fn variance(&self) -> f64 {
+        2.0 * self.b * self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{ks_test, variance};
+
+    #[test]
+    fn with_sd_has_that_sd() {
+        let l = Laplace::with_sd(0.0, 3.0);
+        assert!((l.variance() - 9.0).abs() < 1e-12);
+        assert!((l.sd() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_pdf_consistent() {
+        let l = Laplace::new(1.0, 0.8);
+        assert!((l.cdf(1.0) - 0.5).abs() < 1e-14);
+        // numeric derivative of cdf = pdf
+        for &x in &[-1.0, 0.5, 1.0, 2.7] {
+            let h = 1e-6;
+            let d = (l.cdf(x + h) - l.cdf(x - h)) / (2.0 * h);
+            assert!((d - l.pdf(x)).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn superlevel_inverts_pdf() {
+        let l = Laplace::with_sd(-2.0, 1.5);
+        let zbar = l.max_pdf();
+        for i in 1..40 {
+            let y = zbar * i as f64 / 40.0;
+            let bp = l.b_plus(y);
+            assert!((l.pdf(bp) - y).abs() < 1e-12 * zbar, "y={y}");
+        }
+    }
+
+    #[test]
+    fn samples_match_cdf() {
+        let l = Laplace::with_sd(0.3, 1.1);
+        let mut rng = Rng::new(41);
+        let xs: Vec<f64> = (0..6000).map(|_| l.sample(&mut rng)).collect();
+        assert!(ks_test(&xs, |x| l.cdf(x)).p_value > 0.003);
+        assert!((variance(&xs) - 1.21).abs() < 0.1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Distribution layer: the error laws of the paper (Gaussian, Laplace,
+//! Uniform, Irwin–Hall, discrete Gaussian) with the *superlevel-set
+//! geometry* the layered quantizers consume (§3, Defs. 4–5).
+//!
+//! A unimodal density f partitions the area under its graph into horizontal
+//! layers: the layer at height y is the superlevel set
+//! L_y = {x : f(x) ≥ y} = [b⁻(y), b⁺(y)], and the *layer-height*
+//! distribution D has density f_D(y) = λ(L_y) (the layer width). Sampling
+//! D and quantizing with step b⁺(D) − b⁻(D) is exactly the direct layered
+//! quantizer (Def. 4); flipping one side gives the shifted variant
+//! (Def. 5). Everything here is deterministic given a [`Rng`] stream — the
+//! shared-randomness contract of the whole system.
+
+pub mod discrete_gaussian;
+pub mod gaussian;
+pub mod irwin_hall;
+pub mod laplace;
+pub mod uniform;
+
+pub use gaussian::Gaussian;
+pub use irwin_hall::IrwinHall;
+pub use laplace::Laplace;
+pub use uniform::Uniform;
+
+use crate::util::rng::Rng;
+
+/// A continuous distribution on ℝ.
+pub trait Continuous {
+    /// Density f(x).
+    fn pdf(&self, x: f64) -> f64;
+    /// Cumulative distribution F(x) = P(X <= x).
+    fn cdf(&self, x: f64) -> f64;
+    /// Draw one sample from the distribution.
+    fn sample(&self, rng: &mut Rng) -> f64;
+}
+
+/// A unimodal continuous distribution with computable superlevel-set
+/// geometry — the interface of the layered quantizers (Defs. 4–5).
+pub trait Unimodal: Continuous {
+    /// The mode (argmax of the density).
+    fn mode(&self) -> f64;
+
+    /// Z̄ = f(mode), the maximal density value.
+    fn max_pdf(&self) -> f64;
+
+    /// Right boundary b⁺(y) = sup{x : f(x) ≥ y} of the superlevel set.
+    /// For y ≥ Z̄ returns the mode; for y ≤ 0 the right support edge.
+    fn b_plus(&self, y: f64) -> f64;
+
+    /// Left boundary b⁻(y) = inf{x : f(x) ≥ y}.
+    fn b_minus(&self, y: f64) -> f64;
+
+    /// Variance of the distribution.
+    fn variance(&self) -> f64;
+
+    /// Width of the layer at height y: λ(L_y) = b⁺(y) − b⁻(y). This is the
+    /// density of the layer-height variable D.
+    fn layer_width(&self, y: f64) -> f64 {
+        self.b_plus(y) - self.b_minus(y)
+    }
+
+    /// Sample D ~ f_D, the layer height: if X ~ f and V | X ~ U(0, f(X)),
+    /// the point (X, V) is uniform under the graph of f, so the height V
+    /// has density λ(L_v) — exactly f_D.
+    fn sample_layer_height(&self, rng: &mut Rng) -> f64 {
+        let x = self.sample(rng);
+        rng.u01() * self.pdf(x)
+    }
+
+    /// Differential entropy h(D) of the layer height, in bits — the
+    /// distribution-dependent constant of the Eq. 4 communication lower
+    /// bound log(t) + h(D_Z). Computed by quadrature of
+    /// −∫₀^Z̄ f_D(y) log2 f_D(y) dy with the graded substitution y = Z̄·t²
+    /// that resolves the y → 0 region (where layers are widest).
+    fn layer_height_entropy(&self) -> f64 {
+        let zbar = self.max_pdf();
+        let integrand = |t: f64| {
+            if t <= 0.0 || t >= 1.0 {
+                return 0.0;
+            }
+            let w = self.layer_width(zbar * t * t);
+            if w <= 0.0 {
+                return 0.0;
+            }
+            w * w.log2() * 2.0 * zbar * t
+        };
+        -crate::util::interp::simpson(integrand, 0.0, 1.0, 8192)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_height_density_integrates_to_one() {
+        // ∫ f_D = ∫ λ(L_y) dy = ∫ f = 1 for every law in the module
+        let g = Gaussian::new(0.0, 1.3);
+        let l = Laplace::with_sd(0.5, 2.0);
+        let u = Uniform::centered(3.0);
+        let area = |d: &dyn Unimodal| {
+            let zbar = d.max_pdf();
+            crate::util::interp::simpson(
+                |t| {
+                    if t <= 0.0 || t >= 1.0 {
+                        0.0
+                    } else {
+                        d.layer_width(zbar * t * t) * 2.0 * zbar * t
+                    }
+                },
+                0.0,
+                1.0,
+                4096,
+            )
+        };
+        assert!((area(&g) - 1.0).abs() < 1e-6, "gauss {}", area(&g));
+        assert!((area(&l) - 1.0).abs() < 1e-6, "laplace {}", area(&l));
+        assert!((area(&u) - 1.0).abs() < 1e-6, "uniform {}", area(&u));
+    }
+
+    #[test]
+    fn sampled_layer_heights_match_density() {
+        // KS test of sample_layer_height against F_D(y) = ∫₀^y λ(L_v) dv
+        let g = Gaussian::new(0.0, 1.0);
+        let mut rng = Rng::new(901);
+        let samples: Vec<f64> = (0..6000).map(|_| g.sample_layer_height(&mut rng)).collect();
+        let zbar = g.max_pdf();
+        let cdf = |y: f64| {
+            if y <= 0.0 {
+                return 0.0;
+            }
+            if y >= zbar {
+                return 1.0;
+            }
+            crate::util::interp::simpson(|v| g.layer_width(v.max(1e-300)), 1e-12, y, 600)
+                .clamp(0.0, 1.0)
+        };
+        let res = crate::util::stats::ks_test(&samples, cdf);
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+    }
+
+    #[test]
+    fn uniform_layer_entropy_closed_form() {
+        // D ~ U(0, Z̄) with density = width W: h(D) = −log2 W
+        let w = 2.5;
+        let u = Uniform::centered(w);
+        let h = u.layer_height_entropy();
+        assert!((h + w.log2()).abs() < 1e-3, "h={h}");
+    }
+
+    #[test]
+    fn entropy_shift_invariance_and_scaling() {
+        // scaling x by σ scales layer widths by σ and heights by 1/σ, so
+        // D_σ =d D_1/σ and h(D_σ) = h(D_1) − log2 σ (uniform check: width w
+        // gives h = −log2 w exactly)
+        let h1 = Gaussian::new(0.0, 1.0).layer_height_entropy();
+        let h3 = Gaussian::new(0.0, 3.0).layer_height_entropy();
+        assert!((h1 - h3 - 3.0f64.log2()).abs() < 1e-3, "h1={h1} h3={h3}");
+        // and independent of the mean
+        let hm = Gaussian::new(17.0, 1.0).layer_height_entropy();
+        assert!((hm - h1).abs() < 1e-6);
+    }
+}

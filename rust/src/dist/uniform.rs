@@ -1,0 +1,115 @@
+//! Uniform U(lo, hi) — the subtractive-dither error law (Example 1).
+
+use super::{Continuous, Unimodal};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi > lo, "empty interval [{lo}, {hi}]");
+        Self { lo, hi }
+    }
+
+    /// U(−w/2, w/2): the error of a step-w subtractive dither.
+    pub fn centered(w: f64) -> Self {
+        assert!(w > 0.0);
+        Self::new(-w / 2.0, w / 2.0)
+    }
+
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+impl Continuous for Uniform {
+    fn pdf(&self, x: f64) -> f64 {
+        if x >= self.lo && x <= self.hi {
+            1.0 / self.width()
+        } else {
+            0.0
+        }
+    }
+
+    fn cdf(&self, x: f64) -> f64 {
+        ((x - self.lo) / self.width()).clamp(0.0, 1.0)
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.lo, self.hi)
+    }
+}
+
+impl Unimodal for Uniform {
+    fn mode(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+
+    fn max_pdf(&self) -> f64 {
+        1.0 / self.width()
+    }
+
+    fn b_plus(&self, y: f64) -> f64 {
+        if y > self.max_pdf() {
+            self.mode()
+        } else {
+            self.hi
+        }
+    }
+
+    fn b_minus(&self, y: f64) -> f64 {
+        if y > self.max_pdf() {
+            self.mode()
+        } else {
+            self.lo
+        }
+    }
+
+    fn variance(&self) -> f64 {
+        let w = self.width();
+        w * w / 12.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::ks_test;
+
+    #[test]
+    fn centered_symmetric() {
+        let u = Uniform::centered(2.0);
+        assert_eq!(u.lo, -1.0);
+        assert_eq!(u.hi, 1.0);
+        assert!((u.variance() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(u.mode(), 0.0);
+    }
+
+    #[test]
+    fn cdf_clamps() {
+        let u = Uniform::new(0.0, 4.0);
+        assert_eq!(u.cdf(-1.0), 0.0);
+        assert_eq!(u.cdf(5.0), 1.0);
+        assert!((u.cdf(1.0) - 0.25).abs() < 1e-14);
+    }
+
+    #[test]
+    fn layers_are_full_support() {
+        let u = Uniform::centered(3.0);
+        let y = 0.5 * u.max_pdf();
+        assert_eq!(u.layer_width(y), 3.0);
+        assert_eq!(u.layer_width(2.0 * u.max_pdf()), 0.0);
+    }
+
+    #[test]
+    fn samples_match_cdf() {
+        let u = Uniform::new(-2.0, 5.0);
+        let mut rng = Rng::new(51);
+        let xs: Vec<f64> = (0..5000).map(|_| u.sample(&mut rng)).collect();
+        assert!(ks_test(&xs, |x| u.cdf(x)).p_value > 0.003);
+    }
+}

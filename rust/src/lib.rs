@@ -8,29 +8,60 @@
 //! applications (compression-for-free differential privacy, Langevin
 //! dynamics, randomized smoothing).
 //!
+//! ## Architecture: a client-encode / transport / server-decode pipeline
+//!
+//! Aggregation is structured the way the paper deploys it
+//! ([`mechanisms::pipeline`]):
+//!
+//! ```text
+//!   client i ── ClientEncoder::encode(i, xᵢ, SharedRound) ──► mᵢ ─┐
+//!                                                                 │ Transport
+//!   Plain / SecAgg fold Σᵢ mᵢ in O(d);  Unicast keeps the list ◄──┘
+//!                                                                 │
+//!   server ──── ServerDecoder::decode(payload, SharedRound) ──► estimate
+//! ```
+//!
+//! Each mechanism struct implements `ClientEncoder` + `ServerDecoder` +
+//! `MechSpec`; homomorphic mechanisms (Def. 6: Irwin–Hall, aggregate
+//! Gaussian, CSGM, DDG) decode from Σᵢ mᵢ alone and therefore run over the
+//! sum-only transports — `Plain` summation or `SecAgg` additive masking
+//! over ℤ_m, where the server never observes a per-client description and
+//! holds a single O(d) accumulator, never O(n·d) state. Non-homomorphic
+//! mechanisms (individual AINQ, SIGM, unbiased-quant) ride `Unicast`. All
+//! shared randomness derives from the round seed on both ends; Plain and
+//! SecAgg are bit-identical by construction (tested). The legacy
+//! `MeanMechanism::aggregate(xs, seed)` survives as a thin wrapper over
+//! [`mechanisms::pipeline::run_pipeline`]. In the coordinator, encoding
+//! runs *inside* the worker shards ([`coordinator::runtime::run_round_encoded`]):
+//! client vectors never leave their shard and the orchestrator only merges
+//! shard partials and decodes.
+//!
 //! ## Layout (three-layer architecture, Python never on the request path)
 //!
 //! * [`util`] — PRNGs, special functions, statistics, micro-bench harness
 //!   (the offline registry has no rand/criterion/proptest; all built here).
 //! * [`dist`] — Gaussian / Laplace / Uniform / Irwin–Hall / discrete
-//!   Gaussian distributions with superlevel-set geometry for layered
-//!   quantizers.
+//!   Gaussian distributions with the superlevel-set geometry
+//!   (b⁺/b⁻/layer heights) the layered quantizers consume.
 //! * [`coding`] — bit I/O, Elias gamma, Huffman, fixed-length codes and
 //!   entropy accounting (communication-cost measurements of §3.2, §4.5).
 //! * [`quantizer`] — subtractive dithering (Ex. 1), direct (Def. 4) and
 //!   shifted (Def. 5) layered quantizers.
-//! * [`mechanisms`] — individual AINQ (Def. 2), Irwin–Hall (§4.2),
-//!   aggregate Q / Gaussian (Def. 8 + Algorithms 1–4), SIGM (§5.1, Alg. 5).
+//! * [`mechanisms`] — the pipeline traits plus individual AINQ (Def. 2),
+//!   Irwin–Hall (§4.2), aggregate Q / Gaussian (Def. 8 + Algorithms 1–4),
+//!   SIGM (§5.1, Alg. 5).
 //! * [`baselines`] — CSGM (Chen et al. 2023), DDG (Kairouz et al. 2021a),
-//!   unbiased b-bit quantization (QLSD baseline).
+//!   unbiased b-bit quantization (QLSD baseline) — all on the same
+//!   pipeline, so the comparisons share the transport layer.
 //! * [`transforms`] — fast Walsh–Hadamard, randomized rotation, Kashin
 //!   flattening (Remark 1).
 //! * [`dp`] — (ε, δ) / Rényi / zCDP accounting and calibration.
-//! * [`secagg`] — additive-masking secure aggregation over ℤ_m.
-//! * [`coordinator`] — the FL runtime: thread-per-client rounds, shared
-//!   randomness, bit accounting, metrics.
+//! * [`secagg`] — additive-masking secure aggregation over ℤ_m (the
+//!   primitive behind the `SecAgg` transport).
+//! * [`coordinator`] — the FL runtime: sharded workers that compute AND
+//!   encode their clients' updates, O(d) orchestrator folding, metrics.
 //! * [`runtime`] — PJRT engine loading the AOT-lowered JAX/Pallas HLO
-//!   artifacts (`artifacts/*.hlo.txt`).
+//!   artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature.
 //! * [`apps`] — distributed mean estimation, QLSD* Langevin, distributed
 //!   randomized smoothing, end-to-end FL training.
 //! * [`figures`] — regenerates every table and figure of the paper's

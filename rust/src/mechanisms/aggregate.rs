@@ -8,38 +8,79 @@
 //!   encode:  mᵢ = round(xᵢ / (A·w) + sᵢ)
 //!   decode:  y  = (A·w/n)(Σᵢ mᵢ − Σᵢ sᵢ) + B·σ
 //!
-//! The decode needs only Σ mᵢ — SecAgg compatible (Prop. 3).
+//! The decode needs only Σ mᵢ — SecAgg compatible (Prop. 3). Both the
+//! per-round (A, B) vector and the n-keyed [`Decomposer`] are derived
+//! shared randomness / shared configuration: they are memoized behind
+//! `Mutex`-based caches (never `Rc<RefCell>`) so the mechanism is
+//! `Send + Sync` and usable from the coordinator's worker shards.
+
+use std::sync::{Arc, Mutex};
 
 use super::decompose::Decomposer;
+use super::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
+    ServerDecoder, SharedRound,
+};
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::quantizer::round_half_up;
-use crate::util::rng::Rng;
 
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct AggregateGaussian {
     /// aggregate noise sd
     pub sigma: f64,
     /// input magnitude bound |x_ij| <= t/2 (communication accounting)
     pub input_range_t: f64,
-    decomposer_n: std::cell::RefCell<Option<(usize, std::rc::Rc<Decomposer>)>>,
+    /// n-keyed decomposer (expensive grid build; shared across rounds)
+    decomposer_n: Mutex<Option<(usize, Arc<Decomposer>)>>,
+    /// per-round (A_j, B_j) global shared randomness
+    round_ab: RoundCache<Vec<(f64, f64)>>,
+}
+
+impl Clone for AggregateGaussian {
+    fn clone(&self) -> Self {
+        // carry the (cheap, Arc'd) decomposer over; round caches re-derive
+        let cached = self.decomposer_n.lock().expect("cache poisoned").clone();
+        Self {
+            sigma: self.sigma,
+            input_range_t: self.input_range_t,
+            decomposer_n: Mutex::new(cached),
+            round_ab: RoundCache::new(),
+        }
+    }
 }
 
 impl AggregateGaussian {
     pub fn new(sigma: f64, input_range_t: f64) -> Self {
         assert!(sigma > 0.0);
-        Self { sigma, input_range_t, decomposer_n: std::cell::RefCell::new(None) }
+        Self {
+            sigma,
+            input_range_t,
+            decomposer_n: Mutex::new(None),
+            round_ab: RoundCache::new(),
+        }
     }
 
-    fn decomposer(&self, n: usize) -> std::rc::Rc<Decomposer> {
-        let mut cache = self.decomposer_n.borrow_mut();
+    /// The n-client Gaussian↔Irwin–Hall decomposer, built once per n.
+    fn decomposer(&self, n: usize) -> Arc<Decomposer> {
+        let mut cache = self.decomposer_n.lock().expect("cache poisoned");
         match cache.as_ref() {
             Some((cn, d)) if *cn == n => d.clone(),
             _ => {
-                let d = std::rc::Rc::new(Decomposer::new(n as u64));
+                let d = Arc::new(Decomposer::new(n as u64));
                 *cache = Some((n, d.clone()));
                 d
             }
         }
+    }
+
+    /// The round's global shared randomness T = (A_j, B_j): every client
+    /// and the server derive the identical stream (seed, GLOBAL_STREAM).
+    fn ab(&self, round: &SharedRound) -> Arc<Vec<(f64, f64)>> {
+        let dec = self.decomposer(round.n_clients);
+        self.round_ab.get_or(round, || {
+            let mut trng = round.global_rng();
+            (0..round.dim).map(|_| dec.draw(&mut trng)).collect()
+        })
     }
 
     pub fn step(&self, n: usize) -> f64 {
@@ -52,7 +93,7 @@ impl AggregateGaussian {
     }
 }
 
-impl MeanMechanism for AggregateGaussian {
+impl MechSpec for AggregateGaussian {
     fn name(&self) -> String {
         format!("aggregate-gaussian(sigma={})", self.sigma)
     }
@@ -72,39 +113,77 @@ impl MeanMechanism for AggregateGaussian {
     fn noise_sd(&self) -> f64 {
         self.sigma
     }
+}
 
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        let n = xs.len();
-        let d = xs[0].len();
-        let w = self.step(n);
-        let dec = self.decomposer(n);
+impl ClientEncoder for AggregateGaussian {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let w = self.step(round.n_clients);
+        let ab = self.ab(round);
+        let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
-
-        // Global shared randomness T = (A_j, B_j) per coordinate: every
-        // client and the server derive the same stream (seed, GLOBAL).
-        const GLOBAL_STREAM: u64 = u64::MAX;
-        let mut trng = Rng::derive(seed, GLOBAL_STREAM);
-        let ab: Vec<(f64, f64)> = (0..d).map(|_| dec.draw(&mut trng)).collect();
-
-        // Clients encode; the server sees only Σ m (homomorphic path).
-        // hoist the per-coordinate 1/(A_j·w) out of the client loop
-        let inv_aw: Vec<f64> = ab.iter().map(|&(a, _)| 1.0 / (a * w)).collect();
-        let mut m_sum = vec![0.0f64; d];
-        let mut s_sum = vec![0.0f64; d];
-        for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
-            for j in 0..d {
+        let ms: Vec<i64> = x
+            .iter()
+            .zip(ab.iter())
+            .map(|(&xj, &(a, _))| {
                 let s = rng.u01() - 0.5;
-                let m = round_half_up(x[j] * inv_aw[j] + s);
+                let inv_aw = 1.0 / (a * w);
+                let m = round_half_up(xj * inv_aw + s);
                 bits.add_description(m);
-                m_sum[j] += m as f64;
-                s_sum[j] += s;
+                m
+            })
+            .collect();
+        Descriptions { ms, aux: vec![], bits }
+    }
+}
+
+impl ServerDecoder for AggregateGaussian {
+    fn sum_decodable(&self) -> bool {
+        true
+    }
+
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let n = round.n_clients;
+        let d = round.dim;
+        let ab = self.ab(round);
+        let m_sum = payload.description_sum();
+        assert_eq!(m_sum.len(), d);
+        // re-derive every client's dithers from the shared seed: O(d) state
+        let mut s_sum = vec![0.0f64; d];
+        for i in 0..n {
+            let mut rng = round.client_rng(i);
+            for sj in s_sum.iter_mut() {
+                *sj += rng.u01() - 0.5;
             }
         }
-        let estimate: Vec<f64> = (0..d)
-            .map(|j| self.decode_from_sums(m_sum[j], s_sum[j], ab[j].0, ab[j].1, n))
-            .collect();
-        RoundOutput { estimate, bits }
+        (0..d)
+            .map(|j| self.decode_from_sums(m_sum[j] as f64, s_sum[j], ab[j].0, ab[j].1, n))
+            .collect()
+    }
+}
+
+impl MeanMechanism for AggregateGaussian {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(self, &Plain, self, xs, seed)
     }
 }
 
@@ -113,6 +192,7 @@ mod tests {
     use super::*;
     use crate::dist::{Continuous, Gaussian};
     use crate::mechanisms::traits::true_mean;
+    use crate::util::rng::Rng;
     use crate::util::stats::{ks_test, variance};
 
     fn client_data(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
@@ -208,6 +288,27 @@ mod tests {
     }
 
     #[test]
+    fn clone_and_threads_share_nothing_mutable() {
+        // Send + Sync: aggregate the same round from several threads and a
+        // clone; all outputs must agree (this deadlocked/was impossible
+        // with the old Rc<RefCell> cache)
+        let xs = client_data(6, 4, 15);
+        let mech = std::sync::Arc::new(AggregateGaussian::new(0.7, 16.0));
+        let reference = mech.aggregate(&xs, 4242);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = mech.clone();
+            let data = xs.clone();
+            handles.push(std::thread::spawn(move || m.aggregate(&data, 4242).estimate));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), reference.estimate);
+        }
+        let cloned = (*mech).clone();
+        assert_eq!(cloned.aggregate(&xs, 4242).estimate, reference.estimate);
+    }
+
+    #[test]
     fn bits_grow_slowly_with_n() {
         // per-client description magnitudes shrink like 1/(w|A|) with
         // w ∝ √n: more clients ⇒ cheaper messages (Fig. 4 trend)
@@ -221,7 +322,7 @@ mod tests {
 
     #[test]
     fn property_flags() {
-        let m = AggregateGaussian::new(1.0, 16.0);
+        let m: &dyn MeanMechanism = &AggregateGaussian::new(1.0, 16.0);
         assert!(m.is_homomorphic());
         assert!(m.gaussian_noise());
         assert!(!m.fixed_length());

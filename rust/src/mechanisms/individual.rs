@@ -2,16 +2,22 @@
 //! layered quantizer with error N(0, nσ²); the server averages the n
 //! decoded values, so the aggregate error is exactly N(0, σ²).
 //!
+//! NOT homomorphic: decoding requires each client's description against its
+//! own random step draws, so the mechanism rides the Unicast transport.
+//!
 //! Divisibility requirement: the aggregate noise must be a sum of n iid
 //! terms — satisfied by the Gaussian (the paper's "individual Gaussian"
 //! mechanism), NOT by e.g. the Laplace for n > 1.
 
+use super::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, ServerDecoder,
+    SharedRound, Unicast,
+};
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::coding::fixed::FixedCode;
 use crate::dist::Gaussian;
 use crate::quantizer::layered::eta;
 use crate::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered};
-use crate::util::rng::Rng;
 
 /// Which layered quantizer the clients run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,21 +36,29 @@ pub struct IndividualGaussian {
     pub variant: LayeredVariant,
     /// input magnitude bound |x_ij| <= t/2 used for fixed-length sizing
     pub input_range_t: f64,
+    /// per-round shifted quantizer (η is a 4000-point precomputation; the
+    /// per-client sd depends on n, so the cache is round-keyed)
+    shifted_q: RoundCache<ShiftedLayered<Gaussian>>,
 }
 
 impl IndividualGaussian {
     pub fn new(sigma: f64, variant: LayeredVariant, input_range_t: f64) -> Self {
         assert!(sigma > 0.0 && input_range_t > 0.0);
-        Self { sigma, variant, input_range_t }
+        Self { sigma, variant, input_range_t, shifted_q: RoundCache::new() }
     }
 
     /// Per-client error sd: aggregate N(0, σ²) = mean of n iid N(0, nσ²).
     pub fn per_client_sd(&self, n: usize) -> f64 {
         self.sigma * (n as f64).sqrt()
     }
+
+    fn shifted(&self, round: &SharedRound) -> std::sync::Arc<ShiftedLayered<Gaussian>> {
+        let sd = self.per_client_sd(round.n_clients);
+        self.shifted_q.get_or(round, || ShiftedLayered::new(Gaussian::new(0.0, sd)))
+    }
 }
 
-impl MeanMechanism for IndividualGaussian {
+impl MechSpec for IndividualGaussian {
     fn name(&self) -> String {
         match self.variant {
             LayeredVariant::Direct => format!("individual-gaussian-direct(sigma={})", self.sigma),
@@ -67,53 +81,87 @@ impl MeanMechanism for IndividualGaussian {
     fn noise_sd(&self) -> f64 {
         self.sigma
     }
+}
 
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        let n = xs.len();
-        let d = xs[0].len();
-        let per_sd = self.per_client_sd(n);
-        let g = Gaussian::new(0.0, per_sd);
+impl ClientEncoder for IndividualGaussian {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let per_sd = self.per_client_sd(round.n_clients);
+        let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
+        let ms: Vec<i64> = match self.variant {
+            LayeredVariant::Direct => {
+                let q = DirectLayered::new(Gaussian::new(0.0, per_sd));
+                x.iter()
+                    .map(|&xj| {
+                        let s = q.draw(&mut rng);
+                        let m = q.encode(xj, &s);
+                        bits.add_description(m);
+                        m
+                    })
+                    .collect()
+            }
+            LayeredVariant::Shifted => {
+                let q = self.shifted(round);
+                // fixed-length code sized by Prop. 2
+                let code =
+                    FixedCode::from_support_bound(self.input_range_t, eta::gaussian(per_sd));
+                let mut fixed_total = 0.0f64;
+                let ms = x
+                    .iter()
+                    .map(|&xj| {
+                        let s = q.draw(&mut rng);
+                        let m = q.encode(xj, &s);
+                        bits.add_description(m);
+                        fixed_total += if code.contains(m) {
+                            code.bits() as f64
+                        } else {
+                            // escape: out-of-range descriptions fall back
+                            // to a gamma codeword (rare for bounded input)
+                            crate::coding::elias::signed_gamma_len(m) as f64
+                                + code.bits() as f64
+                        };
+                        m
+                    })
+                    .collect();
+                bits.fixed_total = Some(fixed_total);
+                ms
+            }
+        };
+        Descriptions { ms, aux: vec![], bits }
+    }
+}
 
-        // fixed-length code sized by Prop. 2 (shifted only)
-        let fixed_code = (self.variant == LayeredVariant::Shifted).then(|| {
-            FixedCode::from_support_bound(self.input_range_t, eta::gaussian(per_sd))
-        });
-        let mut fixed_total = 0.0f64;
+impl ServerDecoder for IndividualGaussian {
+    fn sum_decodable(&self) -> bool {
+        false
+    }
 
-        let mut estimate = vec![0.0; d];
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let n = round.n_clients;
+        let d = round.dim;
+        let per_sd = self.per_client_sd(n);
+        let list = payload.per_client();
+        assert_eq!(list.len(), n);
+        let mut estimate = vec![0.0f64; d];
         match self.variant {
             LayeredVariant::Direct => {
-                let q = DirectLayered::new(g);
-                for (i, x) in xs.iter().enumerate() {
-                    // client i and the server share stream (seed, i)
-                    let mut rng = Rng::derive(seed, i as u64);
-                    for j in 0..d {
+                let q = DirectLayered::new(Gaussian::new(0.0, per_sd));
+                for (i, (ms, _)) in list.iter().enumerate() {
+                    // the server re-derives client i's step draws
+                    let mut rng = round.client_rng(i);
+                    for (ej, &m) in estimate.iter_mut().zip(ms) {
                         let s = q.draw(&mut rng);
-                        let m = q.encode(x[j], &s);
-                        bits.add_description(m);
-                        estimate[j] += q.decode(m, &s);
+                        *ej += q.decode(m, &s);
                     }
                 }
             }
             LayeredVariant::Shifted => {
-                let q = ShiftedLayered::new(g);
-                for (i, x) in xs.iter().enumerate() {
-                    let mut rng = Rng::derive(seed, i as u64);
-                    for j in 0..d {
+                let q = self.shifted(round);
+                for (i, (ms, _)) in list.iter().enumerate() {
+                    let mut rng = round.client_rng(i);
+                    for (ej, &m) in estimate.iter_mut().zip(ms) {
                         let s = q.draw(&mut rng);
-                        let m = q.encode(x[j], &s);
-                        bits.add_description(m);
-                        if let Some(c) = fixed_code {
-                            fixed_total += if c.contains(m) {
-                                c.bits() as f64
-                            } else {
-                                // escape: out-of-range descriptions fall back
-                                // to a gamma codeword (rare for bounded input)
-                                crate::coding::elias::signed_gamma_len(m) as f64 + c.bits() as f64
-                            };
-                        }
-                        estimate[j] += q.decode(m, &s);
+                        *ej += q.decode(m, &s);
                     }
                 }
             }
@@ -121,8 +169,33 @@ impl MeanMechanism for IndividualGaussian {
         for e in estimate.iter_mut() {
             *e /= n as f64;
         }
-        bits.fixed_total = fixed_code.map(|_| fixed_total);
-        RoundOutput { estimate, bits }
+        estimate
+    }
+}
+
+impl MeanMechanism for IndividualGaussian {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(self, &Unicast, self, xs, seed)
     }
 }
 
@@ -131,6 +204,7 @@ mod tests {
     use super::*;
     use crate::dist::Continuous;
     use crate::mechanisms::traits::true_mean;
+    use crate::util::rng::Rng;
     use crate::util::stats::ks_test;
 
     fn client_data(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
@@ -199,12 +273,37 @@ mod tests {
         let mech = IndividualGaussian::new(1.0, LayeredVariant::Direct, 8.0);
         let out = mech.aggregate(&xs, 99);
         assert!(out.bits.fixed_total.is_none());
-        assert!(!mech.fixed_length());
+        assert!(!MeanMechanism::fixed_length(&mech));
+    }
+
+    #[test]
+    fn decode_reconstructs_encode_roundtrip() {
+        // server-side decode must exactly reproduce the per-client decoded
+        // values a client-side decoder would compute with the same streams
+        let n = 4;
+        let d = 3;
+        let xs = client_data(n, d, 6);
+        let mech = IndividualGaussian::new(0.9, LayeredVariant::Shifted, 8.0);
+        let seed = 1234;
+        let out = mech.aggregate(&xs, seed);
+        let q = ShiftedLayered::new(Gaussian::new(0.0, mech.per_client_sd(n)));
+        let mut want = vec![0.0f64; d];
+        for (i, x) in xs.iter().enumerate() {
+            let mut rng = Rng::derive(seed, i as u64);
+            for j in 0..d {
+                let s = q.draw(&mut rng);
+                let m = q.encode(x[j], &s);
+                want[j] += q.decode(m, &s);
+            }
+        }
+        for j in 0..d {
+            assert!((out.estimate[j] - want[j] / n as f64).abs() < 1e-12, "j={j}");
+        }
     }
 
     #[test]
     fn property_flags() {
-        let m = IndividualGaussian::new(1.0, LayeredVariant::Shifted, 8.0);
+        let m: &dyn MeanMechanism = &IndividualGaussian::new(1.0, LayeredVariant::Shifted, 8.0);
         assert!(!m.is_homomorphic());
         assert!(m.gaussian_noise());
         assert!(m.fixed_length());

@@ -1,12 +1,17 @@
 //! The Irwin–Hall mechanism (§4.2): every client subtractively dithers with
-//! the SAME step w = 2σ√(3n). The server needs only Σᵢ Mᵢ and Σᵢ Sᵢ, so the
-//! mechanism is homomorphic — but the aggregate noise is IH(n, 0, σ²), only
-//! *approximately* Gaussian, and not a DP-calibratable law.
+//! the SAME step w = 2σ√(3n). The decoder needs only Σᵢ Mᵢ (and the shared
+//! dithers, which it re-derives from the round seed), so the mechanism is
+//! homomorphic — it rides the sum-only transports, SecAgg included — but
+//! the aggregate noise is IH(n, 0, σ²), only *approximately* Gaussian, and
+//! not a DP-calibratable law.
 
+use super::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Plain, ServerDecoder,
+    SharedRound,
+};
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::coding::fixed::FixedCode;
 use crate::quantizer::round_half_up;
-use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct IrwinHallMechanism {
@@ -34,7 +39,7 @@ impl IrwinHallMechanism {
     }
 }
 
-impl MeanMechanism for IrwinHallMechanism {
+impl MechSpec for IrwinHallMechanism {
     fn name(&self) -> String {
         format!("irwin-hall(sigma={})", self.sigma)
     }
@@ -54,34 +59,76 @@ impl MeanMechanism for IrwinHallMechanism {
     fn noise_sd(&self) -> f64 {
         self.sigma
     }
+}
 
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        let n = xs.len();
-        let d = xs[0].len();
-        let w = self.step(n);
+impl ClientEncoder for IrwinHallMechanism {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let w = self.step(round.n_clients);
+        let code_bits = FixedCode::from_support_bound(self.input_range_t, w).bits() as f64;
+        let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
-        let fixed_code = FixedCode::from_support_bound(self.input_range_t, w);
         let mut fixed_total = 0.0;
-
-        // homomorphic path: the server accumulates only Σ m and Σ s
-        let mut m_sum = vec![0.0f64; d];
-        let mut s_sum = vec![0.0f64; d];
-        for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
-            for j in 0..d {
+        let ms: Vec<i64> = x
+            .iter()
+            .map(|&xj| {
                 let s = rng.u01();
-                let m = round_half_up(x[j] / w + s);
+                let m = round_half_up(xj / w + s);
                 bits.add_description(m);
-                fixed_total += fixed_code.bits() as f64;
-                m_sum[j] += m as f64;
-                s_sum[j] += s;
-            }
-        }
-        let estimate: Vec<f64> = (0..d)
-            .map(|j| self.decode_from_sums(m_sum[j], s_sum[j], n))
+                fixed_total += code_bits;
+                m
+            })
             .collect();
         bits.fixed_total = Some(fixed_total);
-        RoundOutput { estimate, bits }
+        Descriptions { ms, aux: vec![], bits }
+    }
+}
+
+impl ServerDecoder for IrwinHallMechanism {
+    fn sum_decodable(&self) -> bool {
+        true
+    }
+
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let n = round.n_clients;
+        let d = round.dim;
+        let m_sum = payload.description_sum();
+        assert_eq!(m_sum.len(), d);
+        // shared randomness: the server re-derives every client's dithers —
+        // O(d) state, never the per-client descriptions
+        let mut s_sum = vec![0.0f64; d];
+        for i in 0..n {
+            let mut rng = round.client_rng(i);
+            for sj in s_sum.iter_mut() {
+                *sj += rng.u01();
+            }
+        }
+        (0..d).map(|j| self.decode_from_sums(m_sum[j] as f64, s_sum[j], n)).collect()
+    }
+}
+
+impl MeanMechanism for IrwinHallMechanism {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(self, &Plain, self, xs, seed)
     }
 }
 
@@ -90,6 +137,7 @@ mod tests {
     use super::*;
     use crate::dist::{Continuous, IrwinHall};
     use crate::mechanisms::traits::true_mean;
+    use crate::util::rng::Rng;
     use crate::util::stats::{ks_test, variance};
 
     fn client_data(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
@@ -166,6 +214,35 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_output_reproduces_manual_reconstruction() {
+        // the pipeline's aggregate() must equal the hand-rolled shared-
+        // randomness reconstruction above, bit for bit
+        let n = 6;
+        let xs = client_data(n, 3, 9);
+        let mech = IrwinHallMechanism::new(1.0, 16.0);
+        let w = mech.step(n);
+        let seed = 31337;
+        let out = mech.aggregate(&xs, seed);
+        let d = 3;
+        let mut m_sum = vec![0.0f64; d];
+        let mut s_sum = vec![0.0f64; d];
+        for (i, x) in xs.iter().enumerate() {
+            let mut rng = Rng::derive(seed, i as u64);
+            for j in 0..d {
+                let s = rng.u01();
+                m_sum[j] += round_half_up(x[j] / w + s) as f64;
+                s_sum[j] += s;
+            }
+        }
+        for j in 0..d {
+            let want = mech.decode_from_sums(m_sum[j], s_sum[j], n);
+            assert!((out.estimate[j] - want).abs() < 1e-12, "j={j}");
+        }
+        assert_eq!(out.bits.messages, (n * d) as u64);
+        assert!(out.bits.fixed_total.unwrap() > 0.0);
+    }
+
+    #[test]
     fn matches_mechanism_output() {
         let xs = client_data(4, 2, 10);
         let mech = IrwinHallMechanism::new(0.5, 16.0);
@@ -176,7 +253,8 @@ mod tests {
 
     #[test]
     fn property_flags() {
-        let m = IrwinHallMechanism::new(1.0, 16.0);
+        // qualified: MechSpec and MeanMechanism expose the same flags
+        let m: &dyn MeanMechanism = &IrwinHallMechanism::new(1.0, 16.0);
         assert!(m.is_homomorphic());
         assert!(!m.gaussian_noise());
         assert!(m.fixed_length());

@@ -1,11 +1,21 @@
 //! Aggregate AINQ mechanisms (§2, §4, §5): n clients → server mean estimate
 //! with an exact aggregation-error distribution.
 //!
+//! Every mechanism is implemented as a client-encode / transport /
+//! server-decode pipeline ([`pipeline`]): the struct carries the mechanism
+//! parameters and implements [`pipeline::ClientEncoder`] (what client i
+//! sends given its vector and the round's shared randomness),
+//! [`pipeline::ServerDecoder`] (what the server reconstructs from the
+//! transported payload) and [`pipeline::MechSpec`] (the Table 1 property
+//! flags). The monolithic [`traits::MeanMechanism::aggregate`] entry point
+//! survives as a thin wrapper over [`pipeline::run_pipeline`].
+//!
 //! * [`individual`] — Def. 2: per-client point-to-point AINQ quantizers
 //!   (direct or shifted layered), averaged by the server. Exact Gaussian
-//!   noise, NOT homomorphic.
+//!   noise, NOT homomorphic (Unicast transport).
 //! * [`irwin_hall`] — §4.2: shared-step subtractive dithering; homomorphic
-//!   but the noise is Irwin–Hall, not Gaussian.
+//!   (sum-only transports, SecAgg-compatible) but the noise is Irwin–Hall,
+//!   not Gaussian.
 //! * [`decompose`] — Algorithms 1–2: decomposition of the Gaussian into a
 //!   mixture of shifted/scaled Irwin–Hall laws (the (A, B) sampler).
 //! * [`aggregate`] — Def. 8 + §4.4: the aggregate Gaussian mechanism —
@@ -13,6 +23,7 @@
 //! * [`sigm`] — §5.1 + Alg. 5: subsampled individual Gaussian mechanism.
 
 pub mod traits;
+pub mod pipeline;
 pub mod individual;
 pub mod irwin_hall;
 pub mod decompose;
@@ -23,5 +34,9 @@ pub use aggregate::AggregateGaussian;
 pub use decompose::Decomposer;
 pub use individual::{IndividualGaussian, LayeredVariant};
 pub use irwin_hall::IrwinHallMechanism;
+pub use pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Pipeline, Plain, RoundCache,
+    SecAgg, ServerDecoder, SharedRound, Transport, TransportPartial, Unicast,
+};
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

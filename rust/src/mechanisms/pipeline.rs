@@ -1,0 +1,779 @@
+//! The client-encode / transport / server-decode pipeline.
+//!
+//! The paper's mechanisms are by construction distributed: client i sees
+//! only its own vector and the round's shared randomness and emits integer
+//! descriptions mᵢ ([`ClientEncoder`]); the network delivers either the
+//! per-client messages or — for homomorphic mechanisms (Def. 6) — only the
+//! sum Σᵢ mᵢ, optionally under secure aggregation ([`Transport`]); the
+//! server decodes an estimate from what it observed plus the same shared
+//! randomness ([`ServerDecoder`]). [`run_pipeline`] wires the three stages
+//! and [`Pipeline`] packages any (encoder, transport, decoder) triple as a
+//! [`MeanMechanism`], so the coordinator, figure harnesses and benches all
+//! keep working against one interface.
+//!
+//! Server memory: the summing transports ([`Plain`], [`SecAgg`]) fold each
+//! client message into a single O(d) accumulator — the server never holds
+//! the O(n·d) description matrix. [`Unicast`] keeps the per-client list,
+//! which is what the non-homomorphic mechanisms (individual AINQ, SIGM,
+//! unbiased-quant) inherently require.
+//!
+//! Shared randomness: every stream is derived from the round seed —
+//! `Rng::derive(seed, client)` for per-client randomness and
+//! `Rng::derive(seed, GLOBAL_STREAM − k)` for globally shared draws — so
+//! encoder and decoder reconstruct identical values without communication.
+//! [`RoundCache`] memoizes one round's derived shared randomness purely as
+//! a simulation speedup (in a deployment each party derives it once).
+
+use std::sync::{Arc, Mutex};
+
+use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::secagg::{self, SecAggParams};
+use crate::util::rng::Rng;
+
+/// Stream id of globally shared randomness (all clients + server).
+pub const GLOBAL_STREAM: u64 = u64::MAX;
+
+/// One aggregation round's public context: the shared seed plus the round
+/// shape. Identical on every client and the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SharedRound {
+    pub seed: u64,
+    pub n_clients: usize,
+    pub dim: usize,
+}
+
+impl SharedRound {
+    pub fn new(seed: u64, n_clients: usize, dim: usize) -> Self {
+        Self { seed, n_clients, dim }
+    }
+
+    /// Client i's private-but-shared-with-server stream.
+    pub fn client_rng(&self, client: usize) -> Rng {
+        Rng::derive(self.seed, client as u64)
+    }
+
+    /// The round's global shared-randomness stream.
+    pub fn global_rng(&self) -> Rng {
+        Rng::derive(self.seed, GLOBAL_STREAM)
+    }
+
+    /// Additional global streams (offset ≥ 1), e.g. SIGM's empty-subsample
+    /// noise (offset 1) and CSGM's server noise (offset 2).
+    pub fn aux_rng(&self, offset: u64) -> Rng {
+        Rng::derive(self.seed, GLOBAL_STREAM - offset)
+    }
+
+    /// The shared coordinate-subsampling matrix B[i][j] ~ Bernoulli(γ),
+    /// drawn row-major from the round's global stream. SIGM and CSGM both
+    /// derive their subsamples through this one helper, which is what
+    /// guarantees the two see IDENTICAL subsamples for a given seed — the
+    /// matched-subsample comparison of Figs. 5/7 depends on it.
+    pub fn bernoulli_matrix(&self, gamma: f64) -> Vec<Vec<bool>> {
+        let mut brng = self.global_rng();
+        (0..self.n_clients)
+            .map(|_| (0..self.dim).map(|_| brng.bernoulli(gamma)).collect())
+            .collect()
+    }
+
+    fn key(&self) -> (u64, usize, usize) {
+        (self.seed, self.n_clients, self.dim)
+    }
+}
+
+/// What one client sends for one round: integer descriptions plus (for
+/// mechanisms whose decoder needs data-dependent side information, like a
+/// transmitted norm) a few raw reals. `aux` MUST be empty for homomorphic
+/// mechanisms — the summing transports reject it.
+#[derive(Clone, Debug, Default)]
+pub struct Descriptions {
+    pub ms: Vec<i64>,
+    pub aux: Vec<f64>,
+    /// communication accounting for this client's uplink
+    pub bits: BitsAccount,
+}
+
+/// What the server observes after transport.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Σᵢ mᵢ only — the Def. 6 server view.
+    Sum(Vec<i64>),
+    /// Per-client messages (ms, aux), indexed by client id.
+    PerClient(Vec<(Vec<i64>, Vec<f64>)>),
+}
+
+impl Payload {
+    /// Exact Σᵢ mᵢ regardless of transport.
+    pub fn description_sum(&self) -> Vec<i64> {
+        match self {
+            Payload::Sum(v) => v.clone(),
+            Payload::PerClient(list) => {
+                assert!(!list.is_empty());
+                let d = list[0].0.len();
+                let mut out = vec![0i64; d];
+                for (ms, _) in list {
+                    assert_eq!(ms.len(), d);
+                    for (o, &m) in out.iter_mut().zip(ms) {
+                        *o += m;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// The per-client list; panics if the transport delivered only the sum
+    /// (a decoder that calls this must return `sum_decodable() == false`).
+    pub fn per_client(&self) -> &[(Vec<i64>, Vec<f64>)] {
+        match self {
+            Payload::PerClient(list) => list,
+            Payload::Sum(_) => panic!(
+                "decoder needs per-client descriptions but the transport \
+                 delivered only their sum — use the Unicast transport"
+            ),
+        }
+    }
+}
+
+/// A client-side encoder: produce the integer descriptions of one client's
+/// vector under the round's shared randomness. Implementations must be
+/// deterministic in `(client, x, round)`.
+pub trait ClientEncoder: Send + Sync {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions;
+}
+
+/// A mergeable in-flight uplink accumulator. Shards fold their clients into
+/// private partials; partials merge associatively into the round total —
+/// the server side stays O(d) for the summing transports.
+#[derive(Clone, Debug)]
+pub enum TransportPartial {
+    /// running Σ mᵢ (None until the first submit fixes the length)
+    Sum(Option<Vec<i64>>),
+    /// running Σ masked(mᵢ) over ℤ_modulus
+    Masked { sum: Option<Vec<u64>>, modulus: u64 },
+    /// collected (client, ms, aux) messages
+    List(Vec<(usize, Vec<i64>, Vec<f64>)>),
+}
+
+/// The delivery channel between clients and server.
+pub trait Transport: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Whether the server ever observes anything beyond Σᵢ mᵢ.
+    fn sum_only(&self) -> bool;
+
+    /// A fresh empty accumulator for this round.
+    fn empty(&self, round: &SharedRound) -> TransportPartial;
+
+    /// Fold one client's message into an accumulator.
+    fn submit(
+        &self,
+        part: &mut TransportPartial,
+        client: usize,
+        msg: &Descriptions,
+        round: &SharedRound,
+    );
+
+    /// Merge another accumulator (another shard's partial) into `a`.
+    fn merge(&self, a: &mut TransportPartial, b: TransportPartial);
+
+    /// Close the round and surface the server's view.
+    fn finish(&self, part: TransportPartial, round: &SharedRound) -> Payload;
+}
+
+fn add_i64(acc: &mut Option<Vec<i64>>, ms: &[i64]) {
+    match acc {
+        None => *acc = Some(ms.to_vec()),
+        Some(v) => {
+            assert_eq!(v.len(), ms.len(), "description length changed mid-round");
+            for (a, &m) in v.iter_mut().zip(ms) {
+                *a += m;
+            }
+        }
+    }
+}
+
+fn add_mod(acc: &mut Option<Vec<u64>>, ms: &[u64], modulus: u64) {
+    match acc {
+        None => *acc = Some(ms.to_vec()),
+        Some(v) => {
+            assert_eq!(v.len(), ms.len(), "description length changed mid-round");
+            for (a, &m) in v.iter_mut().zip(ms) {
+                *a = (*a + m) % modulus;
+            }
+        }
+    }
+}
+
+/// Plain summation: the honest-but-curious server receives every mᵢ but the
+/// simulation folds them immediately — the O(d) reference transport for
+/// homomorphic (sum-decodable) mechanisms.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Plain;
+
+impl Transport for Plain {
+    fn name(&self) -> String {
+        "plain".into()
+    }
+
+    fn sum_only(&self) -> bool {
+        true
+    }
+
+    fn empty(&self, _round: &SharedRound) -> TransportPartial {
+        TransportPartial::Sum(None)
+    }
+
+    fn submit(
+        &self,
+        part: &mut TransportPartial,
+        _client: usize,
+        msg: &Descriptions,
+        _round: &SharedRound,
+    ) {
+        assert!(
+            msg.aux.is_empty(),
+            "aux side information requires the Unicast transport"
+        );
+        match part {
+            TransportPartial::Sum(acc) => add_i64(acc, &msg.ms),
+            _ => panic!("Plain transport got a foreign partial"),
+        }
+    }
+
+    fn merge(&self, a: &mut TransportPartial, b: TransportPartial) {
+        match (a, b) {
+            (TransportPartial::Sum(acc), TransportPartial::Sum(Some(v))) => add_i64(acc, &v),
+            (TransportPartial::Sum(_), TransportPartial::Sum(None)) => {}
+            _ => panic!("Plain transport got a foreign partial"),
+        }
+    }
+
+    fn finish(&self, part: TransportPartial, _round: &SharedRound) -> Payload {
+        match part {
+            TransportPartial::Sum(Some(v)) => Payload::Sum(v),
+            TransportPartial::Sum(None) => panic!("no clients submitted"),
+            _ => panic!("Plain transport got a foreign partial"),
+        }
+    }
+}
+
+/// Per-client delivery: the server keeps the full message list. Required by
+/// the non-homomorphic mechanisms (individual AINQ, SIGM, unbiased-quant),
+/// whose decoders are not functions of Σ mᵢ.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Unicast;
+
+impl Transport for Unicast {
+    fn name(&self) -> String {
+        "unicast".into()
+    }
+
+    fn sum_only(&self) -> bool {
+        false
+    }
+
+    fn empty(&self, _round: &SharedRound) -> TransportPartial {
+        TransportPartial::List(Vec::new())
+    }
+
+    fn submit(
+        &self,
+        part: &mut TransportPartial,
+        client: usize,
+        msg: &Descriptions,
+        _round: &SharedRound,
+    ) {
+        match part {
+            TransportPartial::List(list) => {
+                list.push((client, msg.ms.clone(), msg.aux.clone()))
+            }
+            _ => panic!("Unicast transport got a foreign partial"),
+        }
+    }
+
+    fn merge(&self, a: &mut TransportPartial, b: TransportPartial) {
+        match (a, b) {
+            (TransportPartial::List(la), TransportPartial::List(lb)) => la.extend(lb),
+            _ => panic!("Unicast transport got a foreign partial"),
+        }
+    }
+
+    fn finish(&self, part: TransportPartial, round: &SharedRound) -> Payload {
+        match part {
+            TransportPartial::List(mut list) => {
+                list.sort_by_key(|&(c, _, _)| c);
+                assert_eq!(list.len(), round.n_clients, "missing client messages");
+                let out = list
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, (c, ms, aux))| {
+                        assert_eq!(i, c, "duplicate or missing client id");
+                        (ms, aux)
+                    })
+                    .collect();
+                Payload::PerClient(out)
+            }
+            _ => panic!("Unicast transport got a foreign partial"),
+        }
+    }
+}
+
+/// Secure aggregation (Bonawitz et al. 2017, §5.2 / Prop. 3): each client
+/// masks its descriptions with pairwise-derived additive masks over ℤ_m;
+/// the server folds masked vectors mod m and the masks cancel, leaving
+/// exactly Σᵢ mᵢ — the server never observes a per-client description. The
+/// accumulator is a single length-d field vector: O(d) server state.
+#[derive(Clone, Copy, Debug)]
+pub struct SecAgg {
+    pub params: SecAggParams,
+}
+
+impl SecAgg {
+    pub fn new() -> Self {
+        Self { params: SecAggParams::default() }
+    }
+
+    pub fn with_params(params: SecAggParams) -> Self {
+        Self { params }
+    }
+
+    /// Pairwise-mask root seed for the round (public derivation — the
+    /// masks' security lives in the pairwise PRG streams, not in hiding
+    /// the root id).
+    pub fn root_seed(round: &SharedRound) -> u64 {
+        round.seed ^ 0x5EC_A662
+    }
+}
+
+impl Default for SecAgg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for SecAgg {
+    fn name(&self) -> String {
+        format!("secagg(m=2^{})", self.params.modulus.trailing_zeros())
+    }
+
+    fn sum_only(&self) -> bool {
+        true
+    }
+
+    fn empty(&self, _round: &SharedRound) -> TransportPartial {
+        TransportPartial::Masked { sum: None, modulus: self.params.modulus }
+    }
+
+    fn submit(
+        &self,
+        part: &mut TransportPartial,
+        client: usize,
+        msg: &Descriptions,
+        round: &SharedRound,
+    ) {
+        assert!(
+            msg.aux.is_empty(),
+            "aux side information cannot pass through secure aggregation"
+        );
+        let masked = secagg::mask_descriptions(
+            &msg.ms,
+            client,
+            round.n_clients,
+            Self::root_seed(round),
+            self.params,
+        );
+        match part {
+            TransportPartial::Masked { sum, modulus } => add_mod(sum, &masked, *modulus),
+            _ => panic!("SecAgg transport got a foreign partial"),
+        }
+    }
+
+    fn merge(&self, a: &mut TransportPartial, b: TransportPartial) {
+        match (a, b) {
+            (
+                TransportPartial::Masked { sum, modulus },
+                TransportPartial::Masked { sum: Some(v), modulus: mb },
+            ) => {
+                assert_eq!(*modulus, mb);
+                add_mod(sum, &v, *modulus);
+            }
+            (TransportPartial::Masked { .. }, TransportPartial::Masked { sum: None, .. }) => {}
+            _ => panic!("SecAgg transport got a foreign partial"),
+        }
+    }
+
+    fn finish(&self, part: TransportPartial, _round: &SharedRound) -> Payload {
+        match part {
+            TransportPartial::Masked { sum: Some(v), modulus } => {
+                // masks cancel over the full client set: the signed
+                // representative of the field sum is Σ mᵢ mod m
+                Payload::Sum(v.into_iter().map(|x| secagg::from_field(x, modulus)).collect())
+            }
+            TransportPartial::Masked { sum: None, .. } => panic!("no clients submitted"),
+            _ => panic!("SecAgg transport got a foreign partial"),
+        }
+    }
+}
+
+/// Server-side decoder: reconstruct the mean estimate from the transported
+/// payload and the shared randomness.
+pub trait ServerDecoder: Send + Sync {
+    /// Whether decoding needs only Σᵢ mᵢ (Def. 6) — i.e. whether the
+    /// mechanism may ride a sum-only transport (Plain, SecAgg).
+    fn sum_decodable(&self) -> bool;
+
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64>;
+}
+
+/// Static mechanism metadata (the Table 1 property matrix) shared by the
+/// pipeline wrapper and the direct [`MeanMechanism`] impls.
+pub trait MechSpec {
+    fn name(&self) -> String;
+    fn is_homomorphic(&self) -> bool;
+    fn gaussian_noise(&self) -> bool;
+    fn fixed_length(&self) -> bool;
+    fn noise_sd(&self) -> f64;
+}
+
+/// Run one round through the three stages.
+pub fn run_pipeline(
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    xs: &[Vec<f64>],
+    seed: u64,
+) -> RoundOutput {
+    assert!(!xs.is_empty(), "need at least one client");
+    let round = SharedRound::new(seed, xs.len(), xs[0].len());
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    let mut part = transport.empty(&round);
+    let mut bits = BitsAccount::default();
+    for (i, x) in xs.iter().enumerate() {
+        assert_eq!(x.len(), round.dim, "ragged client vectors");
+        let d = encoder.encode(i, x, &round);
+        bits.merge(&d.bits);
+        transport.submit(&mut part, i, &d, &round);
+    }
+    let payload = transport.finish(part, &round);
+    RoundOutput { estimate: decoder.decode(&payload, &round), bits }
+}
+
+/// Any (encoder, transport, decoder) triple as a [`MeanMechanism`].
+#[derive(Clone, Debug)]
+pub struct Pipeline<E, T, D> {
+    pub encoder: E,
+    pub transport: T,
+    pub decoder: D,
+}
+
+impl<M: ClientEncoder + ServerDecoder + MechSpec + Clone> Pipeline<M, Plain, M> {
+    /// Mechanism over plain summation (homomorphic mechanisms only).
+    pub fn plain(mech: M) -> Self {
+        Self { encoder: mech.clone(), transport: Plain, decoder: mech }
+    }
+}
+
+impl<M: ClientEncoder + ServerDecoder + MechSpec + Clone> Pipeline<M, SecAgg, M> {
+    /// Mechanism over secure aggregation with the default modulus.
+    pub fn secagg(mech: M) -> Self {
+        Self { encoder: mech.clone(), transport: SecAgg::new(), decoder: mech }
+    }
+
+    pub fn secagg_with(mech: M, params: SecAggParams) -> Self {
+        Self { encoder: mech.clone(), transport: SecAgg::with_params(params), decoder: mech }
+    }
+}
+
+impl<M: ClientEncoder + ServerDecoder + MechSpec + Clone> Pipeline<M, Unicast, M> {
+    /// Mechanism over per-client delivery.
+    pub fn unicast(mech: M) -> Self {
+        Self { encoder: mech.clone(), transport: Unicast, decoder: mech }
+    }
+}
+
+impl<E, T, D> MeanMechanism for Pipeline<E, T, D>
+where
+    E: ClientEncoder,
+    T: Transport,
+    D: ServerDecoder + MechSpec + Send + Sync,
+{
+    fn name(&self) -> String {
+        format!("{} via {}", MechSpec::name(&self.decoder), self.transport.name())
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(&self.decoder)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(&self.decoder)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(&self.decoder)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(&self.decoder)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(&self.encoder, &self.transport, &self.decoder, xs, seed)
+    }
+}
+
+/// Memoizes one round's *derived shared randomness*, keyed by
+/// (seed, n_clients, dim). Every party can derive these values from the
+/// seed alone; caching only avoids deriving them once per client in the
+/// single-process simulation. Cloning yields a fresh empty cache (contents
+/// are always re-derivable).
+pub struct RoundCache<V> {
+    slot: Mutex<Option<((u64, usize, usize), Arc<V>)>>,
+}
+
+impl<V> RoundCache<V> {
+    pub fn new() -> Self {
+        Self { slot: Mutex::new(None) }
+    }
+
+    pub fn get_or(&self, round: &SharedRound, make: impl FnOnce() -> V) -> Arc<V> {
+        let key = round.key();
+        let mut slot = self.slot.lock().expect("round cache poisoned");
+        if let Some((k, v)) = slot.as_ref() {
+            if *k == key {
+                return v.clone();
+            }
+        }
+        let v = Arc::new(make());
+        *slot = Some((key, v.clone()));
+        v
+    }
+}
+
+impl<V> Default for RoundCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> Clone for RoundCache<V> {
+    fn clone(&self) -> Self {
+        Self::new()
+    }
+}
+
+impl<V> std::fmt::Debug for RoundCache<V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("RoundCache")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy homomorphic mechanism: m = round(x) per coordinate, decode =
+    /// Σm/n. Exercises the transport plumbing without quantizer noise.
+    #[derive(Clone, Debug)]
+    struct RoundToInt;
+
+    impl ClientEncoder for RoundToInt {
+        fn encode(&self, _client: usize, x: &[f64], _round: &SharedRound) -> Descriptions {
+            let mut bits = BitsAccount::default();
+            let ms: Vec<i64> = x
+                .iter()
+                .map(|&v| {
+                    let m = crate::quantizer::round_half_up(v);
+                    bits.add_description(m);
+                    m
+                })
+                .collect();
+            Descriptions { ms, aux: vec![], bits }
+        }
+    }
+
+    impl ServerDecoder for RoundToInt {
+        fn sum_decodable(&self) -> bool {
+            true
+        }
+
+        fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+            payload
+                .description_sum()
+                .iter()
+                .map(|&s| s as f64 / round.n_clients as f64)
+                .collect()
+        }
+    }
+
+    impl MechSpec for RoundToInt {
+        fn name(&self) -> String {
+            "round-to-int".into()
+        }
+
+        fn is_homomorphic(&self) -> bool {
+            true
+        }
+
+        fn gaussian_noise(&self) -> bool {
+            false
+        }
+
+        fn fixed_length(&self) -> bool {
+            false
+        }
+
+        fn noise_sd(&self) -> f64 {
+            0.0
+        }
+    }
+
+    fn data() -> Vec<Vec<f64>> {
+        vec![vec![1.2, -3.9, 0.0], vec![2.2, 1.1, -7.0], vec![0.9, 0.0, 2.0]]
+    }
+
+    #[test]
+    fn plain_and_secagg_agree_exactly() {
+        let xs = data();
+        let a = Pipeline::plain(RoundToInt).aggregate(&xs, 9);
+        let b = Pipeline::secagg(RoundToInt).aggregate(&xs, 9);
+        assert_eq!(a.estimate, b.estimate);
+        assert_eq!(a.bits.messages, b.bits.messages);
+        assert!((a.bits.variable_total - b.bits.variable_total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unicast_matches_sum_for_sum_decodable() {
+        let xs = data();
+        let a = Pipeline::plain(RoundToInt).aggregate(&xs, 5);
+        let c = Pipeline::unicast(RoundToInt).aggregate(&xs, 5);
+        assert_eq!(a.estimate, c.estimate);
+    }
+
+    #[test]
+    #[should_panic(expected = "not homomorphic")]
+    fn sum_only_transport_rejects_non_homomorphic_decoder() {
+        #[derive(Clone, Debug)]
+        struct NeedsList;
+        impl ClientEncoder for NeedsList {
+            fn encode(&self, _: usize, x: &[f64], _: &SharedRound) -> Descriptions {
+                Descriptions { ms: vec![0; x.len()], aux: vec![], bits: BitsAccount::default() }
+            }
+        }
+        impl ServerDecoder for NeedsList {
+            fn sum_decodable(&self) -> bool {
+                false
+            }
+            fn decode(&self, p: &Payload, _: &SharedRound) -> Vec<f64> {
+                p.per_client(); // would panic anyway
+                vec![]
+            }
+        }
+        impl MechSpec for NeedsList {
+            fn name(&self) -> String {
+                "needs-list".into()
+            }
+            fn is_homomorphic(&self) -> bool {
+                false
+            }
+            fn gaussian_noise(&self) -> bool {
+                false
+            }
+            fn fixed_length(&self) -> bool {
+                false
+            }
+            fn noise_sd(&self) -> f64 {
+                0.0
+            }
+        }
+        let _ = Pipeline::plain(NeedsList).aggregate(&data(), 1);
+    }
+
+    #[test]
+    fn secagg_partial_is_o_d_and_masks_cancel_across_merges() {
+        // two "shards" submit disjoint clients into separate partials; the
+        // merged total must equal the plain sum
+        let xs = data();
+        let round = SharedRound::new(77, xs.len(), xs[0].len());
+        let enc = RoundToInt;
+        let t = SecAgg::new();
+        let mut p0 = t.empty(&round);
+        let mut p1 = t.empty(&round);
+        for (i, x) in xs.iter().enumerate() {
+            let d = enc.encode(i, x, &round);
+            if i % 2 == 0 {
+                t.submit(&mut p0, i, &d, &round);
+            } else {
+                t.submit(&mut p1, i, &d, &round);
+            }
+        }
+        // O(d) check: the partial holds exactly one field vector
+        if let TransportPartial::Masked { sum: Some(v), .. } = &p0 {
+            assert_eq!(v.len(), xs[0].len());
+        } else {
+            panic!("wrong partial shape");
+        }
+        t.merge(&mut p0, p1);
+        let got = match t.finish(p0, &round) {
+            Payload::Sum(v) => v,
+            _ => unreachable!(),
+        };
+        let plain = {
+            let mut p = Plain.empty(&round);
+            for (i, x) in xs.iter().enumerate() {
+                Plain.submit(&mut p, i, &enc.encode(i, x, &round), &round);
+            }
+            match Plain.finish(p, &round) {
+                Payload::Sum(v) => v,
+                _ => unreachable!(),
+            }
+        };
+        assert_eq!(got, plain);
+    }
+
+    #[test]
+    fn unicast_reorders_by_client_id() {
+        let xs = data();
+        let round = SharedRound::new(3, xs.len(), xs[0].len());
+        let enc = RoundToInt;
+        let t = Unicast;
+        let mut p = t.empty(&round);
+        for &i in &[2usize, 0, 1] {
+            t.submit(&mut p, i, &enc.encode(i, &xs[i], &round), &round);
+        }
+        match t.finish(p, &round) {
+            Payload::PerClient(list) => {
+                for (i, (ms, _)) in list.iter().enumerate() {
+                    let want = enc.encode(i, &xs[i], &round).ms;
+                    assert_eq!(ms, &want, "client {i}");
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn round_cache_hits_same_round_only() {
+        let cache: RoundCache<u64> = RoundCache::new();
+        let r1 = SharedRound::new(1, 4, 8);
+        let r2 = SharedRound::new(2, 4, 8);
+        let mut calls = 0;
+        let v1 = cache.get_or(&r1, || {
+            calls += 1;
+            10
+        });
+        let v1b = cache.get_or(&r1, || {
+            calls += 1;
+            11
+        });
+        assert_eq!((*v1, *v1b, calls), (10, 10, 1));
+        let v2 = cache.get_or(&r2, || {
+            calls += 1;
+            20
+        });
+        assert_eq!((*v2, calls), (20, 2));
+    }
+}

@@ -9,13 +9,29 @@
 //! i.e. the quantization *is* the DP noise (compression for free). The MSE
 //! against the true mean adds the subsampling variance ≤ c²/(nγ) per
 //! coordinate (Prop. 4).
+//!
+//! Pipeline shape: the subsampling matrix B is global shared randomness
+//! (all parties derive it from the round seed); a client sends one
+//! description per *selected* coordinate, so messages are ragged and the
+//! mechanism is NOT homomorphic — it rides the Unicast transport.
 
+use super::pipeline::{
+    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, ServerDecoder,
+    SharedRound, Unicast,
+};
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::coding::fixed::FixedCode;
 use crate::dist::Gaussian;
 use crate::quantizer::layered::eta;
 use crate::quantizer::{PointQuantizer, ShiftedLayered};
-use crate::util::rng::Rng;
+
+/// Round-derived shared state: the subsampling matrix, the per-coordinate
+/// selected counts ñ(j), and the per-client quantizer.
+struct SigmRound {
+    b: Vec<Vec<bool>>,
+    n_tilde: Vec<f64>,
+    q: ShiftedLayered<Gaussian>,
+}
 
 #[derive(Clone, Debug)]
 pub struct Sigm {
@@ -25,16 +41,30 @@ pub struct Sigm {
     pub gamma: f64,
     /// per-coordinate input bound |x_ij| <= c
     pub input_bound_c: f64,
+    round_state: RoundCache<SigmRound>,
 }
 
 impl Sigm {
     pub fn new(sigma: f64, gamma: f64, input_bound_c: f64) -> Self {
         assert!(sigma > 0.0 && (0.0..=1.0).contains(&gamma));
-        Self { sigma, gamma, input_bound_c }
+        Self { sigma, gamma, input_bound_c, round_state: RoundCache::new() }
+    }
+
+    fn state(&self, round: &SharedRound) -> std::sync::Arc<SigmRound> {
+        let (n, d) = (round.n_clients, round.dim);
+        let per_sd = self.sigma * self.gamma * n as f64;
+        let gamma = self.gamma;
+        self.round_state.get_or(round, || {
+            // global shared randomness: the subsampling matrix B[i][j]
+            let b = round.bernoulli_matrix(gamma);
+            let n_tilde: Vec<f64> =
+                (0..d).map(|j| (0..n).filter(|&i| b[i][j]).count() as f64).collect();
+            SigmRound { b, n_tilde, q: ShiftedLayered::new(Gaussian::new(0.0, per_sd)) }
+        })
     }
 }
 
-impl MeanMechanism for Sigm {
+impl MechSpec for Sigm {
     fn name(&self) -> String {
         format!("sigm(sigma={}, gamma={})", self.sigma, self.gamma)
     }
@@ -54,57 +84,103 @@ impl MeanMechanism for Sigm {
     fn noise_sd(&self) -> f64 {
         self.sigma
     }
+}
 
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        let n = xs.len();
-        let d = xs[0].len();
-        let nf = n as f64;
-        let per_sd = self.sigma * self.gamma * nf;
-        let q = ShiftedLayered::new(Gaussian::new(0.0, per_sd));
+impl ClientEncoder for Sigm {
+    fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        let st = self.state(round);
+        let per_sd = self.sigma * self.gamma * round.n_clients as f64;
+        let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0f64;
+        // ragged: one description per SELECTED coordinate, in j order
+        let mut ms = Vec::new();
+        for (j, &xj) in x.iter().enumerate() {
+            if !st.b[client][j] {
+                continue;
+            }
+            let s = st.q.draw(&mut rng);
+            let scaled = xj * st.n_tilde[j].sqrt();
+            let m = st.q.encode(scaled, &s);
+            bits.add_description(m);
+            // fixed-length accounting: input magnitude <= c·√ñ(j)
+            let code = FixedCode::from_support_bound(
+                2.0 * self.input_bound_c * st.n_tilde[j].sqrt(),
+                eta::gaussian(per_sd),
+            );
+            fixed_total += code.bits() as f64;
+            ms.push(m);
+        }
+        bits.fixed_total = Some(fixed_total);
+        Descriptions { ms, aux: vec![], bits }
+    }
+}
 
-        // Global shared randomness: the subsampling matrix B[i][j].
-        const GLOBAL_STREAM: u64 = u64::MAX;
-        let mut brng = Rng::derive(seed, GLOBAL_STREAM);
-        let b: Vec<Vec<bool>> = (0..n)
-            .map(|_| (0..d).map(|_| brng.bernoulli(self.gamma)).collect())
-            .collect();
-        let n_tilde: Vec<f64> =
-            (0..d).map(|j| (0..n).filter(|&i| b[i][j]).count() as f64).collect();
+impl ServerDecoder for Sigm {
+    fn sum_decodable(&self) -> bool {
+        false
+    }
 
+    fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        let n = round.n_clients;
+        let d = round.dim;
+        let nf = n as f64;
+        let st = self.state(round);
+        let list = payload.per_client();
+        assert_eq!(list.len(), n);
         let mut estimate = vec![0.0f64; d];
-        for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
-            for j in 0..d {
-                if !b[i][j] {
+        for (i, (ms, _)) in list.iter().enumerate() {
+            // re-derive client i's step draws; the draw stream advances
+            // only on selected coordinates, matching the encoder
+            let mut rng = round.client_rng(i);
+            let mut k = 0usize;
+            for (j, ej) in estimate.iter_mut().enumerate() {
+                if !st.b[i][j] {
                     continue;
                 }
-                let s = q.draw(&mut rng);
-                let scaled = x[j] * n_tilde[j].sqrt();
-                let m = q.encode(scaled, &s);
-                bits.add_description(m);
-                // fixed-length accounting: input magnitude <= c·√ñ(j)
-                let code = FixedCode::from_support_bound(
-                    2.0 * self.input_bound_c * n_tilde[j].sqrt(),
-                    eta::gaussian(per_sd),
-                );
-                fixed_total += code.bits() as f64;
-                estimate[j] += q.decode(m, &s);
+                let s = st.q.draw(&mut rng);
+                *ej += st.q.decode(ms[k], &s);
+                k += 1;
             }
+            assert_eq!(k, ms.len(), "client {i}: description count mismatch");
         }
-        let mut extra = Rng::derive(seed, GLOBAL_STREAM - 1);
+        let mut extra = round.aux_rng(1);
         for j in 0..d {
-            if n_tilde[j] > 0.0 {
-                estimate[j] /= self.gamma * nf * n_tilde[j].sqrt();
+            if st.n_tilde[j] > 0.0 {
+                estimate[j] /= self.gamma * nf * st.n_tilde[j].sqrt();
             } else {
                 // empty subsample: emit pure mechanism noise so the output
                 // law stays DP-calibratable
                 estimate[j] = extra.normal_ms(0.0, self.sigma);
             }
         }
-        bits.fixed_total = Some(fixed_total);
-        RoundOutput { estimate, bits }
+        estimate
+    }
+}
+
+impl MeanMechanism for Sigm {
+    fn name(&self) -> String {
+        MechSpec::name(self)
+    }
+
+    fn is_homomorphic(&self) -> bool {
+        MechSpec::is_homomorphic(self)
+    }
+
+    fn gaussian_noise(&self) -> bool {
+        MechSpec::gaussian_noise(self)
+    }
+
+    fn fixed_length(&self) -> bool {
+        MechSpec::fixed_length(self)
+    }
+
+    fn noise_sd(&self) -> f64 {
+        MechSpec::noise_sd(self)
+    }
+
+    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
+        run_pipeline(self, &Unicast, self, xs, seed)
     }
 }
 
@@ -112,6 +188,7 @@ impl MeanMechanism for Sigm {
 mod tests {
     use super::*;
     use crate::dist::Continuous;
+    use crate::util::rng::Rng;
     use crate::util::stats::{ks_test, variance};
 
     fn client_data(n: usize, d: usize, c: f64, seed: u64) -> Vec<Vec<f64>> {
@@ -207,7 +284,7 @@ mod tests {
 
     #[test]
     fn property_flags() {
-        let m = Sigm::new(0.3, 0.5, 1.0);
+        let m: &dyn MeanMechanism = &Sigm::new(0.3, 0.5, 1.0);
         assert!(!m.is_homomorphic());
         assert!(m.gaussian_noise());
         assert!(m.fixed_length());

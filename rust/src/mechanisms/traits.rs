@@ -49,7 +49,14 @@ pub struct RoundOutput {
 
 /// An n-client distributed mean-estimation mechanism (Def. 1: the estimate
 /// satisfies  Y − n⁻¹ Σᵢ xᵢ ~ Q  for the mechanism's target Q).
-pub trait MeanMechanism {
+///
+/// `aggregate` is a convenience that runs the whole round in-process; every
+/// mechanism in this crate implements it by routing through the
+/// client-encode / transport / server-decode pipeline
+/// ([`super::pipeline`]), which is also usable stage-by-stage (e.g. from
+/// the coordinator's worker shards). `Send + Sync` is required so
+/// mechanisms can be shared across those shards.
+pub trait MeanMechanism: Send + Sync {
     fn name(&self) -> String;
 
     /// Whether decoding needs only Σᵢ Mᵢ (Def. 6) — i.e. SecAgg-compatible.

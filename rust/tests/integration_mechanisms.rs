@@ -156,3 +156,87 @@ fn mechanisms_are_deterministic_in_seed() {
         assert_ne!(a.estimate, c.estimate, "{} ignores seed", m.name());
     }
 }
+
+/// Acceptance: the homomorphic mechanisms run through the SecAgg *transport*
+/// end-to-end — stage by stage, like the coordinator would drive them — and
+/// (a) the server-side transport state is a single O(d) field vector, never
+/// the O(n·d) description matrix, (b) the server decodes the exact same
+/// estimate the in-process mechanism produces, (c) what crosses the wire
+/// per client is masked, not the raw descriptions.
+#[test]
+fn homomorphic_mechanisms_through_secagg_transport_stagewise() {
+    use exact_comp::mechanisms::pipeline::{
+        ClientEncoder, SecAgg, ServerDecoder, SharedRound, Transport, TransportPartial,
+    };
+    let n = 7;
+    let d = 12;
+    let xs = client_data(n, d, 21);
+
+    fn drive<M: ClientEncoder + ServerDecoder + MeanMechanism>(
+        mech: &M,
+        xs: &[Vec<f64>],
+        seed: u64,
+    ) {
+        let n = xs.len();
+        let d = xs[0].len();
+        let round = SharedRound::new(seed, n, d);
+        let transport = SecAgg::new();
+        let mut part = transport.empty(&round);
+        for (i, x) in xs.iter().enumerate() {
+            let msg = mech.encode(i, x, &round);
+            // the client's masked uplink differs from its raw descriptions
+            let masked_uplink = exact_comp::secagg::mask_descriptions(
+                &msg.ms,
+                i,
+                n,
+                SecAgg::root_seed(&round),
+                transport.params,
+            );
+            let raw_as_field: Vec<u64> = msg
+                .ms
+                .iter()
+                .map(|&m| exact_comp::secagg::to_field(m, transport.params.modulus))
+                .collect();
+            assert_ne!(masked_uplink, raw_as_field, "client {i} uplink not masked");
+            transport.submit(&mut part, i, &msg, &round);
+            // O(d): at every point the server holds ONE field vector
+            match &part {
+                TransportPartial::Masked { sum: Some(v), .. } => assert_eq!(v.len(), d),
+                other => panic!("unexpected partial shape: {other:?}"),
+            }
+        }
+        let payload = transport.finish(part, &round);
+        let estimate = mech.decode(&payload, &round);
+        let reference = mech.aggregate(xs, seed);
+        assert_eq!(estimate, reference.estimate, "{}", MeanMechanism::name(mech));
+    }
+
+    for seed in [3u64, 99, 12345] {
+        drive(&IrwinHallMechanism::new(0.4, 8.0), &xs, seed);
+        drive(&AggregateGaussian::new(0.7, 8.0), &xs, seed);
+        drive(&exact_comp::baselines::Csgm::new(0.3, 0.5, 4.0, 6), &xs, seed);
+    }
+}
+
+/// The Pipeline wrapper over SecAgg preserves the AINQ property: exact
+/// Gaussian aggregation error through the masked sum-only uplink.
+#[test]
+fn secagg_pipeline_keeps_exact_gaussian_error() {
+    use exact_comp::mechanisms::Pipeline;
+    let n = 8;
+    let d = 8;
+    let sigma = 0.6;
+    let xs = client_data(n, d, 22);
+    let mech = Pipeline::secagg(AggregateGaussian::new(sigma, 8.0));
+    let mean = true_mean(&xs);
+    let mut errs = Vec::new();
+    for round in 0..700u64 {
+        let out = mech.aggregate(&xs, 0xA11CE ^ (round * 6151));
+        for j in 0..d {
+            errs.push(out.estimate[j] - mean[j]);
+        }
+    }
+    let g = Gaussian::new(0.0, sigma);
+    let res = ks_test(&errs, |e| g.cdf(e));
+    assert!(res.p_value > 0.003, "AINQ violated through SecAgg pipeline: p={}", res.p_value);
+}

@@ -5,6 +5,11 @@ use exact_comp::coding::bitio::{BitReader, BitWriter};
 use exact_comp::coding::elias;
 use exact_comp::coding::fixed::FixedCode;
 use exact_comp::dist::{Continuous, Gaussian, Unimodal};
+use exact_comp::mechanisms::pipeline::{
+    run_pipeline, ClientEncoder, MechSpec, Plain, SecAgg, ServerDecoder,
+};
+use exact_comp::mechanisms::traits::MeanMechanism;
+use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism, Pipeline};
 use exact_comp::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered, SubtractiveDither};
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
 use exact_comp::testing::{forall, gen_f64, gen_usize, PropConfig};
@@ -241,4 +246,124 @@ fn prop_huffman_roundtrip_random_tables() {
             msg.iter().filter(|s| ids.contains(s)).all(|&s| h.decode(&mut r) == Some(s))
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// pipeline invariants: encoder / transport / decoder
+// ---------------------------------------------------------------------------
+
+/// Run one mechanism over Plain and SecAgg and demand *bit-identical*
+/// RoundOutput: the transport may change who sees what, never the value.
+fn transports_bit_identical<M>(mech: &M, xs: &[Vec<f64>], seed: u64) -> bool
+where
+    M: ClientEncoder + ServerDecoder + MechSpec,
+{
+    let plain = run_pipeline(mech, &Plain, mech, xs, seed);
+    let masked = run_pipeline(mech, &SecAgg::new(), mech, xs, seed);
+    plain.estimate == masked.estimate
+        && plain.bits.messages == masked.bits.messages
+        && plain.bits.variable_total == masked.bits.variable_total
+        && plain.bits.fixed_total == masked.bits.fixed_total
+}
+
+fn gen_round_shape(rng: &mut Rng) -> (usize, (usize, usize)) {
+    let n = 2 + rng.below(10) as usize;
+    let d = 1 + rng.below(12) as usize;
+    let seed = rng.below(1 << 30) as usize;
+    (n, (d, seed))
+}
+
+fn gen_round_data(n: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..d).map(|_| rng.uniform(-4.0, 4.0)).collect()).collect()
+}
+
+#[test]
+fn prop_irwin_hall_plain_secagg_bit_identical() {
+    forall("ih-transport-identical", cfg(40), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true; // shrunk out of the valid domain
+        }
+        let xs = gen_round_data(n, d, seed as u64);
+        transports_bit_identical(&IrwinHallMechanism::new(0.4, 8.0), &xs, seed as u64)
+    });
+}
+
+#[test]
+fn prop_aggregate_gaussian_plain_secagg_bit_identical() {
+    forall("agg-transport-identical", cfg(25), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true;
+        }
+        let xs = gen_round_data(n, d, seed as u64);
+        transports_bit_identical(&AggregateGaussian::new(0.6, 8.0), &xs, seed as u64)
+    });
+}
+
+#[test]
+fn prop_csgm_plain_secagg_bit_identical() {
+    forall("csgm-transport-identical", cfg(25), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true;
+        }
+        let xs = gen_round_data(n, d, seed as u64);
+        transports_bit_identical(
+            &exact_comp::baselines::Csgm::new(0.2, 0.6, 4.0, 6),
+            &xs,
+            seed as u64,
+        )
+    });
+}
+
+#[test]
+fn prop_ddg_plain_secagg_bit_identical() {
+    forall("ddg-transport-identical", cfg(12), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true;
+        }
+        let xs = gen_round_data(n, d, seed as u64);
+        let mech = exact_comp::baselines::Ddg::new(1.5, 1e-2, 4.0, 26);
+        // DDG's own uplink is SecAgg over Z_{2^b}; the decoder owns the
+        // modular reduction, so the exact i64 sum decodes identically
+        let plain = run_pipeline(&mech, &Plain, &mech, &xs, seed as u64);
+        let masked = run_pipeline(&mech, &mech.transport(), &mech, &xs, seed as u64);
+        plain.estimate == masked.estimate && plain.bits.messages == masked.bits.messages
+    });
+}
+
+/// The satellite KS check: the error of the *pipeline* aggregate Gaussian
+/// mechanism — clients encode, SecAgg delivers only Σm, the server decodes
+/// — is exactly N(0, σ²).
+#[test]
+fn pipeline_gaussian_error_is_exactly_gaussian() {
+    let sigma = 0.5;
+    let xs = gen_round_data(6, 4, 0xF00D);
+    let mech = Pipeline::secagg(AggregateGaussian::new(sigma, 8.0));
+    let mean = exact_comp::mechanisms::traits::true_mean(&xs);
+    let mut errs = Vec::new();
+    for r in 0..900u64 {
+        let out = mech.aggregate(&xs, 60_000 + r);
+        for j in 0..mean.len() {
+            errs.push(out.estimate[j] - mean[j]);
+        }
+    }
+    let g = Gaussian::new(0.0, sigma);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| g.cdf(e));
+    assert!(res.p_value > 0.003, "pipeline AINQ violated: p={}", res.p_value);
+    let v = exact_comp::util::stats::variance(&errs);
+    assert!((v - sigma * sigma).abs() < 0.02, "var={v}");
+}
+
+/// Pipeline wrapper advertises the right flags and names the transport.
+#[test]
+fn pipeline_wrapper_metadata() {
+    let p = Pipeline::secagg(IrwinHallMechanism::new(0.3, 4.0));
+    assert!(MeanMechanism::is_homomorphic(&p));
+    assert!(MeanMechanism::name(&p).contains("secagg"));
+    let u = Pipeline::unicast(exact_comp::mechanisms::IndividualGaussian::new(
+        0.3,
+        exact_comp::mechanisms::LayeredVariant::Shifted,
+        4.0,
+    ));
+    assert!(!MeanMechanism::is_homomorphic(&u));
 }

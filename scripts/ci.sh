@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verify + determinism lint.
+#
+# Usage: scripts/ci.sh [--lint-only]
+#
+# The determinism lint enforces the seeded-PRNG ADR: ALL randomness must
+# flow through util::rng::Rng (xoshiro256++ derived from explicit seeds).
+# Platform entropy (rand::thread_rng, SystemTime-seeded generators) would
+# silently break the shared-randomness contract between clients and server,
+# so its mere mention in rust/src fails the build.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+lint() {
+    echo "== determinism lint (rust/src) =="
+    # thread_rng / SystemTime / any rand-crate path are forbidden in the
+    # library; Instant is allowed (wall-clock metrics, never randomness).
+    local pattern='thread_rng|SystemTime|rand::'
+    local hits
+    hits=$(grep -rnE "$pattern" rust/src --include='*.rs' || true)
+    if [ -n "$hits" ]; then
+        echo "FORBIDDEN nondeterministic randomness reference(s) found:" >&2
+        echo "$hits" >&2
+        exit 1
+    fi
+    echo "ok: no thread_rng / SystemTime / rand:: references"
+}
+
+lint
+
+if [ "${1:-}" = "--lint-only" ]; then
+    exit 0
+fi
+
+echo "== tier-1 verify =="
+cargo build --release
+cargo test -q
+echo "CI OK"

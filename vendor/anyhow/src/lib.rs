@@ -1,0 +1,173 @@
+//! Offline shim for the subset of the `anyhow` API this workspace uses.
+//!
+//! The build environment has no crates.io access, so this path crate
+//! provides source-compatible `Error` / `Result` / `Context` / `bail!` /
+//! `anyhow!` with the same semantics for the call sites in this repo:
+//! string-context error chains rendered through `Display` (`{}` shows the
+//! outermost context, `{:#}` the full chain, `{:?}` a multi-line report).
+
+use std::fmt;
+
+/// A string-chained error: the outermost context first, the root cause last.
+pub struct Error {
+    /// context chain, outermost first; never empty
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message (mirror of `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, colon-separated (anyhow renders the same)
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error` —
+// exactly like the real anyhow — so the blanket `From` below is coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<i32> {
+        let r: std::result::Result<i32, std::num::ParseIntError> = "x".parse();
+        r.with_context(|| format!("parsing {}", "x"))
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e = parse_err().unwrap_err();
+        assert!(format!("{e}").starts_with("parsing x"));
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing x: "), "{full}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn bail_and_anyhow() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {}", flag);
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
