@@ -3,8 +3,8 @@
 
 use std::sync::Arc;
 
-use exact_comp::coordinator::runtime::{run_round, run_round_mech, ClientPool};
-use exact_comp::mechanisms::pipeline::Plain;
+use exact_comp::coordinator::runtime::{run_round, run_round_mech, run_rounds_mech, ClientPool};
+use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
 use exact_comp::mechanisms::IrwinHallMechanism;
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
 use exact_comp::transforms::hadamard::{fwht, RandomizedRotation};
@@ -43,6 +43,43 @@ fn main() {
                 black_box(run_round_mech(&pool, &mech, Arc::new(Plain), round2, &[], 42));
             },
         );
+    }
+
+    // batched multi-round sessions: one SecAgg opening per window of W
+    // rounds, shards answer once per window, unmask batched. W=1 is the
+    // single-round baseline; larger W shows the amortization.
+    {
+        let n = 16usize;
+        let d = 256usize;
+        let pool = ClientPool::spawn_with_threads(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+            Some(4),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        for w in [1usize, 4, 16] {
+            let mut start = 0u64;
+            s.bench_elements(
+                &format!("coordinator/rounds_windowed(n={n},d={d},W={w})"),
+                Some((n * d * w) as u64),
+                || {
+                    let reps = run_rounds_mech(
+                        &pool,
+                        &mech,
+                        Arc::new(SecAgg::new()),
+                        start,
+                        w,
+                        &[],
+                        42,
+                    );
+                    start += w as u64;
+                    black_box(reps);
+                },
+            );
+        }
     }
 
     // SecAgg masking

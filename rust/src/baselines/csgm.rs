@@ -17,10 +17,10 @@
 //! sum) and the mechanism rides the sum-only transports, SecAgg included.
 
 use crate::mechanisms::pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
     ServerDecoder, SharedRound,
 };
-use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::mechanisms::traits::BitsAccount;
 use crate::quantizer::round_half_up;
 
 #[derive(Clone, Debug)]
@@ -141,36 +141,12 @@ impl ServerDecoder for Csgm {
     }
 }
 
-impl MeanMechanism for Csgm {
-    fn name(&self) -> String {
-        MechSpec::name(self)
-    }
-
-    fn is_homomorphic(&self) -> bool {
-        MechSpec::is_homomorphic(self)
-    }
-
-    fn gaussian_noise(&self) -> bool {
-        MechSpec::gaussian_noise(self)
-    }
-
-    fn fixed_length(&self) -> bool {
-        MechSpec::fixed_length(self)
-    }
-
-    fn noise_sd(&self) -> f64 {
-        MechSpec::noise_sd(self)
-    }
-
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        run_pipeline(self, &Plain, self, xs, seed)
-    }
-}
+impl_mean_mechanism!(Csgm, |_m| Plain);
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mechanisms::traits::true_mean;
+    use crate::mechanisms::traits::{true_mean, MeanMechanism};
     use crate::mechanisms::Sigm;
     use crate::util::rng::Rng;
     use crate::util::stats::mean as vmean;

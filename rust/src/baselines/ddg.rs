@@ -22,10 +22,10 @@
 
 use crate::dist::discrete_gaussian::discrete_gaussian;
 use crate::mechanisms::pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, SecAgg,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, SecAgg,
     ServerDecoder, SharedRound,
 };
-use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::mechanisms::traits::BitsAccount;
 use crate::secagg::{from_field, to_field, SecAggParams};
 use crate::transforms::hadamard::RandomizedRotation;
 use crate::util::stats::l2_norm;
@@ -182,38 +182,14 @@ impl ServerDecoder for Ddg {
     }
 }
 
-impl MeanMechanism for Ddg {
-    fn name(&self) -> String {
-        MechSpec::name(self)
-    }
-
-    fn is_homomorphic(&self) -> bool {
-        MechSpec::is_homomorphic(self)
-    }
-
-    fn gaussian_noise(&self) -> bool {
-        MechSpec::gaussian_noise(self)
-    }
-
-    fn fixed_length(&self) -> bool {
-        MechSpec::fixed_length(self)
-    }
-
-    fn noise_sd(&self) -> f64 {
-        MechSpec::noise_sd(self)
-    }
-
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        // §5.2 semantics: the masked modular uplink IS the mechanism
-        run_pipeline(self, &self.transport(), self, xs, seed)
-    }
-}
+// §5.2 semantics: the masked modular uplink IS the mechanism
+impl_mean_mechanism!(Ddg, |m| m.transport());
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mechanisms::pipeline::Plain;
-    use crate::mechanisms::traits::true_mean;
+    use crate::mechanisms::pipeline::{run_pipeline, Plain};
+    use crate::mechanisms::traits::{true_mean, MeanMechanism};
     use crate::util::rng::Rng;
     use crate::util::stats::mse;
 

@@ -14,10 +14,10 @@
 
 use super::{CompressedVec, VectorCompressor};
 use crate::mechanisms::pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, ServerDecoder, SharedRound,
-    Unicast,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, ServerDecoder,
+    SharedRound, Unicast,
 };
-use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::mechanisms::traits::BitsAccount;
 use crate::quantizer::round_half_up;
 use crate::util::rng::Rng;
 use crate::util::stats::linf_norm;
@@ -148,35 +148,12 @@ impl ServerDecoder for UnbiasedQuantizer {
     }
 }
 
-impl MeanMechanism for UnbiasedQuantizer {
-    fn name(&self) -> String {
-        MechSpec::name(self)
-    }
-
-    fn is_homomorphic(&self) -> bool {
-        MechSpec::is_homomorphic(self)
-    }
-
-    fn gaussian_noise(&self) -> bool {
-        MechSpec::gaussian_noise(self)
-    }
-
-    fn fixed_length(&self) -> bool {
-        MechSpec::fixed_length(self)
-    }
-
-    fn noise_sd(&self) -> f64 {
-        MechSpec::noise_sd(self)
-    }
-
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        run_pipeline(self, &Unicast, self, xs, seed)
-    }
-}
+impl_mean_mechanism!(UnbiasedQuantizer, |_m| Unicast);
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mechanisms::traits::MeanMechanism;
     use crate::util::stats::{mean, variance};
 
     #[test]

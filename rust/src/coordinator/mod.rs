@@ -11,6 +11,13 @@
 //! round seed on both ends — exactly how a real deployment shares a seed
 //! instead of shipping randomness.
 //!
+//! For high-frequency FL, [`runtime::run_rounds_encoded`] batches a window
+//! of W rounds into one
+//! [`crate::mechanisms::session::TransportSession`]: the masking transport
+//! opens once per window, shards ship one message per window, and the
+//! server unmasks all rounds in a single batched close (single rounds are
+//! the W=1 special case).
+//!
 //! * [`config`] — experiment configuration (file + CLI overrides)
 //! * [`metrics`] — per-round metric recording, CSV/JSON export
 //! * [`runtime`] — the threaded client pool + round loops
@@ -22,5 +29,6 @@ pub mod runtime;
 pub use config::Config;
 pub use metrics::Metrics;
 pub use runtime::{
-    run_round, run_round_encoded, run_round_mech, ClientPool, LocalCompute, RoundReport,
+    run_round, run_round_encoded, run_round_mech, run_rounds_encoded, run_rounds_mech,
+    ClientPool, LocalCompute, RoundReport,
 };

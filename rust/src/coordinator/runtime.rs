@@ -12,12 +12,27 @@
 //! * [`run_round`] — legacy/monolithic: shards compute local vectors, the
 //!   orchestrator materializes all of them and calls
 //!   [`MeanMechanism::aggregate`]. O(n·d) orchestrator memory.
-//! * [`run_round_encoded`] — the pipeline shape: shards *encode* their own
-//!   clients ([`ClientEncoder`] runs inside the worker), fold the messages
-//!   into a per-shard [`TransportPartial`] and fold bit accounting
-//!   locally; the orchestrator only merges shard partials and decodes.
-//!   With a summing transport the orchestrator state is O(d) — it never
-//!   sees a client vector or a per-client description.
+//! * [`run_rounds_encoded`] — the pipeline/session shape: shards *encode*
+//!   their own clients ([`ClientEncoder`] runs inside the worker) for a
+//!   whole window of W rounds, fold the messages into per-shard, per-round
+//!   [`TransportPartial`]s and fold bit accounting locally; the
+//!   orchestrator only merges shard partials into one
+//!   [`TransportSession`] ring and batch-decodes at window close. With a
+//!   summing transport the orchestrator state is O(W·d) — it never sees a
+//!   client vector or a per-client description. [`run_round_encoded`] is
+//!   the W=1 special case.
+//!
+//! ## The session/window model
+//!
+//! A window is one [`TransportSession`]: the transport opens once, every
+//! round's mask schedule derives from the window's session seed
+//! ([`crate::mechanisms::session::derive_session_seed`] of the run's root
+//! seed), shards ship ONE message per window instead of one per round, and
+//! the unmask is batched. The broadcast `state` is constant across the
+//! window — batching trades per-round feedback for amortized transport,
+//! the high-frequency FL regime — while `LocalCompute` still sees each
+//! round index. Windowed and independent rounds produce bit-identical
+//! estimates (property tested).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -26,6 +41,7 @@ use std::thread::JoinHandle;
 use crate::mechanisms::pipeline::{
     ClientEncoder, ServerDecoder, SharedRound, Transport, TransportPartial,
 };
+use crate::mechanisms::session::{derive_session_seed, session_round_transports, TransportSession};
 use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
 
 /// Client-local computation: produce this round's vector from the broadcast
@@ -50,15 +66,29 @@ enum ShardMsg {
         round: u64,
         state: Arc<Vec<f64>>,
     },
-    /// Compute AND encode: the per-client vectors never leave the shard.
-    Encode {
-        round: u64,
+    /// Compute AND encode a whole window of rounds: the per-client vectors
+    /// never leave the shard, and the shard answers with ONE message per
+    /// window (not per round) — the channel-traffic amortization of the
+    /// batched session.
+    EncodeWindow {
+        start_round: u64,
         state: Arc<Vec<f64>>,
-        seed: u64,
+        /// per-round shared-randomness seeds, `seeds.len()` = window W
+        seeds: Arc<Vec<u64>>,
         encoder: Arc<dyn ClientEncoder>,
-        transport: Arc<dyn Transport>,
+        /// per-round session-rekeyed transports (same schedule the
+        /// orchestrator's session will unmask)
+        transports: Arc<Vec<Arc<dyn Transport>>>,
     },
     Shutdown,
+}
+
+/// One round's shard-local fold: the uplink partial, bit accounting, and
+/// the Σ of the shard's client vectors (true-mean metric folding).
+struct ShardRoundFold {
+    partial: TransportPartial,
+    bits: BitsAccount,
+    x_sum: Vec<f64>,
 }
 
 enum ShardResult {
@@ -66,12 +96,11 @@ enum ShardResult {
         start: usize,
         vecs: Vec<Vec<f64>>,
     },
-    Encoded {
+    EncodedWindow {
         start: usize,
-        partial: TransportPartial,
-        bits: BitsAccount,
-        /// Σ of this shard's client vectors (true-mean metric folding)
-        x_sum: Vec<f64>,
+        /// number of clients in this shard (fail-closed accounting)
+        clients: usize,
+        rounds: Vec<ShardRoundFold>,
     },
 }
 
@@ -138,34 +167,54 @@ impl ClientPool {
                                     return;
                                 }
                             }
-                            ShardMsg::Encode { round, state, seed, encoder, transport } => {
-                                let mut partial: Option<TransportPartial> = None;
-                                let mut bits = BitsAccount::default();
-                                let mut x_sum: Vec<f64> = Vec::new();
-                                for c in range2.clone() {
-                                    let x = compute.local_update(c, round, &state);
-                                    if x_sum.is_empty() {
-                                        x_sum = vec![0.0; x.len()];
+                            ShardMsg::EncodeWindow {
+                                start_round,
+                                state,
+                                seeds,
+                                encoder,
+                                transports,
+                            } => {
+                                let mut rounds = Vec::with_capacity(seeds.len());
+                                for (r, (&seed, transport)) in
+                                    seeds.iter().zip(transports.iter()).enumerate()
+                                {
+                                    let round = start_round + r as u64;
+                                    let mut partial: Option<TransportPartial> = None;
+                                    let mut bits = BitsAccount::default();
+                                    let mut x_sum: Vec<f64> = Vec::new();
+                                    for c in range2.clone() {
+                                        let x = compute.local_update(c, round, &state);
+                                        if x_sum.is_empty() {
+                                            x_sum = vec![0.0; x.len()];
+                                        }
+                                        assert_eq!(
+                                            x.len(),
+                                            x_sum.len(),
+                                            "ragged client vectors"
+                                        );
+                                        for (a, v) in x_sum.iter_mut().zip(&x) {
+                                            *a += v;
+                                        }
+                                        let shared =
+                                            SharedRound::new(seed, n_clients, x.len());
+                                        let part = partial
+                                            .get_or_insert_with(|| transport.empty(&shared));
+                                        let d = encoder.encode(c, &x, &shared);
+                                        bits.merge(&d.bits);
+                                        transport.submit(part, c, &d, &shared);
                                     }
-                                    for (a, v) in x_sum.iter_mut().zip(&x) {
-                                        *a += v;
-                                    }
-                                    let shared =
-                                        SharedRound::new(seed, n_clients, x.len());
-                                    let part = partial
-                                        .get_or_insert_with(|| transport.empty(&shared));
-                                    let d = encoder.encode(c, &x, &shared);
-                                    bits.merge(&d.bits);
-                                    transport.submit(part, c, &d, &shared);
-                                }
-                                let partial =
-                                    partial.expect("shard ranges are never empty");
-                                if results_tx
-                                    .send(ShardResult::Encoded {
-                                        start: range2.start,
-                                        partial,
+                                    rounds.push(ShardRoundFold {
+                                        partial: partial
+                                            .expect("shard ranges are never empty"),
                                         bits,
                                         x_sum,
+                                    });
+                                }
+                                if results_tx
+                                    .send(ShardResult::EncodedWindow {
+                                        start: range2.start,
+                                        clients: range2.len(),
+                                        rounds,
                                     })
                                     .is_err()
                                 {
@@ -199,7 +248,7 @@ impl ClientPool {
                         out[start + off] = Some(v);
                     }
                 }
-                ShardResult::Encoded { .. } => {
+                ShardResult::EncodedWindow { .. } => {
                     unreachable!("encode result during a compute round")
                 }
             }
@@ -251,10 +300,111 @@ pub fn run_round(
     RoundReport { round, output, true_mean }
 }
 
-/// Run one round, pipeline shape: clients encode inside their worker
-/// shards, shard partials and bit accounts fold on the orchestrator, the
-/// decoder runs once on the final payload. With a summing transport the
-/// orchestrator holds O(d) state (one partial + one bits account).
+/// Run a window of W rounds through ONE transport session, pipeline
+/// shape: every shard computes AND encodes its own clients for all W
+/// rounds (one channel message per shard per window), the orchestrator
+/// folds shard partials into the session's ring of per-round accumulators
+/// and batch-decodes at window close. With a summing transport the
+/// orchestrator holds O(W·d) state and never sees a client vector or a
+/// per-client description. Returns one [`RoundReport`] per round, in
+/// round order.
+pub fn run_rounds_encoded(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+) -> Vec<RoundReport> {
+    assert!(window > 0, "a session window needs at least one round");
+    assert!(
+        window <= crate::mechanisms::session::MAX_WINDOW,
+        "session window of {window} rounds exceeds MAX_WINDOW ({}) — split the run into \
+         multiple windows",
+        crate::mechanisms::session::MAX_WINDOW,
+    );
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    let session_seed = derive_session_seed(root_seed, start_round);
+    let seeds: Arc<Vec<u64>> = Arc::new(
+        (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
+    );
+    // the shards must mask with the exact schedule the session will unmask:
+    // both sides derive it from (transport, session_seed, W) alone
+    let transports: Arc<Vec<Arc<dyn Transport>>> =
+        Arc::new(session_round_transports(transport.as_ref(), session_seed, window));
+    let state = Arc::new(state.to_vec());
+    for shard in &pool.shards {
+        shard
+            .tx
+            .send(ShardMsg::EncodeWindow {
+                start_round,
+                state: state.clone(),
+                seeds: seeds.clone(),
+                encoder: encoder.clone(),
+                transports: transports.clone(),
+            })
+            .expect("shard died");
+    }
+    // collect shard windows; fold x-sums in shard order so the true-mean
+    // metric is deterministic regardless of arrival order
+    let mut pieces: Vec<(usize, usize, Vec<ShardRoundFold>)> =
+        Vec::with_capacity(pool.shards.len());
+    for _ in 0..pool.shards.len() {
+        match pool.results_rx.recv().expect("shard result") {
+            ShardResult::EncodedWindow { start, clients, rounds } => {
+                pieces.push((start, clients, rounds));
+            }
+            ShardResult::Computed { .. } => {
+                unreachable!("compute result during an encoded round")
+            }
+        }
+    }
+    pieces.sort_by_key(|&(start, _, _)| start);
+    let dim = pieces[0].2[0].x_sum.len();
+    let mut session = TransportSession::open(
+        transport.as_ref(),
+        session_seed,
+        pool.n_clients,
+        dim,
+        seeds.as_slice(),
+    );
+    let mut x_sums = vec![vec![0.0f64; dim]; window];
+    for (_, clients, rounds) in pieces {
+        assert_eq!(rounds.len(), window, "shard returned a different window");
+        for (r, fold) in rounds.into_iter().enumerate() {
+            for (a, v) in x_sums[r].iter_mut().zip(&fold.x_sum) {
+                *a += v;
+            }
+            session.fold_partial(r, fold.partial, clients, &fold.bits);
+        }
+    }
+    let shared: Vec<SharedRound> = (0..window).map(|r| *session.round(r)).collect();
+    session
+        .close()
+        .into_iter()
+        .zip(shared)
+        .zip(x_sums)
+        .enumerate()
+        .map(|(r, (((payload, bits), round), x_sum))| {
+            let estimate = decoder.decode(&payload, &round);
+            let true_mean: Vec<f64> =
+                x_sum.into_iter().map(|v| v / pool.n_clients as f64).collect();
+            RoundReport {
+                round: start_round + r as u64,
+                output: RoundOutput { estimate, bits },
+                true_mean,
+            }
+        })
+        .collect()
+}
+
+/// Run one round, pipeline shape — the W=1 special case of
+/// [`run_rounds_encoded`].
 pub fn run_round_encoded(
     pool: &ClientPool,
     encoder: Arc<dyn ClientEncoder>,
@@ -264,58 +414,9 @@ pub fn run_round_encoded(
     state: &[f64],
     root_seed: u64,
 ) -> RoundReport {
-    assert!(
-        !transport.sum_only() || decoder.sum_decodable(),
-        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
-    );
-    let seed = round_seed(root_seed, round);
-    let state = Arc::new(state.to_vec());
-    for shard in &pool.shards {
-        shard
-            .tx
-            .send(ShardMsg::Encode {
-                round,
-                state: state.clone(),
-                seed,
-                encoder: encoder.clone(),
-                transport: transport.clone(),
-            })
-            .expect("shard died");
-    }
-    // collect shard partials; fold x-sums in shard order so the true-mean
-    // metric is deterministic regardless of arrival order
-    let mut pieces: Vec<(usize, TransportPartial, BitsAccount, Vec<f64>)> =
-        Vec::with_capacity(pool.shards.len());
-    for _ in 0..pool.shards.len() {
-        match pool.results_rx.recv().expect("shard result") {
-            ShardResult::Encoded { start, partial, bits, x_sum } => {
-                pieces.push((start, partial, bits, x_sum));
-            }
-            ShardResult::Computed { .. } => {
-                unreachable!("compute result during an encoded round")
-            }
-        }
-    }
-    pieces.sort_by_key(|&(start, _, _, _)| start);
-    let dim = pieces[0].3.len();
-    let mut bits = BitsAccount::default();
-    let mut x_sum = vec![0.0f64; dim];
-    let mut total: Option<TransportPartial> = None;
-    let shared = SharedRound::new(seed, pool.n_clients, dim);
-    for (_, partial, b, xs) in pieces {
-        bits.merge(&b);
-        for (a, v) in x_sum.iter_mut().zip(&xs) {
-            *a += v;
-        }
-        match &mut total {
-            None => total = Some(partial),
-            Some(t) => transport.merge(t, partial),
-        }
-    }
-    let payload = transport.finish(total.expect("no shards"), &shared);
-    let estimate = decoder.decode(&payload, &shared);
-    let true_mean: Vec<f64> = x_sum.into_iter().map(|v| v / pool.n_clients as f64).collect();
-    RoundReport { round, output: RoundOutput { estimate, bits }, true_mean }
+    run_rounds_encoded(pool, encoder, transport, decoder, round, 1, state, root_seed)
+        .pop()
+        .expect("one round in, one round out")
 }
 
 /// Convenience wrapper for mechanisms that implement both pipeline ends
@@ -333,6 +434,24 @@ where
 {
     let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
     run_round_encoded(pool, encoder, transport, mech, round, state, root_seed)
+}
+
+/// Windowed convenience wrapper: one transport session over W rounds for a
+/// mechanism implementing both pipeline ends.
+pub fn run_rounds_mech<M>(
+    pool: &ClientPool,
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+) -> Vec<RoundReport>
+where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+    run_rounds_encoded(pool, encoder, transport, mech, start_round, window, state, root_seed)
 }
 
 #[cfg(test)]
@@ -456,5 +575,62 @@ mod tests {
             let _ = pool.compute_round(0, &[]);
             drop(pool);
         }
+    }
+
+    fn round_varying_compute(c: usize, r: u64, _: &[f64]) -> Vec<f64> {
+        let mut rng = crate::util::rng::Rng::derive(6000 + r, c as u64);
+        (0..5).map(|_| rng.uniform(-3.0, 3.0)).collect()
+    }
+
+    #[test]
+    fn windowed_rounds_match_sequential_single_rounds() {
+        // a W=4 window over Plain is bit-identical to 4 sequential W=1
+        // calls: same per-round seeds, same estimates, bits and true means
+        let pool = ClientPool::spawn(10, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let windowed = run_rounds_mech(&pool, &mech, Arc::new(Plain), 2, 4, &[], 31);
+        assert_eq!(windowed.len(), 4);
+        for (i, rep) in windowed.iter().enumerate() {
+            let round = 2 + i as u64;
+            let single = run_round_mech(&pool, &mech, Arc::new(Plain), round, &[], 31);
+            assert_eq!(rep.round, round);
+            assert_eq!(rep.output.estimate, single.output.estimate, "round {round}");
+            assert_eq!(rep.output.bits.messages, single.output.bits.messages);
+            for (a, b) in rep.true_mean.iter().zip(&single.true_mean) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_secagg_session_matches_windowed_plain() {
+        // one masking session across the window: estimates must equal the
+        // plain-summation window bit for bit (masks cancel per round)
+        let pool = ClientPool::spawn(9, Arc::new(round_varying_compute));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let plain = run_rounds_mech(&pool, &mech, Arc::new(Plain), 0, 3, &[], 11);
+        let masked = run_rounds_mech(&pool, &mech, Arc::new(SecAgg::new()), 0, 3, &[], 11);
+        for (p, m) in plain.iter().zip(&masked) {
+            assert_eq!(p.output.estimate, m.output.estimate, "round {}", p.round);
+            assert_eq!(p.output.bits.messages, m.output.bits.messages);
+        }
+    }
+
+    #[test]
+    fn windowed_rounds_invariant_under_worker_count() {
+        let mech = IrwinHallMechanism::new(0.2, 4.0);
+        let mut estimates: Vec<Vec<Vec<f64>>> = Vec::new();
+        for threads in [1usize, 3, 5] {
+            let pool = ClientPool::spawn_with_threads(
+                11,
+                Arc::new(round_varying_compute),
+                Some(threads),
+            );
+            let reps =
+                run_rounds_mech(&pool, &mech, Arc::new(SecAgg::new()), 1, 3, &[], 77);
+            estimates.push(reps.into_iter().map(|r| r.output.estimate).collect());
+        }
+        assert_eq!(estimates[0], estimates[1]);
+        assert_eq!(estimates[0], estimates[2]);
     }
 }

@@ -9,7 +9,17 @@
 //! D and quantizing with step b⁺(D) − b⁻(D) is exactly the direct layered
 //! quantizer (Def. 4); flipping one side gives the shifted variant
 //! (Def. 5). Everything here is deterministic given a [`Rng`] stream — the
-//! shared-randomness contract of the whole system.
+//! shared-randomness contract of the whole system (see the determinism
+//! ADR, `docs/determinism.md`).
+//!
+//! Place in the pipeline: these laws are what the
+//! [`crate::mechanisms::pipeline::ClientEncoder`]s sample their layer
+//! heights and dithers from and what the
+//! [`crate::mechanisms::pipeline::ServerDecoder`]s re-derive seed-only on
+//! the other end — both sides draw from [`Rng`] streams derived from the
+//! round seed, which is why a round (or a whole
+//! [`crate::mechanisms::session::TransportSession`] window) decodes
+//! identically over `Plain` and `SecAgg` transports.
 
 pub mod discrete_gaussian;
 pub mod gaussian;

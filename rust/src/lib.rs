@@ -36,6 +36,20 @@
 //! client vectors never leave their shard and the orchestrator only merges
 //! shard partials and decodes.
 //!
+//! ## Sessions: batched multi-round SecAgg
+//!
+//! Repeated FL rounds do not re-open the masking session. A
+//! [`mechanisms::session::TransportSession`] opens the transport once per
+//! window of W rounds, derives every round's ℤ_m mask schedule from one
+//! session seed ([`secagg::session_mask_root`]), folds per-round partials
+//! into a ring of W accumulators, and closes with a single batched unmask
+//! that fails closed if any round is incomplete. Single-round aggregation
+//! is the W=1 special case, coordinator windows run via
+//! [`coordinator::runtime::run_rounds_encoded`], and a W-round windowed
+//! session is bit-identical to W independent Plain rounds (property
+//! tested). Everything stays deterministic given the root seed — see the
+//! determinism ADR in `docs/determinism.md`.
+//!
 //! ## Layout (three-layer architecture, Python never on the request path)
 //!
 //! * [`util`] — PRNGs, special functions, statistics, micro-bench harness

@@ -18,10 +18,10 @@ use std::sync::{Arc, Mutex};
 
 use super::decompose::Decomposer;
 use super::pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
     ServerDecoder, SharedRound,
 };
-use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use super::traits::BitsAccount;
 use crate::quantizer::round_half_up;
 
 #[derive(Debug)]
@@ -161,37 +161,13 @@ impl ServerDecoder for AggregateGaussian {
     }
 }
 
-impl MeanMechanism for AggregateGaussian {
-    fn name(&self) -> String {
-        MechSpec::name(self)
-    }
-
-    fn is_homomorphic(&self) -> bool {
-        MechSpec::is_homomorphic(self)
-    }
-
-    fn gaussian_noise(&self) -> bool {
-        MechSpec::gaussian_noise(self)
-    }
-
-    fn fixed_length(&self) -> bool {
-        MechSpec::fixed_length(self)
-    }
-
-    fn noise_sd(&self) -> f64 {
-        MechSpec::noise_sd(self)
-    }
-
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        run_pipeline(self, &Plain, self, xs, seed)
-    }
-}
+impl_mean_mechanism!(AggregateGaussian, |_m| Plain);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dist::{Continuous, Gaussian};
-    use crate::mechanisms::traits::true_mean;
+    use crate::mechanisms::traits::{true_mean, MeanMechanism};
     use crate::util::rng::Rng;
     use crate::util::stats::{ks_test, variance};
 

@@ -10,10 +10,10 @@
 //! mechanism), NOT by e.g. the Laplace for n > 1.
 
 use super::pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, ServerDecoder,
-    SharedRound, Unicast,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache,
+    ServerDecoder, SharedRound, Unicast,
 };
-use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use super::traits::BitsAccount;
 use crate::coding::fixed::FixedCode;
 use crate::dist::Gaussian;
 use crate::quantizer::layered::eta;
@@ -173,37 +173,13 @@ impl ServerDecoder for IndividualGaussian {
     }
 }
 
-impl MeanMechanism for IndividualGaussian {
-    fn name(&self) -> String {
-        MechSpec::name(self)
-    }
-
-    fn is_homomorphic(&self) -> bool {
-        MechSpec::is_homomorphic(self)
-    }
-
-    fn gaussian_noise(&self) -> bool {
-        MechSpec::gaussian_noise(self)
-    }
-
-    fn fixed_length(&self) -> bool {
-        MechSpec::fixed_length(self)
-    }
-
-    fn noise_sd(&self) -> f64 {
-        MechSpec::noise_sd(self)
-    }
-
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        run_pipeline(self, &Unicast, self, xs, seed)
-    }
-}
+impl_mean_mechanism!(IndividualGaussian, |_m| Unicast);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dist::Continuous;
-    use crate::mechanisms::traits::true_mean;
+    use crate::mechanisms::traits::{true_mean, MeanMechanism};
     use crate::util::rng::Rng;
     use crate::util::stats::ks_test;
 

@@ -6,10 +6,10 @@
 //! not a DP-calibratable law.
 
 use super::pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Plain, ServerDecoder,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, ServerDecoder,
     SharedRound,
 };
-use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use super::traits::BitsAccount;
 use crate::coding::fixed::FixedCode;
 use crate::quantizer::round_half_up;
 
@@ -106,37 +106,13 @@ impl ServerDecoder for IrwinHallMechanism {
     }
 }
 
-impl MeanMechanism for IrwinHallMechanism {
-    fn name(&self) -> String {
-        MechSpec::name(self)
-    }
-
-    fn is_homomorphic(&self) -> bool {
-        MechSpec::is_homomorphic(self)
-    }
-
-    fn gaussian_noise(&self) -> bool {
-        MechSpec::gaussian_noise(self)
-    }
-
-    fn fixed_length(&self) -> bool {
-        MechSpec::fixed_length(self)
-    }
-
-    fn noise_sd(&self) -> f64 {
-        MechSpec::noise_sd(self)
-    }
-
-    fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput {
-        run_pipeline(self, &Plain, self, xs, seed)
-    }
-}
+impl_mean_mechanism!(IrwinHallMechanism, |_m| Plain);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dist::{Continuous, IrwinHall};
-    use crate::mechanisms::traits::true_mean;
+    use crate::mechanisms::traits::{true_mean, MeanMechanism};
     use crate::util::rng::Rng;
     use crate::util::stats::{ks_test, variance};
 

@@ -21,9 +21,13 @@
 //! * [`aggregate`] — Def. 8 + §4.4: the aggregate Gaussian mechanism —
 //!   homomorphic AND exactly Gaussian.
 //! * [`sigm`] — §5.1 + Alg. 5: subsampled individual Gaussian mechanism.
+//! * [`session`] — batched multi-round transport sessions: one opening per
+//!   window of W rounds, a ring of per-round accumulators, one batched
+//!   unmask; single-round aggregation is the W=1 special case.
 
 pub mod traits;
 pub mod pipeline;
+pub mod session;
 pub mod individual;
 pub mod irwin_hall;
 pub mod decompose;
@@ -38,5 +42,6 @@ pub use pipeline::{
     run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Pipeline, Plain, RoundCache,
     SecAgg, ServerDecoder, SharedRound, Transport, TransportPartial, Unicast,
 };
+pub use session::{derive_session_seed, run_window, TransportSession};
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

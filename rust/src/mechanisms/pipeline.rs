@@ -23,6 +23,32 @@
 //! encoder and decoder reconstruct identical values without communication.
 //! [`RoundCache`] memoizes one round's derived shared randomness purely as
 //! a simulation speedup (in a deployment each party derives it once).
+//! (Why ALL randomness must flow through seeded streams is recorded in the
+//! determinism ADR, `docs/determinism.md`.)
+//!
+//! ## Sessions and windows
+//!
+//! A single aggregation round is the W=1 special case of a *batched
+//! multi-round session* ([`crate::mechanisms::session::TransportSession`]):
+//! the session opens the transport once per window of W rounds, keeps a
+//! ring of W per-round [`TransportPartial`] accumulators (each still O(d)
+//! for the summing transports), and unmasks all rounds in one batched
+//! close. Transports participate through
+//! [`Transport::for_session_round`], which rekeys any round-scoped
+//! transport randomness — for [`SecAgg`], the ℤ_m mask schedule — to the
+//! session seed (see [`crate::secagg::session_mask_root`]), amortizing the
+//! session opening across the window. [`run_pipeline`] itself delegates to
+//! a one-round session, so every mechanism, wrapper and coordinator shape
+//! exercises the same code path.
+//!
+//! ## The Plain ≡ SecAgg bit-identity invariant
+//!
+//! For any homomorphic mechanism and any round, running over [`SecAgg`]
+//! must produce the *bit-identical* [`super::traits::RoundOutput`] that
+//! [`Plain`] produces — masking may change who sees what in flight, never
+//! the decoded value. The property holds by construction (masks cancel
+//! exactly over ℤ_m before the signed lift) and is enforced by property
+//! tests per mechanism, both per round and for whole windowed sessions.
 
 use std::sync::{Arc, Mutex};
 
@@ -178,6 +204,15 @@ pub trait Transport: Send + Sync {
 
     /// Close the round and surface the server's view.
     fn finish(&self, part: TransportPartial, round: &SharedRound) -> Payload;
+
+    /// The transport instance serving round `round_in_window` of a batched
+    /// session opened with `session_seed`
+    /// ([`crate::mechanisms::session::TransportSession`]). Transports with
+    /// no round-scoped randomness return themselves unchanged; [`SecAgg`]
+    /// re-roots its ℤ_m mask schedule at the session's derived stream so
+    /// one pairwise opening serves the whole window. Must be deterministic
+    /// in `(session_seed, round_in_window)` — every party re-derives it.
+    fn for_session_round(&self, session_seed: u64, round_in_window: u64) -> Arc<dyn Transport>;
 }
 
 fn add_i64(acc: &mut Option<Vec<i64>>, ms: &[i64]) {
@@ -255,6 +290,11 @@ impl Transport for Plain {
             _ => panic!("Plain transport got a foreign partial"),
         }
     }
+
+    fn for_session_round(&self, _session_seed: u64, _round_in_window: u64) -> Arc<dyn Transport> {
+        // no transport randomness: every session round is plain summation
+        Arc::new(Plain)
+    }
 }
 
 /// Per-client delivery: the server keeps the full message list. Required by
@@ -316,6 +356,11 @@ impl Transport for Unicast {
             _ => panic!("Unicast transport got a foreign partial"),
         }
     }
+
+    fn for_session_round(&self, _session_seed: u64, _round_in_window: u64) -> Arc<dyn Transport> {
+        // no transport randomness: per-client delivery is stateless
+        Arc::new(Unicast)
+    }
 }
 
 /// Secure aggregation (Bonawitz et al. 2017, §5.2 / Prop. 3): each client
@@ -326,22 +371,36 @@ impl Transport for Unicast {
 #[derive(Clone, Copy, Debug)]
 pub struct SecAgg {
     pub params: SecAggParams,
+    /// Session override of the pairwise-mask root: `Some` when this
+    /// instance serves one round of a batched
+    /// [`crate::mechanisms::session::TransportSession`] (set by
+    /// [`Transport::for_session_round`]), `None` for the legacy standalone
+    /// per-round derivation from the round seed.
+    mask_root: Option<u64>,
 }
 
 impl SecAgg {
     pub fn new() -> Self {
-        Self { params: SecAggParams::default() }
+        Self { params: SecAggParams::default(), mask_root: None }
     }
 
     pub fn with_params(params: SecAggParams) -> Self {
-        Self { params }
+        Self { params, mask_root: None }
     }
 
-    /// Pairwise-mask root seed for the round (public derivation — the
-    /// masks' security lives in the pairwise PRG streams, not in hiding
-    /// the root id).
+    /// Pairwise-mask root seed for a standalone round (public derivation —
+    /// the masks' security lives in the pairwise PRG streams, not in
+    /// hiding the root id).
     pub fn root_seed(round: &SharedRound) -> u64 {
         round.seed ^ 0x5EC_A662
+    }
+
+    /// The mask root actually in force: the session schedule's root when
+    /// rekeyed, the per-round derivation otherwise. Either way the masks
+    /// cancel exactly, so the decoded sum — and the Plain ≡ SecAgg
+    /// bit-identity — is independent of the choice.
+    fn mask_root_for(&self, round: &SharedRound) -> u64 {
+        self.mask_root.unwrap_or_else(|| Self::root_seed(round))
     }
 }
 
@@ -379,7 +438,7 @@ impl Transport for SecAgg {
             &msg.ms,
             client,
             round.n_clients,
-            Self::root_seed(round),
+            self.mask_root_for(round),
             self.params,
         );
         match part {
@@ -413,6 +472,15 @@ impl Transport for SecAgg {
             _ => panic!("SecAgg transport got a foreign partial"),
         }
     }
+
+    fn for_session_round(&self, session_seed: u64, round_in_window: u64) -> Arc<dyn Transport> {
+        // one session opening, W per-round mask roots from its stream
+        let schedule = secagg::session_mask_root(session_seed);
+        Arc::new(Self {
+            params: self.params,
+            mask_root: Some(secagg::round_mask_root(schedule, round_in_window)),
+        })
+    }
 }
 
 /// Server-side decoder: reconstruct the mean estimate from the transported
@@ -435,7 +503,9 @@ pub trait MechSpec {
     fn noise_sd(&self) -> f64;
 }
 
-/// Run one round through the three stages.
+/// Run one round through the three stages — the W=1 special case of a
+/// batched [`crate::mechanisms::session::TransportSession`] (the round
+/// seed doubles as the session seed).
 pub fn run_pipeline(
     encoder: &dyn ClientEncoder,
     transport: &dyn Transport,
@@ -444,22 +514,62 @@ pub fn run_pipeline(
     seed: u64,
 ) -> RoundOutput {
     assert!(!xs.is_empty(), "need at least one client");
-    let round = SharedRound::new(seed, xs.len(), xs[0].len());
-    assert!(
-        !transport.sum_only() || decoder.sum_decodable(),
-        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
-    );
-    let mut part = transport.empty(&round);
-    let mut bits = BitsAccount::default();
-    for (i, x) in xs.iter().enumerate() {
-        assert_eq!(x.len(), round.dim, "ragged client vectors");
-        let d = encoder.encode(i, x, &round);
-        bits.merge(&d.bits);
-        transport.submit(&mut part, i, &d, &round);
-    }
-    let payload = transport.finish(part, &round);
-    RoundOutput { estimate: decoder.decode(&payload, &round), bits }
+    super::session::run_window(encoder, transport, decoder, &[(xs, seed)], seed)
+        .pop()
+        .expect("one round in, one round out")
 }
+
+/// Implement [`MeanMechanism`] for a type that already implements
+/// [`ClientEncoder`] + [`ServerDecoder`] + [`MechSpec`] by forwarding the
+/// property flags to its `MechSpec` impl and routing `aggregate` through
+/// [`run_pipeline`] over the given transport. The transport expression is
+/// written closure-style so it may consult the mechanism, e.g.
+///
+/// ```text
+/// impl_mean_mechanism!(IrwinHallMechanism, |_m| Plain);
+/// impl_mean_mechanism!(Ddg, |m| m.transport());
+/// ```
+macro_rules! impl_mean_mechanism {
+    ($ty:ty, |$mech:ident| $transport:expr) => {
+        impl $crate::mechanisms::traits::MeanMechanism for $ty {
+            fn name(&self) -> String {
+                $crate::mechanisms::pipeline::MechSpec::name(self)
+            }
+
+            fn is_homomorphic(&self) -> bool {
+                $crate::mechanisms::pipeline::MechSpec::is_homomorphic(self)
+            }
+
+            fn gaussian_noise(&self) -> bool {
+                $crate::mechanisms::pipeline::MechSpec::gaussian_noise(self)
+            }
+
+            fn fixed_length(&self) -> bool {
+                $crate::mechanisms::pipeline::MechSpec::fixed_length(self)
+            }
+
+            fn noise_sd(&self) -> f64 {
+                $crate::mechanisms::pipeline::MechSpec::noise_sd(self)
+            }
+
+            fn aggregate(
+                &self,
+                xs: &[Vec<f64>],
+                seed: u64,
+            ) -> $crate::mechanisms::traits::RoundOutput {
+                let $mech = self;
+                $crate::mechanisms::pipeline::run_pipeline(
+                    $mech,
+                    &$transport,
+                    $mech,
+                    xs,
+                    seed,
+                )
+            }
+        }
+    };
+}
+pub(crate) use impl_mean_mechanism;
 
 /// Any (encoder, transport, decoder) triple as a [`MeanMechanism`].
 #[derive(Clone, Debug)]
@@ -494,6 +604,31 @@ impl<M: ClientEncoder + ServerDecoder + MechSpec + Clone> Pipeline<M, Unicast, M
     }
 }
 
+impl<E, T, D> Pipeline<E, T, D>
+where
+    E: ClientEncoder,
+    T: Transport,
+    D: ServerDecoder + MechSpec + Send + Sync,
+{
+    /// Aggregate a whole window of rounds through ONE transport session
+    /// (each entry pairs a round's client data with its seed). The
+    /// single-round [`MeanMechanism::aggregate`] is the W=1 special case
+    /// of this call.
+    pub fn aggregate_window(
+        &self,
+        rounds: &[(&[Vec<f64>], u64)],
+        session_seed: u64,
+    ) -> Vec<RoundOutput> {
+        super::session::run_window(
+            &self.encoder,
+            &self.transport,
+            &self.decoder,
+            rounds,
+            session_seed,
+        )
+    }
+}
+
 impl<E, T, D> MeanMechanism for Pipeline<E, T, D>
 where
     E: ClientEncoder,
@@ -525,30 +660,41 @@ where
     }
 }
 
-/// Memoizes one round's *derived shared randomness*, keyed by
-/// (seed, n_clients, dim). Every party can derive these values from the
-/// seed alone; caching only avoids deriving them once per client in the
+/// How many rounds of derived shared randomness a [`RoundCache`] retains —
+/// sized to cover a full session window (it backs
+/// [`crate::mechanisms::session::MAX_WINDOW`]) so shards concurrently
+/// encoding different rounds of one window never evict each other's
+/// entries.
+pub(crate) const ROUND_CACHE_CAP: usize = 16;
+
+/// Memoizes recent rounds' *derived shared randomness*, keyed by
+/// (seed, n_clients, dim), with FIFO eviction past [`ROUND_CACHE_CAP`]
+/// entries. Every party can derive these values from the seed alone;
+/// caching only avoids deriving them once per client in the
 /// single-process simulation. Cloning yields a fresh empty cache (contents
 /// are always re-derivable).
 pub struct RoundCache<V> {
-    slot: Mutex<Option<((u64, usize, usize), Arc<V>)>>,
+    slots: Mutex<Vec<((u64, usize, usize), Arc<V>)>>,
 }
 
 impl<V> RoundCache<V> {
     pub fn new() -> Self {
-        Self { slot: Mutex::new(None) }
+        Self { slots: Mutex::new(Vec::new()) }
     }
 
     pub fn get_or(&self, round: &SharedRound, make: impl FnOnce() -> V) -> Arc<V> {
         let key = round.key();
-        let mut slot = self.slot.lock().expect("round cache poisoned");
-        if let Some((k, v)) = slot.as_ref() {
-            if *k == key {
-                return v.clone();
-            }
+        let mut slots = self.slots.lock().expect("round cache poisoned");
+        if let Some((_, v)) = slots.iter().find(|(k, _)| *k == key) {
+            return v.clone();
         }
+        // built under the lock: a second thread asking for the same round
+        // waits instead of duplicating the O(n·d) derivation
         let v = Arc::new(make());
-        *slot = Some((key, v.clone()));
+        if slots.len() == ROUND_CACHE_CAP {
+            slots.remove(0);
+        }
+        slots.push((key, v.clone()));
         v
     }
 }
@@ -643,6 +789,22 @@ mod tests {
         assert_eq!(a.estimate, b.estimate);
         assert_eq!(a.bits.messages, b.bits.messages);
         assert!((a.bits.variable_total - b.bits.variable_total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_window_matches_per_round_aggregate() {
+        // the Pipeline wrapper's windowed session equals independent
+        // single-round aggregates over Plain, round for round
+        let xs = data();
+        let p = Pipeline::secagg(RoundToInt);
+        let rounds: Vec<(&[Vec<f64>], u64)> = vec![(xs.as_slice(), 5), (xs.as_slice(), 9)];
+        let win = p.aggregate_window(&rounds, 123);
+        assert_eq!(win.len(), 2);
+        for (o, &(_, seed)) in win.iter().zip(&rounds) {
+            let single = Pipeline::plain(RoundToInt).aggregate(&xs, seed);
+            assert_eq!(o.estimate, single.estimate);
+            assert_eq!(o.bits.messages, single.bits.messages);
+        }
     }
 
     #[test]
@@ -775,5 +937,32 @@ mod tests {
             20
         });
         assert_eq!((*v2, calls), (20, 2));
+        // both rounds stay cached (a session window's rounds coexist)
+        let v1c = cache.get_or(&r1, || {
+            calls += 1;
+            12
+        });
+        assert_eq!((*v1c, calls), (10, 2));
+    }
+
+    #[test]
+    fn round_cache_evicts_oldest_past_capacity() {
+        let cache: RoundCache<u64> = RoundCache::new();
+        for i in 0..=16u64 {
+            let _ = cache.get_or(&SharedRound::new(i, 4, 8), || i);
+        }
+        let mut rebuilt = false;
+        // round 0 was evicted (17th insert), round 16 still cached
+        let _ = cache.get_or(&SharedRound::new(0, 4, 8), || {
+            rebuilt = true;
+            0
+        });
+        assert!(rebuilt);
+        let mut rebuilt16 = false;
+        let _ = cache.get_or(&SharedRound::new(16, 4, 8), || {
+            rebuilt16 = true;
+            16
+        });
+        assert!(!rebuilt16);
     }
 }

@@ -1,0 +1,541 @@
+//! Batched multi-round transport sessions: open once, aggregate a window
+//! of W rounds, unmask once.
+//!
+//! The paper's aggregation schemes are built for *repeated* FL rounds, but
+//! a naive deployment re-opens the masking session — pairwise agreement,
+//! per-round mask derivation, one channel handshake per round — every
+//! round, which dominates transport cost in high-frequency FL. A
+//! [`TransportSession`] amortizes that: it opens the transport once per
+//! window of W rounds, derives every round's transport randomness (for
+//! [`crate::mechanisms::pipeline::SecAgg`], the ℤ_m mask schedule of
+//! [`crate::secagg::session_mask_root`]) from a single *session seed* via
+//! the seeded-PRNG stream derivation of [`crate::util::rng::Rng::derive`],
+//! folds incoming per-round [`TransportPartial`]s into a ring of W
+//! per-round accumulators — still O(d) server state per in-flight round
+//! for the summing transports — and closes with one batched unmask.
+//!
+//! Three invariants, all tested:
+//!
+//! * **W=1 is the single-round path.** [`crate::mechanisms::pipeline::run_pipeline`]
+//!   delegates to a
+//!   one-round session, so ordinary `aggregate(xs, seed)` calls are the
+//!   W=1 special case of this module, not a parallel implementation.
+//! * **Windowed ≡ independent.** A W-round windowed session over any
+//!   transport is bit-identical to W independent rounds over
+//!   [`crate::mechanisms::pipeline::Plain`]
+//!   (for sum-decodable mechanisms) — the session changes *when* masks are
+//!   derived and *when* rounds close, never the decoded values.
+//! * **Interrupted sessions fail closed.** [`TransportSession::close`]
+//!   refuses to unmask anything unless *every* round of the window
+//!   received *every* client's submission: a session torn down mid-window
+//!   surfaces no partial payloads.
+//!
+//! The coordinator drives the same object from its worker shards
+//! ([`crate::coordinator::runtime::run_rounds_encoded`]): shards encode
+//! their clients for all W rounds and ship per-round partials; the
+//! orchestrator folds them into the session ring and batch-decodes.
+
+use std::sync::Arc;
+
+use super::pipeline::{
+    ClientEncoder, Descriptions, Payload, ServerDecoder, SharedRound, Transport, TransportPartial,
+};
+use super::traits::{BitsAccount, RoundOutput};
+use crate::util::rng::Rng;
+
+/// Maximum rounds per session window. Bounds in-flight server state at
+/// W·O(d) and matches the pipeline's round-cache capacity, so mechanisms
+/// with cached per-round derived state (CSGM subsample matrices, DDG
+/// rotations) never thrash their cache mid-window.
+pub const MAX_WINDOW: usize = super::pipeline::ROUND_CACHE_CAP;
+
+/// Stream tag separating window session seeds from every other derivation
+/// of the coordinator root seed.
+const SESSION_SEED_STREAM: u64 = 0xBA7C_4ED5_E551_0000;
+
+/// Derive the session seed for the window starting at `start_round` from
+/// the run's root seed. Deterministic and collision-separated from the
+/// per-round and per-client streams, so re-running a window re-derives the
+/// identical mask schedule.
+pub fn derive_session_seed(root_seed: u64, start_round: u64) -> u64 {
+    Rng::derive(root_seed, SESSION_SEED_STREAM ^ start_round).next_u64()
+}
+
+/// The per-round transports of a session: round r of the window runs over
+/// [`Transport::for_session_round`]`(session_seed, r)`. Shared by the
+/// session itself and by coordinator shards, which must mask with the
+/// exact same schedule the orchestrator unmasks.
+pub fn session_round_transports(
+    transport: &dyn Transport,
+    session_seed: u64,
+    window: usize,
+) -> Vec<Arc<dyn Transport>> {
+    (0..window).map(|r| transport.for_session_round(session_seed, r as u64)).collect()
+}
+
+/// One in-flight round of the window: its accumulator, bit accounting and
+/// submission tracking (the fail-closed gate).
+struct RoundSlot {
+    partial: TransportPartial,
+    bits: BitsAccount,
+    submitted: usize,
+    /// which clients submitted directly — duplicate submits must not be
+    /// able to impersonate a missing client's count
+    seen: Vec<bool>,
+    /// whether this round received pre-folded shard partials; folds and
+    /// direct submits must not mix (a fold cannot mark `seen`, so mixing
+    /// would let a duplicate client slip past the fail-closed count)
+    folded: bool,
+}
+
+/// A transport opened once for a window of W rounds (see the module docs).
+///
+/// Lifecycle: [`open`](Self::open) fixes the window shape and derives the
+/// per-round transport schedule from the session seed; clients (or shard
+/// partials) stream in via [`submit`](Self::submit) /
+/// [`fold_partial`](Self::fold_partial) in any round order; a single
+/// [`close`](Self::close) unmasks every round at once — or panics if any
+/// round is incomplete, surfacing nothing.
+pub struct TransportSession {
+    n_clients: usize,
+    rounds: Vec<SharedRound>,
+    transports: Vec<Arc<dyn Transport>>,
+    slots: Vec<RoundSlot>,
+}
+
+impl TransportSession {
+    /// Open a session for a window of `round_seeds.len()` rounds (at most
+    /// [`MAX_WINDOW`]) of shape (`n_clients`, `dim`). `round_seeds[r]` is
+    /// round r's shared-randomness seed (what encoders and decoders
+    /// consume); the separate `session_seed` drives only the transport's
+    /// session schedule.
+    pub fn open(
+        transport: &dyn Transport,
+        session_seed: u64,
+        n_clients: usize,
+        dim: usize,
+        round_seeds: &[u64],
+    ) -> Self {
+        assert!(!round_seeds.is_empty(), "a session window needs at least one round");
+        assert!(
+            round_seeds.len() <= MAX_WINDOW,
+            "session window of {} rounds exceeds MAX_WINDOW ({MAX_WINDOW}) — split the run \
+             into multiple windows",
+            round_seeds.len(),
+        );
+        assert!(n_clients > 0, "need at least one client");
+        let transports = session_round_transports(transport, session_seed, round_seeds.len());
+        let rounds: Vec<SharedRound> =
+            round_seeds.iter().map(|&s| SharedRound::new(s, n_clients, dim)).collect();
+        let slots = rounds
+            .iter()
+            .zip(&transports)
+            .map(|(round, t)| RoundSlot {
+                partial: t.empty(round),
+                bits: BitsAccount::default(),
+                submitted: 0,
+                seen: vec![false; n_clients],
+                folded: false,
+            })
+            .collect();
+        Self { n_clients, rounds, transports, slots }
+    }
+
+    /// Number of rounds in the window.
+    pub fn window(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Round r's public context (what encoders/decoders take).
+    pub fn round(&self, r: usize) -> &SharedRound {
+        &self.rounds[r]
+    }
+
+    /// Round r's rekeyed transport — what a remote encoder (e.g. a
+    /// coordinator shard) must mask with so the batched unmask cancels.
+    pub fn round_transport(&self, r: usize) -> &Arc<dyn Transport> {
+        &self.transports[r]
+    }
+
+    /// Fold one client's message into round r of the ring. Panics on a
+    /// duplicate submission — a client submitting twice must not be able
+    /// to stand in for a missing client in the fail-closed count (with
+    /// SecAgg, double-counted masks would unmask to garbage).
+    pub fn submit(&mut self, r: usize, client: usize, msg: &Descriptions) {
+        let slot = &mut self.slots[r];
+        assert!(
+            !slot.folded,
+            "cannot mix direct submits with shard folds in round {r} of the window"
+        );
+        assert!(
+            !slot.seen[client],
+            "duplicate submission from client {client} in round {r} of the window"
+        );
+        slot.seen[client] = true;
+        slot.bits.merge(&msg.bits);
+        self.transports[r].submit(&mut slot.partial, client, msg, &self.rounds[r]);
+        slot.submitted += 1;
+    }
+
+    /// Fold a pre-folded shard partial covering `clients` clients into
+    /// round r of the ring (the coordinator path: the orchestrator never
+    /// sees per-client messages). The count is trusted — shards are
+    /// in-process and fold disjoint client ranges; an external caller must
+    /// not feed overlapping partials.
+    pub fn fold_partial(
+        &mut self,
+        r: usize,
+        partial: TransportPartial,
+        clients: usize,
+        bits: &BitsAccount,
+    ) {
+        let slot = &mut self.slots[r];
+        assert!(
+            slot.submitted == 0 || slot.folded,
+            "cannot mix shard folds with direct submits in round {r} of the window"
+        );
+        slot.folded = true;
+        slot.bits.merge(bits);
+        self.transports[r].merge(&mut slot.partial, partial);
+        slot.submitted += clients;
+    }
+
+    /// Whether every round of the window has all client submissions.
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.submitted == self.n_clients)
+    }
+
+    /// Batched unmask: close every round of the window and surface the
+    /// per-round server views, in round order.
+    ///
+    /// Fails closed: if ANY round of the window is missing submissions —
+    /// a session interrupted mid-window — this panics before unmasking
+    /// anything, so no partial payload ever escapes a broken session.
+    pub fn close(self) -> Vec<(Payload, BitsAccount)> {
+        for (r, slot) in self.slots.iter().enumerate() {
+            assert!(
+                slot.submitted == self.n_clients,
+                "interrupted session fails closed: round {r} of the window has {}/{} client \
+                 submissions — refusing any partial unmask",
+                slot.submitted,
+                self.n_clients,
+            );
+        }
+        self.slots
+            .into_iter()
+            .zip(&self.rounds)
+            .zip(&self.transports)
+            .map(|((slot, round), t)| (t.finish(slot.partial, round), slot.bits))
+            .collect()
+    }
+}
+
+/// Run a whole window in-process: encode every client for every round,
+/// stream the messages through one [`TransportSession`], batch-close, and
+/// decode each round. `rounds` pairs each round's client data with its
+/// shared-randomness seed; [`crate::mechanisms::pipeline::run_pipeline`]
+/// is exactly this with a single round and `session_seed == seed`.
+pub fn run_window(
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    rounds: &[(&[Vec<f64>], u64)],
+    session_seed: u64,
+) -> Vec<RoundOutput> {
+    assert!(!rounds.is_empty(), "a session window needs at least one round");
+    let (xs0, _) = rounds[0];
+    assert!(!xs0.is_empty(), "need at least one client");
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    let n = xs0.len();
+    let dim = xs0[0].len();
+    let seeds: Vec<u64> = rounds.iter().map(|&(_, seed)| seed).collect();
+    let mut session = TransportSession::open(transport, session_seed, n, dim, &seeds);
+    for (r, &(xs, _)) in rounds.iter().enumerate() {
+        assert_eq!(xs.len(), n, "client count changed mid-session");
+        let round = *session.round(r);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), dim, "ragged client vectors");
+            let msg = encoder.encode(i, x, &round);
+            session.submit(r, i, &msg);
+        }
+    }
+    let shared: Vec<SharedRound> = session.rounds.clone();
+    session
+        .close()
+        .into_iter()
+        .zip(shared)
+        .map(|((payload, bits), round)| RoundOutput {
+            estimate: decoder.decode(&payload, &round),
+            bits,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mechanisms::pipeline::{run_pipeline, MechSpec, Plain, SecAgg};
+    use crate::quantizer::round_half_up;
+
+    /// Toy homomorphic mechanism (same shape as the pipeline tests'):
+    /// m = round(x + tiny seeded jitter), decode = Σm/n. The jitter makes
+    /// per-round seeds observable in the estimates, so windowed-vs-
+    /// independent comparisons are not vacuous.
+    #[derive(Clone, Debug)]
+    struct JitterRound;
+
+    impl ClientEncoder for JitterRound {
+        fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+            let mut rng = round.client_rng(client);
+            let mut bits = BitsAccount::default();
+            let ms: Vec<i64> = x
+                .iter()
+                .map(|&v| {
+                    let m = round_half_up(4.0 * (v + rng.u01()));
+                    bits.add_description(m);
+                    m
+                })
+                .collect();
+            Descriptions { ms, aux: vec![], bits }
+        }
+    }
+
+    impl ServerDecoder for JitterRound {
+        fn sum_decodable(&self) -> bool {
+            true
+        }
+
+        fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+            payload
+                .description_sum()
+                .iter()
+                .map(|&s| s as f64 / (4.0 * round.n_clients as f64))
+                .collect()
+        }
+    }
+
+    impl MechSpec for JitterRound {
+        fn name(&self) -> String {
+            "jitter-round".into()
+        }
+
+        fn is_homomorphic(&self) -> bool {
+            true
+        }
+
+        fn gaussian_noise(&self) -> bool {
+            false
+        }
+
+        fn fixed_length(&self) -> bool {
+            false
+        }
+
+        fn noise_sd(&self) -> f64 {
+            0.0
+        }
+    }
+
+    fn data(shift: f64) -> Vec<Vec<f64>> {
+        vec![
+            vec![1.2 + shift, -3.9, 0.5],
+            vec![2.2, 1.1 + shift, -7.0],
+            vec![0.9, 0.0, 2.0 - shift],
+        ]
+    }
+
+    fn window_inputs() -> Vec<(Vec<Vec<f64>>, u64)> {
+        (0..4).map(|r| (data(r as f64 * 0.3), 1000 + 17 * r as u64)).collect()
+    }
+
+    #[test]
+    fn windowed_secagg_session_matches_independent_plain_rounds() {
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let mech = JitterRound;
+        let windowed = run_window(&mech, &SecAgg::new(), &mech, &rounds, 0xAB5E55);
+        assert_eq!(windowed.len(), 4);
+        for (r, &(xs, seed)) in rounds.iter().enumerate() {
+            let independent = run_pipeline(&mech, &Plain, &mech, xs, seed);
+            assert_eq!(windowed[r].estimate, independent.estimate, "round {r}");
+            assert_eq!(windowed[r].bits.messages, independent.bits.messages);
+            assert_eq!(windowed[r].bits.variable_total, independent.bits.variable_total);
+        }
+    }
+
+    #[test]
+    fn window_of_one_is_the_single_round_path_bit_for_bit() {
+        // W=1 run_window vs driving the legacy transport stages by hand
+        let xs = data(0.0);
+        let seed = 77;
+        let mech = JitterRound;
+        let windowed = run_window(&mech, &Plain, &mech, &[(xs.as_slice(), seed)], seed);
+        let round = SharedRound::new(seed, xs.len(), xs[0].len());
+        let mut part = Plain.empty(&round);
+        let mut bits = BitsAccount::default();
+        for (i, x) in xs.iter().enumerate() {
+            let msg = mech.encode(i, x, &round);
+            bits.merge(&msg.bits);
+            Plain.submit(&mut part, i, &msg, &round);
+        }
+        let legacy = mech.decode(&Plain.finish(part, &round), &round);
+        assert_eq!(windowed.len(), 1);
+        assert_eq!(windowed[0].estimate, legacy);
+        assert_eq!(windowed[0].bits.messages, bits.messages);
+        assert_eq!(windowed[0].bits.variable_total, bits.variable_total);
+    }
+
+    #[test]
+    fn session_seed_changes_masks_but_never_estimates() {
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let mech = JitterRound;
+        let a = run_window(&mech, &SecAgg::new(), &mech, &rounds, 1);
+        let b = run_window(&mech, &SecAgg::new(), &mech, &rounds, 2);
+        for (oa, ob) in a.iter().zip(&b) {
+            assert_eq!(oa.estimate, ob.estimate);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fails closed")]
+    fn interrupted_session_fails_closed_missing_client() {
+        // every round touched, but one round is short a client: close must
+        // refuse to unmask ANY round
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let mut session =
+            TransportSession::open(&SecAgg::new(), 9, xs.len(), xs[0].len(), &[5, 6]);
+        for r in 0..2 {
+            let round = *session.round(r);
+            for (i, x) in xs.iter().enumerate() {
+                if r == 1 && i == 2 {
+                    continue; // client 2 drops mid-window
+                }
+                let msg = mech.encode(i, x, &round);
+                session.submit(r, i, &msg);
+            }
+        }
+        assert!(!session.is_complete());
+        let _ = session.close();
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot mix")]
+    fn mixing_submit_and_fold_is_rejected() {
+        // a fold cannot mark `seen`, so direct submits after a fold could
+        // smuggle duplicates past the fail-closed count — rejected
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let mut session =
+            TransportSession::open(&SecAgg::new(), 9, xs.len(), xs[0].len(), &[5]);
+        let round = *session.round(0);
+        let rt = session.round_transport(0).clone();
+        let mut p = rt.empty(&round);
+        let msg0 = mech.encode(0, &xs[0], &round);
+        rt.submit(&mut p, 0, &msg0, &round);
+        session.fold_partial(0, p, 1, &msg0.bits);
+        session.submit(0, 1, &mech.encode(1, &xs[1], &round));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds MAX_WINDOW")]
+    fn oversized_window_is_rejected_at_open() {
+        let seeds: Vec<u64> = (0..MAX_WINDOW as u64 + 1).collect();
+        let _ = TransportSession::open(&Plain, 1, 3, 2, &seeds);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate submission")]
+    fn duplicate_submit_cannot_stand_in_for_missing_client() {
+        // client 0 submits twice, client 2 never: the count would reach
+        // n_clients, so the duplicate must be rejected at submit time
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let mut session =
+            TransportSession::open(&SecAgg::new(), 9, xs.len(), xs[0].len(), &[5]);
+        let round = *session.round(0);
+        let msg0 = mech.encode(0, &xs[0], &round);
+        session.submit(0, 0, &msg0);
+        session.submit(0, 1, &mech.encode(1, &xs[1], &round));
+        session.submit(0, 0, &msg0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fails closed")]
+    fn interrupted_session_fails_closed_untouched_round() {
+        // a complete first round must not leak through close when the
+        // second round never ran
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let mut session = TransportSession::open(&Plain, 9, xs.len(), xs[0].len(), &[5, 6]);
+        let round = *session.round(0);
+        for (i, x) in xs.iter().enumerate() {
+            let msg = mech.encode(i, x, &round);
+            session.submit(0, i, &msg);
+        }
+        let _ = session.close();
+    }
+
+    #[test]
+    fn shard_fold_path_matches_client_submit_path() {
+        // two shards pre-fold disjoint clients per round, the session
+        // merges partials: identical to submitting clients directly
+        let inputs = window_inputs();
+        let mech = JitterRound;
+        let n = inputs[0].0.len();
+        let dim = inputs[0].0[0].len();
+        let seeds: Vec<u64> = inputs.iter().map(|&(_, s)| s).collect();
+        let t = SecAgg::new();
+        let session_seed = 0xFEED;
+
+        let mut direct = TransportSession::open(&t, session_seed, n, dim, &seeds);
+        let mut folded = TransportSession::open(&t, session_seed, n, dim, &seeds);
+        for (r, (xs, _)) in inputs.iter().enumerate() {
+            let round = *direct.round(r);
+            let rt = folded.round_transport(r).clone();
+            let mut p0 = rt.empty(&round);
+            let mut p1 = rt.empty(&round);
+            let mut b0 = BitsAccount::default();
+            let mut b1 = BitsAccount::default();
+            let mut c0 = 0usize;
+            let mut c1 = 0usize;
+            for (i, x) in xs.iter().enumerate() {
+                let msg = mech.encode(i, x, &round);
+                direct.submit(r, i, &msg);
+                if i % 2 == 0 {
+                    rt.submit(&mut p0, i, &msg, &round);
+                    b0.merge(&msg.bits);
+                    c0 += 1;
+                } else {
+                    rt.submit(&mut p1, i, &msg, &round);
+                    b1.merge(&msg.bits);
+                    c1 += 1;
+                }
+            }
+            folded.fold_partial(r, p0, c0, &b0);
+            folded.fold_partial(r, p1, c1, &b1);
+        }
+        assert!(direct.is_complete() && folded.is_complete());
+        let a = direct.close();
+        let b = folded.close();
+        for (r, ((pa, ba), (pb, bb))) in a.iter().zip(&b).enumerate() {
+            assert_eq!(pa.description_sum(), pb.description_sum(), "round {r}");
+            assert_eq!(ba.messages, bb.messages);
+        }
+    }
+
+    #[test]
+    fn derived_session_seeds_are_window_distinct() {
+        let a = derive_session_seed(42, 0);
+        let b = derive_session_seed(42, 4);
+        let c = derive_session_seed(43, 0);
+        assert_eq!(a, derive_session_seed(42, 0));
+        assert!(a != b && a != c && b != c);
+    }
+}

@@ -104,6 +104,50 @@ fn round_loop_optimizes_quadratic() {
     assert!(err < 1e-3, "did not converge: mse {err}");
 }
 
+/// Batched multi-round sessions end to end: a 20-round mean-estimation
+/// service run in windows of W=5 over SecAgg — one masking session per
+/// window, one batched unmask — must equal the same 20 rounds run one by
+/// one over Plain, bit for bit.
+#[test]
+fn windowed_secagg_service_matches_single_round_plain_service() {
+    use exact_comp::coordinator::runtime::{run_round_mech, run_rounds_mech};
+    use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
+
+    let n = 12;
+    let d = 16;
+    let pool = ClientPool::spawn(
+        n,
+        Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+            let mut rng = Rng::derive(4040 + r, c as u64);
+            (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+        }),
+    );
+    let mech = AggregateGaussian::new(0.05, 4.0);
+    let window = 5usize;
+    let mut windowed = Vec::new();
+    for start in (0..20u64).step_by(window) {
+        windowed.extend(run_rounds_mech(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            start,
+            window,
+            &[],
+            99,
+        ));
+    }
+    assert_eq!(windowed.len(), 20);
+    for (i, rep) in windowed.iter().enumerate() {
+        let single = run_round_mech(&pool, &mech, Arc::new(Plain), i as u64, &[], 99);
+        assert_eq!(rep.round, i as u64);
+        assert_eq!(rep.output.estimate, single.output.estimate, "round {i}");
+        assert_eq!(rep.output.bits.messages, single.output.bits.messages);
+        for (a, b) in rep.true_mean.iter().zip(&single.true_mean) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}
+
 /// Pool shutdown is clean even with rounds in flight history.
 #[test]
 fn pool_drop_joins_threads() {

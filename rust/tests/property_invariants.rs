@@ -6,10 +6,13 @@ use exact_comp::coding::elias;
 use exact_comp::coding::fixed::FixedCode;
 use exact_comp::dist::{Continuous, Gaussian, Unimodal};
 use exact_comp::mechanisms::pipeline::{
-    run_pipeline, ClientEncoder, MechSpec, Plain, SecAgg, ServerDecoder,
+    run_pipeline, ClientEncoder, MechSpec, Plain, SecAgg, ServerDecoder, Transport, Unicast,
 };
+use exact_comp::mechanisms::session::run_window;
 use exact_comp::mechanisms::traits::MeanMechanism;
-use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism, Pipeline};
+use exact_comp::mechanisms::{
+    AggregateGaussian, IndividualGaussian, IrwinHallMechanism, LayeredVariant, Pipeline, Sigm,
+};
 use exact_comp::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered, SubtractiveDither};
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
 use exact_comp::testing::{forall, gen_f64, gen_usize, PropConfig};
@@ -328,6 +331,129 @@ fn prop_ddg_plain_secagg_bit_identical() {
         let plain = run_pipeline(&mech, &Plain, &mech, &xs, seed as u64);
         let masked = run_pipeline(&mech, &mech.transport(), &mech, &xs, seed as u64);
         plain.estimate == masked.estimate && plain.bits.messages == masked.bits.messages
+    });
+}
+
+// ---------------------------------------------------------------------------
+// session invariants: batched multi-round windows
+// ---------------------------------------------------------------------------
+
+/// Run a mechanism through a W=4 windowed session over `windowed_transport`
+/// and demand *bit-identical* per-round [`exact_comp::mechanisms::RoundOutput`]s
+/// against 4 independent rounds over `independent_transport`: batching may
+/// change when masks are derived and when rounds close, never the values.
+fn windowed_matches_independent<M>(
+    mech: &M,
+    windowed_transport: &dyn Transport,
+    independent_transport: &dyn Transport,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> bool
+where
+    M: ClientEncoder + ServerDecoder + MechSpec,
+{
+    const W: usize = 4;
+    let datasets: Vec<Vec<Vec<f64>>> =
+        (0..W).map(|r| gen_round_data(n, d, seed ^ (0xABC0 + r as u64))).collect();
+    let round_seeds: Vec<u64> =
+        (0..W).map(|r| seed.wrapping_add(1 + 7919 * r as u64)).collect();
+    let rounds: Vec<(&[Vec<f64>], u64)> =
+        datasets.iter().zip(&round_seeds).map(|(xs, &s)| (xs.as_slice(), s)).collect();
+    let windowed = run_window(mech, windowed_transport, mech, &rounds, seed ^ 0x5E55);
+    rounds.iter().zip(&windowed).all(|(&(xs, s), w)| {
+        let ind = run_pipeline(mech, independent_transport, mech, xs, s);
+        w.estimate == ind.estimate
+            && w.bits.messages == ind.bits.messages
+            && w.bits.variable_total == ind.bits.variable_total
+            && w.bits.fixed_total == ind.bits.fixed_total
+    })
+}
+
+/// The acceptance invariant: a W=4 windowed SecAgg session — ONE masking
+/// session, per-round mask roots from the session stream, one batched
+/// unmask — is bit-identical to 4 independent Plain rounds, for every
+/// homomorphic mechanism (DDG runs over its own ℤ_{2^b} SecAgg).
+#[test]
+fn prop_w4_windowed_secagg_session_equals_independent_plain_rounds() {
+    forall("w4-secagg-vs-plain", cfg(8), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true;
+        }
+        let seed = seed as u64;
+        let ddg = exact_comp::baselines::Ddg::new(1.5, 1e-2, 4.0, 26);
+        windowed_matches_independent(
+            &IrwinHallMechanism::new(0.4, 8.0),
+            &SecAgg::new(),
+            &Plain,
+            n,
+            d,
+            seed,
+        ) && windowed_matches_independent(
+            &AggregateGaussian::new(0.6, 8.0),
+            &SecAgg::new(),
+            &Plain,
+            n,
+            d,
+            seed,
+        ) && windowed_matches_independent(
+            &exact_comp::baselines::Csgm::new(0.2, 0.6, 4.0, 6),
+            &SecAgg::new(),
+            &Plain,
+            n,
+            d,
+            seed,
+        ) && windowed_matches_independent(&ddg, &ddg.transport(), &Plain, n, d, seed)
+    });
+}
+
+/// The non-homomorphic mechanisms cannot ride SecAgg, but their windowed
+/// Unicast sessions must still equal independent Unicast rounds — the ring
+/// of per-round accumulators is transport-agnostic.
+#[test]
+fn prop_w4_windowed_unicast_session_equals_independent_rounds() {
+    forall("w4-unicast-window", cfg(6), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true;
+        }
+        let seed = seed as u64;
+        windowed_matches_independent(
+            &IndividualGaussian::new(0.3, LayeredVariant::Shifted, 4.0),
+            &Unicast,
+            &Unicast,
+            n,
+            d,
+            seed,
+        ) && windowed_matches_independent(&Sigm::new(0.3, 0.5, 4.0), &Unicast, &Unicast, n, d, seed)
+            && windowed_matches_independent(
+                &exact_comp::baselines::UnbiasedQuantizer::new(6),
+                &Unicast,
+                &Unicast,
+                n,
+                d,
+                seed,
+            )
+    });
+}
+
+/// Satellite edge case: a W=1 SecAgg session IS the single-round path —
+/// bit-identical to the mechanism's plain `aggregate` for any shape.
+#[test]
+fn prop_window_of_one_equals_single_round_path() {
+    forall("w1-vs-single-round", cfg(20), gen_round_shape, |&(n, (d, seed))| {
+        if n < 2 || d == 0 {
+            return true;
+        }
+        let seed = seed as u64;
+        let xs = gen_round_data(n, d, seed);
+        let mech = IrwinHallMechanism::new(0.4, 8.0);
+        let w = run_window(&mech, &SecAgg::new(), &mech, &[(xs.as_slice(), seed)], seed);
+        let single = mech.aggregate(&xs, seed);
+        w.len() == 1
+            && w[0].estimate == single.estimate
+            && w[0].bits.messages == single.bits.messages
+            && w[0].bits.variable_total == single.bits.variable_total
+            && w[0].bits.fixed_total == single.bits.fixed_total
     });
 }
 

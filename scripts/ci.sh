@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 verify + determinism lint.
+# CI entry point: determinism lint + tier-1 verify + rustdoc gate.
 #
 # Usage: scripts/ci.sh [--lint-only]
 #
-# The determinism lint enforces the seeded-PRNG ADR: ALL randomness must
+# The determinism lint enforces the seeded-PRNG ADR — docs/determinism.md
+# has the full context and consequences. In short: ALL randomness must
 # flow through util::rng::Rng (xoshiro256++ derived from explicit seeds).
 # Platform entropy (rand::thread_rng, SystemTime-seeded generators) would
-# silently break the shared-randomness contract between clients and server,
-# so its mere mention in rust/src fails the build.
+# silently break the shared-randomness contract between clients and server
+# — and the session mask schedules derived from it — so its mere mention
+# in rust/src fails the build.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -36,4 +38,8 @@ fi
 echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
+
+echo "== rustdoc (deny warnings) =="
+# keeps the crate/module docs — including intra-doc links — green
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "CI OK"
