@@ -3,7 +3,9 @@
 
 use std::sync::Arc;
 
-use exact_comp::coordinator::runtime::{run_round, run_round_mech, run_rounds_mech, ClientPool};
+use exact_comp::coordinator::runtime::{
+    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_with_dropouts, ClientPool,
+};
 use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
 use exact_comp::mechanisms::IrwinHallMechanism;
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
@@ -74,6 +76,36 @@ fn main() {
                         w,
                         &[],
                         42,
+                    );
+                    start += w as u64;
+                    black_box(reps);
+                },
+            );
+        }
+
+        // dropout-robust windows: same session shape, but every round
+        // loses ⌈n/4⌉ announced clients — measures the recovery overhead
+        // (share reconstruction + survivor-aware decode) on top of the
+        // windowed baseline above. Elements are normalized by SURVIVOR
+        // work (n − drops clients actually compute/encode), so the
+        // per-element rate is comparable to the no-dropout series.
+        for w in [4usize] {
+            let drops = n.div_ceil(4);
+            let schedule = exact_comp::testing::dropout_schedule(n, w, drops, 0xD20);
+            let mut start = 0u64;
+            s.bench_elements(
+                &format!("coordinator/rounds_windowed_dropout(n={n},d={d},W={w},drop={drops})"),
+                Some(((n - drops) * d * w) as u64),
+                || {
+                    let reps = run_rounds_mech_with_dropouts(
+                        &pool,
+                        &mech,
+                        Arc::new(SecAgg::new()),
+                        start,
+                        w,
+                        &[],
+                        42,
+                        &schedule,
                     );
                     start += w as u64;
                     black_box(reps);

@@ -18,7 +18,7 @@
 
 use crate::mechanisms::pipeline::{
     impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
-    ServerDecoder, SharedRound,
+    ServerDecoder, SharedRound, SurvivorSet,
 };
 use crate::mechanisms::traits::BitsAccount;
 use crate::quantizer::round_half_up;
@@ -113,16 +113,31 @@ impl ServerDecoder for Csgm {
     }
 
     fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        self.decode_survivors(payload, round, &SurvivorSet::full(round.n_clients))
+    }
+
+    /// Survivor-aware decode: sum only the survivors' re-derived dithers
+    /// and divide by γn′. The quantization error then has a random
+    /// Bin(n′, γ) number of terms (CSGM makes no exact-shape claim — its
+    /// error is quantization noise PLUS the Gaussian, which is the
+    /// paper's point), and the server-side DP noise stays at its
+    /// calibrated σ: it is a privacy target, not an n-scaled quantity.
+    fn decode_survivors(
+        &self,
+        payload: &Payload,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
         let n = round.n_clients;
+        assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
         let d = round.dim;
-        let nf = n as f64;
         let w = self.step();
         let b = self.subsample(round);
         let m_sum = payload.description_sum();
         assert_eq!(m_sum.len(), d);
-        // re-derive the selected clients' dithers (shared randomness)
+        // re-derive the selected SURVIVORS' dithers (shared randomness)
         let mut s_sum = vec![0.0f64; d];
-        for i in 0..n {
+        for i in survivors.alive_iter() {
             let mut rng = round.client_rng(i);
             for (j, sj) in s_sum.iter_mut().enumerate() {
                 if b[i][j] {
@@ -130,7 +145,8 @@ impl ServerDecoder for Csgm {
                 }
             }
         }
-        // divide by γn and add the calibrated server-side Gaussian noise
+        // divide by γn′ and add the calibrated server-side Gaussian noise
+        let nf = survivors.n_alive() as f64;
         let mut nrng = round.aux_rng(2);
         (0..d)
             .map(|j| {

@@ -23,7 +23,7 @@
 use crate::dist::discrete_gaussian::discrete_gaussian;
 use crate::mechanisms::pipeline::{
     impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, SecAgg,
-    ServerDecoder, SharedRound,
+    ServerDecoder, SharedRound, SurvivorSet,
 };
 use crate::mechanisms::traits::BitsAccount;
 use crate::secagg::{from_field, to_field, SecAggParams};
@@ -165,6 +165,22 @@ impl ServerDecoder for Ddg {
     }
 
     fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        self.decode_survivors(payload, round, &SurvivorSet::full(round.n_clients))
+    }
+
+    /// Survivor-aware decode: the survivor sum divides by n′. DDG's
+    /// per-client discrete Gaussians were calibrated so that the sum of
+    /// *n* of them hits the DP target; with n′ survivors the summed noise
+    /// has variance n′σ_c², so the zCDP guarantee degrades by n′/n —
+    /// deployments must calibrate σ_c for the minimum expected survivor
+    /// count (see the README threat-model section).
+    fn decode_survivors(
+        &self,
+        payload: &Payload,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
+        assert_eq!(survivors.n(), round.n_clients, "survivor set shaped for a different fleet");
         let rot = self.rotation(round);
         let m = self.modulus();
         let sum = payload.description_sum();
@@ -174,9 +190,10 @@ impl ServerDecoder for Ddg {
         // transport configured with this modulus the value is already
         // reduced and this is the identity — so plain summation and SecAgg
         // decode bit-identically (wraparound happens HERE if b too small).
+        let nf = survivors.n_alive() as f64;
         let scaled: Vec<f64> = sum
             .iter()
-            .map(|&v| from_field(to_field(v, m), m) as f64 * self.gamma_q / round.n_clients as f64)
+            .map(|&v| from_field(to_field(v, m), m) as f64 * self.gamma_q / nf)
             .collect();
         rot.inverse(&scaled, round.dim)
     }

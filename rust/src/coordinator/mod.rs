@@ -29,6 +29,7 @@ pub mod runtime;
 pub use config::Config;
 pub use metrics::Metrics;
 pub use runtime::{
-    run_round, run_round_encoded, run_round_mech, run_rounds_encoded, run_rounds_mech,
+    run_round, run_round_encoded, run_round_mech, run_rounds_encoded,
+    run_rounds_encoded_with_dropouts, run_rounds_mech, run_rounds_mech_with_dropouts,
     ClientPool, LocalCompute, RoundReport,
 };

@@ -33,15 +33,26 @@
 //! the high-frequency FL regime — while `LocalCompute` still sees each
 //! round index. Windowed and independent rounds produce bit-identical
 //! estimates (property tested).
+//!
+//! Real fleets lose clients mid-window:
+//! [`run_rounds_encoded_with_dropouts`] takes a per-round dropout
+//! schedule, skips dropped clients inside their shard, announces them at
+//! window close with the survivors' recovery shares, and decodes each
+//! round over its true survivor set n′ (estimates and `true_mean` are
+//! both survivor quantities; dropout-aware mechanisms rescale their error
+//! to n′ — see
+//! [`crate::mechanisms::pipeline::ServerDecoder::decode_survivors`]).
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::mechanisms::pipeline::{
-    ClientEncoder, ServerDecoder, SharedRound, Transport, TransportPartial,
+    ClientEncoder, ServerDecoder, SharedRound, SurvivorSet, Transport, TransportPartial,
 };
-use crate::mechanisms::session::{derive_session_seed, session_round_transports, TransportSession};
+use crate::mechanisms::session::{
+    derive_session_seed, session_round_transports, RoundDropouts, TransportSession,
+};
 use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
 
 /// Client-local computation: produce this round's vector from the broadcast
@@ -75,6 +86,9 @@ enum ShardMsg {
         state: Arc<Vec<f64>>,
         /// per-round shared-randomness seeds, `seeds.len()` = window W
         seeds: Arc<Vec<u64>>,
+        /// per-round announced dropouts (global client ids): a dropped
+        /// client is skipped entirely — never computed, never encoded
+        dropouts: Arc<Vec<Vec<usize>>>,
         encoder: Arc<dyn ClientEncoder>,
         /// per-round session-rekeyed transports (same schedule the
         /// orchestrator's session will unmask)
@@ -83,12 +97,17 @@ enum ShardMsg {
     Shutdown,
 }
 
-/// One round's shard-local fold: the uplink partial, bit accounting, and
-/// the Σ of the shard's client vectors (true-mean metric folding).
+/// One round's shard-local fold: the uplink partial, bit accounting, the
+/// Σ of the shard's surviving client vectors (true-mean metric folding)
+/// and WHICH survivors the shard folded (global ids, per round since
+/// dropouts vary round to round — the session records them so the
+/// fail-closed checks cover the folded path too).
 struct ShardRoundFold {
-    partial: TransportPartial,
+    /// `None` when every client of the shard dropped this round
+    partial: Option<TransportPartial>,
     bits: BitsAccount,
     x_sum: Vec<f64>,
+    clients: Vec<usize>,
 }
 
 enum ShardResult {
@@ -98,8 +117,6 @@ enum ShardResult {
     },
     EncodedWindow {
         start: usize,
-        /// number of clients in this shard (fail-closed accounting)
-        clients: usize,
         rounds: Vec<ShardRoundFold>,
     },
 }
@@ -171,6 +188,7 @@ impl ClientPool {
                                 start_round,
                                 state,
                                 seeds,
+                                dropouts,
                                 encoder,
                                 transports,
                             } => {
@@ -179,10 +197,17 @@ impl ClientPool {
                                     seeds.iter().zip(transports.iter()).enumerate()
                                 {
                                     let round = start_round + r as u64;
+                                    let dropped = &dropouts[r];
                                     let mut partial: Option<TransportPartial> = None;
                                     let mut bits = BitsAccount::default();
                                     let mut x_sum: Vec<f64> = Vec::new();
+                                    let mut clients: Vec<usize> = Vec::new();
                                     for c in range2.clone() {
+                                        if dropped.contains(&c) {
+                                            // announced dropout: no local
+                                            // compute, no encode, no count
+                                            continue;
+                                        }
                                         let x = compute.local_update(c, round, &state);
                                         if x_sum.is_empty() {
                                             x_sum = vec![0.0; x.len()];
@@ -202,18 +227,13 @@ impl ClientPool {
                                         let d = encoder.encode(c, &x, &shared);
                                         bits.merge(&d.bits);
                                         transport.submit(part, c, &d, &shared);
+                                        clients.push(c);
                                     }
-                                    rounds.push(ShardRoundFold {
-                                        partial: partial
-                                            .expect("shard ranges are never empty"),
-                                        bits,
-                                        x_sum,
-                                    });
+                                    rounds.push(ShardRoundFold { partial, bits, x_sum, clients });
                                 }
                                 if results_tx
                                     .send(ShardResult::EncodedWindow {
                                         start: range2.start,
-                                        clients: range2.len(),
                                         rounds,
                                     })
                                     .is_err()
@@ -275,9 +295,12 @@ impl Drop for ClientPool {
 pub struct RoundReport {
     pub round: u64,
     pub output: RoundOutput,
-    /// exact mean of the client vectors (for MSE metrics; a real server
-    /// cannot see this — test/metric use only)
+    /// exact mean of the *surviving* clients' vectors (for MSE metrics; a
+    /// real server cannot see this — test/metric use only)
     pub true_mean: Vec<f64>,
+    /// how many clients the round actually closed over (n′ ≤ n; equals
+    /// the fleet size on dropout-free rounds)
+    pub survivors: usize,
 }
 
 /// Per-round seed derivation shared by both round shapes.
@@ -297,7 +320,8 @@ pub fn run_round(
     let xs = pool.compute_round(round, state);
     let true_mean = crate::mechanisms::traits::true_mean(&xs);
     let output = mech.aggregate(&xs, round_seed(root_seed, round));
-    RoundReport { round, output, true_mean }
+    let survivors = xs.len();
+    RoundReport { round, output, true_mean, survivors }
 }
 
 /// Run a window of W rounds through ONE transport session, pipeline
@@ -319,6 +343,35 @@ pub fn run_rounds_encoded(
     root_seed: u64,
 ) -> Vec<RoundReport> {
     assert!(window > 0, "a session window needs at least one round");
+    let none: Vec<Vec<usize>> = vec![Vec::new(); window];
+    run_rounds_encoded_with_dropouts(
+        pool, encoder, transport, decoder, start_round, window, state, root_seed, &none,
+    )
+}
+
+/// [`run_rounds_encoded`] under a per-round dropout schedule:
+/// `dropouts[r]` names the clients that drop in round `start_round + r`
+/// of the window. Dropped clients are skipped inside their shard (never
+/// computed, never encoded); at window close the orchestrator announces
+/// them with the survivors' recovery shares
+/// ([`RoundDropouts::announce`]), the session reconstructs their
+/// outstanding masks, and each round decodes over its true survivor set
+/// ([`ServerDecoder::decode_survivors`]) — so the reported `true_mean`
+/// and estimate are both survivor-set quantities. An empty schedule IS
+/// `run_rounds_encoded`, bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_encoded_with_dropouts(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    dropouts: &[Vec<usize>],
+) -> Vec<RoundReport> {
+    assert!(window > 0, "a session window needs at least one round");
     assert!(
         window <= crate::mechanisms::session::MAX_WINDOW,
         "session window of {window} rounds exceeds MAX_WINDOW ({}) — split the run into \
@@ -329,6 +382,14 @@ pub fn run_rounds_encoded(
         !transport.sum_only() || decoder.sum_decodable(),
         "mechanism is not homomorphic: it cannot decode from a sum-only transport"
     );
+    assert_eq!(
+        dropouts.len(),
+        window,
+        "dropout schedule must cover every round of the window"
+    );
+    // validate the schedule before any shard does work (fail closed)
+    let survivor_sets: Vec<SurvivorSet> =
+        dropouts.iter().map(|d| SurvivorSet::with_dropped(pool.n_clients, d)).collect();
     let session_seed = derive_session_seed(root_seed, start_round);
     let seeds: Arc<Vec<u64>> = Arc::new(
         (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
@@ -337,6 +398,7 @@ pub fn run_rounds_encoded(
     // both sides derive it from (transport, session_seed, W) alone
     let transports: Arc<Vec<Arc<dyn Transport>>> =
         Arc::new(session_round_transports(transport.as_ref(), session_seed, window));
+    let dropouts_arc: Arc<Vec<Vec<usize>>> = Arc::new(dropouts.to_vec());
     let state = Arc::new(state.to_vec());
     for shard in &pool.shards {
         shard
@@ -345,6 +407,7 @@ pub fn run_rounds_encoded(
                 start_round,
                 state: state.clone(),
                 seeds: seeds.clone(),
+                dropouts: dropouts_arc.clone(),
                 encoder: encoder.clone(),
                 transports: transports.clone(),
             })
@@ -352,20 +415,26 @@ pub fn run_rounds_encoded(
     }
     // collect shard windows; fold x-sums in shard order so the true-mean
     // metric is deterministic regardless of arrival order
-    let mut pieces: Vec<(usize, usize, Vec<ShardRoundFold>)> =
-        Vec::with_capacity(pool.shards.len());
+    let mut pieces: Vec<(usize, Vec<ShardRoundFold>)> = Vec::with_capacity(pool.shards.len());
     for _ in 0..pool.shards.len() {
         match pool.results_rx.recv().expect("shard result") {
-            ShardResult::EncodedWindow { start, clients, rounds } => {
-                pieces.push((start, clients, rounds));
+            ShardResult::EncodedWindow { start, rounds } => {
+                pieces.push((start, rounds));
             }
             ShardResult::Computed { .. } => {
                 unreachable!("compute result during an encoded round")
             }
         }
     }
-    pieces.sort_by_key(|&(start, _, _)| start);
-    let dim = pieces[0].2[0].x_sum.len();
+    pieces.sort_by_key(|&(start, _)| start);
+    // every round has >= 1 survivor (SurvivorSet guarantees it), so some
+    // shard-round fold carries a dimension
+    let dim = pieces
+        .iter()
+        .flat_map(|(_, rounds)| rounds.iter())
+        .find(|f| !f.x_sum.is_empty())
+        .map(|f| f.x_sum.len())
+        .expect("every round has at least one survivor");
     let mut session = TransportSession::open(
         transport.as_ref(),
         session_seed,
@@ -374,30 +443,42 @@ pub fn run_rounds_encoded(
         seeds.as_slice(),
     );
     let mut x_sums = vec![vec![0.0f64; dim]; window];
-    for (_, clients, rounds) in pieces {
+    for (_, rounds) in pieces {
         assert_eq!(rounds.len(), window, "shard returned a different window");
         for (r, fold) in rounds.into_iter().enumerate() {
             for (a, v) in x_sums[r].iter_mut().zip(&fold.x_sum) {
                 *a += v;
             }
-            session.fold_partial(r, fold.partial, clients, &fold.bits);
+            match fold.partial {
+                Some(p) => session.fold_partial(r, p, &fold.clients, &fold.bits),
+                None => assert!(fold.clients.is_empty(), "shard lost a partial"),
+            }
         }
     }
+    // announce the schedule with the survivors' recovery shares (the
+    // in-process analogue of the share-collection phase)
+    let announced: Vec<RoundDropouts> = survivor_sets
+        .iter()
+        .enumerate()
+        .map(|(r, s)| RoundDropouts::announce(session_seed, r as u64, s))
+        .collect();
     let shared: Vec<SharedRound> = (0..window).map(|r| *session.round(r)).collect();
     session
-        .close()
+        .close_with_dropouts(&announced)
         .into_iter()
         .zip(shared)
         .zip(x_sums)
         .enumerate()
-        .map(|(r, (((payload, bits), round), x_sum))| {
-            let estimate = decoder.decode(&payload, &round);
+        .map(|(r, (((payload, bits, survivors), round), x_sum))| {
+            let estimate = decoder.decode_survivors(&payload, &round, &survivors);
+            let n_alive = survivors.n_alive();
             let true_mean: Vec<f64> =
-                x_sum.into_iter().map(|v| v / pool.n_clients as f64).collect();
+                x_sum.into_iter().map(|v| v / n_alive as f64).collect();
             RoundReport {
                 round: start_round + r as u64,
                 output: RoundOutput { estimate, bits },
                 true_mean,
+                survivors: n_alive,
             }
         })
         .collect()
@@ -452,6 +533,28 @@ where
 {
     let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
     run_rounds_encoded(pool, encoder, transport, mech, start_round, window, state, root_seed)
+}
+
+/// Windowed convenience wrapper with a per-round dropout schedule (see
+/// [`run_rounds_encoded_with_dropouts`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_mech_with_dropouts<M>(
+    pool: &ClientPool,
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    dropouts: &[Vec<usize>],
+) -> Vec<RoundReport>
+where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+    run_rounds_encoded_with_dropouts(
+        pool, encoder, transport, mech, start_round, window, state, root_seed, dropouts,
+    )
 }
 
 #[cfg(test)]
@@ -632,5 +735,91 @@ mod tests {
         }
         assert_eq!(estimates[0], estimates[1]);
         assert_eq!(estimates[0], estimates[2]);
+    }
+
+    #[test]
+    fn dropout_windowed_secagg_matches_dropout_windowed_plain() {
+        // W=4 with a different announced dropout each round: the masked
+        // session (with recovery) must equal the Plain session over the
+        // same survivors, bit for bit, and report survivor counts
+        let pool = ClientPool::spawn(9, Arc::new(round_varying_compute));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let schedule: Vec<Vec<usize>> = vec![vec![2], vec![7], vec![0], vec![5]];
+        let plain = run_rounds_mech_with_dropouts(
+            &pool, &mech, Arc::new(Plain), 0, 4, &[], 11, &schedule,
+        );
+        let masked = run_rounds_mech_with_dropouts(
+            &pool, &mech, Arc::new(SecAgg::new()), 0, 4, &[], 11, &schedule,
+        );
+        for (p, m) in plain.iter().zip(&masked) {
+            assert_eq!(p.output.estimate, m.output.estimate, "round {}", p.round);
+            assert_eq!(p.output.bits.messages, m.output.bits.messages);
+            assert_eq!(p.survivors, 8);
+            assert_eq!(m.survivors, 8);
+            assert_eq!(p.true_mean, m.true_mean);
+        }
+    }
+
+    #[test]
+    fn dropout_true_mean_is_survivor_mean() {
+        let pool = ClientPool::spawn(6, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let reps = run_rounds_mech_with_dropouts(
+            &pool, &mech, Arc::new(Plain), 3, 1, &[], 9, &[vec![1, 4]],
+        );
+        let rep = &reps[0];
+        assert_eq!(rep.survivors, 4);
+        let mut want = vec![0.0f64; 5];
+        for c in [0usize, 2, 3, 5] {
+            for (w, v) in want.iter_mut().zip(round_varying_compute(c, 3, &[])) {
+                *w += v;
+            }
+        }
+        for (a, b) in rep.true_mean.iter().zip(want.iter().map(|v| v / 4.0)) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // the estimate tracks the survivor mean, not the fleet mean
+        for (e, t) in rep.output.estimate.iter().zip(&rep.true_mean) {
+            assert!((e - t).abs() < 3.0, "est {e} vs true {t}");
+        }
+    }
+
+    #[test]
+    fn dropout_rounds_invariant_under_worker_count() {
+        // shards skipping dropped clients must stay order- and
+        // partition-free: identical estimates for any worker count,
+        // including shards that lose ALL their clients in some round
+        let mech = IrwinHallMechanism::new(0.2, 4.0);
+        let schedule: Vec<Vec<usize>> = vec![vec![0, 1, 2], vec![10], vec![4, 9]];
+        let mut estimates: Vec<Vec<Vec<f64>>> = Vec::new();
+        for threads in [1usize, 4, 11] {
+            let pool = ClientPool::spawn_with_threads(
+                11,
+                Arc::new(round_varying_compute),
+                Some(threads),
+            );
+            let reps = run_rounds_mech_with_dropouts(
+                &pool, &mech, Arc::new(SecAgg::new()), 1, 3, &[], 77, &schedule,
+            );
+            estimates.push(reps.into_iter().map(|r| r.output.estimate).collect());
+        }
+        assert_eq!(estimates[0], estimates[1]);
+        assert_eq!(estimates[0], estimates[2]);
+    }
+
+    #[test]
+    fn dropout_empty_schedule_is_bit_identical_to_plain_run() {
+        let pool = ClientPool::spawn(7, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let none: Vec<Vec<usize>> = vec![Vec::new(); 2];
+        let a = run_rounds_mech(&pool, &mech, Arc::new(SecAgg::new()), 0, 2, &[], 5);
+        let b = run_rounds_mech_with_dropouts(
+            &pool, &mech, Arc::new(SecAgg::new()), 0, 2, &[], 5, &none,
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.output.estimate, y.output.estimate);
+            assert_eq!(x.survivors, 7);
+            assert_eq!(y.survivors, 7);
+        }
     }
 }

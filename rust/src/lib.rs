@@ -47,8 +47,14 @@
 //! is the W=1 special case, coordinator windows run via
 //! [`coordinator::runtime::run_rounds_encoded`], and a W-round windowed
 //! session is bit-identical to W independent Plain rounds (property
-//! tested). Everything stays deterministic given the root seed — see the
-//! determinism ADR in `docs/determinism.md`.
+//! tested). *Announced dropouts* recover instead of aborting
+//! ([`mechanisms::session::TransportSession::close_with_dropouts`]):
+//! survivors' recovery shares let the server reconstruct a dropped
+//! client's outstanding pairwise masks, the window closes over the
+//! survivor set, and survivor-aware decoders keep the exact error law at
+//! the rescaled n′ scale (README has the threat model). Everything stays
+//! deterministic given the root seed — see the determinism ADR in
+//! `docs/determinism.md`.
 //!
 //! ## Layout (three-layer architecture, Python never on the request path)
 //!

@@ -19,7 +19,7 @@ use std::sync::{Arc, Mutex};
 use super::decompose::Decomposer;
 use super::pipeline::{
     impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
-    ServerDecoder, SharedRound,
+    ServerDecoder, SharedRound, SurvivorSet,
 };
 use super::traits::BitsAccount;
 use crate::quantizer::round_half_up;
@@ -142,21 +142,58 @@ impl ServerDecoder for AggregateGaussian {
     }
 
     fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        self.decode_survivors(payload, round, &SurvivorSet::full(round.n_clients))
+    }
+
+    /// Survivor-aware decode that KEEPS the exact-Gaussian claim. Both the
+    /// step w and the decomposition (A, B) ~ Decompose(IH(n), N(0, 1))
+    /// were fixed at encode time for the announced n, so conditional on A
+    /// a survivor-only sum carries only n′ dither-error terms — an
+    /// A·IH(n′) mixture, which is NOT Gaussian. The decoder restores the
+    /// n-term law by completing the n − n′ missing U(−1/2, 1/2) terms from
+    /// the shared [`SharedRound::dropout_rng`] streams and rescaling the B
+    /// leg by n/n′:
+    ///
+    ///   y = (A·w/n′)(Σ_S m − Σ_S s + Σ_D ũ) + B·σ·(n/n′)
+    ///
+    /// giving error = (σ·n/n′)·(A·IH_std(n) + B) ~ N(0, (σ·n/n′)²) —
+    /// exactly Gaussian at the rescaled n′ variance (KS-tested).
+    fn decode_survivors(
+        &self,
+        payload: &Payload,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
         let n = round.n_clients;
+        assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
         let d = round.dim;
         let ab = self.ab(round);
         let m_sum = payload.description_sum();
         assert_eq!(m_sum.len(), d);
-        // re-derive every client's dithers from the shared seed: O(d) state
+        // re-derive the SURVIVORS' dithers from the shared seed: O(d) state
         let mut s_sum = vec![0.0f64; d];
-        for i in 0..n {
+        for i in survivors.alive_iter() {
             let mut rng = round.client_rng(i);
             for sj in s_sum.iter_mut() {
                 *sj += rng.u01() - 0.5;
             }
         }
+        let mut topup = vec![0.0f64; d];
+        for j in survivors.dropped_iter() {
+            let mut rng = round.dropout_rng(j);
+            for tj in topup.iter_mut() {
+                *tj += rng.dither();
+            }
+        }
+        let w = self.step(n);
+        let n_alive = survivors.n_alive() as f64;
+        let rescale = n as f64 / n_alive;
         (0..d)
-            .map(|j| self.decode_from_sums(m_sum[j] as f64, s_sum[j], ab[j].0, ab[j].1, n))
+            .map(|j| {
+                let (a, b) = ab[j];
+                a * w / n_alive * (m_sum[j] as f64 - s_sum[j] + topup[j])
+                    + b * self.sigma * rescale
+            })
             .collect()
     }
 }

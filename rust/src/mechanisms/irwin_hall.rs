@@ -7,7 +7,7 @@
 
 use super::pipeline::{
     impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, ServerDecoder,
-    SharedRound,
+    SharedRound, SurvivorSet,
 };
 use super::traits::BitsAccount;
 use crate::coding::fixed::FixedCode;
@@ -89,20 +89,49 @@ impl ServerDecoder for IrwinHallMechanism {
     }
 
     fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+        self.decode_survivors(payload, round, &SurvivorSet::full(round.n_clients))
+    }
+
+    /// Survivor-aware decode. The step w was sized to the *announced* n at
+    /// encode time, so with n′ < n survivors the decoder (a) sums only the
+    /// survivors' re-derived dithers, (b) completes the n − n′ missing
+    /// U(−1/2, 1/2] quantization-error terms from the shared
+    /// [`SharedRound::dropout_rng`] streams, and (c) averages over n′.
+    /// The aggregate error keeps its exact n-term Irwin–Hall law at the
+    /// rescaled scale σ·n/n′ (KS-tested).
+    fn decode_survivors(
+        &self,
+        payload: &Payload,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
         let n = round.n_clients;
+        assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
         let d = round.dim;
         let m_sum = payload.description_sum();
         assert_eq!(m_sum.len(), d);
-        // shared randomness: the server re-derives every client's dithers —
+        // shared randomness: the server re-derives the SURVIVORS' dithers —
         // O(d) state, never the per-client descriptions
         let mut s_sum = vec![0.0f64; d];
-        for i in 0..n {
+        for i in survivors.alive_iter() {
             let mut rng = round.client_rng(i);
             for sj in s_sum.iter_mut() {
                 *sj += rng.u01();
             }
         }
-        (0..d).map(|j| self.decode_from_sums(m_sum[j] as f64, s_sum[j], n)).collect()
+        // dropout noise completion: a fresh shared U(−1/2, 1/2) draw
+        // stands in for each dropped client's unknowable dithered
+        // quantization error
+        let mut topup = vec![0.0f64; d];
+        for j in survivors.dropped_iter() {
+            let mut rng = round.dropout_rng(j);
+            for tj in topup.iter_mut() {
+                *tj += rng.dither();
+            }
+        }
+        let w = self.step(n);
+        let n_alive = survivors.n_alive() as f64;
+        (0..d).map(|j| w * (m_sum[j] as f64 - s_sum[j] + topup[j]) / n_alive).collect()
     }
 }
 
@@ -234,5 +263,62 @@ mod tests {
         assert!(m.is_homomorphic());
         assert!(!m.gaussian_noise());
         assert!(m.fixed_length());
+    }
+
+    #[test]
+    fn dropout_decode_at_full_set_equals_decode() {
+        use crate::mechanisms::pipeline::{Plain, SurvivorSet, Transport};
+        let n = 5;
+        let xs = client_data(n, 4, 21);
+        let mech = IrwinHallMechanism::new(0.7, 16.0);
+        let round = crate::mechanisms::pipeline::SharedRound::new(33, n, 4);
+        let mut part = Plain.empty(&round);
+        for (i, x) in xs.iter().enumerate() {
+            Plain.submit(&mut part, i, &mech.encode(i, x, &round), &round);
+        }
+        let payload = Plain.finish(part, &round);
+        assert_eq!(
+            mech.decode(&payload, &round),
+            mech.decode_survivors(&payload, &round, &SurvivorSet::full(n))
+        );
+    }
+
+    #[test]
+    fn dropout_survivor_noise_is_exactly_irwin_hall_at_rescaled_scale() {
+        // one dropout out of n=8: survivor error must be exactly
+        // IH(n, 0, σ·n/n′) — the noise completion keeps the n-term law,
+        // the averaging rescales it
+        use crate::mechanisms::pipeline::{Plain, SurvivorSet, Transport};
+        let n = 8;
+        let sigma = 0.8;
+        let xs = client_data(n, 5, 77);
+        let mech = IrwinHallMechanism::new(sigma, 16.0);
+        let survivors = SurvivorSet::with_dropped(n, &[5]);
+        let smean: Vec<f64> = {
+            let mut m = vec![0.0; 5];
+            for i in survivors.alive_iter() {
+                for (mj, xj) in m.iter_mut().zip(&xs[i]) {
+                    *mj += xj;
+                }
+            }
+            m.into_iter().map(|v| v / survivors.n_alive() as f64).collect()
+        };
+        let mut errs = Vec::new();
+        for r in 0..700u64 {
+            let round = crate::mechanisms::pipeline::SharedRound::new(40_000 + r, n, 5);
+            let mut part = Plain.empty(&round);
+            for i in survivors.alive_iter() {
+                Plain.submit(&mut part, i, &mech.encode(i, &xs[i], &round), &round);
+            }
+            let est = mech.decode_survivors(&Plain.finish(part, &round), &round, &survivors);
+            for j in 0..5 {
+                errs.push(est[j] - smean[j]);
+            }
+        }
+        let scale = sigma * n as f64 / survivors.n_alive() as f64;
+        let ih = IrwinHall::new(n as u64, 0.0, scale);
+        let res = ks_test(&errs, |e| ih.cdf(e));
+        assert!(res.p_value > 0.003, "p={}", res.p_value);
+        assert!((variance(&errs) - scale * scale).abs() < 0.1, "var={}", variance(&errs));
     }
 }

@@ -23,7 +23,8 @@
 //! * [`sigm`] — §5.1 + Alg. 5: subsampled individual Gaussian mechanism.
 //! * [`session`] — batched multi-round transport sessions: one opening per
 //!   window of W rounds, a ring of per-round accumulators, one batched
-//!   unmask; single-round aggregation is the W=1 special case.
+//!   unmask (with Bonawitz-style pairwise-seed recovery for announced
+//!   dropouts); single-round aggregation is the W=1 special case.
 
 pub mod traits;
 pub mod pipeline;
@@ -40,8 +41,11 @@ pub use individual::{IndividualGaussian, LayeredVariant};
 pub use irwin_hall::IrwinHallMechanism;
 pub use pipeline::{
     run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Pipeline, Plain, RoundCache,
-    SecAgg, ServerDecoder, SharedRound, Transport, TransportPartial, Unicast,
+    SecAgg, ServerDecoder, SharedRound, SurvivorSet, Transport, TransportPartial, Unicast,
 };
-pub use session::{derive_session_seed, run_window, TransportSession};
+pub use session::{
+    derive_session_seed, run_window, run_window_with_dropouts, session_recovery_share,
+    RoundDropouts, TransportSession,
+};
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

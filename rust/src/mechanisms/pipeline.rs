@@ -59,6 +59,13 @@ use crate::util::rng::Rng;
 /// Stream id of globally shared randomness (all clients + server).
 pub const GLOBAL_STREAM: u64 = u64::MAX;
 
+/// Base stream tag for the server's *dropout noise completion* draws
+/// (xor'd with the dropped client's id). Disjoint by construction from
+/// the per-client streams (small integers) and the global/aux streams
+/// (`u64::MAX − k`), so completing a dropped client's noise never
+/// correlates with any live stream.
+pub const DROPOUT_NOISE_STREAM: u64 = 0xD809_B07E_0000_0000;
+
 /// One aggregation round's public context: the shared seed plus the round
 /// shape. Identical on every client and the server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +96,18 @@ impl SharedRound {
         Rng::derive(self.seed, GLOBAL_STREAM - offset)
     }
 
+    /// The dropout-noise-completion stream for a dropped client: when a
+    /// round closes over survivors, dropout-aware decoders replace each
+    /// dropped client's (unknowable) quantization error with a fresh
+    /// U(−1/2, 1/2) draw from this stream, restoring the exact n-term
+    /// aggregate noise law at a rescaled variance (see
+    /// [`ServerDecoder::decode_survivors`]). Derived from the round seed,
+    /// so every decode path — and the Plain reference in tests — draws the
+    /// identical completion noise.
+    pub fn dropout_rng(&self, dropped: usize) -> Rng {
+        Rng::derive(self.seed, DROPOUT_NOISE_STREAM ^ dropped as u64)
+    }
+
     /// The shared coordinate-subsampling matrix B[i][j] ~ Bernoulli(γ),
     /// drawn row-major from the round's global stream. SIGM and CSGM both
     /// derive their subsamples through this one helper, which is what
@@ -103,6 +122,67 @@ impl SharedRound {
 
     fn key(&self) -> (u64, usize, usize) {
         (self.seed, self.n_clients, self.dim)
+    }
+}
+
+/// The clients a round actually closed over: the full announced fleet
+/// minus the announced dropouts. Decoders receive this alongside the
+/// [`SharedRound`] (whose `n_clients` stays the *announced* fleet size —
+/// encoders sized their steps and masks to it before anyone dropped).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SurvivorSet {
+    alive: Vec<bool>,
+    n_alive: usize,
+}
+
+impl SurvivorSet {
+    /// Every client survived (the default for dropout-free rounds).
+    pub fn full(n_clients: usize) -> Self {
+        assert!(n_clients > 0, "need at least one client");
+        Self { alive: vec![true; n_clients], n_alive: n_clients }
+    }
+
+    /// The fleet minus the announced `dropped` clients. Panics on an
+    /// out-of-range id, a duplicate announcement, or an empty survivor
+    /// set — all fail-closed conditions.
+    pub fn with_dropped(n_clients: usize, dropped: &[usize]) -> Self {
+        let mut s = Self::full(n_clients);
+        for &j in dropped {
+            assert!(j < n_clients, "dropped client {j} out of range for {n_clients} clients");
+            assert!(s.alive[j], "client {j} announced dropped twice");
+            s.alive[j] = false;
+            s.n_alive -= 1;
+        }
+        assert!(s.n_alive > 0, "fails closed: a round cannot close with zero survivors");
+        s
+    }
+
+    /// Announced fleet size n.
+    pub fn n(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// True survivor count n′.
+    pub fn n_alive(&self) -> usize {
+        self.n_alive
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.n_alive == self.alive.len()
+    }
+
+    pub fn is_alive(&self, client: usize) -> bool {
+        self.alive[client]
+    }
+
+    /// Surviving client ids, ascending.
+    pub fn alive_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.alive.iter().enumerate().filter(|(_, &a)| a).map(|(i, _)| i)
+    }
+
+    /// Dropped client ids, ascending.
+    pub fn dropped_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.alive.iter().enumerate().filter(|(_, &a)| !a).map(|(i, _)| i)
     }
 }
 
@@ -205,6 +285,30 @@ pub trait Transport: Send + Sync {
     /// Close the round and surface the server's view.
     fn finish(&self, part: TransportPartial, round: &SharedRound) -> Payload;
 
+    /// Close the round over a survivor-only client set (announced
+    /// dropouts). The default fails closed — a transport must explicitly
+    /// support partial client sets. The summing transports do: [`Plain`]'s
+    /// accumulator already holds exactly the survivor sum, and [`SecAgg`]
+    /// closes after the session has folded the reconstructed masks of
+    /// every dropped client back in
+    /// ([`crate::secagg::reconstruct_dropped_masks`] — the session layer
+    /// owns that step). [`Unicast`] keeps the default: its per-client
+    /// decoders index payloads by client id and are not dropout-aware.
+    fn finish_survivors(
+        &self,
+        part: TransportPartial,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Payload {
+        assert!(
+            survivors.is_full(),
+            "transport {} fails closed under dropouts: it cannot close over a partial \
+             client set",
+            self.name(),
+        );
+        self.finish(part, round)
+    }
+
     /// The transport instance serving round `round_in_window` of a batched
     /// session opened with `session_seed`
     /// ([`crate::mechanisms::session::TransportSession`]). Transports with
@@ -289,6 +393,17 @@ impl Transport for Plain {
             TransportPartial::Sum(None) => panic!("no clients submitted"),
             _ => panic!("Plain transport got a foreign partial"),
         }
+    }
+
+    fn finish_survivors(
+        &self,
+        part: TransportPartial,
+        round: &SharedRound,
+        _survivors: &SurvivorSet,
+    ) -> Payload {
+        // the accumulator holds exactly the survivors' Σ mᵢ — dropouts
+        // simply never contributed, so the full-set close applies as-is
+        self.finish(part, round)
     }
 
     fn for_session_round(&self, _session_seed: u64, _round_in_window: u64) -> Arc<dyn Transport> {
@@ -473,6 +588,21 @@ impl Transport for SecAgg {
         }
     }
 
+    fn finish_survivors(
+        &self,
+        part: TransportPartial,
+        round: &SharedRound,
+        _survivors: &SurvivorSet,
+    ) -> Payload {
+        // precondition (enforced by the session layer, the only caller
+        // that closes partial rounds): every dropped client's outstanding
+        // pairwise masks were reconstructed from the survivors' recovery
+        // shares and folded back into the accumulator, so the residual
+        // masks cancel and the signed lift below yields the survivors'
+        // exact Σ mᵢ — bit-identical to Plain over the same survivor set
+        self.finish(part, round)
+    }
+
     fn for_session_round(&self, session_seed: u64, round_in_window: u64) -> Arc<dyn Transport> {
         // one session opening, W per-round mask roots from its stream
         let schedule = secagg::session_mask_root(session_seed);
@@ -491,6 +621,34 @@ pub trait ServerDecoder: Send + Sync {
     fn sum_decodable(&self) -> bool;
 
     fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64>;
+
+    /// Decode a round that closed over a survivor-only client set
+    /// (announced dropouts with mask recovery). `round.n_clients` remains
+    /// the announced fleet size n that the encoders sized their steps to;
+    /// `survivors` carries the true survivor count n′ the estimate must
+    /// average over.
+    ///
+    /// Dropout-aware decoders must (a) re-derive shared randomness — e.g.
+    /// dithers — for *survivors only*, (b) average over n′, and (c) if
+    /// their exact-error claim depends on the number of noise terms,
+    /// complete the missing terms from [`SharedRound::dropout_rng`] so the
+    /// aggregate error keeps its exact n-term law at the rescaled scale
+    /// σ·n/n′ (the aggregate Gaussian and Irwin–Hall mechanisms do this).
+    ///
+    /// The default fails closed: a decoder that has not opted in refuses
+    /// survivor-only payloads.
+    fn decode_survivors(
+        &self,
+        payload: &Payload,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
+        assert!(
+            survivors.is_full(),
+            "decoder fails closed under dropouts: it is not survivor-aware"
+        );
+        self.decode(payload, round)
+    }
 }
 
 /// Static mechanism metadata (the Table 1 property matrix) shared by the
@@ -625,6 +783,26 @@ where
             &self.decoder,
             rounds,
             session_seed,
+        )
+    }
+
+    /// [`Self::aggregate_window`] under a per-round dropout schedule:
+    /// `dropouts[r]` lists the clients dropping in round r of the window
+    /// (announced, recovered, decoded over the survivors — see
+    /// [`crate::mechanisms::session::run_window_with_dropouts`]).
+    pub fn aggregate_window_with_dropouts(
+        &self,
+        rounds: &[(&[Vec<f64>], u64)],
+        session_seed: u64,
+        dropouts: &[Vec<usize>],
+    ) -> Vec<RoundOutput> {
+        super::session::run_window_with_dropouts(
+            &self.encoder,
+            &self.transport,
+            &self.decoder,
+            rounds,
+            session_seed,
+            dropouts,
         )
     }
 }
@@ -943,6 +1121,74 @@ mod tests {
             12
         });
         assert_eq!((*v1c, calls), (10, 2));
+    }
+
+    #[test]
+    fn survivor_set_counts_and_iterates() {
+        let s = SurvivorSet::with_dropped(5, &[1, 3]);
+        assert_eq!((s.n(), s.n_alive()), (5, 3));
+        assert!(!s.is_full());
+        assert_eq!(s.alive_iter().collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(s.dropped_iter().collect::<Vec<_>>(), vec![1, 3]);
+        assert!(s.is_alive(0) && !s.is_alive(3));
+        assert!(SurvivorSet::full(4).is_full());
+        assert!(SurvivorSet::with_dropped(4, &[]).is_full());
+    }
+
+    #[test]
+    #[should_panic(expected = "announced dropped twice")]
+    fn survivor_set_rejects_duplicate_dropout() {
+        let _ = SurvivorSet::with_dropped(5, &[2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero survivors")]
+    fn survivor_set_rejects_empty_survivors() {
+        let _ = SurvivorSet::with_dropped(2, &[0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "fails closed under dropouts")]
+    fn unicast_fails_closed_over_partial_client_set() {
+        let xs = data();
+        let round = SharedRound::new(3, xs.len(), xs[0].len());
+        let t = Unicast;
+        let mut p = t.empty(&round);
+        t.submit(&mut p, 0, &RoundToInt.encode(0, &xs[0], &round), &round);
+        t.submit(&mut p, 1, &RoundToInt.encode(1, &xs[1], &round), &round);
+        let _ = t.finish_survivors(p, &round, &SurvivorSet::with_dropped(3, &[2]));
+    }
+
+    #[test]
+    #[should_panic(expected = "not survivor-aware")]
+    fn default_decoder_fails_closed_over_partial_client_set() {
+        // a decoder without a decode_survivors override must refuse
+        // survivor-only payloads rather than silently mis-averaging
+        struct NotAware;
+        impl ServerDecoder for NotAware {
+            fn sum_decodable(&self) -> bool {
+                true
+            }
+            fn decode(&self, _: &Payload, _: &SharedRound) -> Vec<f64> {
+                vec![]
+            }
+        }
+        let round = SharedRound::new(1, 3, 2);
+        let payload = Payload::Sum(vec![0, 0]);
+        let _ = NotAware.decode_survivors(&payload, &round, &SurvivorSet::with_dropped(3, &[1]));
+    }
+
+    #[test]
+    fn dropout_rng_streams_are_client_distinct_and_deterministic() {
+        let round = SharedRound::new(77, 4, 8);
+        let mut r0 = round.dropout_rng(0);
+        let mut r0b = round.dropout_rng(0);
+        let mut r1 = round.dropout_rng(1);
+        let mut c0 = round.client_rng(0);
+        let x = r0.next_u64();
+        assert_eq!(x, r0b.next_u64());
+        assert_ne!(x, r1.next_u64());
+        assert_ne!(x, c0.next_u64());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! per-round accumulators — still O(d) server state per in-flight round
 //! for the summing transports — and closes with one batched unmask.
 //!
-//! Three invariants, all tested:
+//! Four invariants, all tested:
 //!
 //! * **W=1 is the single-round path.** [`crate::mechanisms::pipeline::run_pipeline`]
 //!   delegates to a
@@ -29,6 +29,19 @@
 //!   refuses to unmask anything unless *every* round of the window
 //!   received *every* client's submission: a session torn down mid-window
 //!   surfaces no partial payloads.
+//! * **Announced dropouts recover; unannounced gaps abort.** Real fleets
+//!   lose clients mid-window. [`TransportSession::close_with_dropouts`]
+//!   closes each round over its *survivors*: for masked transports it
+//!   reconstructs every dropped client's outstanding pairwise masks from
+//!   the survivors' [`crate::secagg::RecoveryShare`]s (Bonawitz-style
+//!   seed recovery, [`crate::secagg::reconstruct_dropped_masks`]) before
+//!   unmasking, so the survivor sum decodes bit-identically to Plain
+//!   summation over the same survivor set. The fail-closed contract is
+//!   preserved: a client may not both submit and be announced dropped, a
+//!   recovery share offered for a live client is rejected, a dropped
+//!   client's share set must cover exactly the survivor set, gaps that
+//!   nobody announced still abort, and nothing can be announced once the
+//!   session is closed.
 //!
 //! The coordinator drives the same object from its worker shards
 //! ([`crate::coordinator::runtime::run_rounds_encoded`]): shards encode
@@ -38,9 +51,11 @@
 use std::sync::Arc;
 
 use super::pipeline::{
-    ClientEncoder, Descriptions, Payload, ServerDecoder, SharedRound, Transport, TransportPartial,
+    ClientEncoder, Descriptions, Payload, ServerDecoder, SharedRound, SurvivorSet, Transport,
+    TransportPartial,
 };
 use super::traits::{BitsAccount, RoundOutput};
+use crate::secagg::{self, RecoveryShare, SecAggParams};
 use crate::util::rng::Rng;
 
 /// Maximum rounds per session window. Bounds in-flight server state at
@@ -73,18 +88,67 @@ pub fn session_round_transports(
     (0..window).map(|r| transport.for_session_round(session_seed, r as u64)).collect()
 }
 
+/// A surviving `holder`'s recovery share for `dropped` in round
+/// `round_in_window` of a session opened with `session_seed`. The pairwise
+/// seed derives from the same per-round mask root the SecAgg transport was
+/// rekeyed with
+/// ([`crate::secagg::session_mask_root`] → [`crate::secagg::round_mask_root`]),
+/// so the server's reconstruction expands exactly the mask streams the
+/// survivors folded into their submissions.
+pub fn session_recovery_share(
+    session_seed: u64,
+    round_in_window: u64,
+    holder: usize,
+    dropped: usize,
+) -> RecoveryShare {
+    let root =
+        secagg::round_mask_root(secagg::session_mask_root(session_seed), round_in_window);
+    secagg::recovery_share(root, holder, dropped)
+}
+
+/// One round's dropout announcement: which clients dropped, plus the
+/// survivors' recovery shares for each of them. Validated fail-closed by
+/// [`TransportSession::close_with_dropouts`]: every dropped client needs a
+/// share from *every* survivor, shares for live clients or from dropped
+/// holders are rejected, and the announced set must exactly explain the
+/// round's submission gap.
+#[derive(Clone, Debug, Default)]
+pub struct RoundDropouts {
+    /// announced dropped client ids
+    pub dropped: Vec<usize>,
+    /// recovery shares, any order; one per (survivor, dropped) pair
+    pub shares: Vec<RecoveryShare>,
+}
+
+impl RoundDropouts {
+    /// The full announcement for one session round: every survivor
+    /// contributes its pairwise share for every dropped client (the
+    /// simulation analogue of the share-collection phase of Bonawitz et
+    /// al. — in-process, the survivors' shares are derived directly).
+    pub fn announce(session_seed: u64, round_in_window: u64, survivors: &SurvivorSet) -> Self {
+        let dropped: Vec<usize> = survivors.dropped_iter().collect();
+        let mut shares = Vec::with_capacity(dropped.len() * survivors.n_alive());
+        for &j in &dropped {
+            for i in survivors.alive_iter() {
+                shares.push(session_recovery_share(session_seed, round_in_window, i, j));
+            }
+        }
+        Self { dropped, shares }
+    }
+}
+
 /// One in-flight round of the window: its accumulator, bit accounting and
 /// submission tracking (the fail-closed gate).
 struct RoundSlot {
     partial: TransportPartial,
     bits: BitsAccount,
     submitted: usize,
-    /// which clients submitted directly — duplicate submits must not be
-    /// able to impersonate a missing client's count
+    /// which clients submitted — directly or through a shard fold.
+    /// Duplicates must not stand in for a missing client's count, and
+    /// dropout announcements are checked against this record at close.
     seen: Vec<bool>,
-    /// whether this round received pre-folded shard partials; folds and
-    /// direct submits must not mix (a fold cannot mark `seen`, so mixing
-    /// would let a duplicate client slip past the fail-closed count)
+    /// whether this round is fed by pre-folded shard partials; folds and
+    /// direct submits must not mix (one aggregation discipline per round)
     folded: bool,
 }
 
@@ -101,6 +165,9 @@ pub struct TransportSession {
     rounds: Vec<SharedRound>,
     transports: Vec<Arc<dyn Transport>>,
     slots: Vec<RoundSlot>,
+    /// set once a close succeeded: every later submit/fold/announce/close
+    /// fails closed (nothing can be amended post-unmask)
+    closed: bool,
 }
 
 impl TransportSession {
@@ -138,7 +205,7 @@ impl TransportSession {
                 folded: false,
             })
             .collect();
-        Self { n_clients, rounds, transports, slots }
+        Self { n_clients, rounds, transports, slots, closed: false }
     }
 
     /// Number of rounds in the window.
@@ -162,6 +229,7 @@ impl TransportSession {
     /// to stand in for a missing client in the fail-closed count (with
     /// SecAgg, double-counted masks would unmask to garbage).
     pub fn submit(&mut self, r: usize, client: usize, msg: &Descriptions) {
+        assert!(!self.closed, "fails closed: the session is already closed");
         let slot = &mut self.slots[r];
         assert!(
             !slot.folded,
@@ -177,27 +245,37 @@ impl TransportSession {
         slot.submitted += 1;
     }
 
-    /// Fold a pre-folded shard partial covering `clients` clients into
-    /// round r of the ring (the coordinator path: the orchestrator never
-    /// sees per-client messages). The count is trusted — shards are
-    /// in-process and fold disjoint client ranges; an external caller must
-    /// not feed overlapping partials.
+    /// Fold a pre-folded shard partial covering the listed `clients`
+    /// (global ids) into round r of the ring (the coordinator path: the
+    /// orchestrator never sees per-client messages). Every listed client
+    /// is marked submitted, so overlapping shard partials are rejected
+    /// like duplicate direct submissions, and dropout announcements are
+    /// checked against the same record at close — the fail-closed
+    /// contract is identical on both feeding paths.
     pub fn fold_partial(
         &mut self,
         r: usize,
         partial: TransportPartial,
-        clients: usize,
+        clients: &[usize],
         bits: &BitsAccount,
     ) {
+        assert!(!self.closed, "fails closed: the session is already closed");
         let slot = &mut self.slots[r];
         assert!(
             slot.submitted == 0 || slot.folded,
             "cannot mix shard folds with direct submits in round {r} of the window"
         );
         slot.folded = true;
+        for &c in clients {
+            assert!(
+                !slot.seen[c],
+                "duplicate submission from client {c} in round {r} of the window"
+            );
+            slot.seen[c] = true;
+        }
         slot.bits.merge(bits);
         self.transports[r].merge(&mut slot.partial, partial);
-        slot.submitted += clients;
+        slot.submitted += clients.len();
     }
 
     /// Whether every round of the window has all client submissions.
@@ -210,23 +288,144 @@ impl TransportSession {
     ///
     /// Fails closed: if ANY round of the window is missing submissions —
     /// a session interrupted mid-window — this panics before unmasking
-    /// anything, so no partial payload ever escapes a broken session.
-    pub fn close(self) -> Vec<(Payload, BitsAccount)> {
-        for (r, slot) in self.slots.iter().enumerate() {
+    /// anything, so no partial payload ever escapes a broken session. For
+    /// windows with *announced* dropouts use
+    /// [`close_with_dropouts`](Self::close_with_dropouts); this strict
+    /// close treats every gap as an interruption.
+    pub fn close(&mut self) -> Vec<(Payload, BitsAccount)> {
+        // a strict close IS the empty announcement: every gap is an
+        // interruption (close_with_dropouts enforces submitted + 0 == n
+        // per round with the same fail-closed message)
+        let none = vec![RoundDropouts::default(); self.window()];
+        self.close_with_dropouts(&none).into_iter().map(|(p, b, _)| (p, b)).collect()
+    }
+
+    /// Batched unmask over announced dropouts: close every round of the
+    /// window over its survivor set, reconstructing dropped clients'
+    /// outstanding pairwise masks from the survivors' recovery shares
+    /// before unmasking (see the module docs). Returns the per-round
+    /// server view, bit accounting, and survivor set, in round order.
+    ///
+    /// Fail-closed contract (every violation panics before ANY round is
+    /// unmasked):
+    /// * announcing after a close already happened,
+    /// * a client that both submitted and is announced dropped,
+    /// * a submission gap no announcement explains,
+    /// * a recovery share offered for a live (unannounced) client,
+    /// * a share held by a dropped client, a duplicate share, or a share
+    ///   set that does not cover every survivor.
+    pub fn close_with_dropouts(
+        &mut self,
+        announced: &[RoundDropouts],
+    ) -> Vec<(Payload, BitsAccount, SurvivorSet)> {
+        assert!(
+            !self.closed,
+            "fails closed: dropout announced after close — the session is already closed"
+        );
+        assert_eq!(
+            announced.len(),
+            self.window(),
+            "dropout announcements must cover every round of the window"
+        );
+        // validate the whole window before unmasking any round
+        let mut survivor_sets = Vec::with_capacity(self.window());
+        for (r, (slot, ann)) in self.slots.iter().zip(announced).enumerate() {
+            let survivors = SurvivorSet::with_dropped(self.n_clients, &ann.dropped);
+            // the seen-record covers BOTH feeding paths (direct submits
+            // and shard folds), so this check cannot be bypassed by an
+            // announcement whose count happens to balance a real gap
+            for &j in &ann.dropped {
+                assert!(
+                    !slot.seen[j],
+                    "fails closed: client {j} submitted in round {r} but was announced \
+                     dropped — a live client cannot be recovered"
+                );
+            }
             assert!(
-                slot.submitted == self.n_clients,
+                slot.submitted + ann.dropped.len() == self.n_clients,
                 "interrupted session fails closed: round {r} of the window has {}/{} client \
-                 submissions — refusing any partial unmask",
+                 submissions with {} announced dropouts — refusing any partial unmask",
                 slot.submitted,
                 self.n_clients,
+                ann.dropped.len(),
             );
+            Self::validate_recovery_shares(r, ann, &survivors);
+            survivor_sets.push(survivors);
         }
-        self.slots
+        self.closed = true;
+        let slots = std::mem::take(&mut self.slots);
+        slots
             .into_iter()
             .zip(&self.rounds)
             .zip(&self.transports)
-            .map(|((slot, round), t)| (t.finish(slot.partial, round), slot.bits))
+            .zip(announced)
+            .zip(survivor_sets)
+            .map(|((((slot, round), t), ann), survivors)| {
+                let mut partial = slot.partial;
+                // masked transports: fold the reconstructed masks of every
+                // dropped client back in so the residuals cancel
+                if let TransportPartial::Masked { sum: Some(v), modulus } = &mut partial {
+                    let params = SecAggParams { modulus: *modulus };
+                    for &j in &ann.dropped {
+                        let shares: Vec<RecoveryShare> =
+                            ann.shares.iter().filter(|s| s.dropped == j).copied().collect();
+                        let rec =
+                            secagg::reconstruct_dropped_masks(j, &shares, v.len(), params);
+                        for (a, mval) in v.iter_mut().zip(rec) {
+                            *a = (*a + mval) % *modulus;
+                        }
+                    }
+                }
+                (t.finish_survivors(partial, round, &survivors), slot.bits, survivors)
+            })
             .collect()
+    }
+
+    /// The share-bundle half of the fail-closed contract (see
+    /// [`close_with_dropouts`](Self::close_with_dropouts)). The share
+    /// *seeds* themselves cannot be verified server-side — that is the
+    /// security point — but a wrong seed yields uncancelled masks and is
+    /// caught by the Plain ≡ SecAgg property tests.
+    fn validate_recovery_shares(r: usize, ann: &RoundDropouts, survivors: &SurvivorSet) {
+        for share in &ann.shares {
+            assert!(
+                ann.dropped.contains(&share.dropped),
+                "fails closed: recovery share offered for live client {} in round {r} — only \
+                 announced dropouts may be recovered",
+                share.dropped,
+            );
+            assert!(
+                share.holder < survivors.n(),
+                "recovery share holder {} out of range in round {r}",
+                share.holder,
+            );
+            assert!(
+                survivors.is_alive(share.holder),
+                "fails closed: recovery share for client {} held by dropped client {} in \
+                 round {r} — only survivors may contribute shares",
+                share.dropped,
+                share.holder,
+            );
+        }
+        for &j in &ann.dropped {
+            let mut have = vec![false; survivors.n()];
+            for share in ann.shares.iter().filter(|s| s.dropped == j) {
+                assert!(
+                    !have[share.holder],
+                    "fails closed: duplicate recovery share from holder {} for dropped \
+                     client {j} in round {r}",
+                    share.holder,
+                );
+                have[share.holder] = true;
+            }
+            for i in survivors.alive_iter() {
+                assert!(
+                    have[i],
+                    "fails closed: recovery for dropped client {j} in round {r} is missing \
+                     the share of survivor {i} — refusing a partial reconstruction"
+                );
+            }
+        }
     }
 }
 
@@ -243,6 +442,31 @@ pub fn run_window(
     session_seed: u64,
 ) -> Vec<RoundOutput> {
     assert!(!rounds.is_empty(), "a session window needs at least one round");
+    let none: Vec<Vec<usize>> = vec![Vec::new(); rounds.len()];
+    run_window_with_dropouts(encoder, transport, decoder, rounds, session_seed, &none)
+}
+
+/// [`run_window`] under a per-round dropout schedule: `dropouts[r]` names
+/// the clients that drop in round r of the window. Dropped clients never
+/// encode or submit; at close the session recovers their outstanding
+/// masks from the survivors' shares ([`RoundDropouts::announce`]) and
+/// each round decodes over its true survivor set via
+/// [`ServerDecoder::decode_survivors`]. With an empty schedule this IS
+/// `run_window`, bit for bit.
+pub fn run_window_with_dropouts(
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    rounds: &[(&[Vec<f64>], u64)],
+    session_seed: u64,
+    dropouts: &[Vec<usize>],
+) -> Vec<RoundOutput> {
+    assert!(!rounds.is_empty(), "a session window needs at least one round");
+    assert_eq!(
+        dropouts.len(),
+        rounds.len(),
+        "dropout schedule must cover every round of the window"
+    );
     let (xs0, _) = rounds[0];
     assert!(!xs0.is_empty(), "need at least one client");
     assert!(
@@ -253,22 +477,26 @@ pub fn run_window(
     let dim = xs0[0].len();
     let seeds: Vec<u64> = rounds.iter().map(|&(_, seed)| seed).collect();
     let mut session = TransportSession::open(transport, session_seed, n, dim, &seeds);
+    let mut announced = Vec::with_capacity(rounds.len());
     for (r, &(xs, _)) in rounds.iter().enumerate() {
         assert_eq!(xs.len(), n, "client count changed mid-session");
+        let survivors = SurvivorSet::with_dropped(n, &dropouts[r]);
         let round = *session.round(r);
-        for (i, x) in xs.iter().enumerate() {
+        for i in survivors.alive_iter() {
+            let x = &xs[i];
             assert_eq!(x.len(), dim, "ragged client vectors");
             let msg = encoder.encode(i, x, &round);
             session.submit(r, i, &msg);
         }
+        announced.push(RoundDropouts::announce(session_seed, r as u64, &survivors));
     }
     let shared: Vec<SharedRound> = session.rounds.clone();
     session
-        .close()
+        .close_with_dropouts(&announced)
         .into_iter()
         .zip(shared)
-        .map(|((payload, bits), round)| RoundOutput {
-            estimate: decoder.decode(&payload, &round),
+        .map(|((payload, bits, survivors), round)| RoundOutput {
+            estimate: decoder.decode_survivors(&payload, &round, &survivors),
             bits,
         })
         .collect()
@@ -277,7 +505,7 @@ pub fn run_window(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mechanisms::pipeline::{run_pipeline, MechSpec, Plain, SecAgg};
+    use crate::mechanisms::pipeline::{run_pipeline, MechSpec, Plain, SecAgg, Unicast};
     use crate::quantizer::round_half_up;
 
     /// Toy homomorphic mechanism (same shape as the pipeline tests'):
@@ -309,10 +537,19 @@ mod tests {
         }
 
         fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+            self.decode_survivors(payload, round, &SurvivorSet::full(round.n_clients))
+        }
+
+        fn decode_survivors(
+            &self,
+            payload: &Payload,
+            _round: &SharedRound,
+            survivors: &SurvivorSet,
+        ) -> Vec<f64> {
             payload
                 .description_sum()
                 .iter()
-                .map(|&s| s as f64 / (4.0 * round.n_clients as f64))
+                .map(|&s| s as f64 / (4.0 * survivors.n_alive() as f64))
                 .collect()
         }
     }
@@ -428,8 +665,8 @@ mod tests {
     #[test]
     #[should_panic(expected = "cannot mix")]
     fn mixing_submit_and_fold_is_rejected() {
-        // a fold cannot mark `seen`, so direct submits after a fold could
-        // smuggle duplicates past the fail-closed count — rejected
+        // one aggregation discipline per round: direct submits after a
+        // fold are rejected
         let xs = data(0.0);
         let mech = JitterRound;
         let mut session =
@@ -439,8 +676,28 @@ mod tests {
         let mut p = rt.empty(&round);
         let msg0 = mech.encode(0, &xs[0], &round);
         rt.submit(&mut p, 0, &msg0, &round);
-        session.fold_partial(0, p, 1, &msg0.bits);
+        session.fold_partial(0, p, &[0], &msg0.bits);
         session.submit(0, 1, &mech.encode(1, &xs[1], &round));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate submission")]
+    fn overlapping_shard_folds_are_rejected() {
+        // two shard partials claiming the same client: the seen-record
+        // catches the overlap exactly like a duplicate direct submit
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let mut session =
+            TransportSession::open(&SecAgg::new(), 9, xs.len(), xs[0].len(), &[5]);
+        let round = *session.round(0);
+        let rt = session.round_transport(0).clone();
+        let mut p0 = rt.empty(&round);
+        rt.submit(&mut p0, 0, &mech.encode(0, &xs[0], &round), &round);
+        rt.submit(&mut p0, 1, &mech.encode(1, &xs[1], &round), &round);
+        let mut p1 = rt.empty(&round);
+        rt.submit(&mut p1, 1, &mech.encode(1, &xs[1], &round), &round);
+        session.fold_partial(0, p0, &[0, 1], &BitsAccount::default());
+        session.fold_partial(0, p1, &[1], &BitsAccount::default());
     }
 
     #[test]
@@ -503,23 +760,23 @@ mod tests {
             let mut p1 = rt.empty(&round);
             let mut b0 = BitsAccount::default();
             let mut b1 = BitsAccount::default();
-            let mut c0 = 0usize;
-            let mut c1 = 0usize;
+            let mut c0: Vec<usize> = Vec::new();
+            let mut c1: Vec<usize> = Vec::new();
             for (i, x) in xs.iter().enumerate() {
                 let msg = mech.encode(i, x, &round);
                 direct.submit(r, i, &msg);
                 if i % 2 == 0 {
                     rt.submit(&mut p0, i, &msg, &round);
                     b0.merge(&msg.bits);
-                    c0 += 1;
+                    c0.push(i);
                 } else {
                     rt.submit(&mut p1, i, &msg, &round);
                     b1.merge(&msg.bits);
-                    c1 += 1;
+                    c1.push(i);
                 }
             }
-            folded.fold_partial(r, p0, c0, &b0);
-            folded.fold_partial(r, p1, c1, &b1);
+            folded.fold_partial(r, p0, &c0, &b0);
+            folded.fold_partial(r, p1, &c1, &b1);
         }
         assert!(direct.is_complete() && folded.is_complete());
         let a = direct.close();
@@ -537,5 +794,208 @@ mod tests {
         let c = derive_session_seed(43, 0);
         assert_eq!(a, derive_session_seed(42, 0));
         assert!(a != b && a != c && b != c);
+    }
+
+    // -----------------------------------------------------------------
+    // dropout recovery: happy path + the adversarial fail-closed suite
+    // -----------------------------------------------------------------
+
+    /// Open a SecAgg session over the toy data, submit every client
+    /// except those in `dropped[r]`, and return it with the announced
+    /// fleet shape.
+    fn dropout_session(
+        session_seed: u64,
+        dropped: &[Vec<usize>],
+    ) -> (TransportSession, Vec<Vec<Vec<f64>>>) {
+        let mech = JitterRound;
+        let datasets: Vec<Vec<Vec<f64>>> =
+            (0..dropped.len()).map(|r| data(r as f64 * 0.5)).collect();
+        let n = datasets[0].len();
+        let seeds: Vec<u64> = (0..dropped.len() as u64).map(|r| 40 + r).collect();
+        let mut session =
+            TransportSession::open(&SecAgg::new(), session_seed, n, datasets[0][0].len(), &seeds);
+        for (r, xs) in datasets.iter().enumerate() {
+            let round = *session.round(r);
+            for (i, x) in xs.iter().enumerate() {
+                if dropped[r].contains(&i) {
+                    continue;
+                }
+                session.submit(r, i, &mech.encode(i, x, &round));
+            }
+        }
+        (session, datasets)
+    }
+
+    #[test]
+    fn dropout_window_closes_and_matches_plain_survivors() {
+        // a W=2 masked window with one announced dropout per round closes
+        // over the survivors and decodes bit-identically to Plain
+        // summation over the same survivor set
+        let mech = JitterRound;
+        let session_seed = 0xD0;
+        let dropped = vec![vec![2usize], vec![0usize]];
+        let (mut session, datasets) = dropout_session(session_seed, &dropped);
+        assert!(!session.is_complete());
+        let announced: Vec<RoundDropouts> = (0..2)
+            .map(|r| {
+                let survivors = SurvivorSet::with_dropped(3, &dropped[r]);
+                RoundDropouts::announce(session_seed, r as u64, &survivors)
+            })
+            .collect();
+        let shared: Vec<SharedRound> = (0..2).map(|r| *session.round(r)).collect();
+        let closed = session.close_with_dropouts(&announced);
+        for (r, (payload, _bits, survivors)) in closed.iter().enumerate() {
+            assert_eq!(survivors.n_alive(), 2);
+            // Plain reference over the identical SharedRound + survivors
+            let mut part = Plain.empty(&shared[r]);
+            for i in survivors.alive_iter() {
+                Plain.submit(&mut part, i, &mech.encode(i, &datasets[r][i], &shared[r]), &shared[r]);
+            }
+            let reference = Plain.finish(part, &shared[r]);
+            assert_eq!(payload.description_sum(), reference.description_sum(), "round {r}");
+            assert_eq!(
+                mech.decode_survivors(payload, &shared[r], survivors),
+                mech.decode_survivors(&reference, &shared[r], survivors),
+                "round {r}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "announced dropped")]
+    fn dropout_submitted_client_cannot_be_announced_dropped() {
+        // adversarial: a client both submits and is announced dropped —
+        // recovering a live client's masks would expose its submission
+        let session_seed = 0xD1;
+        let (mut session, _) = dropout_session(session_seed, &[vec![]]);
+        let survivors = SurvivorSet::with_dropped(3, &[1]);
+        let announced = [RoundDropouts::announce(session_seed, 0, &survivors)];
+        let _ = session.close_with_dropouts(&announced);
+    }
+
+    #[test]
+    #[should_panic(expected = "recovery share offered for live client")]
+    fn dropout_recovery_share_for_live_client_rejected() {
+        // adversarial: the bundle smuggles a share targeting a client that
+        // was never announced dropped
+        let session_seed = 0xD2;
+        let (mut session, _) = dropout_session(session_seed, &[vec![2]]);
+        let survivors = SurvivorSet::with_dropped(3, &[2]);
+        let mut ann = RoundDropouts::announce(session_seed, 0, &survivors);
+        ann.shares.push(session_recovery_share(session_seed, 0, 0, 1)); // client 1 is live
+        let _ = session.close_with_dropouts(&[ann]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already closed")]
+    fn dropout_announced_after_close_fails_closed() {
+        // adversarial: once the batched unmask ran, nothing can be
+        // announced or re-closed
+        let session_seed = 0xD3;
+        let (mut session, _) = dropout_session(session_seed, &[vec![]]);
+        let _ = session.close();
+        let survivors = SurvivorSet::with_dropped(3, &[2]);
+        let announced = [RoundDropouts::announce(session_seed, 0, &survivors)];
+        let _ = session.close_with_dropouts(&announced);
+    }
+
+    #[test]
+    #[should_panic(expected = "announced dropped")]
+    fn dropout_folded_submitted_client_cannot_be_announced_dropped() {
+        // the folded (coordinator) path is held to the same contract:
+        // client 2 is genuinely missing from the folds, but the
+        // announcement names live client 1 — the counts would balance
+        // (2 submitted + 1 dropped == 3), so only the seen-record can
+        // catch the inconsistency
+        let mech = JitterRound;
+        let xs = data(0.0);
+        let session_seed = 0xD7;
+        let mut session =
+            TransportSession::open(&SecAgg::new(), session_seed, xs.len(), xs[0].len(), &[5]);
+        let round = *session.round(0);
+        let rt = session.round_transport(0).clone();
+        let mut p = rt.empty(&round);
+        rt.submit(&mut p, 0, &mech.encode(0, &xs[0], &round), &round);
+        rt.submit(&mut p, 1, &mech.encode(1, &xs[1], &round), &round);
+        session.fold_partial(0, p, &[0, 1], &BitsAccount::default());
+        let survivors = SurvivorSet::with_dropped(3, &[1]);
+        let announced = [RoundDropouts::announce(session_seed, 0, &survivors)];
+        let _ = session.close_with_dropouts(&announced);
+    }
+
+    #[test]
+    #[should_panic(expected = "fails closed")]
+    fn dropout_unannounced_gap_still_aborts() {
+        // client 2 is missing but nobody announced it: the window must
+        // abort exactly like an interrupted session
+        let session_seed = 0xD4;
+        let (mut session, _) = dropout_session(session_seed, &[vec![2]]);
+        let _ = session.close_with_dropouts(&[RoundDropouts::default()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing the share of survivor")]
+    fn dropout_partial_share_set_rejected() {
+        // recovery needs a share from EVERY survivor; a partial bundle
+        // would leave residual masks in the sum
+        let session_seed = 0xD5;
+        let (mut session, _) = dropout_session(session_seed, &[vec![2]]);
+        let ann = RoundDropouts {
+            dropped: vec![2],
+            shares: vec![session_recovery_share(session_seed, 0, 0, 2)], // survivor 1 missing
+        };
+        let _ = session.close_with_dropouts(&[ann]);
+    }
+
+    #[test]
+    #[should_panic(expected = "held by dropped client")]
+    fn dropout_share_from_dropped_holder_rejected() {
+        // a dropped client cannot vouch for another dropped client
+        let session_seed = 0xD6;
+        let (mut session, _) = dropout_session(session_seed, &[vec![1, 2]]);
+        let ann = RoundDropouts {
+            dropped: vec![1, 2],
+            shares: vec![
+                session_recovery_share(session_seed, 0, 0, 1),
+                session_recovery_share(session_seed, 0, 0, 2),
+                session_recovery_share(session_seed, 0, 2, 1), // holder 2 is dropped
+            ],
+        };
+        let _ = session.close_with_dropouts(&[ann]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot close over a partial client set")]
+    fn dropout_unicast_window_fails_closed() {
+        // per-client transports are not dropout-aware: announcing a
+        // dropout over Unicast must abort, not mis-deliver
+        let mech = JitterRound;
+        let xs = data(0.0);
+        let mut session = TransportSession::open(&Unicast, 9, xs.len(), xs[0].len(), &[5]);
+        let round = *session.round(0);
+        for (i, x) in xs.iter().enumerate() {
+            if i == 2 {
+                continue;
+            }
+            session.submit(0, i, &mech.encode(i, x, &round));
+        }
+        let survivors = SurvivorSet::with_dropped(3, &[2]);
+        let announced = [RoundDropouts::announce(9, 0, &survivors)];
+        let _ = session.close_with_dropouts(&announced);
+    }
+
+    #[test]
+    fn dropout_run_window_with_empty_schedule_is_run_window() {
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let mech = JitterRound;
+        let none: Vec<Vec<usize>> = vec![Vec::new(); rounds.len()];
+        let a = run_window(&mech, &SecAgg::new(), &mech, &rounds, 0xAB);
+        let b = run_window_with_dropouts(&mech, &SecAgg::new(), &mech, &rounds, 0xAB, &none);
+        for (oa, ob) in a.iter().zip(&b) {
+            assert_eq!(oa.estimate, ob.estimate);
+            assert_eq!(oa.bits.messages, ob.bits.messages);
+        }
     }
 }

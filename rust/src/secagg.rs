@@ -35,6 +35,25 @@
 //! session seed. The legacy per-round derivation
 //! ([`crate::mechanisms::pipeline::SecAgg::root_seed`]) applies only when
 //! a `SecAgg` transport is driven stage-by-stage outside a session.
+//!
+//! ## Dropout recovery (Bonawitz-style pairwise-seed reconstruction)
+//!
+//! A client that goes silent mid-round leaves its pairwise masks
+//! *uncancelled* in every survivor's submission: the masked survivor sum
+//! carries the residual `Σ_{i∈S} ±PRG(s_ij)` for each dropped client j.
+//! In the real protocol the survivors hold Shamir shares of j's pairwise
+//! secrets and hand the server enough of them to re-expand those PRG
+//! streams; this simulation keeps the same information flow with
+//! [`RecoveryShare`] (a survivor reveals its pairwise seed with the
+//! dropped client, [`recovery_share`]) and
+//! [`reconstruct_dropped_masks`] (the server re-expands the dropped
+//! client's outstanding mask legs over the survivor set and adds them
+//! back, cancelling the residual exactly). Because the reconstruction is
+//! restricted to *surviving* holders, pairs of two dropped clients —
+//! whose masks appear in no submission — are correctly never expanded.
+//! [`crate::mechanisms::session::TransportSession::close_with_dropouts`]
+//! is the consumer; it fails closed unless every dropped client's share
+//! set covers exactly the survivor set.
 
 use crate::util::rng::Rng;
 
@@ -85,10 +104,82 @@ pub fn from_field(v: u64, m: u64) -> i64 {
     }
 }
 
-fn pair_seed(root: u64, i: usize, j: usize) -> u64 {
+/// Seed of the ordered pair (min(i,j), max(i,j))'s shared mask stream —
+/// symmetric in (i, j), so both end-points (and a recovery holder) expand
+/// the identical PRG stream. In a real deployment this is the pairwise
+/// Diffie–Hellman secret; here it is a public derivation of the round's
+/// mask root (the simulation models the *information flow*, not the
+/// cryptography — see the module docs).
+pub fn pair_seed(root: u64, i: usize, j: usize) -> u64 {
     // order-independent pairwise stream id
     let (a, b) = if i < j { (i, j) } else { (j, i) };
     root ^ ((a as u64) << 32 | b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One survivor's contribution to reconstructing a dropped client's
+/// outstanding masks: the `holder` reveals its pairwise seed with
+/// `dropped` (the simulation analogue of handing the server one's Shamir
+/// share of the dropped client's pairwise secret).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryShare {
+    /// the dropped client this share helps reconstruct
+    pub dropped: usize,
+    /// the surviving client revealing the share
+    pub holder: usize,
+    /// the pairwise seed `s_{holder,dropped}` (see [`pair_seed`])
+    pub pair_seed: u64,
+}
+
+/// Survivor-side: the recovery share `holder` reveals for `dropped` under
+/// a given round mask root.
+pub fn recovery_share(root_seed: u64, holder: usize, dropped: usize) -> RecoveryShare {
+    assert_ne!(holder, dropped, "a client holds no recovery share for itself");
+    RecoveryShare { dropped, holder, pair_seed: pair_seed(root_seed, holder, dropped) }
+}
+
+/// Server-side: re-expand dropped client `dropped`'s outstanding pairwise
+/// mask legs over the share holders (mod m). Adding the result to the
+/// masked survivor sum cancels exactly the residual masks the dropped
+/// client left behind — this is what lets a round close over survivors
+/// instead of aborting.
+///
+/// The caller is responsible for passing shares from exactly the survivor
+/// set (the session layer enforces it); this function fails closed on
+/// structurally bad bundles: a share for a different client, a holder
+/// equal to the dropped client, or a duplicate holder all panic.
+pub fn reconstruct_dropped_masks(
+    dropped: usize,
+    shares: &[RecoveryShare],
+    d: usize,
+    params: SecAggParams,
+) -> Vec<u64> {
+    let m = params.modulus;
+    let mut out = vec![0u64; d];
+    let mut holders: Vec<usize> = Vec::with_capacity(shares.len());
+    for share in shares {
+        assert_eq!(
+            share.dropped, dropped,
+            "recovery share for client {} offered during reconstruction of client {dropped}",
+            share.dropped,
+        );
+        assert_ne!(share.holder, dropped, "a client holds no recovery share for itself");
+        assert!(
+            !holders.contains(&share.holder),
+            "duplicate recovery share from holder {} for dropped client {dropped}",
+            share.holder,
+        );
+        holders.push(share.holder);
+        // the dropped client's perspective of the pair (mirrors
+        // `mask_descriptions`): it would have ADDED the stream for
+        // higher-indexed peers and SUBTRACTED it for lower-indexed ones
+        let mut rng = Rng::new(share.pair_seed);
+        let add = dropped < share.holder;
+        for o in out.iter_mut() {
+            let mask = rng.below(m);
+            *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
+        }
+    }
+    out
 }
 
 /// Client-side masking: add `Σ_{j>i} PRG_ij − Σ_{j<i} PRG_ij` (mod m) to
@@ -210,5 +301,72 @@ mod tests {
         let a = mask_descriptions(&[0; 8], 0, 2, 1, params);
         let b = mask_descriptions(&[0; 8], 0, 2, 2, params);
         assert_ne!(a, b);
+    }
+
+    /// The recovery identity: survivor submissions + reconstructed masks
+    /// of every dropped client = Σ over survivors — even with multiple
+    /// dropouts (whose mutual pair masks must NOT be expanded).
+    #[test]
+    fn dropout_recovery_cancels_residual_masks() {
+        let params = SecAggParams::default();
+        let n = 7;
+        let d = 12;
+        let root = 0xFACE;
+        let dropped = [1usize, 4];
+        let survivors: Vec<usize> =
+            (0..n).filter(|c| !dropped.contains(c)).collect();
+        let mut rng = Rng::new(909);
+        let descriptions: Vec<Vec<i64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.below(2000) as i64 - 1000).collect())
+            .collect();
+        // survivors mask against the FULL fleet (they cannot know who will
+        // drop) and the server folds only their submissions
+        let m = params.modulus;
+        let mut sum = vec![0u64; d];
+        for &i in &survivors {
+            let masked = mask_descriptions(&descriptions[i], i, n, root, params);
+            for (s, v) in sum.iter_mut().zip(masked) {
+                *s = (*s + v) % m;
+            }
+        }
+        // recovery: every survivor reveals its pairwise seed per dropout
+        for &j in &dropped {
+            let shares: Vec<RecoveryShare> =
+                survivors.iter().map(|&i| recovery_share(root, i, j)).collect();
+            let rec = reconstruct_dropped_masks(j, &shares, d, params);
+            for (s, v) in sum.iter_mut().zip(rec) {
+                *s = (*s + v) % m;
+            }
+        }
+        let got: Vec<i64> = sum.into_iter().map(|v| from_field(v, m)).collect();
+        for k in 0..d {
+            let want: i64 = survivors.iter().map(|&i| descriptions[i][k]).sum();
+            assert_eq!(got[k], want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn dropout_recovery_share_is_pair_symmetric() {
+        // the holder's revealed seed equals the seed the dropped client
+        // would have used — both expand the same stream
+        let root = 0xB0B;
+        assert_eq!(recovery_share(root, 2, 5).pair_seed, pair_seed(root, 5, 2));
+        assert_eq!(recovery_share(root, 5, 2).pair_seed, pair_seed(root, 2, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate recovery share")]
+    fn dropout_duplicate_holder_share_rejected() {
+        let params = SecAggParams::default();
+        let shares = [recovery_share(1, 0, 2), recovery_share(1, 0, 2)];
+        let _ = reconstruct_dropped_masks(2, &shares, 4, params);
+    }
+
+    #[test]
+    #[should_panic(expected = "offered during reconstruction")]
+    fn dropout_share_for_other_client_rejected() {
+        let params = SecAggParams::default();
+        let shares = [recovery_share(1, 0, 3)];
+        let _ = reconstruct_dropped_masks(2, &shares, 4, params);
     }
 }

@@ -1,8 +1,23 @@
 //! Mini property-based-testing harness (proptest is not in the offline
-//! registry). Provides seeded generators and a `forall` runner with
-//! counterexample shrinking for the coordinator/mechanism invariants
-//! exercised in `rust/tests/property_invariants.rs`.
+//! registry). Provides:
+//!
+//! * seeded generators and a [`forall`] runner with counterexample
+//!   shrinking for the coordinator/mechanism invariants exercised in
+//!   `rust/tests/property_invariants.rs`;
+//! * deterministic client fleets ([`Fleet`]) and seeded dropout schedules
+//!   ([`dropout_schedule`]) — the shared setup that used to be
+//!   copy-pasted across `integration_coordinator.rs` and
+//!   `property_invariants.rs`;
+//! * [`assert_window_closes_exactly`] — the dropout-recovery acceptance
+//!   check: a windowed session over any sum-only transport, with
+//!   announced dropouts and mask recovery, must decode *bit-identically*
+//!   to Plain summation over the same survivor set, round for round.
 
+use crate::mechanisms::pipeline::{
+    ClientEncoder, MechSpec, Plain, ServerDecoder, SharedRound, SurvivorSet, Transport,
+};
+use crate::mechanisms::session::run_window_with_dropouts;
+use crate::mechanisms::traits::BitsAccount;
 use crate::util::rng::Rng;
 
 /// Configuration for a property run.
@@ -130,6 +145,164 @@ where
 }
 
 // ---------------------------------------------------------------------------
+// deterministic client fleets + seeded dropout schedules
+// ---------------------------------------------------------------------------
+
+/// A deterministic client fleet: n clients × d coordinates whose vectors
+/// derive from one data seed (client c, round r → an independent
+/// `Rng::derive` stream), uniform over `[lo, hi)`. One `Fleet` value
+/// replaces the per-test `client_data` / closure setup blocks: the same
+/// fleet yields identical data to an in-process round, a windowed
+/// session, and a coordinator pool ([`Fleet::compute`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Fleet {
+    pub n_clients: usize,
+    pub dim: usize,
+    pub data_seed: u64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Fleet {
+    pub fn new(n_clients: usize, dim: usize, data_seed: u64) -> Self {
+        assert!(n_clients > 0 && dim > 0);
+        Self { n_clients, dim, data_seed, lo: -4.0, hi: 4.0 }
+    }
+
+    /// Override the per-coordinate data range (default `[-4, 4)`).
+    pub fn with_range(mut self, lo: f64, hi: f64) -> Self {
+        assert!(lo < hi);
+        self.lo = lo;
+        self.hi = hi;
+        self
+    }
+
+    /// Client `client`'s vector for `round` — deterministic in
+    /// (fleet, client, round).
+    pub fn client_vec(&self, client: usize, round: u64) -> Vec<f64> {
+        let root = self.data_seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::derive(root, client as u64);
+        (0..self.dim).map(|_| rng.uniform(self.lo, self.hi)).collect()
+    }
+
+    /// All clients' vectors for one round.
+    pub fn round_data(&self, round: u64) -> Vec<Vec<f64>> {
+        (0..self.n_clients).map(|c| self.client_vec(c, round)).collect()
+    }
+
+    /// Round-varying `LocalCompute`-shaped closure for
+    /// `ClientPool::spawn` — yields exactly [`Fleet::round_data`] per
+    /// round.
+    pub fn compute(self) -> impl Fn(usize, u64, &[f64]) -> Vec<f64> + Send + Sync + 'static {
+        move |c, r, _s| self.client_vec(c, r)
+    }
+
+    /// Round-independent variant: every round sees the round-0 vectors
+    /// (static distributed mean estimation).
+    pub fn compute_static(
+        self,
+    ) -> impl Fn(usize, u64, &[f64]) -> Vec<f64> + Send + Sync + 'static {
+        move |c, _r, _s| self.client_vec(c, 0)
+    }
+
+    /// Exact mean of the given clients' round-`round` vectors.
+    pub fn survivor_mean(&self, round: u64, survivors: &SurvivorSet) -> Vec<f64> {
+        assert_eq!(survivors.n(), self.n_clients);
+        let mut m = vec![0.0f64; self.dim];
+        for c in survivors.alive_iter() {
+            for (mj, xj) in m.iter_mut().zip(self.client_vec(c, round)) {
+                *mj += xj;
+            }
+        }
+        m.into_iter().map(|v| v / survivors.n_alive() as f64).collect()
+    }
+}
+
+/// A seeded dropout schedule: for each of `window` rounds, `per_round`
+/// distinct clients drawn without replacement (sorted ascending).
+/// Deterministic in the seed, so CI's seed matrix replays exactly.
+pub fn dropout_schedule(
+    n_clients: usize,
+    window: usize,
+    per_round: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(per_round < n_clients, "every round needs at least one survivor");
+    let mut rng = Rng::derive(seed, 0xD80);
+    (0..window)
+        .map(|_| {
+            let mut ids = rng.sample_indices(n_clients, per_round);
+            ids.sort_unstable();
+            ids
+        })
+        .collect()
+}
+
+/// The dropout-recovery acceptance check (see the module docs): run a
+/// whole window through ONE session over `transport` with `schedule[r]`
+/// announced dropouts per round and mask recovery, and assert each round
+/// decodes *bit-identically* — estimates AND bit accounting — to Plain
+/// summation over the same survivor set with the same shared randomness.
+/// Round r uses the fleet's round-r data and a seed derived from
+/// `session_seed`, so two calls with equal arguments replay exactly.
+///
+/// Panics (with the failing round) on any mismatch; requires a
+/// sum-decodable (homomorphic) mechanism, since Plain-over-survivors is
+/// the reference semantics.
+pub fn assert_window_closes_exactly<M>(
+    mech: &M,
+    transport: &dyn Transport,
+    fleet: &Fleet,
+    schedule: &[Vec<usize>],
+    session_seed: u64,
+) where
+    M: ClientEncoder + ServerDecoder + MechSpec,
+{
+    assert!(
+        mech.sum_decodable(),
+        "assert_window_closes_exactly needs a homomorphic mechanism ({} is not): the \
+         reference semantics is Plain summation over the survivors",
+        MechSpec::name(mech),
+    );
+    assert!(!schedule.is_empty(), "the schedule fixes the window length; it cannot be empty");
+    let n = fleet.n_clients;
+    let datasets: Vec<Vec<Vec<f64>>> =
+        (0..schedule.len()).map(|r| fleet.round_data(r as u64)).collect();
+    let round_seeds: Vec<u64> =
+        (0..schedule.len()).map(|r| session_seed ^ (0x0DD0 + 7919 * r as u64)).collect();
+    let rounds: Vec<(&[Vec<f64>], u64)> =
+        datasets.iter().zip(&round_seeds).map(|(xs, &s)| (xs.as_slice(), s)).collect();
+    let windowed = run_window_with_dropouts(mech, transport, mech, &rounds, session_seed, schedule);
+    for (r, out) in windowed.iter().enumerate() {
+        let survivors = SurvivorSet::with_dropped(n, &schedule[r]);
+        let shared = SharedRound::new(round_seeds[r], n, fleet.dim);
+        let mut part = Plain.empty(&shared);
+        let mut bits = BitsAccount::default();
+        for i in survivors.alive_iter() {
+            let msg = mech.encode(i, &datasets[r][i], &shared);
+            bits.merge(&msg.bits);
+            Plain.submit(&mut part, i, &msg, &shared);
+        }
+        let reference =
+            mech.decode_survivors(&Plain.finish(part, &shared), &shared, &survivors);
+        assert_eq!(
+            out.estimate, reference,
+            "round {r}: windowed {} estimate != Plain-over-survivors reference",
+            transport.name(),
+        );
+        assert_eq!(out.bits.messages, bits.messages, "round {r}: message counts diverge");
+        assert_eq!(
+            out.bits.variable_total, bits.variable_total,
+            "round {r}: variable-length bit accounting diverges"
+        );
+        assert_eq!(
+            out.bits.fixed_total, bits.fixed_total,
+            "round {r}: fixed-length bit accounting diverges"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // generators
 // ---------------------------------------------------------------------------
 
@@ -190,5 +363,81 @@ mod tests {
         let shrinks = t.shrink();
         assert!(shrinks.iter().any(|(a, _)| *a == 0.0));
         assert!(shrinks.iter().any(|(_, b)| *b == 4));
+    }
+
+    #[test]
+    fn fleet_is_deterministic_and_round_varying() {
+        let fleet = Fleet::new(5, 3, 42).with_range(-2.0, 2.0);
+        assert_eq!(fleet.round_data(1), fleet.round_data(1));
+        assert_ne!(fleet.round_data(1), fleet.round_data(2));
+        assert_eq!(fleet.compute()(3, 7, &[]), fleet.client_vec(3, 7));
+        assert_eq!(fleet.compute_static()(3, 7, &[]), fleet.client_vec(3, 0));
+        for x in fleet.round_data(0).iter().flatten() {
+            assert!((-2.0..2.0).contains(x));
+        }
+    }
+
+    #[test]
+    fn fleet_survivor_mean_averages_survivors_only() {
+        let fleet = Fleet::new(4, 2, 7);
+        let s = SurvivorSet::with_dropped(4, &[1]);
+        let want: Vec<f64> = {
+            let data = fleet.round_data(3);
+            (0..2)
+                .map(|j| (data[0][j] + data[2][j] + data[3][j]) / 3.0)
+                .collect()
+        };
+        let got = fleet.survivor_mean(3, &s);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dropout_schedule_is_seeded_and_in_range() {
+        let a = dropout_schedule(9, 4, 3, 5);
+        assert_eq!(a, dropout_schedule(9, 4, 3, 5));
+        assert_ne!(a, dropout_schedule(9, 4, 3, 6));
+        assert_eq!(a.len(), 4);
+        for round in &a {
+            assert_eq!(round.len(), 3);
+            let mut sorted = round.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "distinct ids");
+            assert!(round.iter().all(|&c| c < 9));
+            assert!(round.windows(2).all(|w| w[0] < w[1]), "sorted ascending");
+        }
+        assert!(dropout_schedule(9, 4, 0, 5).iter().all(|r| r.is_empty()));
+    }
+
+    #[test]
+    fn window_closes_exactly_harness_accepts_recovery() {
+        // self-check of the acceptance helper on a real homomorphic
+        // mechanism: masked window with dropouts ≡ Plain over survivors
+        use crate::mechanisms::pipeline::SecAgg;
+        use crate::mechanisms::IrwinHallMechanism;
+        let fleet = Fleet::new(6, 3, 11);
+        let schedule = dropout_schedule(6, 2, 2, 13);
+        assert_window_closes_exactly(
+            &IrwinHallMechanism::new(0.4, 8.0),
+            &SecAgg::new(),
+            &fleet,
+            &schedule,
+            0xCAFE,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a homomorphic mechanism")]
+    fn window_closes_exactly_rejects_non_homomorphic() {
+        use crate::mechanisms::{IndividualGaussian, LayeredVariant, Unicast};
+        let fleet = Fleet::new(4, 2, 3);
+        assert_window_closes_exactly(
+            &IndividualGaussian::new(0.3, LayeredVariant::Shifted, 4.0),
+            &Unicast,
+            &fleet,
+            &[vec![]],
+            1,
+        );
     }
 }

@@ -1,5 +1,7 @@
 //! Coordinator integration: the threaded round runtime driving real
-//! mechanisms, with metrics and config plumbing.
+//! mechanisms, with metrics and config plumbing. Client data comes from
+//! the shared [`Fleet`] harness (`exact_comp::testing`) — no per-test
+//! data-generation blocks.
 
 use std::sync::Arc;
 
@@ -8,7 +10,7 @@ use exact_comp::coordinator::metrics::Metrics;
 use exact_comp::coordinator::runtime::{run_round, ClientPool};
 use exact_comp::mechanisms::traits::MeanMechanism;
 use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
-use exact_comp::util::rng::Rng;
+use exact_comp::testing::{dropout_schedule, Fleet};
 
 /// A config-driven mean-estimation service: T rounds over a pluggable
 /// mechanism, MSE recorded per round — the skeleton every figure uses.
@@ -25,14 +27,9 @@ fn config_driven_mean_estimation_service() {
     let sigma = cfg.f64_or("sigma", 0.1);
     let seed = cfg.u64_or("seed", 0);
 
-    let pool = ClientPool::spawn(
-        n,
-        Arc::new(move |c: usize, _r: u64, _s: &[f64]| {
-            // static client vectors (distributed mean estimation)
-            let mut rng = Rng::derive(7777, c as u64);
-            (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
-        }),
-    );
+    // static client vectors (distributed mean estimation)
+    let fleet = Fleet::new(n, d, 7777).with_range(-2.0, 2.0);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute_static()));
     let mech: Box<dyn MeanMechanism> = match cfg.get_or("mech", "aggregate").as_str() {
         "aggregate" => Box::new(AggregateGaussian::new(sigma, 4.0)),
         _ => Box::new(IrwinHallMechanism::new(sigma, 4.0)),
@@ -76,12 +73,7 @@ fn round_loop_optimizes_quadratic() {
     let n = 16;
     let d = 8;
     // client targets; gradient of 0.5||theta - target_c||^2
-    let targets: Vec<Vec<f64>> = (0..n)
-        .map(|c| {
-            let mut rng = Rng::derive(55, c as u64);
-            (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()
-        })
-        .collect();
+    let targets: Vec<Vec<f64>> = Fleet::new(n, d, 55).with_range(-1.0, 1.0).round_data(0);
     let consensus: Vec<f64> = (0..d)
         .map(|j| targets.iter().map(|t| t[j]).sum::<f64>() / n as f64)
         .collect();
@@ -115,13 +107,8 @@ fn windowed_secagg_service_matches_single_round_plain_service() {
 
     let n = 12;
     let d = 16;
-    let pool = ClientPool::spawn(
-        n,
-        Arc::new(move |c: usize, r: u64, _s: &[f64]| {
-            let mut rng = Rng::derive(4040 + r, c as u64);
-            (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
-        }),
-    );
+    let fleet = Fleet::new(n, d, 4040).with_range(-2.0, 2.0);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
     let mech = AggregateGaussian::new(0.05, 4.0);
     let window = 5usize;
     let mut windowed = Vec::new();
@@ -144,6 +131,69 @@ fn windowed_secagg_service_matches_single_round_plain_service() {
         assert_eq!(rep.output.bits.messages, single.output.bits.messages);
         for (a, b) in rep.true_mean.iter().zip(&single.true_mean) {
             assert!((a - b).abs() < 1e-12);
+        }
+    }
+}
+
+/// Dropout-robust sessions end to end: a 12-round windowed SecAgg service
+/// where every round loses ⌈n/4⌉ announced clients must (a) keep closing,
+/// (b) equal the identical Plain service bit for bit (recovery cancels
+/// every residual mask), and (c) report survivor-set means and counts.
+#[test]
+fn dropout_windowed_secagg_service_matches_plain_over_survivors() {
+    use exact_comp::coordinator::runtime::run_rounds_mech_with_dropouts;
+    use exact_comp::mechanisms::pipeline::{Plain, SecAgg, SurvivorSet};
+
+    let n = 10;
+    let d = 6;
+    let fleet = Fleet::new(n, d, 6060).with_range(-2.0, 2.0);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let mech = AggregateGaussian::new(0.05, 4.0);
+    let window = 4usize;
+    let per_round = n.div_ceil(4);
+    let mut masked = Vec::new();
+    let mut plain = Vec::new();
+    for start in (0..12u64).step_by(window) {
+        // the schedule is seeded per window, like a real availability trace
+        let schedule = dropout_schedule(n, window, per_round, 0xACE ^ start);
+        masked.extend(run_rounds_mech_with_dropouts(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            start,
+            window,
+            &[],
+            77,
+            &schedule,
+        ));
+        plain.extend(run_rounds_mech_with_dropouts(
+            &pool,
+            &mech,
+            Arc::new(Plain),
+            start,
+            window,
+            &[],
+            77,
+            &schedule,
+        ));
+        for (r, rep) in masked.iter().enumerate().skip(start as usize) {
+            let survivors =
+                SurvivorSet::with_dropped(n, &schedule[r - start as usize]);
+            assert_eq!(rep.survivors, survivors.n_alive());
+            let want = fleet.survivor_mean(rep.round, &survivors);
+            for (a, b) in rep.true_mean.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12, "round {r}");
+            }
+        }
+    }
+    assert_eq!(masked.len(), 12);
+    for (m, p) in masked.iter().zip(&plain) {
+        assert_eq!(m.output.estimate, p.output.estimate, "round {}", m.round);
+        assert_eq!(m.output.bits.messages, p.output.bits.messages);
+        assert_eq!(m.survivors, p.survivors);
+        // the estimate tracks the survivor mean within the noise envelope
+        for (e, t) in m.output.estimate.iter().zip(&m.true_mean) {
+            assert!((e - t).abs() < 1.0, "round {}", m.round);
         }
     }
 }

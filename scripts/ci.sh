@@ -39,6 +39,14 @@ echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
 
+# Dropout property suite, run by name for visibility: the fixed seed
+# matrix (3 seeds × {0, 1, ⌈n/4⌉} dropouts/round) plus every dropout
+# recovery/adversarial/KS test across the lib, property and integration
+# targets. Redundant with the full `cargo test -q` above by construction —
+# a failure here names the dropout contract directly.
+echo "== dropout property suite (seed matrix: 3 seeds x {0,1,ceil(n/4)} dropouts) =="
+cargo test -q dropout
+
 echo "== rustdoc (deny warnings) =="
 # keeps the crate/module docs — including intra-doc links — green
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
