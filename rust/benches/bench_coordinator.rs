@@ -4,8 +4,10 @@
 use std::sync::Arc;
 
 use exact_comp::coordinator::runtime::{
-    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_with_dropouts, ClientPool,
+    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_sampled,
+    run_rounds_mech_with_dropouts, ClientPool,
 };
+use exact_comp::coordinator::sampling::SamplingPolicy;
 use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
 use exact_comp::mechanisms::IrwinHallMechanism;
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
@@ -106,6 +108,53 @@ fn main() {
                         &[],
                         42,
                         &schedule,
+                    );
+                    start += w as u64;
+                    black_box(reps);
+                },
+            );
+        }
+    }
+
+    // seed-derived client sampling: Poisson(γ) cohorts per round — the
+    // shards skip sampled-out clients entirely and the masked session
+    // opens over the cohort only, so per-round work scales with γ·n, not
+    // n. Elements are normalized by the EXPECTED cohort work (γ·n·d·W),
+    // so the per-element rate is comparable to the full-participation
+    // windowed series above.
+    {
+        let n = 16usize;
+        let d = 256usize;
+        let pool = ClientPool::spawn_with_threads(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+            Some(4),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let w = 4usize;
+        for gamma in [0.25f64, 0.5] {
+            let policy = SamplingPolicy::Poisson { gamma };
+            let none: Vec<Vec<usize>> = vec![Vec::new(); w];
+            let mut start = 0u64;
+            let elements = (gamma * (n * d * w) as f64) as u64;
+            s.bench_elements(
+                &format!("coordinator/rounds_sampled(n={n},d={d},W={w},gamma={gamma})"),
+                Some(elements.max(1)),
+                || {
+                    let reps = run_rounds_mech_sampled(
+                        &pool,
+                        &mech,
+                        Arc::new(SecAgg::new()),
+                        start,
+                        w,
+                        &[],
+                        42,
+                        &policy,
+                        &none,
+                        None,
                     );
                     start += w as u64;
                     black_box(reps);

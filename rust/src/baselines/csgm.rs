@@ -17,8 +17,8 @@
 //! sum) and the mechanism rides the sum-only transports, SecAgg included.
 
 use crate::mechanisms::pipeline::{
-    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
-    ServerDecoder, SharedRound, SurvivorSet,
+    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, ServerDecoder,
+    SharedRound, SurvivorSet,
 };
 use crate::mechanisms::traits::BitsAccount;
 use crate::quantizer::round_half_up;
@@ -33,27 +33,17 @@ pub struct Csgm {
     pub input_bound_c: f64,
     /// quantization bits per selected coordinate (matched to SIGM's budget)
     pub bits: u32,
-    /// round-derived shared subsampling matrix
-    round_b: RoundCache<Vec<Vec<bool>>>,
 }
 
 impl Csgm {
     pub fn new(sigma: f64, gamma: f64, input_bound_c: f64, bits: u32) -> Self {
         assert!(sigma > 0.0 && (0.0..=1.0).contains(&gamma) && bits >= 1);
-        Self { sigma, gamma, input_bound_c, bits, round_b: RoundCache::new() }
+        Self { sigma, gamma, input_bound_c, bits }
     }
 
     /// quantization step over [−c, c] with 2^b levels
     pub fn step(&self) -> f64 {
         2.0 * self.input_bound_c / ((1u64 << self.bits) - 1) as f64
-    }
-
-    /// Shared subsampling matrix — the same `SharedRound::bernoulli_matrix`
-    /// derivation SIGM uses, so the two mechanisms see identical subsamples
-    /// for a given seed.
-    fn subsample(&self, round: &SharedRound) -> std::sync::Arc<Vec<Vec<bool>>> {
-        let gamma = self.gamma;
-        self.round_b.get_or(round, || round.bernoulli_matrix(gamma))
     }
 }
 
@@ -81,16 +71,18 @@ impl MechSpec for Csgm {
 
 impl ClientEncoder for Csgm {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
-        let b = self.subsample(round);
         let w = self.step();
+        // the client derives only ITS OWN subsample row stream — O(d)
+        // encode, no cached O(n·d) matrix (same `SharedRound::subsample_rng`
+        // derivation SIGM uses, so the two see identical subsamples)
+        let mut brng = round.subsample_rng(client);
         let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
         let ms: Vec<i64> = x
             .iter()
-            .enumerate()
-            .map(|(j, &xj)| {
-                if !b[client][j] {
+            .map(|&xj| {
+                if !brng.bernoulli(self.gamma) {
                     // unselected coordinates transmit nothing; a zero in
                     // the dense vector leaves Σm untouched
                     return 0;
@@ -132,15 +124,16 @@ impl ServerDecoder for Csgm {
         assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
         let d = round.dim;
         let w = self.step();
-        let b = self.subsample(round);
         let m_sum = payload.description_sum();
         assert_eq!(m_sum.len(), d);
-        // re-derive the selected SURVIVORS' dithers (shared randomness)
+        // re-derive the selected SURVIVORS' dithers (shared randomness),
+        // row stream by row stream — O(d) working state, no cached matrix
         let mut s_sum = vec![0.0f64; d];
         for i in survivors.alive_iter() {
+            let mut brng = round.subsample_rng(i);
             let mut rng = round.client_rng(i);
-            for (j, sj) in s_sum.iter_mut().enumerate() {
-                if b[i][j] {
+            for sj in s_sum.iter_mut() {
+                if brng.bernoulli(self.gamma) {
                     *sj += rng.u01();
                 }
             }

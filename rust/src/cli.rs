@@ -52,16 +52,25 @@ impl Args {
         self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
     }
 
+    /// Typed flag getters on the shared loud-fail contract
+    /// ([`crate::util::parse_or_panic`], same as
+    /// `coordinator::config::Config`): a missing flag takes the default,
+    /// a present-but-malformed value panics — a typo'd `--sigma O.25`
+    /// must not silently run at the default.
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T, expected: &str) -> T {
+        crate::util::parse_or_panic(self.get(key), default, &format!("flag --{key}"), expected)
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_or(key, default, "a float")
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_or(key, default, "a non-negative integer")
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_or(key, default, "a non-negative integer")
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -100,6 +109,14 @@ mod tests {
         let a = parse("train --sigma=0.5 --rounds=100");
         assert_eq!(a.f64_or("sigma", 0.0), 0.5);
         assert_eq!(a.usize_or("rounds", 0), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed value")]
+    fn malformed_flag_value_is_loud_not_a_silent_default() {
+        // regression: `--sigma O.5` used to silently run at the default
+        let a = parse("train --sigma O.5");
+        let _ = a.f64_or("sigma", 0.1);
     }
 
     #[test]

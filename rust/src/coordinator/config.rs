@@ -54,22 +54,43 @@ impl Config {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Typed getters on the shared loud-fail contract
+    /// ([`crate::util::parse_or_panic`]): a missing key takes the
+    /// default, a present-but-malformed value panics — a typo'd
+    /// `sigma = O.25` must not quietly run the experiment at the default
+    /// noise level.
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T, expected: &str) -> T {
+        crate::util::parse_or_panic(self.get(key), default, &format!("config key {key}"), expected)
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_or(key, default, "a float")
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_or(key, default, "a non-negative integer")
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parse_or(key, default, "a non-negative integer")
     }
 
+    /// Booleans accept true/false, 1/0, yes/no (case-insensitive); any
+    /// other present value is a loud panic — previously `bool_or("x",
+    /// true)` mapped an unrecognized `x = TRUE` to `false`, ignoring both
+    /// the value and the default.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
-        self.get(key)
-            .map(|v| matches!(v, "true" | "1" | "yes"))
-            .unwrap_or(default)
+        match self.get(key) {
+            None => default,
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" => true,
+                "false" | "0" | "no" => false,
+                _ => panic!(
+                    "config key {key} has malformed boolean {v:?} (use true/false, 1/0, \
+                     yes/no)"
+                ),
+            },
+        }
     }
 
     /// Typed getter that errors on malformed values (strict paths).
@@ -122,6 +143,47 @@ mod tests {
     fn require_errors_on_missing() {
         let c = Config::new();
         assert!(c.require_f64("nope").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed value")]
+    fn malformed_float_is_loud_not_a_silent_default() {
+        // regression: `.parse().ok()` used to turn the typo into 0.1
+        let c = Config::from_str_strict("sigma = O.25\n").unwrap();
+        let _ = c.f64_or("sigma", 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed value")]
+    fn malformed_integer_is_loud_not_a_silent_default() {
+        let c = Config::from_str_strict("n_clients = 5OO\n").unwrap();
+        let _ = c.usize_or("n_clients", 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed value")]
+    fn malformed_u64_is_loud_not_a_silent_default() {
+        let c = Config::from_str_strict("seed = -3\n").unwrap();
+        let _ = c.u64_or("seed", 0);
+    }
+
+    #[test]
+    fn bool_accepts_common_spellings_case_insensitively() {
+        let c = Config::from_str_strict("a = TRUE\nb = No\nc = 1\n").unwrap();
+        assert!(c.bool_or("a", false));
+        assert!(!c.bool_or("b", true));
+        assert!(c.bool_or("c", false));
+        assert!(c.bool_or("missing", true));
+        assert!(!c.bool_or("missing", false));
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed boolean")]
+    fn malformed_bool_is_loud_not_false() {
+        // regression: any unrecognized value used to decode as `false`,
+        // ignoring the default entirely
+        let c = Config::from_str_strict("flag = enabled\n").unwrap();
+        let _ = c.bool_or("flag", true);
     }
 
     #[test]

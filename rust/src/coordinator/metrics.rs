@@ -1,5 +1,6 @@
 //! Per-round metric recording with CSV / JSON export.
 
+use crate::dp::ledger::PrivacySpend;
 use crate::util::json::{Csv, Json};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -19,6 +20,16 @@ impl Metrics {
 
     pub fn record(&mut self, round: u64, key: &str, value: f64) {
         self.series.entry(key.to_string()).or_default().push((round, value));
+    }
+
+    /// Record one round's privacy spend (see
+    /// [`crate::dp::PrivacyLedger`]): the round's amplified ε and the
+    /// cumulative basic-composition (ε, δ) through it, as the series
+    /// `dp_eps_round` / `dp_eps_total` / `dp_delta_total`.
+    pub fn record_privacy(&mut self, spend: &PrivacySpend) {
+        self.record(spend.round, "dp_eps_round", spend.eps_round);
+        self.record(spend.round, "dp_eps_total", spend.eps_total);
+        self.record(spend.round, "dp_delta_total", spend.delta_total);
     }
 
     pub fn last(&self, key: &str) -> Option<f64> {
@@ -112,6 +123,20 @@ mod tests {
         assert_eq!(csv.rows[0][1], "1");
         assert_eq!(csv.rows[1][2], "3");
         assert_eq!(csv.rows[1][1], ""); // missing cell
+    }
+
+    #[test]
+    fn privacy_spend_records_three_series() {
+        let mut ledger = crate::dp::PrivacyLedger::new(1.0, 1e-5);
+        let mut m = Metrics::new("dp");
+        for round in 0..3u64 {
+            let spend = ledger.record(round, 0.5);
+            m.record_privacy(&spend);
+        }
+        assert_eq!(m.series("dp_eps_round").unwrap().len(), 3);
+        let totals = m.series("dp_eps_total").unwrap();
+        assert!(totals[2].1 > totals[1].1 && totals[1].1 > totals[0].1);
+        assert!((m.last("dp_delta_total").unwrap() - 1.5e-5).abs() < 1e-16);
     }
 
     #[test]

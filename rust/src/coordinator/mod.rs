@@ -18,18 +18,30 @@
 //! server unmasks all rounds in a single batched close (single rounds are
 //! the W=1 special case).
 //!
+//! Fleets at scale neither keep every client alive
+//! ([`runtime::run_rounds_encoded_with_dropouts`]) nor touch every client
+//! every round: [`runtime::run_rounds_encoded_sampled`] derives each
+//! round's cohort from the root seed through a
+//! [`sampling::SamplingPolicy`], opens the masked session over the cohort
+//! only, and threads the subsampling-amplified DP spend through a
+//! [`crate::dp::PrivacyLedger`].
+//!
 //! * [`config`] — experiment configuration (file + CLI overrides)
 //! * [`metrics`] — per-round metric recording, CSV/JSON export
 //! * [`runtime`] — the threaded client pool + round loops
+//! * [`sampling`] — seed-derived per-round client sampling policies
 
 pub mod config;
 pub mod metrics;
 pub mod runtime;
+pub mod sampling;
 
 pub use config::Config;
 pub use metrics::Metrics;
 pub use runtime::{
     run_round, run_round_encoded, run_round_mech, run_rounds_encoded,
-    run_rounds_encoded_with_dropouts, run_rounds_mech, run_rounds_mech_with_dropouts,
-    ClientPool, LocalCompute, RoundReport,
+    run_rounds_encoded_sampled, run_rounds_encoded_with_dropouts, run_rounds_mech,
+    run_rounds_mech_sampled, run_rounds_mech_with_dropouts, ClientPool, LocalCompute,
+    RoundReport,
 };
+pub use sampling::SamplingPolicy;

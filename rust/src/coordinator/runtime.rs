@@ -42,18 +42,32 @@
 //! both survivor quantities; dropout-aware mechanisms rescale their error
 //! to n′ — see
 //! [`crate::mechanisms::pipeline::ServerDecoder::decode_survivors`]).
+//!
+//! Real fleets also do not touch every client every round:
+//! [`run_rounds_encoded_sampled`] derives each round's participating
+//! *cohort* from the root seed through a
+//! [`crate::coordinator::sampling::SamplingPolicy`] (Poisson(γ) or
+//! fixed-size without replacement) — client and server agree on the
+//! cohort without communication, the masked transport opens its pairwise
+//! schedule over the cohort only (sampled-out ≠ dropped: no masks, no
+//! recovery shares), sampling composes with the mid-round dropout path,
+//! and an optional [`PrivacyLedger`] records every executed round's
+//! subsampling-amplified (ε, δ) spend into [`RoundReport::privacy`].
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::sampling::SamplingPolicy;
+use crate::dp::ledger::{PrivacyLedger, PrivacySpend};
 use crate::mechanisms::pipeline::{
     ClientEncoder, ServerDecoder, SharedRound, SurvivorSet, Transport, TransportPartial,
 };
 use crate::mechanisms::session::{
-    derive_session_seed, session_round_transports, RoundDropouts, TransportSession,
+    derive_session_seed, session_round_transports_sampled, RoundDropouts, TransportSession,
 };
 use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::util::rng::{seed_domain, Rng};
 
 /// Client-local computation: produce this round's vector from the broadcast
 /// global state. Implementations must be deterministic in (round, state)
@@ -86,9 +100,10 @@ enum ShardMsg {
         state: Arc<Vec<f64>>,
         /// per-round shared-randomness seeds, `seeds.len()` = window W
         seeds: Arc<Vec<u64>>,
-        /// per-round announced dropouts (global client ids): a dropped
-        /// client is skipped entirely — never computed, never encoded
-        dropouts: Arc<Vec<Vec<usize>>>,
+        /// per-round participation mask over the whole fleet: a client
+        /// that is sampled out of the round's cohort OR announced dropped
+        /// is inactive — never computed, never encoded
+        active: Arc<Vec<Vec<bool>>>,
         encoder: Arc<dyn ClientEncoder>,
         /// per-round session-rekeyed transports (same schedule the
         /// orchestrator's session will unmask)
@@ -188,7 +203,7 @@ impl ClientPool {
                                 start_round,
                                 state,
                                 seeds,
-                                dropouts,
+                                active,
                                 encoder,
                                 transports,
                             } => {
@@ -197,15 +212,16 @@ impl ClientPool {
                                     seeds.iter().zip(transports.iter()).enumerate()
                                 {
                                     let round = start_round + r as u64;
-                                    let dropped = &dropouts[r];
+                                    let participating = &active[r];
                                     let mut partial: Option<TransportPartial> = None;
                                     let mut bits = BitsAccount::default();
                                     let mut x_sum: Vec<f64> = Vec::new();
                                     let mut clients: Vec<usize> = Vec::new();
                                     for c in range2.clone() {
-                                        if dropped.contains(&c) {
-                                            // announced dropout: no local
-                                            // compute, no encode, no count
+                                        if !participating[c] {
+                                            // sampled out or announced
+                                            // dropped: no local compute,
+                                            // no encode, no count
                                             continue;
                                         }
                                         let x = compute.local_update(c, round, &state);
@@ -298,14 +314,25 @@ pub struct RoundReport {
     /// exact mean of the *surviving* clients' vectors (for MSE metrics; a
     /// real server cannot see this — test/metric use only)
     pub true_mean: Vec<f64>,
-    /// how many clients the round actually closed over (n′ ≤ n; equals
-    /// the fleet size on dropout-free rounds)
+    /// how many clients the round actually closed over (n′ ≤ cohort ≤ n;
+    /// equals the fleet size on unsampled dropout-free rounds)
     pub survivors: usize,
+    /// how many clients were sampled into the round's cohort (n on
+    /// unsampled rounds; `survivors` is this minus mid-round dropouts)
+    pub cohort: usize,
+    /// the round's recorded privacy spend, when the run threads a
+    /// [`PrivacyLedger`]: per-round amplified (ε, δ) plus the cumulative
+    /// basic-composition totals through this round
+    pub privacy: Option<PrivacySpend>,
 }
 
-/// Per-round seed derivation shared by both round shapes.
+/// Per-round seed derivation shared by both round shapes: the
+/// [`seed_domain::ROUND`] family of the root seed, domain-separated from
+/// session and cohort seeds by the SplitMix-style mixer
+/// [`Rng::derive_domain`]. (The previous XOR fold handed round 0 the raw
+/// root seed — the seed-format bump this replaced.)
 fn round_seed(root_seed: u64, round: u64) -> u64 {
-    root_seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    Rng::derive_domain(root_seed, seed_domain::ROUND, round)
 }
 
 /// Run one round, monolith shape: parallel local compute, then the
@@ -321,7 +348,7 @@ pub fn run_round(
     let true_mean = crate::mechanisms::traits::true_mean(&xs);
     let output = mech.aggregate(&xs, round_seed(root_seed, round));
     let survivors = xs.len();
-    RoundReport { round, output, true_mean, survivors }
+    RoundReport { round, output, true_mean, survivors, cohort: survivors, privacy: None }
 }
 
 /// Run a window of W rounds through ONE transport session, pipeline
@@ -371,6 +398,53 @@ pub fn run_rounds_encoded_with_dropouts(
     root_seed: u64,
     dropouts: &[Vec<usize>],
 ) -> Vec<RoundReport> {
+    run_rounds_encoded_sampled(
+        pool,
+        encoder,
+        transport,
+        decoder,
+        start_round,
+        window,
+        state,
+        root_seed,
+        &SamplingPolicy::Full,
+        dropouts,
+        None,
+    )
+}
+
+/// The general windowed runner: every round's participating *cohort* is
+/// derived from the root seed by `policy`
+/// ([`crate::coordinator::sampling::SamplingPolicy`] — clients re-derive
+/// their own membership, no communication), `dropouts[r]` names the
+/// *mid-round* dropouts among cohort members, and an optional
+/// [`PrivacyLedger`] records each executed round's
+/// subsampling-amplified (ε, δ) spend (surfaced in
+/// [`RoundReport::privacy`]).
+///
+/// Sampled-out clients are skipped inside their shard exactly like
+/// dropped ones, but the transport knows the difference: the session's
+/// masked schedule opens over the cohort only
+/// ([`TransportSession::open_sampled`]), so sampled-out clients hold no
+/// masks and need no recovery, while dropped cohort members still go
+/// through Bonawitz-style share recovery. Each round decodes over cohort
+/// minus dropped ([`ServerDecoder::decode_survivors`]), keeping the exact
+/// error laws at the contributing count n′. `SamplingPolicy::Full` with
+/// ledger `None` IS [`run_rounds_encoded_with_dropouts`], bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_encoded_sampled(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    policy: &SamplingPolicy,
+    dropouts: &[Vec<usize>],
+    mut ledger: Option<&mut PrivacyLedger>,
+) -> Vec<RoundReport> {
     assert!(window > 0, "a session window needs at least one round");
     assert!(
         window <= crate::mechanisms::session::MAX_WINDOW,
@@ -387,18 +461,30 @@ pub fn run_rounds_encoded_with_dropouts(
         window,
         "dropout schedule must cover every round of the window"
     );
-    // validate the schedule before any shard does work (fail closed)
-    let survivor_sets: Vec<SurvivorSet> =
-        dropouts.iter().map(|d| SurvivorSet::with_dropped(pool.n_clients, d)).collect();
+    let n = pool.n_clients;
+    // derive the cohorts and validate the whole schedule before any shard
+    // does work (fail closed): dropouts must name cohort members, and
+    // every round must keep at least one survivor
+    let cohorts: Vec<SurvivorSet> = policy.cohorts(root_seed, start_round, window, n);
+    let survivor_sets: Vec<SurvivorSet> = cohorts
+        .iter()
+        .zip(dropouts)
+        .enumerate()
+        .map(|(r, (cohort, dropped))| cohort.drop_cohort_members(dropped, r))
+        .collect();
     let session_seed = derive_session_seed(root_seed, start_round);
     let seeds: Arc<Vec<u64>> = Arc::new(
         (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
     );
     // the shards must mask with the exact schedule the session will unmask:
-    // both sides derive it from (transport, session_seed, W) alone
-    let transports: Arc<Vec<Arc<dyn Transport>>> =
-        Arc::new(session_round_transports(transport.as_ref(), session_seed, window));
-    let dropouts_arc: Arc<Vec<Vec<usize>>> = Arc::new(dropouts.to_vec());
+    // both sides derive it from (transport, session_seed, cohorts) alone
+    let transports: Arc<Vec<Arc<dyn Transport>>> = Arc::new(session_round_transports_sampled(
+        transport.as_ref(),
+        session_seed,
+        &cohorts,
+    ));
+    let active: Arc<Vec<Vec<bool>>> =
+        Arc::new(survivor_sets.iter().map(|s| s.alive_mask().to_vec()).collect());
     let state = Arc::new(state.to_vec());
     for shard in &pool.shards {
         shard
@@ -407,7 +493,7 @@ pub fn run_rounds_encoded_with_dropouts(
                 start_round,
                 state: state.clone(),
                 seeds: seeds.clone(),
-                dropouts: dropouts_arc.clone(),
+                active: active.clone(),
                 encoder: encoder.clone(),
                 transports: transports.clone(),
             })
@@ -435,12 +521,13 @@ pub fn run_rounds_encoded_with_dropouts(
         .find(|f| !f.x_sum.is_empty())
         .map(|f| f.x_sum.len())
         .expect("every round has at least one survivor");
-    let mut session = TransportSession::open(
+    let mut session = TransportSession::open_sampled(
         transport.as_ref(),
         session_seed,
-        pool.n_clients,
+        n,
         dim,
         seeds.as_slice(),
+        &cohorts,
     );
     let mut x_sums = vec![vec![0.0f64; dim]; window];
     for (_, rounds) in pieces {
@@ -455,14 +542,23 @@ pub fn run_rounds_encoded_with_dropouts(
             }
         }
     }
-    // announce the schedule with the survivors' recovery shares (the
-    // in-process analogue of the share-collection phase)
+    // announce the mid-round dropouts with the final survivors' recovery
+    // shares (the in-process analogue of the share-collection phase);
+    // sampled-out clients are announced nowhere — they left no masks
     let announced: Vec<RoundDropouts> = survivor_sets
         .iter()
+        .zip(dropouts)
         .enumerate()
-        .map(|(r, s)| RoundDropouts::announce(session_seed, r as u64, s))
+        .map(|(r, (s, dropped))| {
+            RoundDropouts::announce_among(session_seed, r as u64, s, dropped)
+        })
         .collect();
     let shared: Vec<SharedRound> = (0..window).map(|r| *session.round(r)).collect();
+    let gamma = policy.amplification_gamma(n);
+    // Poisson's empty-cohort redraw deviates from the idealized sampler
+    // by TV ≤ (1−γ)^(n−1) on every neighboring dataset — surrendered as
+    // a per-round δ surcharge
+    let tv = policy.conditioning_tv(n);
     session
         .close_with_dropouts(&announced)
         .into_iter()
@@ -474,11 +570,16 @@ pub fn run_rounds_encoded_with_dropouts(
             let n_alive = survivors.n_alive();
             let true_mean: Vec<f64> =
                 x_sum.into_iter().map(|v| v / n_alive as f64).collect();
+            let round_id = start_round + r as u64;
+            let privacy =
+                ledger.as_deref_mut().map(|l| l.record_with_tv_slack(round_id, gamma, tv));
             RoundReport {
-                round: start_round + r as u64,
+                round: round_id,
                 output: RoundOutput { estimate, bits },
                 true_mean,
                 survivors: n_alive,
+                cohort: cohorts[r].n_alive(),
+                privacy,
             }
         })
         .collect()
@@ -554,6 +655,32 @@ where
     let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
     run_rounds_encoded_with_dropouts(
         pool, encoder, transport, mech, start_round, window, state, root_seed, dropouts,
+    )
+}
+
+/// Windowed convenience wrapper with seed-derived client sampling, an
+/// optional mid-round dropout schedule and an optional privacy ledger
+/// (see [`run_rounds_encoded_sampled`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_mech_sampled<M>(
+    pool: &ClientPool,
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    policy: &SamplingPolicy,
+    dropouts: &[Vec<usize>],
+    ledger: Option<&mut PrivacyLedger>,
+) -> Vec<RoundReport>
+where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+    run_rounds_encoded_sampled(
+        pool, encoder, transport, mech, start_round, window, state, root_seed, policy,
+        dropouts, ledger,
     )
 }
 
@@ -800,6 +927,198 @@ mod tests {
             );
             let reps = run_rounds_mech_with_dropouts(
                 &pool, &mech, Arc::new(SecAgg::new()), 1, 3, &[], 77, &schedule,
+            );
+            estimates.push(reps.into_iter().map(|r| r.output.estimate).collect());
+        }
+        assert_eq!(estimates[0], estimates[1]);
+        assert_eq!(estimates[0], estimates[2]);
+    }
+
+    #[test]
+    fn sampling_full_policy_is_the_dropout_path_bit_for_bit() {
+        let pool = ClientPool::spawn(8, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let schedule: Vec<Vec<usize>> = vec![vec![3], vec![], vec![0, 6]];
+        let a = run_rounds_mech_with_dropouts(
+            &pool, &mech, Arc::new(SecAgg::new()), 1, 3, &[], 21, &schedule,
+        );
+        let b = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            1,
+            3,
+            &[],
+            21,
+            &SamplingPolicy::Full,
+            &schedule,
+            None,
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.output.estimate, y.output.estimate);
+            assert_eq!(x.survivors, y.survivors);
+            assert_eq!(y.cohort, 8);
+            assert!(y.privacy.is_none());
+        }
+    }
+
+    #[test]
+    fn sampling_sampled_secagg_window_matches_sampled_plain_window() {
+        // the acceptance property at the coordinator level: a γ-sampled
+        // masked window is bit-identical to Plain over the same cohorts
+        let pool = ClientPool::spawn(10, Arc::new(round_varying_compute));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let policy = SamplingPolicy::Poisson { gamma: 0.6 };
+        let none: Vec<Vec<usize>> = vec![Vec::new(); 4];
+        let plain = run_rounds_mech_sampled(
+            &pool, &mech, Arc::new(Plain), 0, 4, &[], 33, &policy, &none, None,
+        );
+        let masked = run_rounds_mech_sampled(
+            &pool, &mech, Arc::new(SecAgg::new()), 0, 4, &[], 33, &policy, &none, None,
+        );
+        for (p, m) in plain.iter().zip(&masked) {
+            assert_eq!(p.output.estimate, m.output.estimate, "round {}", p.round);
+            assert_eq!(p.output.bits.messages, m.output.bits.messages);
+            assert_eq!(p.cohort, m.cohort);
+            assert_eq!(p.survivors, p.cohort, "no dropouts: survivors == cohort");
+            // the derived cohorts match the policy's own derivation
+            let want = policy.cohort(33, p.round, 10).n_alive();
+            assert_eq!(p.cohort, want);
+        }
+    }
+
+    #[test]
+    fn sampling_true_mean_is_the_cohort_mean() {
+        let pool = ClientPool::spawn(7, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let policy = SamplingPolicy::FixedSize { k: 3 };
+        let reps = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(Plain),
+            5,
+            2,
+            &[],
+            9,
+            &policy,
+            &[vec![], vec![]],
+            None,
+        );
+        for rep in &reps {
+            assert_eq!(rep.cohort, 3);
+            assert_eq!(rep.survivors, 3);
+            let cohort = policy.cohort(9, rep.round, 7);
+            let mut want = vec![0.0f64; 5];
+            for c in cohort.alive_iter() {
+                for (w, v) in want.iter_mut().zip(round_varying_compute(c, rep.round, &[])) {
+                    *w += v;
+                }
+            }
+            for (a, b) in rep.true_mean.iter().zip(want.iter().map(|v| v / 3.0)) {
+                assert!((a - b).abs() < 1e-12, "round {}", rep.round);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_composes_with_dropouts_and_ledger() {
+        use crate::dp::ledger::PrivacyLedger;
+        let n = 8;
+        let pool = ClientPool::spawn(n, Arc::new(round_varying_compute));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let policy = SamplingPolicy::FixedSize { k: 5 };
+        // drop one cohort member per round (derived from the policy so the
+        // schedule is always valid)
+        let schedule: Vec<Vec<usize>> = (0..3u64)
+            .map(|r| {
+                let cohort = policy.cohort(77, r, n);
+                vec![cohort.alive_iter().next().unwrap()]
+            })
+            .collect();
+        let mut ledger = PrivacyLedger::new(1.0, 1e-5);
+        let masked = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            3,
+            &[],
+            77,
+            &policy,
+            &schedule,
+            Some(&mut ledger),
+        );
+        let plain = run_rounds_mech_sampled(
+            &pool, &mech, Arc::new(Plain), 0, 3, &[], 77, &policy, &schedule, None,
+        );
+        // fixed-size accounting runs at rate k/n — valid under
+        // substitution adjacency with a substitution-calibrated base
+        // (see SamplingPolicy::amplification_gamma); this asserts the
+        // ledger's contract, not an add/remove guarantee
+        let gamma = 5.0 / 8.0;
+        let (amp_eps, _) = crate::dp::amplify_by_subsampling(1.0, 1e-5, gamma);
+        for (r, (m, p)) in masked.iter().zip(&plain).enumerate() {
+            assert_eq!(m.output.estimate, p.output.estimate, "round {r}");
+            assert_eq!(m.cohort, 5);
+            assert_eq!(m.survivors, 4);
+            let spend = m.privacy.expect("ledger threaded");
+            assert!((spend.eps_round - amp_eps).abs() < 1e-12);
+            assert!(spend.eps_round < 1.0, "amplified ε not below base");
+            assert!(
+                (spend.eps_total - amp_eps * (r + 1) as f64).abs() < 1e-9,
+                "cumulative spend"
+            );
+        }
+        assert_eq!(ledger.rounds(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "sampled out of the cohort")]
+    fn sampling_dropping_a_sampled_out_client_fails_closed() {
+        let n = 6;
+        let pool = ClientPool::spawn(n, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let policy = SamplingPolicy::FixedSize { k: 3 };
+        // find a client that is NOT in round 0's cohort and announce it
+        let cohort = policy.cohort(5, 0, n);
+        let outsider = (0..n).find(|&c| !cohort.is_alive(c)).unwrap();
+        let _ = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            1,
+            &[],
+            5,
+            &policy,
+            &[vec![outsider]],
+            None,
+        );
+    }
+
+    #[test]
+    fn sampling_rounds_invariant_under_worker_count() {
+        let mech = IrwinHallMechanism::new(0.2, 4.0);
+        let policy = SamplingPolicy::Poisson { gamma: 0.5 };
+        let none: Vec<Vec<usize>> = vec![Vec::new(); 3];
+        let mut estimates: Vec<Vec<Vec<f64>>> = Vec::new();
+        for threads in [1usize, 4, 11] {
+            let pool = ClientPool::spawn_with_threads(
+                11,
+                Arc::new(round_varying_compute),
+                Some(threads),
+            );
+            let reps = run_rounds_mech_sampled(
+                &pool,
+                &mech,
+                Arc::new(SecAgg::new()),
+                1,
+                3,
+                &[],
+                77,
+                &policy,
+                &none,
+                None,
             );
             estimates.push(reps.into_iter().map(|r| r.output.estimate).collect());
         }

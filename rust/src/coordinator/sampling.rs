@@ -1,0 +1,320 @@
+//! Seed-derived per-round client sampling (the paper's §4 participation
+//! model, composed with the accounting of Chen et al. 2023, *Privacy
+//! Amplification via Compression*).
+//!
+//! A [`SamplingPolicy`] turns (root seed, round, fleet size) into that
+//! round's participating *cohort*, deterministically: every client and the
+//! server derive the identical cohort from the shared root seed — no
+//! communication, exactly like every other piece of shared randomness in
+//! this crate. The cohort is known when the transport session opens, so
+//! masked transports open their pairwise ℤ_m schedule over the cohort only
+//! ([`crate::mechanisms::pipeline::Transport::for_session_round_sampled`]):
+//! being *sampled out* costs nothing — no mask legs, no recovery shares —
+//! unlike a mid-round *dropout*, which still goes through Bonawitz-style
+//! recovery. The two compose
+//! ([`crate::coordinator::runtime::run_rounds_encoded_sampled`]).
+//!
+//! The cohort draw lives in its own seed-derivation domain
+//! ([`seed_domain::COHORT`]) of the SplitMix-style mixer
+//! [`Rng::derive_domain`], structurally collision-free against the round-
+//! and session-seed families hanging off the same root.
+//!
+//! Privacy side: Poisson(γ) participation is the subsampling that
+//! [`crate::dp::accountant::amplify_by_subsampling`] amplifies; the
+//! coordinator threads each round's rate
+//! ([`SamplingPolicy::amplification_gamma`] — γ for Poisson, k/n under a
+//! substitution-adjacency caveat for fixed-size) plus the empty-redraw
+//! TV gap ([`SamplingPolicy::conditioning_tv`], surrendered as a δ
+//! surcharge) into a [`crate::dp::PrivacyLedger`] so runs report a
+//! rigorous amplified cumulative (ε, δ) spend.
+
+use crate::mechanisms::pipeline::SurvivorSet;
+use crate::util::rng::{seed_domain, Rng};
+
+/// How each round's participating cohort is drawn from the fleet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplingPolicy {
+    /// Every round touches every client (the pre-sampling behavior; no
+    /// privacy amplification).
+    Full,
+    /// Independent Poisson sampling: each client participates with
+    /// probability γ ∈ (0, 1] per round — the Balle–Barthe–Gaboardi
+    /// amplification model. An all-empty draw is deterministically
+    /// redrawn from the same stream (both ends agree), so every round has
+    /// at least one participant.
+    Poisson { gamma: f64 },
+    /// Fixed-size sampling without replacement: exactly k ∈ [1, n]
+    /// distinct clients per round (uniform over k-subsets). The ledger
+    /// accounts for it at rate γ = k/n.
+    FixedSize { k: usize },
+}
+
+impl SamplingPolicy {
+    /// Fail-closed parameter validation against a concrete fleet size.
+    pub fn validate(&self, n_clients: usize) {
+        assert!(n_clients > 0, "need at least one client");
+        match *self {
+            SamplingPolicy::Full => {}
+            SamplingPolicy::Poisson { gamma } => {
+                assert!(
+                    gamma > 0.0 && gamma <= 1.0,
+                    "Poisson sampling rate must lie in (0, 1], got {gamma}"
+                );
+            }
+            SamplingPolicy::FixedSize { k } => {
+                assert!(
+                    (1..=n_clients).contains(&k),
+                    "fixed-size cohort k={k} out of range for {n_clients} clients"
+                );
+            }
+        }
+    }
+
+    /// The per-round subsampling rate the DP accountant amplifies with.
+    ///
+    /// * `Full` — 1 (no amplification claimed).
+    /// * `Poisson` — γ, the Balle–Barthe–Gaboardi rate for *true*
+    ///   independent Poisson sampling. [`SamplingPolicy::cohort`] redraws
+    ///   empty cohorts, so the deployed sampler is Poisson *conditioned
+    ///   on non-empty* — within total-variation distance (1 − γ)ⁿ of the
+    ///   sampler the theorem covers. That gap is NOT folded into the
+    ///   rate (a marginal-rate correction would be unsound: conditioning
+    ///   couples inclusions with O(1) effect exactly when (1 − γ)ⁿ is
+    ///   large); instead [`SamplingPolicy::conditioning_tv`] reports it
+    ///   and the [`crate::dp::PrivacyLedger`] converts it into a rigorous
+    ///   δ surcharge per round. For γ·n ≫ 1 the surcharge is far below
+    ///   f64 precision; for tiny γ·n it honestly blows up δ toward 1,
+    ///   signaling that no meaningful guarantee is being claimed.
+    /// * `FixedSize` — k/n, the BBG uniform-without-replacement rate.
+    ///   **Adjacency caveat:** this amplification bound holds under
+    ///   *substitution* adjacency and requires the base (ε₀, δ₀) fed to
+    ///   the [`crate::dp::PrivacyLedger`] to be calibrated for
+    ///   substitution (e.g. doubled sensitivity); composing it with an
+    ///   add/remove-calibrated base overstates the guarantee. Poisson is
+    ///   the add/remove bound.
+    pub fn amplification_gamma(&self, n_clients: usize) -> f64 {
+        match *self {
+            SamplingPolicy::Full => 1.0,
+            SamplingPolicy::Poisson { gamma } => gamma,
+            SamplingPolicy::FixedSize { k } => k as f64 / n_clients as f64,
+        }
+    }
+
+    /// Total-variation distance between the cohort sampler this policy
+    /// actually deploys and the idealized sampler its amplification bound
+    /// is proven for, as a bound valid on *every* dataset adjacent to the
+    /// n-client one. Non-zero only for Poisson, whose empty-cohort
+    /// rejection conditions the draw: TV(conditioned, unconditioned) =
+    /// P(empty), and under add/remove adjacency the worse neighbor has
+    /// n − 1 clients, so the bound is (1 − γ)^(n−1) ≥ (1 − γ)ⁿ (for
+    /// n = 1 it is 1 — conditioning a single-client fleet on non-empty
+    /// pins participation, and no amplification survives). The ledger
+    /// turns this into a per-round δ surcharge of (1 + e^ε′)·TV — the
+    /// price of replacing a mechanism by one within TV distance t on each
+    /// neighboring dataset
+    /// ([`crate::dp::PrivacyLedger::record_with_tv_slack`]).
+    pub fn conditioning_tv(&self, n_clients: usize) -> f64 {
+        match *self {
+            SamplingPolicy::Full | SamplingPolicy::FixedSize { .. } => 0.0,
+            // γ = 1 is deterministic full participation on every dataset —
+            // no draw is ever empty, no conditioning happens (the n = 1
+            // exponent-zero case would otherwise evaluate 0⁰ = 1 and
+            // charge a bogus surcharge)
+            SamplingPolicy::Poisson { gamma } if gamma >= 1.0 => 0.0,
+            SamplingPolicy::Poisson { gamma } => {
+                (1.0 - gamma).powf(n_clients.saturating_sub(1) as f64)
+            }
+        }
+    }
+
+    /// The seed of round `round`'s cohort draw — the [`seed_domain::COHORT`]
+    /// family of the root seed. Callable by anyone holding the root seed,
+    /// so clients of a real deployment re-derive their own membership
+    /// without the coordinator in the loop. DP caveat: amplification by
+    /// subsampling requires the cohorts to stay hidden from the privacy
+    /// adversary, so the root seed is curator-confidential — see the
+    /// *secrecy of the sample* prerequisite in [`crate::dp::ledger`].
+    pub fn cohort_seed(root_seed: u64, round: u64) -> u64 {
+        Rng::derive_domain(root_seed, seed_domain::COHORT, round)
+    }
+
+    /// Round `round`'s cohort over an `n_clients` fleet, derived from the
+    /// root seed. Deterministic in (policy, root seed, round, n): client
+    /// and server agree without communication. Never empty (fail-closed
+    /// invariant of [`SurvivorSet`]): an all-empty Poisson draw is redrawn
+    /// from the same stream, with the rejection count bounded so a
+    /// pathologically small γ·n panics with a diagnostic instead of
+    /// spinning. (The conditioning this introduces is accounted for by
+    /// [`SamplingPolicy::conditioning_tv`].)
+    pub fn cohort(&self, root_seed: u64, round: u64, n_clients: usize) -> SurvivorSet {
+        self.validate(n_clients);
+        match *self {
+            SamplingPolicy::Full => SurvivorSet::full(n_clients),
+            SamplingPolicy::Poisson { gamma } => {
+                let mut rng = Rng::new(Self::cohort_seed(root_seed, round));
+                // empty draws are rejected and redrawn deterministically
+                // (the stream position after a rejection is itself
+                // seed-determined); the rejection count is bounded so a
+                // pathologically small γ·n fails loudly instead of
+                // spinning — with p(non-empty) ≈ γn, 4096 attempts make a
+                // spurious failure astronomically unlikely in any regime
+                // where rounds can actually be fielded
+                for _ in 0..4096 {
+                    let alive: Vec<bool> =
+                        (0..n_clients).map(|_| rng.bernoulli(gamma)).collect();
+                    if alive.iter().any(|&a| a) {
+                        return SurvivorSet::from_alive_mask(alive);
+                    }
+                }
+                panic!(
+                    "Poisson sampling rate gamma={gamma} over {n_clients} clients drew 4096 \
+                     consecutive empty cohorts — γ·n is too small to field rounds; raise γ \
+                     or use FixedSize sampling"
+                )
+            }
+            SamplingPolicy::FixedSize { k } => {
+                let mut rng = Rng::new(Self::cohort_seed(root_seed, round));
+                let mut alive = vec![false; n_clients];
+                for i in rng.sample_indices(n_clients, k) {
+                    alive[i] = true;
+                }
+                SurvivorSet::from_alive_mask(alive)
+            }
+        }
+    }
+
+    /// The whole window's cohorts, `window` rounds starting at
+    /// `start_round`.
+    pub fn cohorts(
+        &self,
+        root_seed: u64,
+        start_round: u64,
+        window: usize,
+        n_clients: usize,
+    ) -> Vec<SurvivorSet> {
+        (0..window).map(|r| self.cohort(root_seed, start_round + r as u64, n_clients)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_cohorts_are_deterministic_and_round_varying() {
+        let p = SamplingPolicy::Poisson { gamma: 0.5 };
+        let a = p.cohort(42, 3, 16);
+        assert_eq!(a, p.cohort(42, 3, 16));
+        assert!(a.n_alive() >= 1 && a.n() == 16);
+        // across rounds and roots the draws vary: identical cohorts for
+        // every probe would need a ~2⁻¹²⁸ coincidence
+        assert!((4..12u64).any(|r| p.cohort(42, r, 16) != a), "round-invariant cohorts");
+        assert!((43..51u64).any(|s| p.cohort(s, 3, 16) != a), "root-invariant cohorts");
+    }
+
+    #[test]
+    fn sampling_full_policy_is_the_whole_fleet() {
+        let c = SamplingPolicy::Full.cohort(7, 0, 9);
+        assert!(c.is_full());
+        assert_eq!(SamplingPolicy::Full.amplification_gamma(9), 1.0);
+    }
+
+    #[test]
+    fn sampling_fixed_size_draws_exactly_k_distinct() {
+        let p = SamplingPolicy::FixedSize { k: 4 };
+        for round in 0..20u64 {
+            let c = p.cohort(99, round, 11);
+            assert_eq!(c.n_alive(), 4, "round {round}");
+            assert_eq!(c.n(), 11);
+        }
+        assert!((p.amplification_gamma(11) - 4.0 / 11.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sampling_poisson_rate_matches_gamma_empirically() {
+        let p = SamplingPolicy::Poisson { gamma: 0.3 };
+        let n = 50usize;
+        let rounds = 2000u64;
+        let total: usize = (0..rounds).map(|r| p.cohort(1, r, n).n_alive()).sum();
+        let rate = total as f64 / (rounds as usize * n) as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn sampling_poisson_never_returns_an_empty_cohort() {
+        // tiny γ over a tiny fleet: the empty draw is overwhelmingly
+        // likely per attempt, so the deterministic redraw must kick in
+        let p = SamplingPolicy::Poisson { gamma: 0.01 };
+        for round in 0..200u64 {
+            let c = p.cohort(5, round, 2);
+            assert!(c.n_alive() >= 1, "round {round}");
+            // and the redraw is replayable
+            assert_eq!(c, p.cohort(5, round, 2));
+        }
+    }
+
+    #[test]
+    fn sampling_conditioning_tv_is_the_empty_draw_probability() {
+        // the deployed Poisson sampler conditions on a non-empty cohort;
+        // what the ledger must surrender in δ is P(empty) on the WORSE
+        // neighboring dataset (n−1 clients under add/remove adjacency):
+        // (1−γ)^(n−1)
+        let p = SamplingPolicy::Poisson { gamma: 0.01 };
+        let tv2 = p.conditioning_tv(2);
+        assert!((tv2 - 0.99).abs() < 1e-15, "tv2={tv2}");
+        assert!(tv2 > 0.9, "tiny γ·n: the gap is O(1), not negligible");
+        // a single-client fleet: conditioning pins participation, no
+        // amplification survives
+        assert_eq!(p.conditioning_tv(1), 1.0);
+        // large γ·n: the gap is negligible (0.99^9999 ≈ 2e-44)
+        assert!(p.conditioning_tv(10_000) < 1e-40);
+        // the rate itself stays the raw BBG γ in every regime
+        assert_eq!(p.amplification_gamma(2), 0.01);
+        // exact samplers carry no surcharge — including γ = 1 Poisson,
+        // which is deterministic full participation even at n = 1
+        assert_eq!(SamplingPolicy::Full.conditioning_tv(8), 0.0);
+        assert_eq!(SamplingPolicy::FixedSize { k: 3 }.conditioning_tv(8), 0.0);
+        assert_eq!(SamplingPolicy::Poisson { gamma: 1.0 }.conditioning_tv(1), 0.0);
+        assert_eq!(SamplingPolicy::Poisson { gamma: 1.0 }.conditioning_tv(8), 0.0);
+    }
+
+    #[test]
+    fn sampling_gamma_one_poisson_is_full_participation() {
+        let c = SamplingPolicy::Poisson { gamma: 1.0 }.cohort(3, 0, 7);
+        assert!(c.is_full());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty cohorts")]
+    fn sampling_pathologically_small_gamma_fails_loudly() {
+        // γ·n ≈ 2e-12: instead of spinning on the redraw loop forever,
+        // the bounded rejection fails closed with a diagnostic
+        let _ = SamplingPolicy::Poisson { gamma: 1e-12 }.cohort(1, 0, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn sampling_fixed_size_rejects_oversized_k() {
+        SamplingPolicy::FixedSize { k: 8 }.validate(5);
+    }
+
+    #[test]
+    #[should_panic(expected = "must lie in (0, 1]")]
+    fn sampling_poisson_rejects_zero_gamma() {
+        SamplingPolicy::Poisson { gamma: 0.0 }.validate(5);
+    }
+
+    #[test]
+    fn sampling_cohort_seeds_live_in_their_own_domain() {
+        // the cohort family must not alias round or session seeds of the
+        // same root (the seed-format bump's whole point)
+        use crate::mechanisms::session::derive_session_seed;
+        let root = 0xFEED;
+        for round in 0..32u64 {
+            let c = SamplingPolicy::cohort_seed(root, round);
+            assert_ne!(c, root);
+            assert_ne!(c, derive_session_seed(root, round));
+            assert_ne!(c, Rng::derive_domain(root, seed_domain::ROUND, round));
+        }
+    }
+}

@@ -39,6 +39,29 @@ pub fn analytic_gaussian_sigma(eps: f64, delta: f64, sensitivity: f64) -> f64 {
     hi
 }
 
+/// Inverse of [`gaussian_delta`] in ε: the exact ε(δ, σ) of the Gaussian
+/// mechanism by bisection (δ is strictly decreasing in ε). The analytic
+/// reference every looser accounting path (Rényi, zCDP) is compared
+/// against.
+pub fn analytic_gaussian_eps(delta: f64, sigma: f64, sensitivity: f64) -> f64 {
+    assert!(delta > 0.0 && sigma > 0.0 && sensitivity > 0.0);
+    let mut lo = 1e-9;
+    let mut hi = 1.0;
+    while gaussian_delta(hi, sigma, sensitivity) > delta {
+        hi *= 2.0;
+        assert!(hi < 1e9, "no finite eps achieves delta={delta} at sigma={sigma}");
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if gaussian_delta(mid, sigma, sensitivity) > delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
 /// Privacy amplification by subsampling (Poisson sampling rate γ) for an
 /// (ε, δ)-DP base mechanism: ε' = ln(1 + γ(e^ε − 1)), δ' = γδ
 /// (Balle–Barthe–Gaboardi 2018).
@@ -109,5 +132,80 @@ mod tests {
         let (e, d) = amplify_by_subsampling(1.3, 1e-5, 1.0);
         assert!((e - 1.3).abs() < 1e-12);
         assert!((d - 1e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn gamma_zero_releases_nothing() {
+        // γ = 0: no client is ever sampled, the mechanism releases a
+        // data-independent value — (0, 0)-DP exactly
+        let (e, d) = amplify_by_subsampling(2.7, 1e-4, 0.0);
+        assert_eq!(e, 0.0);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn amplification_is_strictly_contractive_for_gamma_below_one() {
+        for &gamma in &[0.01, 0.25, 0.5, 0.99] {
+            for &eps in &[0.1, 1.0, 4.0] {
+                let (amp, _) = amplify_by_subsampling(eps, 1e-5, gamma);
+                assert!(amp < eps, "gamma={gamma} eps={eps}: {amp}");
+                assert!(amp > gamma * eps * 0.5, "suspiciously strong: {amp}");
+            }
+        }
+    }
+
+    #[test]
+    fn deamplify_roundtrips_under_multiround_composition() {
+        // calibrate W rounds to a per-round amplified target: deamplify
+        // the per-round share, re-amplify, compose — the total must
+        // reproduce the budget exactly
+        let (total_eps, gamma, rounds) = (2.0, 0.3, 8usize);
+        let per_round_target = total_eps / rounds as f64;
+        let base = deamplify_eps(per_round_target, gamma);
+        let mut spent = 0.0;
+        for _ in 0..rounds {
+            let (amp, _) = amplify_by_subsampling(base, 1e-6, gamma);
+            spent += amp;
+        }
+        assert!((spent - total_eps).abs() < 1e-9, "spent {spent}");
+        // and deamplification is the exact inverse at every scale
+        for &e in &[1e-3, 0.1, 1.0, 5.0] {
+            let (amp, _) = amplify_by_subsampling(e, 1e-6, gamma);
+            assert!((deamplify_eps(amp, gamma) - e).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn renyi_path_agrees_with_analytic_gaussian_path_at_fixed_budget() {
+        // one σ, one δ: the ε certified through the Rényi accountant must
+        // upper-bound the analytic (exact) ε and stay within a factor 2 —
+        // the two paths describe the same Gaussian mechanism
+        use crate::dp::renyi::{rdp_gaussian, rdp_to_eps};
+        let delta = 1e-5;
+        for &sigma in &[1.0, 3.0, 8.0] {
+            let eps_renyi = rdp_to_eps(delta, |a| rdp_gaussian(a, sigma, 1.0));
+            let eps_exact = analytic_gaussian_eps(delta, sigma, 1.0);
+            assert!(
+                eps_renyi >= eps_exact - 1e-6,
+                "sigma={sigma}: Rényi {eps_renyi} below exact {eps_exact} — unsound"
+            );
+            assert!(
+                eps_renyi <= 2.0 * eps_exact,
+                "sigma={sigma}: Rényi {eps_renyi} too loose vs exact {eps_exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn analytic_eps_inverts_gaussian_delta() {
+        for &(delta, sigma) in &[(1e-5, 1.0), (1e-6, 3.0), (1e-4, 0.5)] {
+            let eps = analytic_gaussian_eps(delta, sigma, 1.0);
+            let back = gaussian_delta(eps, sigma, 1.0);
+            assert!(back <= delta * 1.001, "delta={delta} sigma={sigma}: {back}");
+            assert!(
+                gaussian_delta(eps * 0.99, sigma, 1.0) > delta,
+                "inversion not tight at delta={delta} sigma={sigma}"
+            );
+        }
     }
 }

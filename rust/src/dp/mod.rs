@@ -7,9 +7,18 @@
 //!   search), which is what the experiments use.
 //! * [`renyi`] — Rényi-DP / zCDP curves of the Gaussian mechanism and the
 //!   conversions used to calibrate the DDG baseline.
+//! * [`ledger`] — per-round accounting for *sampled* FL runs: composes the
+//!   subsampling-amplified (ε, δ) of every executed round (basic and
+//!   Rényi composition) into the cumulative spend the coordinator surfaces
+//!   per round.
 
 pub mod accountant;
+pub mod ledger;
 pub mod renyi;
 
-pub use accountant::{analytic_gaussian_sigma, classical_gaussian_sigma, gaussian_delta};
+pub use accountant::{
+    amplify_by_subsampling, analytic_gaussian_eps, analytic_gaussian_sigma,
+    classical_gaussian_sigma, deamplify_eps, gaussian_delta,
+};
+pub use ledger::{PrivacyLedger, PrivacySpend};
 pub use renyi::{rdp_gaussian, zcdp_to_eps, zcdp_sigma_for_eps};

@@ -45,7 +45,6 @@ pub fn zcdp_sigma_for_eps(eps: f64, delta: f64, sensitivity: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dp::accountant::gaussian_delta;
 
     #[test]
     fn rdp_linear_in_alpha() {
@@ -59,18 +58,7 @@ mod tests {
         let sigma = 3.0;
         let delta = 1e-5;
         let eps_rdp = rdp_to_eps(delta, |a| rdp_gaussian(a, sigma, 1.0));
-        // analytic eps: find eps with gaussian_delta(eps, sigma) = delta
-        let mut lo = 1e-6;
-        let mut hi = 50.0;
-        for _ in 0..100 {
-            let mid = 0.5 * (lo + hi);
-            if gaussian_delta(mid, sigma, 1.0) > delta {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        let eps_exact = hi;
+        let eps_exact = crate::dp::accountant::analytic_gaussian_eps(delta, sigma, 1.0);
         assert!(eps_rdp >= eps_exact - 1e-6, "rdp {eps_rdp} < exact {eps_exact}");
         assert!(eps_rdp <= eps_exact * 2.0, "rdp {eps_rdp} way above exact {eps_exact}");
     }

@@ -52,8 +52,14 @@
 //! survivors' recovery shares let the server reconstruct a dropped
 //! client's outstanding pairwise masks, the window closes over the
 //! survivor set, and survivor-aware decoders keep the exact error law at
-//! the rescaled n′ scale (README has the threat model). Everything stays
-//! deterministic given the root seed — see the determinism ADR in
+//! the rescaled n′ scale (README has the threat model). Rounds also need
+//! not touch every client: a seed-derived
+//! [`coordinator::sampling::SamplingPolicy`] fixes each round's cohort at
+//! session open — masked transports pair masks among the cohort only, so
+//! *sampled-out* costs no recovery (unlike *dropped*, the mid-round
+//! path; the two compose) — and a [`dp::PrivacyLedger`] composes the
+//! subsampling-amplified (ε, δ) spend per executed round. Everything
+//! stays deterministic given the root seed — see the determinism ADR in
 //! `docs/determinism.md`.
 //!
 //! ## Layout (three-layer architecture, Python never on the request path)
@@ -79,7 +85,8 @@
 //! * [`secagg`] — additive-masking secure aggregation over ℤ_m (the
 //!   primitive behind the `SecAgg` transport).
 //! * [`coordinator`] — the FL runtime: sharded workers that compute AND
-//!   encode their clients' updates, O(d) orchestrator folding, metrics.
+//!   encode their clients' updates, O(d) orchestrator folding,
+//!   seed-derived client sampling, metrics.
 //! * [`runtime`] — PJRT engine loading the AOT-lowered JAX/Pallas HLO
 //!   artifacts (`artifacts/*.hlo.txt`); stubbed without the `pjrt` feature.
 //! * [`apps`] — distributed mean estimation, QLSD* Langevin, distributed

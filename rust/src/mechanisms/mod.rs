@@ -44,8 +44,8 @@ pub use pipeline::{
     SecAgg, ServerDecoder, SharedRound, SurvivorSet, Transport, TransportPartial, Unicast,
 };
 pub use session::{
-    derive_session_seed, run_window, run_window_with_dropouts, session_recovery_share,
-    RoundDropouts, TransportSession,
+    derive_session_seed, run_window, run_window_sampled, run_window_with_dropouts,
+    session_recovery_share, RoundDropouts, TransportSession,
 };
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

@@ -66,6 +66,14 @@ pub const GLOBAL_STREAM: u64 = u64::MAX;
 /// correlates with any live stream.
 pub const DROPOUT_NOISE_STREAM: u64 = 0xD809_B07E_0000_0000;
 
+/// Base stream tag for per-client *coordinate-subsampling rows* (xor'd
+/// with the client id): client i's Bernoulli(γ) row derives from its own
+/// stream, so encoding is O(d) — no party ever materializes (or caches)
+/// the O(n·d) subsample matrix. Families stay disjoint by construction:
+/// the high 32 bits differ from every other tag for any fleet below 2³²
+/// clients (see `session_stream_ids_are_pairwise_distinct`).
+pub const SUBSAMPLE_STREAM: u64 = 0x5AB5_C0DE_0000_0000;
+
 /// One aggregation round's public context: the shared seed plus the round
 /// shape. Identical on every client and the server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,16 +116,23 @@ impl SharedRound {
         Rng::derive(self.seed, DROPOUT_NOISE_STREAM ^ dropped as u64)
     }
 
-    /// The shared coordinate-subsampling matrix B[i][j] ~ Bernoulli(γ),
-    /// drawn row-major from the round's global stream. SIGM and CSGM both
-    /// derive their subsamples through this one helper, which is what
-    /// guarantees the two see IDENTICAL subsamples for a given seed — the
-    /// matched-subsample comparison of Figs. 5/7 depends on it.
-    pub fn bernoulli_matrix(&self, gamma: f64) -> Vec<Vec<bool>> {
-        let mut brng = self.global_rng();
-        (0..self.n_clients)
-            .map(|_| (0..self.dim).map(|_| brng.bernoulli(gamma)).collect())
-            .collect()
+    /// Client i's coordinate-subsampling row stream. SIGM and CSGM both
+    /// derive their Bernoulli(γ) subsample rows through this one stream,
+    /// which is what guarantees the two see IDENTICAL subsamples for a
+    /// given seed — the matched-subsample comparison of Figs. 5/7 depends
+    /// on it. Per-row derivation (stream `SUBSAMPLE_STREAM ^ i`) means a
+    /// client derives only its own O(d) row at encode time; before the
+    /// seed-format bump the rows were drawn row-major from one global
+    /// stream, forcing every party to materialize — and the mechanisms to
+    /// cache — the full O(n·d) matrix.
+    pub fn subsample_rng(&self, client: usize) -> Rng {
+        Rng::derive(self.seed, SUBSAMPLE_STREAM ^ client as u64)
+    }
+
+    /// Client i's materialized Bernoulli(γ) subsample row.
+    pub fn subsample_row(&self, client: usize, gamma: f64) -> Vec<bool> {
+        let mut rng = self.subsample_rng(client);
+        (0..self.dim).map(|_| rng.bernoulli(gamma)).collect()
     }
 
     fn key(&self) -> (u64, usize, usize) {
@@ -146,7 +161,48 @@ impl SurvivorSet {
     /// out-of-range id, a duplicate announcement, or an empty survivor
     /// set — all fail-closed conditions.
     pub fn with_dropped(n_clients: usize, dropped: &[usize]) -> Self {
-        let mut s = Self::full(n_clients);
+        Self::full(n_clients).drop_clients(dropped)
+    }
+
+    /// A survivor set from an explicit per-client alive mask (how sampling
+    /// policies materialize a round's cohort). Panics on an empty fleet or
+    /// a cohort with zero members — fail-closed conditions.
+    pub fn from_alive_mask(alive: Vec<bool>) -> Self {
+        assert!(!alive.is_empty(), "need at least one client");
+        let n_alive = alive.iter().filter(|&&a| a).count();
+        assert!(n_alive > 0, "fails closed: a round cannot close with zero survivors");
+        Self { alive, n_alive }
+    }
+
+    /// [`SurvivorSet::drop_clients`] for a *sampled* round: every dropped
+    /// id must be an alive member of this cohort — announcing a
+    /// sampled-out client as dropped fails closed with a
+    /// sampling-specific diagnostic (it held no masks, so there is
+    /// nothing to recover), while duplicates within `dropped` still
+    /// surface as a double-announcement. The single implementation of
+    /// this invariant: the coordinator, the in-process window runner and
+    /// the session close all validate through it.
+    pub fn drop_cohort_members(&self, dropped: &[usize], round_in_window: usize) -> Self {
+        let n = self.n();
+        for &j in dropped {
+            assert!(j < n, "dropped client {j} out of range for {n} clients");
+            assert!(
+                self.is_alive(j),
+                "fails closed: client {j} announced dropped in round {round_in_window} but \
+                 is sampled out of the cohort — it held no masks to recover"
+            );
+        }
+        self.drop_clients(dropped)
+    }
+
+    /// This set minus the further `dropped` clients — how a sampling
+    /// cohort composes with mid-round dropouts: the cohort is fixed at
+    /// session open, the dropouts are announced at close, and the decode
+    /// set is the difference. Panics (fail closed) on an out-of-range id,
+    /// a client dropped twice, or an empty result.
+    pub fn drop_clients(&self, dropped: &[usize]) -> Self {
+        let mut s = self.clone();
+        let n_clients = s.alive.len();
         for &j in dropped {
             assert!(j < n_clients, "dropped client {j} out of range for {n_clients} clients");
             assert!(s.alive[j], "client {j} announced dropped twice");
@@ -173,6 +229,13 @@ impl SurvivorSet {
 
     pub fn is_alive(&self, client: usize) -> bool {
         self.alive[client]
+    }
+
+    /// The per-client alive mask itself (index = global client id) — the
+    /// single representation shard skip-lists and tests should reuse
+    /// rather than rebuilding it from [`SurvivorSet::is_alive`].
+    pub fn alive_mask(&self) -> &[bool] {
+        &self.alive
     }
 
     /// Surviving client ids, ascending.
@@ -317,6 +380,28 @@ pub trait Transport: Send + Sync {
     /// one pairwise opening serves the whole window. Must be deterministic
     /// in `(session_seed, round_in_window)` — every party re-derives it.
     fn for_session_round(&self, session_seed: u64, round_in_window: u64) -> Arc<dyn Transport>;
+
+    /// Like [`Transport::for_session_round`], but for a *sampled* session
+    /// round whose participating cohort is known at open. Cohort-aware
+    /// transports restrict their round-scoped randomness to the cohort —
+    /// [`SecAgg`] opens its pairwise mask schedule among cohort members
+    /// only, so a sampled-out client needs no masks and (unlike a
+    /// mid-round dropout) no recovery shares. The default fails closed: a
+    /// transport that has not opted in refuses partial cohorts, and a full
+    /// cohort degenerates to the unsampled schedule bit for bit.
+    fn for_session_round_sampled(
+        &self,
+        session_seed: u64,
+        round_in_window: u64,
+        cohort: &SurvivorSet,
+    ) -> Arc<dyn Transport> {
+        assert!(
+            cohort.is_full(),
+            "transport {} fails closed under client sampling: it is not cohort-aware",
+            self.name(),
+        );
+        self.for_session_round(session_seed, round_in_window)
+    }
 }
 
 fn add_i64(acc: &mut Option<Vec<i64>>, ms: &[i64]) {
@@ -410,6 +495,17 @@ impl Transport for Plain {
         // no transport randomness: every session round is plain summation
         Arc::new(Plain)
     }
+
+    fn for_session_round_sampled(
+        &self,
+        _session_seed: u64,
+        _round_in_window: u64,
+        _cohort: &SurvivorSet,
+    ) -> Arc<dyn Transport> {
+        // no masks, no cohort-scoped randomness: the accumulator holds
+        // whatever the cohort submits
+        Arc::new(Plain)
+    }
 }
 
 /// Per-client delivery: the server keeps the full message list. Required by
@@ -483,7 +579,7 @@ impl Transport for Unicast {
 /// the server folds masked vectors mod m and the masks cancel, leaving
 /// exactly Σᵢ mᵢ — the server never observes a per-client description. The
 /// accumulator is a single length-d field vector: O(d) server state.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SecAgg {
     pub params: SecAggParams,
     /// Session override of the pairwise-mask root: `Some` when this
@@ -492,15 +588,21 @@ pub struct SecAgg {
     /// [`Transport::for_session_round`]), `None` for the legacy standalone
     /// per-round derivation from the round seed.
     mask_root: Option<u64>,
+    /// Cohort override for *sampled* session rounds (set by
+    /// [`Transport::for_session_round_sampled`]): masks are exchanged only
+    /// among these clients (sorted global ids), so the schedule is cheaper
+    /// than full-fleet masking and sampled-out clients need no recovery.
+    /// `None` = the full announced fleet.
+    cohort: Option<Arc<Vec<usize>>>,
 }
 
 impl SecAgg {
     pub fn new() -> Self {
-        Self { params: SecAggParams::default(), mask_root: None }
+        Self { params: SecAggParams::default(), mask_root: None, cohort: None }
     }
 
     pub fn with_params(params: SecAggParams) -> Self {
-        Self { params, mask_root: None }
+        Self { params, mask_root: None, cohort: None }
     }
 
     /// Pairwise-mask root seed for a standalone round (public derivation —
@@ -549,13 +651,22 @@ impl Transport for SecAgg {
             msg.aux.is_empty(),
             "aux side information cannot pass through secure aggregation"
         );
-        let masked = secagg::mask_descriptions(
-            &msg.ms,
-            client,
-            round.n_clients,
-            self.mask_root_for(round),
-            self.params,
-        );
+        let masked = match &self.cohort {
+            Some(members) => secagg::mask_descriptions_among(
+                &msg.ms,
+                client,
+                members,
+                self.mask_root_for(round),
+                self.params,
+            ),
+            None => secagg::mask_descriptions(
+                &msg.ms,
+                client,
+                round.n_clients,
+                self.mask_root_for(round),
+                self.params,
+            ),
+        };
         match part {
             TransportPartial::Masked { sum, modulus } => add_mod(sum, &masked, *modulus),
             _ => panic!("SecAgg transport got a foreign partial"),
@@ -609,6 +720,28 @@ impl Transport for SecAgg {
         Arc::new(Self {
             params: self.params,
             mask_root: Some(secagg::round_mask_root(schedule, round_in_window)),
+            cohort: None,
+        })
+    }
+
+    fn for_session_round_sampled(
+        &self,
+        session_seed: u64,
+        round_in_window: u64,
+        cohort: &SurvivorSet,
+    ) -> Arc<dyn Transport> {
+        // same per-round mask root as the unsampled schedule, but the
+        // pairwise agreement opens over the cohort only — a full cohort
+        // degenerates to the unsampled transport bit for bit
+        let schedule = secagg::session_mask_root(session_seed);
+        Arc::new(Self {
+            params: self.params,
+            mask_root: Some(secagg::round_mask_root(schedule, round_in_window)),
+            cohort: if cohort.is_full() {
+                None
+            } else {
+                Some(Arc::new(cohort.alive_iter().collect()))
+            },
         })
     }
 }
@@ -1176,6 +1309,128 @@ mod tests {
         let round = SharedRound::new(1, 3, 2);
         let payload = Payload::Sum(vec![0, 0]);
         let _ = NotAware.decode_survivors(&payload, &round, &SurvivorSet::with_dropped(3, &[1]));
+    }
+
+    #[test]
+    fn survivor_set_cohort_composition_with_dropouts() {
+        // a sampled cohort composed with a mid-round dropout: the decode
+        // set is the difference, fleet size n stays fixed
+        let cohort = SurvivorSet::from_alive_mask(vec![true, false, true, true, false]);
+        assert_eq!((cohort.n(), cohort.n_alive()), (5, 3));
+        let after = cohort.drop_clients(&[2]);
+        assert_eq!(after.alive_iter().collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(after.n(), 5);
+        // sampled-out AND dropped clients both iterate as dead
+        assert_eq!(after.dropped_iter().collect::<Vec<_>>(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero survivors")]
+    fn survivor_set_from_empty_mask_fails_closed() {
+        let _ = SurvivorSet::from_alive_mask(vec![false, false]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero survivors")]
+    fn survivor_set_drop_clients_cannot_empty_a_cohort() {
+        let cohort = SurvivorSet::from_alive_mask(vec![true, false]);
+        let _ = cohort.drop_clients(&[0]);
+    }
+
+    #[test]
+    fn session_stream_ids_are_pairwise_distinct() {
+        // every stream family a session derives under one round seed —
+        // per-client, global, aux, dropout completion, subsample rows —
+        // must live in pairwise-disjoint regions of the u64 stream space
+        let n = 1usize << 12; // far above any simulated fleet
+        let mut ids: Vec<u64> = Vec::with_capacity(3 * n + 9);
+        for c in 0..n as u64 {
+            ids.push(c); // client streams
+            ids.push(DROPOUT_NOISE_STREAM ^ c);
+            ids.push(SUBSAMPLE_STREAM ^ c);
+        }
+        ids.push(GLOBAL_STREAM);
+        for k in 1..=8u64 {
+            ids.push(GLOBAL_STREAM - k); // aux streams
+        }
+        let len = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), len, "stream-id family collision");
+    }
+
+    #[test]
+    fn subsample_rows_are_per_client_streams_and_deterministic() {
+        let round = SharedRound::new(99, 6, 32);
+        let r2 = round.subsample_row(2, 0.5);
+        assert_eq!(r2, round.subsample_row(2, 0.5));
+        assert_ne!(r2, round.subsample_row(3, 0.5));
+        // γ boundaries
+        assert!(round.subsample_row(0, 1.0).iter().all(|&b| b));
+        assert!(!round.subsample_row(0, 0.0).iter().any(|&b| b));
+        // independent of n (a row needs no knowledge of the fleet size)
+        let other = SharedRound::new(99, 100, 32);
+        assert_eq!(r2, other.subsample_row(2, 0.5));
+    }
+
+    #[test]
+    fn cohort_secagg_masks_cancel_over_the_cohort() {
+        // a cohort-rekeyed SecAgg round must decode the cohort's exact sum
+        // (masks pair only among members, so the cohort sum cancels them)
+        let xs = data();
+        let n = xs.len();
+        let round = SharedRound::new(55, n, xs[0].len());
+        let cohort = SurvivorSet::with_dropped(n, &[1]); // clients 0 and 2
+        let t = SecAgg::new().for_session_round_sampled(77, 0, &cohort);
+        let enc = RoundToInt;
+        let mut part = t.empty(&round);
+        for i in cohort.alive_iter() {
+            t.submit(&mut part, i, &enc.encode(i, &xs[i], &round), &round);
+        }
+        let got = match t.finish_survivors(part, &round, &cohort) {
+            Payload::Sum(v) => v,
+            _ => unreachable!(),
+        };
+        let mut want = vec![0i64; xs[0].len()];
+        for i in cohort.alive_iter() {
+            for (w, &m) in want.iter_mut().zip(&enc.encode(i, &xs[i], &round).ms) {
+                *w += m;
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "not cohort-aware")]
+    fn unicast_fails_closed_on_sampled_session_rounds() {
+        let cohort = SurvivorSet::with_dropped(3, &[1]);
+        let _ = Unicast.for_session_round_sampled(1, 0, &cohort);
+    }
+
+    #[test]
+    fn full_cohort_secagg_degenerates_to_unsampled_schedule() {
+        // bit-identity anchor: a full cohort must produce the exact same
+        // masked submissions as the unsampled session transport
+        let xs = data();
+        let round = SharedRound::new(7, xs.len(), xs[0].len());
+        let full = SurvivorSet::full(xs.len());
+        let a = SecAgg::new().for_session_round(42, 1);
+        let b = SecAgg::new().for_session_round_sampled(42, 1, &full);
+        let enc = RoundToInt;
+        let mut pa = a.empty(&round);
+        let mut pb = b.empty(&round);
+        for (i, x) in xs.iter().enumerate() {
+            let msg = enc.encode(i, x, &round);
+            a.submit(&mut pa, i, &msg, &round);
+            b.submit(&mut pb, i, &msg, &round);
+        }
+        match (pa, pb) {
+            (
+                TransportPartial::Masked { sum: Some(va), .. },
+                TransportPartial::Masked { sum: Some(vb), .. },
+            ) => assert_eq!(va, vb),
+            _ => panic!("wrong partial shape"),
+        }
     }
 
     #[test]

@@ -56,24 +56,22 @@ use super::pipeline::{
 };
 use super::traits::{BitsAccount, RoundOutput};
 use crate::secagg::{self, RecoveryShare, SecAggParams};
-use crate::util::rng::Rng;
+use crate::util::rng::{seed_domain, Rng};
 
 /// Maximum rounds per session window. Bounds in-flight server state at
 /// W·O(d) and matches the pipeline's round-cache capacity, so mechanisms
-/// with cached per-round derived state (CSGM subsample matrices, DDG
-/// rotations) never thrash their cache mid-window.
+/// with cached per-round derived state (the aggregate mechanism's (A, B)
+/// vectors, SIGM's ñ counts) never thrash their cache mid-window.
 pub const MAX_WINDOW: usize = super::pipeline::ROUND_CACHE_CAP;
 
-/// Stream tag separating window session seeds from every other derivation
-/// of the coordinator root seed.
-const SESSION_SEED_STREAM: u64 = 0xBA7C_4ED5_E551_0000;
-
 /// Derive the session seed for the window starting at `start_round` from
-/// the run's root seed. Deterministic and collision-separated from the
-/// per-round and per-client streams, so re-running a window re-derives the
-/// identical mask schedule.
+/// the run's root seed, via the domain-separated mixer
+/// ([`Rng::derive_domain`] under [`seed_domain::SESSION`]) — structurally
+/// collision-free against the round-seed and cohort-seed families hanging
+/// off the same root, so re-running a window re-derives the identical
+/// mask schedule and no window can alias another derivation.
 pub fn derive_session_seed(root_seed: u64, start_round: u64) -> u64 {
-    Rng::derive(root_seed, SESSION_SEED_STREAM ^ start_round).next_u64()
+    Rng::derive_domain(root_seed, seed_domain::SESSION, start_round)
 }
 
 /// The per-round transports of a session: round r of the window runs over
@@ -86,6 +84,22 @@ pub fn session_round_transports(
     window: usize,
 ) -> Vec<Arc<dyn Transport>> {
     (0..window).map(|r| transport.for_session_round(session_seed, r as u64)).collect()
+}
+
+/// The per-round transports of a *sampled* session: round r runs over
+/// [`Transport::for_session_round_sampled`] with its cohort, so masked
+/// transports open their pairwise schedule over the cohort only. A window
+/// of full cohorts is [`session_round_transports`] bit for bit.
+pub fn session_round_transports_sampled(
+    transport: &dyn Transport,
+    session_seed: u64,
+    cohorts: &[SurvivorSet],
+) -> Vec<Arc<dyn Transport>> {
+    cohorts
+        .iter()
+        .enumerate()
+        .map(|(r, c)| transport.for_session_round_sampled(session_seed, r as u64, c))
+        .collect()
 }
 
 /// A surviving `holder`'s recovery share for `dropped` in round
@@ -125,15 +139,33 @@ impl RoundDropouts {
     /// contributes its pairwise share for every dropped client (the
     /// simulation analogue of the share-collection phase of Bonawitz et
     /// al. — in-process, the survivors' shares are derived directly).
+    /// Every dead client of `survivors` is treated as dropped — the
+    /// unsampled shape; sampled rounds use
+    /// [`RoundDropouts::announce_among`], where sampled-out clients are
+    /// dead but NOT announced (they left no masks to recover).
     pub fn announce(session_seed: u64, round_in_window: u64, survivors: &SurvivorSet) -> Self {
         let dropped: Vec<usize> = survivors.dropped_iter().collect();
+        Self::announce_among(session_seed, round_in_window, survivors, &dropped)
+    }
+
+    /// The announcement for a *sampled* session round: `survivors` is the
+    /// final decode set (cohort minus mid-round dropouts) and `dropped`
+    /// names only the mid-round dropouts — cohort members whose masks are
+    /// outstanding. Sampled-out clients appear in neither: they exchanged
+    /// no masks, so there is nothing to announce or recover for them.
+    pub fn announce_among(
+        session_seed: u64,
+        round_in_window: u64,
+        survivors: &SurvivorSet,
+        dropped: &[usize],
+    ) -> Self {
         let mut shares = Vec::with_capacity(dropped.len() * survivors.n_alive());
-        for &j in &dropped {
+        for &j in dropped {
             for i in survivors.alive_iter() {
                 shares.push(session_recovery_share(session_seed, round_in_window, i, j));
             }
         }
-        Self { dropped, shares }
+        Self { dropped: dropped.to_vec(), shares }
     }
 }
 
@@ -165,6 +197,10 @@ pub struct TransportSession {
     rounds: Vec<SharedRound>,
     transports: Vec<Arc<dyn Transport>>,
     slots: Vec<RoundSlot>,
+    /// per-round participating cohort, fixed at open (full on unsampled
+    /// sessions): submissions from outside it fail closed, completeness
+    /// and dropout accounting are measured against it
+    cohorts: Vec<SurvivorSet>,
     /// set once a close succeeded: every later submit/fold/announce/close
     /// fails closed (nothing can be amended post-unmask)
     closed: bool,
@@ -175,13 +211,36 @@ impl TransportSession {
     /// [`MAX_WINDOW`]) of shape (`n_clients`, `dim`). `round_seeds[r]` is
     /// round r's shared-randomness seed (what encoders and decoders
     /// consume); the separate `session_seed` drives only the transport's
-    /// session schedule.
+    /// session schedule. Every round's cohort is the full fleet — the
+    /// unsampled special case of [`TransportSession::open_sampled`].
     pub fn open(
         transport: &dyn Transport,
         session_seed: u64,
         n_clients: usize,
         dim: usize,
         round_seeds: &[u64],
+    ) -> Self {
+        let cohorts = vec![SurvivorSet::full(n_clients.max(1)); round_seeds.len()];
+        Self::open_sampled(transport, session_seed, n_clients, dim, round_seeds, &cohorts)
+    }
+
+    /// Open a session whose per-round participating *cohort* is known in
+    /// advance (seed-derived client sampling,
+    /// [`crate::coordinator::sampling::SamplingPolicy`]): round r expects
+    /// submissions from exactly `cohorts[r]`'s alive clients, and masked
+    /// transports open their pairwise ℤ_m schedule over that cohort only
+    /// ([`Transport::for_session_round_sampled`]). Being *sampled out* is
+    /// cheaper than dropping out — it is known at open, so no mask legs
+    /// exist and no [`crate::secagg::RecoveryShare`] is ever needed; the
+    /// two compose, with dropouts remaining the mid-round failure path
+    /// ([`TransportSession::close_with_dropouts`]).
+    pub fn open_sampled(
+        transport: &dyn Transport,
+        session_seed: u64,
+        n_clients: usize,
+        dim: usize,
+        round_seeds: &[u64],
+        cohorts: &[SurvivorSet],
     ) -> Self {
         assert!(!round_seeds.is_empty(), "a session window needs at least one round");
         assert!(
@@ -191,7 +250,19 @@ impl TransportSession {
             round_seeds.len(),
         );
         assert!(n_clients > 0, "need at least one client");
-        let transports = session_round_transports(transport, session_seed, round_seeds.len());
+        assert_eq!(
+            cohorts.len(),
+            round_seeds.len(),
+            "cohort schedule must cover every round of the window"
+        );
+        for (r, c) in cohorts.iter().enumerate() {
+            assert_eq!(
+                c.n(),
+                n_clients,
+                "round {r}: cohort shaped for a different fleet"
+            );
+        }
+        let transports = session_round_transports_sampled(transport, session_seed, cohorts);
         let rounds: Vec<SharedRound> =
             round_seeds.iter().map(|&s| SharedRound::new(s, n_clients, dim)).collect();
         let slots = rounds
@@ -205,12 +276,30 @@ impl TransportSession {
                 folded: false,
             })
             .collect();
-        Self { n_clients, rounds, transports, slots, closed: false }
+        Self {
+            n_clients,
+            rounds,
+            transports,
+            slots,
+            cohorts: cohorts.to_vec(),
+            closed: false,
+        }
     }
 
     /// Number of rounds in the window.
     pub fn window(&self) -> usize {
         self.rounds.len()
+    }
+
+    /// Announced fleet size n — every cohort and survivor set of this
+    /// session is shaped to it.
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Round r's participating cohort (full on unsampled sessions).
+    pub fn cohort(&self, r: usize) -> &SurvivorSet {
+        &self.cohorts[r]
     }
 
     /// Round r's public context (what encoders/decoders take).
@@ -230,6 +319,11 @@ impl TransportSession {
     /// SecAgg, double-counted masks would unmask to garbage).
     pub fn submit(&mut self, r: usize, client: usize, msg: &Descriptions) {
         assert!(!self.closed, "fails closed: the session is already closed");
+        assert!(
+            self.cohorts[r].is_alive(client),
+            "fails closed: client {client} is sampled out of round {r} of the window and \
+             cannot submit"
+        );
         let slot = &mut self.slots[r];
         assert!(
             !slot.folded,
@@ -268,6 +362,11 @@ impl TransportSession {
         slot.folded = true;
         for &c in clients {
             assert!(
+                self.cohorts[r].is_alive(c),
+                "fails closed: client {c} is sampled out of round {r} of the window and \
+                 cannot submit"
+            );
+            assert!(
                 !slot.seen[c],
                 "duplicate submission from client {c} in round {r} of the window"
             );
@@ -278,9 +377,10 @@ impl TransportSession {
         slot.submitted += clients.len();
     }
 
-    /// Whether every round of the window has all client submissions.
+    /// Whether every round of the window has all its *cohort's*
+    /// submissions (the full fleet on unsampled sessions).
     pub fn is_complete(&self) -> bool {
-        self.slots.iter().all(|s| s.submitted == self.n_clients)
+        self.slots.iter().zip(&self.cohorts).all(|(s, c)| s.submitted == c.n_alive())
     }
 
     /// Batched unmask: close every round of the window and surface the
@@ -329,8 +429,14 @@ impl TransportSession {
         );
         // validate the whole window before unmasking any round
         let mut survivor_sets = Vec::with_capacity(self.window());
-        for (r, (slot, ann)) in self.slots.iter().zip(announced).enumerate() {
-            let survivors = SurvivorSet::with_dropped(self.n_clients, &ann.dropped);
+        for (r, ((slot, ann), cohort)) in
+            self.slots.iter().zip(announced).zip(&self.cohorts).enumerate()
+        {
+            // the final decode set: the open-time cohort minus the
+            // mid-round dropouts (identical to the PR 3 shape when the
+            // cohort is the full fleet); only cohort members hold mask
+            // legs, so announcing a sampled-out client fails closed here
+            let survivors = cohort.drop_cohort_members(&ann.dropped, r);
             // the seen-record covers BOTH feeding paths (direct submits
             // and shard folds), so this check cannot be bypassed by an
             // announcement whose count happens to balance a real gap
@@ -342,11 +448,11 @@ impl TransportSession {
                 );
             }
             assert!(
-                slot.submitted + ann.dropped.len() == self.n_clients,
-                "interrupted session fails closed: round {r} of the window has {}/{} client \
+                slot.submitted + ann.dropped.len() == cohort.n_alive(),
+                "interrupted session fails closed: round {r} of the window has {}/{} cohort \
                  submissions with {} announced dropouts — refusing any partial unmask",
                 slot.submitted,
-                self.n_clients,
+                cohort.n_alive(),
                 ann.dropped.len(),
             );
             Self::validate_recovery_shares(r, ann, &survivors);
@@ -462,6 +568,37 @@ pub fn run_window_with_dropouts(
     dropouts: &[Vec<usize>],
 ) -> Vec<RoundOutput> {
     assert!(!rounds.is_empty(), "a session window needs at least one round");
+    let (xs0, _) = rounds[0];
+    assert!(!xs0.is_empty(), "need at least one client");
+    let cohorts = vec![SurvivorSet::full(xs0.len()); rounds.len()];
+    run_window_sampled(encoder, transport, decoder, rounds, session_seed, &cohorts, dropouts)
+}
+
+/// The general sampled window: round r's participating cohort is
+/// `cohorts[r]` (seed-derived client sampling, known at session open) and
+/// `dropouts[r]` names the *mid-round* dropouts — cohort members that went
+/// silent after the session opened. Sampled-out clients never encode, hold
+/// no masks and need no recovery; dropped cohort members are recovered
+/// Bonawitz-style exactly as in [`run_window_with_dropouts`]. Each round
+/// decodes over cohort minus dropped via
+/// [`ServerDecoder::decode_survivors`], so the exact error laws hold at
+/// the contributing count n′. Full cohorts make this
+/// `run_window_with_dropouts` bit for bit.
+pub fn run_window_sampled(
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    rounds: &[(&[Vec<f64>], u64)],
+    session_seed: u64,
+    cohorts: &[SurvivorSet],
+    dropouts: &[Vec<usize>],
+) -> Vec<RoundOutput> {
+    assert!(!rounds.is_empty(), "a session window needs at least one round");
+    assert_eq!(
+        cohorts.len(),
+        rounds.len(),
+        "cohort schedule must cover every round of the window"
+    );
     assert_eq!(
         dropouts.len(),
         rounds.len(),
@@ -476,11 +613,12 @@ pub fn run_window_with_dropouts(
     let n = xs0.len();
     let dim = xs0[0].len();
     let seeds: Vec<u64> = rounds.iter().map(|&(_, seed)| seed).collect();
-    let mut session = TransportSession::open(transport, session_seed, n, dim, &seeds);
+    let mut session =
+        TransportSession::open_sampled(transport, session_seed, n, dim, &seeds, cohorts);
     let mut announced = Vec::with_capacity(rounds.len());
     for (r, &(xs, _)) in rounds.iter().enumerate() {
         assert_eq!(xs.len(), n, "client count changed mid-session");
-        let survivors = SurvivorSet::with_dropped(n, &dropouts[r]);
+        let survivors = cohorts[r].drop_cohort_members(&dropouts[r], r);
         let round = *session.round(r);
         for i in survivors.alive_iter() {
             let x = &xs[i];
@@ -488,7 +626,12 @@ pub fn run_window_with_dropouts(
             let msg = encoder.encode(i, x, &round);
             session.submit(r, i, &msg);
         }
-        announced.push(RoundDropouts::announce(session_seed, r as u64, &survivors));
+        announced.push(RoundDropouts::announce_among(
+            session_seed,
+            r as u64,
+            &survivors,
+            &dropouts[r],
+        ));
     }
     let shared: Vec<SharedRound> = session.rounds.clone();
     session
@@ -982,6 +1125,150 @@ mod tests {
         let survivors = SurvivorSet::with_dropped(3, &[2]);
         let announced = [RoundDropouts::announce(9, 0, &survivors)];
         let _ = session.close_with_dropouts(&announced);
+    }
+
+    // -----------------------------------------------------------------
+    // seed-derived client sampling: cohort-scoped sessions
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn sampling_sampled_secagg_window_matches_plain_over_cohort() {
+        // a sampled masked window — cohort-scoped mask schedule, no
+        // recovery shares — decodes bit-identically to Plain summation
+        // over the same cohort, round for round
+        let mech = JitterRound;
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let n = inputs[0].0.len();
+        let cohorts: Vec<SurvivorSet> = vec![
+            SurvivorSet::with_dropped(n, &[1]),
+            SurvivorSet::full(n),
+            SurvivorSet::with_dropped(n, &[0, 2]),
+            SurvivorSet::with_dropped(n, &[2]),
+        ];
+        let none: Vec<Vec<usize>> = vec![Vec::new(); rounds.len()];
+        let masked = run_window_sampled(
+            &mech, &SecAgg::new(), &mech, &rounds, 0x5A11, &cohorts, &none,
+        );
+        let plain =
+            run_window_sampled(&mech, &Plain, &mech, &rounds, 0x5A11, &cohorts, &none);
+        for (r, (m, p)) in masked.iter().zip(&plain).enumerate() {
+            assert_eq!(m.estimate, p.estimate, "round {r}");
+            assert_eq!(m.bits.messages, p.bits.messages, "round {r}");
+        }
+    }
+
+    #[test]
+    fn sampling_full_cohorts_are_the_dropout_path_bit_for_bit() {
+        let mech = JitterRound;
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let n = inputs[0].0.len();
+        let cohorts = vec![SurvivorSet::full(n); rounds.len()];
+        let schedule: Vec<Vec<usize>> = vec![vec![2], vec![], vec![0], vec![1]];
+        let a = run_window_with_dropouts(&mech, &SecAgg::new(), &mech, &rounds, 7, &schedule);
+        let b = run_window_sampled(
+            &mech, &SecAgg::new(), &mech, &rounds, 7, &cohorts, &schedule,
+        );
+        for (oa, ob) in a.iter().zip(&b) {
+            assert_eq!(oa.estimate, ob.estimate);
+            assert_eq!(oa.bits.messages, ob.bits.messages);
+        }
+    }
+
+    #[test]
+    fn sampling_composes_with_midround_dropouts() {
+        // cohort fixed at open AND a cohort member drops mid-round: the
+        // dropped member is recovered over the final survivors, and the
+        // result equals Plain over (cohort minus dropped)
+        let mech = JitterRound;
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let n = inputs[0].0.len();
+        // cohort {0, 2} in round 0 (client 1 sampled out), full elsewhere
+        let cohorts: Vec<SurvivorSet> = vec![
+            SurvivorSet::with_dropped(n, &[1]),
+            SurvivorSet::full(n),
+            SurvivorSet::full(n),
+            SurvivorSet::full(n),
+        ];
+        let dropouts: Vec<Vec<usize>> = vec![vec![2], vec![1], vec![], vec![]];
+        let masked = run_window_sampled(
+            &mech, &SecAgg::new(), &mech, &rounds, 0xC0DE, &cohorts, &dropouts,
+        );
+        let plain = run_window_sampled(
+            &mech, &Plain, &mech, &rounds, 0xC0DE, &cohorts, &dropouts,
+        );
+        for (r, (m, p)) in masked.iter().zip(&plain).enumerate() {
+            assert_eq!(m.estimate, p.estimate, "round {r}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sampled out")]
+    fn sampling_sampled_out_client_cannot_submit() {
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let cohorts = [SurvivorSet::with_dropped(3, &[1])];
+        let mut session = TransportSession::open_sampled(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts,
+        );
+        let round = *session.round(0);
+        session.submit(0, 1, &mech.encode(1, &xs[1], &round));
+    }
+
+    #[test]
+    #[should_panic(expected = "sampled out")]
+    fn sampling_sampled_out_client_cannot_be_announced_dropped() {
+        // a sampled-out client held no masks — announcing it dropped (and
+        // "recovering" it) must fail closed
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let cohorts = [SurvivorSet::with_dropped(3, &[1])];
+        let mut session = TransportSession::open_sampled(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts,
+        );
+        let round = *session.round(0);
+        for i in [0usize, 2] {
+            session.submit(0, i, &mech.encode(i, &xs[i], &round));
+        }
+        let ann = [RoundDropouts { dropped: vec![1], shares: vec![] }];
+        let _ = session.close_with_dropouts(&ann);
+    }
+
+    #[test]
+    #[should_panic(expected = "fails closed")]
+    fn sampling_missing_cohort_member_still_aborts() {
+        // completeness is measured against the cohort: a cohort member
+        // that never submits (and is not announced) aborts the window
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let cohorts = [SurvivorSet::with_dropped(3, &[1])];
+        let mut session = TransportSession::open_sampled(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts,
+        );
+        let round = *session.round(0);
+        session.submit(0, 0, &mech.encode(0, &xs[0], &round));
+        // cohort member 2 missing
+        let _ = session.close_with_dropouts(&[RoundDropouts::default()]);
+    }
+
+    #[test]
+    fn sampling_is_complete_measures_the_cohort() {
+        let xs = data(0.0);
+        let mech = JitterRound;
+        let cohorts = [SurvivorSet::with_dropped(3, &[1])];
+        let mut session = TransportSession::open_sampled(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts,
+        );
+        let round = *session.round(0);
+        session.submit(0, 0, &mech.encode(0, &xs[0], &round));
+        assert!(!session.is_complete());
+        session.submit(0, 2, &mech.encode(2, &xs[2], &round));
+        assert!(session.is_complete());
     }
 
     #[test]

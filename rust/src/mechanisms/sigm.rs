@@ -10,10 +10,14 @@
 //! against the true mean adds the subsampling variance ≤ c²/(nγ) per
 //! coordinate (Prop. 4).
 //!
-//! Pipeline shape: the subsampling matrix B is global shared randomness
-//! (all parties derive it from the round seed); a client sends one
-//! description per *selected* coordinate, so messages are ragged and the
-//! mechanism is NOT homomorphic — it rides the Unicast transport.
+//! Pipeline shape: the subsampling rows Bᵢ are shared randomness — each
+//! client's row derives from its own stream
+//! ([`SharedRound::subsample_rng`]), so encoding derives ONE row in O(d)
+//! and no party materializes the O(n·d) matrix (the decoder re-derives
+//! rows client by client; only the O(d) selected counts ñ(j) are cached
+//! per round). A client sends one description per *selected* coordinate,
+//! so messages are ragged and the mechanism is NOT homomorphic — it rides
+//! the Unicast transport.
 
 use super::pipeline::{
     impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache,
@@ -25,10 +29,10 @@ use crate::dist::Gaussian;
 use crate::quantizer::layered::eta;
 use crate::quantizer::{PointQuantizer, ShiftedLayered};
 
-/// Round-derived shared state: the subsampling matrix, the per-coordinate
-/// selected counts ñ(j), and the per-client quantizer.
+/// Round-derived shared state: the per-coordinate selected counts ñ(j)
+/// and the per-client quantizer — O(d), never the O(n·d) subsample matrix
+/// (rows are re-derived per client from their own streams on demand).
 struct SigmRound {
-    b: Vec<Vec<bool>>,
     n_tilde: Vec<f64>,
     q: ShiftedLayered<Gaussian>,
 }
@@ -55,11 +59,18 @@ impl Sigm {
         let per_sd = self.sigma * self.gamma * n as f64;
         let gamma = self.gamma;
         self.round_state.get_or(round, || {
-            // global shared randomness: the subsampling matrix B[i][j]
-            let b = round.bernoulli_matrix(gamma);
-            let n_tilde: Vec<f64> =
-                (0..d).map(|j| (0..n).filter(|&i| b[i][j]).count() as f64).collect();
-            SigmRound { b, n_tilde, q: ShiftedLayered::new(Gaussian::new(0.0, per_sd)) }
+            // ñ(j) = Σᵢ Bᵢ(j): fold each client's derived row without ever
+            // materializing the matrix — O(d) memory
+            let mut n_tilde = vec![0.0f64; d];
+            for i in 0..n {
+                let mut brng = round.subsample_rng(i);
+                for nt in n_tilde.iter_mut() {
+                    if brng.bernoulli(gamma) {
+                        *nt += 1.0;
+                    }
+                }
+            }
+            SigmRound { n_tilde, q: ShiftedLayered::new(Gaussian::new(0.0, per_sd)) }
         })
     }
 }
@@ -90,13 +101,15 @@ impl ClientEncoder for Sigm {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
         let st = self.state(round);
         let per_sd = self.sigma * self.gamma * round.n_clients as f64;
+        // the client derives only ITS OWN subsample row — O(d) encode
+        let mut brng = round.subsample_rng(client);
         let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0f64;
         // ragged: one description per SELECTED coordinate, in j order
         let mut ms = Vec::new();
         for (j, &xj) in x.iter().enumerate() {
-            if !st.b[client][j] {
+            if !brng.bernoulli(self.gamma) {
                 continue;
             }
             let s = st.q.draw(&mut rng);
@@ -130,12 +143,14 @@ impl ServerDecoder for Sigm {
         assert_eq!(list.len(), n);
         let mut estimate = vec![0.0f64; d];
         for (i, (ms, _)) in list.iter().enumerate() {
-            // re-derive client i's step draws; the draw stream advances
-            // only on selected coordinates, matching the encoder
+            // re-derive client i's subsample row and step draws; the draw
+            // stream advances only on selected coordinates, matching the
+            // encoder — O(d) working state per client, no cached matrix
+            let mut brng = round.subsample_rng(i);
             let mut rng = round.client_rng(i);
             let mut k = 0usize;
-            for (j, ej) in estimate.iter_mut().enumerate() {
-                if !st.b[i][j] {
+            for ej in estimate.iter_mut() {
+                if !brng.bernoulli(self.gamma) {
                     continue;
                 }
                 let s = st.q.draw(&mut rng);
@@ -181,11 +196,11 @@ mod tests {
         for r in 0..rounds {
             let seed = seed0 + r as u64;
             let out = mech.aggregate(xs, seed);
-            // reconstruct the shared subsampling matrix
-            let mut brng = Rng::derive(seed, u64::MAX);
-            let b: Vec<Vec<bool>> = (0..n)
-                .map(|_| (0..d).map(|_| brng.bernoulli(mech.gamma)).collect())
-                .collect();
+            // reconstruct the shared subsample rows from their per-client
+            // streams (the post-bump derivation)
+            let round = crate::mechanisms::pipeline::SharedRound::new(seed, n, d);
+            let b: Vec<Vec<bool>> =
+                (0..n).map(|i| round.subsample_row(i, mech.gamma)).collect();
             for j in 0..d {
                 let sel: Vec<usize> = (0..n).filter(|&i| b[i][j]).collect();
                 if sel.is_empty() {

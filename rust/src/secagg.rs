@@ -182,6 +182,19 @@ pub fn reconstruct_dropped_masks(
     out
 }
 
+/// Fold one pairwise mask leg (client ↔ other) into an already-lifted
+/// field vector: `client` ADDS the pair stream when it is the
+/// lower-indexed end, SUBTRACTS it otherwise — the sign convention both
+/// [`mask_descriptions`] and [`reconstruct_dropped_masks`] mirror.
+fn fold_pair_leg(out: &mut [u64], client: usize, other: usize, root_seed: u64, m: u64) {
+    let mut rng = Rng::new(pair_seed(root_seed, client, other));
+    let add = client < other;
+    for o in out.iter_mut() {
+        let mask = rng.below(m);
+        *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
+    }
+}
+
 /// Client-side masking: add `Σ_{j>i} PRG_ij − Σ_{j<i} PRG_ij` (mod m) to
 /// each coordinate of the description vector.
 pub fn mask_descriptions(
@@ -197,12 +210,43 @@ pub fn mask_descriptions(
         if other == client {
             continue;
         }
-        let mut rng = Rng::new(pair_seed(root_seed, client, other));
-        let add = client < other;
-        for o in out.iter_mut() {
-            let mask = rng.below(m);
-            *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
+        fold_pair_leg(&mut out, client, other, root_seed, m);
+    }
+    out
+}
+
+/// [`mask_descriptions`] restricted to an explicit member set: masks pair
+/// only among `members` (global client ids, strictly increasing), so the
+/// masks cancel over the *members'* sum. This is the client-sampling
+/// schedule — a round's cohort is known when the session opens, cohort
+/// members agree pairwise among themselves, and sampled-out clients hold
+/// no mask legs at all (nothing to recover if one of them would have
+/// dropped). Panics (fail closed) if `client` is not itself a member — a
+/// sampled-out client must not submit — or if `members` is not strictly
+/// increasing: a duplicated id would fold one pair leg twice and leave an
+/// uncancelled mask in the aggregate instead of an error.
+pub fn mask_descriptions_among(
+    ms: &[i64],
+    client: usize,
+    members: &[usize],
+    root_seed: u64,
+    params: SecAggParams,
+) -> Vec<u64> {
+    assert!(
+        members.windows(2).all(|w| w[0] < w[1]),
+        "cohort member list must be strictly increasing (sorted, duplicate-free)"
+    );
+    assert!(
+        members.contains(&client),
+        "fails closed: client {client} masks as a cohort member but is sampled out"
+    );
+    let m = params.modulus;
+    let mut out: Vec<u64> = ms.iter().map(|&v| to_field(v, m)).collect();
+    for &other in members {
+        if other == client {
+            continue;
         }
+        fold_pair_leg(&mut out, client, other, root_seed, m);
     }
     out
 }
@@ -293,6 +337,60 @@ mod tests {
             .map(|i| mask_descriptions(&descriptions[i], i, 3, r0, params))
             .collect();
         assert_eq!(aggregate_masked(&masked, params), vec![2, -1]);
+    }
+
+    #[test]
+    fn cohort_masks_cancel_over_the_member_sum() {
+        // masks exchanged among an arbitrary member set cancel over that
+        // set's sum — the client-sampling analogue of masks_cancel_exactly
+        let params = SecAggParams::default();
+        let members = [0usize, 2, 3, 6];
+        let d = 10;
+        let mut rng = Rng::new(404);
+        let descriptions: Vec<Vec<i64>> = (0..7)
+            .map(|_| (0..d).map(|_| rng.below(2000) as i64 - 1000).collect())
+            .collect();
+        let m = params.modulus;
+        let mut sum = vec![0u64; d];
+        for &i in &members {
+            let masked =
+                mask_descriptions_among(&descriptions[i], i, &members, 0xC0607, params);
+            for (s, v) in sum.iter_mut().zip(masked) {
+                *s = (*s + v) % m;
+            }
+        }
+        let got: Vec<i64> = sum.into_iter().map(|v| from_field(v, m)).collect();
+        for j in 0..d {
+            let want: i64 = members.iter().map(|&i| descriptions[i][j]).sum();
+            assert_eq!(got[j], want, "j={j}");
+        }
+    }
+
+    #[test]
+    fn cohort_masking_over_full_fleet_matches_unsampled_masking() {
+        let params = SecAggParams::default();
+        let all: Vec<usize> = (0..5).collect();
+        let ms = vec![7i64, -2, 0, 991];
+        for client in 0..5 {
+            assert_eq!(
+                mask_descriptions_among(&ms, client, &all, 0xF00, params),
+                mask_descriptions(&ms, client, 5, 0xF00, params),
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sampled out")]
+    fn sampled_out_client_cannot_mask_into_the_cohort() {
+        let _ = mask_descriptions_among(&[1], 4, &[0, 1, 2], 9, SecAggParams::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn duplicate_cohort_member_fails_closed_instead_of_double_masking() {
+        // a duplicated id would fold the (0,1) leg twice for client 0 but
+        // once for client 1 — an uncancelled mask, caught at the API edge
+        let _ = mask_descriptions_among(&[1], 0, &[0, 1, 1], 9, SecAggParams::default());
     }
 
     #[test]

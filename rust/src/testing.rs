@@ -13,12 +13,13 @@
 //!   announced dropouts and mask recovery, must decode *bit-identically*
 //!   to Plain summation over the same survivor set, round for round.
 
+use crate::coordinator::sampling::SamplingPolicy;
 use crate::mechanisms::pipeline::{
     ClientEncoder, MechSpec, Plain, ServerDecoder, SharedRound, SurvivorSet, Transport,
 };
-use crate::mechanisms::session::run_window_with_dropouts;
+use crate::mechanisms::session::run_window_sampled;
 use crate::mechanisms::traits::BitsAccount;
-use crate::util::rng::Rng;
+use crate::util::rng::{seed_domain, Rng};
 
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
@@ -258,23 +259,65 @@ pub fn assert_window_closes_exactly<M>(
 ) where
     M: ClientEncoder + ServerDecoder + MechSpec,
 {
+    // the unsampled check IS the sampled one with full cohorts — one
+    // implementation of the bit-identity contract, two entry points
+    assert_sampled_window_closes_exactly(
+        mech,
+        transport,
+        fleet,
+        &SamplingPolicy::Full,
+        schedule,
+        session_seed,
+    );
+}
+
+/// The client-sampling acceptance check, the sampled sibling of
+/// [`assert_window_closes_exactly`]: derive each round's cohort from
+/// `policy` (round r uses round index r, root seed = `session_seed` — the
+/// same derivation the coordinator uses), run the whole window through ONE
+/// sampled session over `transport` with `dropouts[r]` *mid-round*
+/// dropouts per round, and assert each round decodes *bit-identically* —
+/// estimates AND bit accounting — to Plain summation over (cohort minus
+/// dropped) with the same shared randomness.
+///
+/// `dropouts[r]` entries must name cohort members (the session fails
+/// closed otherwise — that contract has its own tests); the schedule fixes
+/// the window length. Requires a sum-decodable (homomorphic) mechanism.
+pub fn assert_sampled_window_closes_exactly<M>(
+    mech: &M,
+    transport: &dyn Transport,
+    fleet: &Fleet,
+    policy: &SamplingPolicy,
+    dropouts: &[Vec<usize>],
+    session_seed: u64,
+) where
+    M: ClientEncoder + ServerDecoder + MechSpec,
+{
     assert!(
         mech.sum_decodable(),
-        "assert_window_closes_exactly needs a homomorphic mechanism ({} is not): the \
-         reference semantics is Plain summation over the survivors",
+        "assert_sampled_window_closes_exactly needs a homomorphic mechanism ({} is not): \
+         the reference semantics is Plain summation over the cohort",
         MechSpec::name(mech),
     );
-    assert!(!schedule.is_empty(), "the schedule fixes the window length; it cannot be empty");
+    assert!(!dropouts.is_empty(), "the schedule fixes the window length; it cannot be empty");
     let n = fleet.n_clients;
+    let window = dropouts.len();
+    let cohorts: Vec<SurvivorSet> =
+        (0..window).map(|r| policy.cohort(session_seed, r as u64, n)).collect();
     let datasets: Vec<Vec<Vec<f64>>> =
-        (0..schedule.len()).map(|r| fleet.round_data(r as u64)).collect();
-    let round_seeds: Vec<u64> =
-        (0..schedule.len()).map(|r| session_seed ^ (0x0DD0 + 7919 * r as u64)).collect();
+        (0..window).map(|r| fleet.round_data(r as u64)).collect();
+    // per-round seeds through the same domain-separated family the
+    // coordinator uses — the harness must not reintroduce the flat-XOR
+    // derivation the seed-format bump removed
+    let round_seeds: Vec<u64> = (0..window)
+        .map(|r| Rng::derive_domain(session_seed, seed_domain::ROUND, r as u64))
+        .collect();
     let rounds: Vec<(&[Vec<f64>], u64)> =
         datasets.iter().zip(&round_seeds).map(|(xs, &s)| (xs.as_slice(), s)).collect();
-    let windowed = run_window_with_dropouts(mech, transport, mech, &rounds, session_seed, schedule);
+    let windowed =
+        run_window_sampled(mech, transport, mech, &rounds, session_seed, &cohorts, dropouts);
     for (r, out) in windowed.iter().enumerate() {
-        let survivors = SurvivorSet::with_dropped(n, &schedule[r]);
+        let survivors = cohorts[r].drop_clients(&dropouts[r]);
         let shared = SharedRound::new(round_seeds[r], n, fleet.dim);
         let mut part = Plain.empty(&shared);
         let mut bits = BitsAccount::default();
@@ -287,7 +330,7 @@ pub fn assert_window_closes_exactly<M>(
             mech.decode_survivors(&Plain.finish(part, &shared), &shared, &survivors);
         assert_eq!(
             out.estimate, reference,
-            "round {r}: windowed {} estimate != Plain-over-survivors reference",
+            "round {r}: sampled {} window estimate != Plain-over-cohort reference",
             transport.name(),
         );
         assert_eq!(out.bits.messages, bits.messages, "round {r}: message counts diverge");
@@ -424,6 +467,36 @@ mod tests {
             &fleet,
             &schedule,
             0xCAFE,
+        );
+    }
+
+    #[test]
+    fn sampled_window_closes_exactly_harness_accepts_sampling() {
+        // self-check of the sampled acceptance helper on a real
+        // homomorphic mechanism, with a mid-round dropout drawn FROM the
+        // cohort so the schedule is always valid
+        use crate::mechanisms::pipeline::SecAgg;
+        use crate::mechanisms::AggregateGaussian;
+        let fleet = Fleet::new(8, 3, 21);
+        let policy = SamplingPolicy::FixedSize { k: 5 };
+        let session_seed = 0xBEEF;
+        let dropouts: Vec<Vec<usize>> = (0..3u64)
+            .map(|r| {
+                let cohort = policy.cohort(session_seed, r, 8);
+                if r == 1 {
+                    vec![cohort.alive_iter().next().unwrap()]
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        assert_sampled_window_closes_exactly(
+            &AggregateGaussian::new(0.4, 8.0),
+            &SecAgg::new(),
+            &fleet,
+            &policy,
+            &dropouts,
+            session_seed,
         );
     }
 

@@ -9,3 +9,22 @@ pub mod benchkit;
 pub mod json;
 
 pub use rng::Rng;
+
+/// The loud-fail parse contract shared by every typed config/flag getter
+/// (`coordinator::config::Config`, `cli::Args`): a missing value takes
+/// the default, a present-but-malformed value panics naming the source
+/// (`what`, e.g. `config key sigma` or `flag --sigma`) and the expected
+/// type — a typo'd value must never silently fall back to a default.
+pub fn parse_or_panic<T: std::str::FromStr>(
+    val: Option<&str>,
+    default: T,
+    what: &str,
+    expected: &str,
+) -> T {
+    match val {
+        None => default,
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            panic!("{what} has malformed value {v:?} (expected {expected})")
+        }),
+    }
+}

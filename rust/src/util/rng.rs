@@ -13,6 +13,25 @@
 //! tuple an independent stream from one root seed, which is exactly how the
 //! coordinator distributes shared randomness.
 
+/// Root-seed derivation domains for
+/// [`crate::util::rng::Rng::derive_domain`]: every family of seeds derived
+/// from the coordinator root seed is tagged with one of these, so no
+/// family can alias another no matter what indices it uses.
+/// (Before the seed-format bump, round seeds were `root ^ round·C` — round
+/// 0 was handed the *raw root seed*, and XOR-composed families shared one
+/// flat u64 space where collisions were possible by construction.)
+pub mod seed_domain {
+    /// Round r's shared-randomness seed (what
+    /// [`crate::mechanisms::pipeline::SharedRound`] is built from).
+    pub const ROUND: u64 = 0xD0_0001;
+    /// A session window's transport seed
+    /// ([`crate::mechanisms::session::derive_session_seed`]).
+    pub const SESSION: u64 = 0xD0_0002;
+    /// Round r's client-sampling cohort draw
+    /// ([`crate::coordinator::sampling::SamplingPolicy`]).
+    pub const COHORT: u64 = 0xD0_0003;
+}
+
 /// SplitMix64: used for seeding and stream derivation (passes BigCrush).
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {
@@ -60,6 +79,27 @@ impl Rng {
         let a = sm.next_u64();
         let mut sm2 = SplitMix64::new(a ^ stream.wrapping_mul(0xA24B_AED4_963E_E407));
         Self::new(sm2.next_u64())
+    }
+
+    /// Domain-separated seed derivation: mix (root seed, domain, index)
+    /// through chained SplitMix64 expansions and return the derived seed.
+    ///
+    /// This is the root-level companion of [`Rng::derive`]: where `derive`
+    /// separates *streams under one seed*, `derive_domain` separates the
+    /// *seed families* hanging off the coordinator root seed (round seeds,
+    /// session seeds, sampling-cohort draws — see [`seed_domain`]). Unlike
+    /// the XOR folding it replaced, no (domain, index) pair maps to the
+    /// raw root seed (`root ^ 0·C == root` gave round 0 the root itself)
+    /// and distinct domains cannot alias by index arithmetic, because each
+    /// component passes through a full SplitMix64 avalanche before the
+    /// next is folded in.
+    pub fn derive_domain(root_seed: u64, domain: u64, index: u64) -> u64 {
+        let mut sm = SplitMix64::new(root_seed);
+        let expanded = sm.next_u64();
+        let mut sm = SplitMix64::new(expanded ^ domain.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let tagged = sm.next_u64();
+        let mut sm = SplitMix64::new(tagged ^ index.wrapping_mul(0xA24B_AED4_963E_E407));
+        sm.next_u64()
     }
 
     #[inline]
@@ -206,6 +246,33 @@ mod tests {
         let mut b = Rng::new(42);
         for _ in 0..1000 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_domain_separates_families_and_never_returns_the_root() {
+        let root = 42u64;
+        // deterministic
+        assert_eq!(
+            Rng::derive_domain(root, seed_domain::ROUND, 0),
+            Rng::derive_domain(root, seed_domain::ROUND, 0)
+        );
+        // index 0 must NOT hand back the raw root (the old XOR-fold bug)
+        for &dom in &[seed_domain::ROUND, seed_domain::SESSION, seed_domain::COHORT] {
+            assert_ne!(Rng::derive_domain(root, dom, 0), root, "domain {dom:#x}");
+        }
+        // pairwise distinct across domains × indices for a sweep of roots
+        for root in [0u64, 1, 42, u64::MAX] {
+            let mut seen = Vec::new();
+            for &dom in &[seed_domain::ROUND, seed_domain::SESSION, seed_domain::COHORT] {
+                for idx in 0..64u64 {
+                    seen.push(Rng::derive_domain(root, dom, idx));
+                }
+            }
+            let len = seen.len();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), len, "derived-seed collision under root {root}");
         }
     }
 

@@ -198,6 +198,85 @@ fn dropout_windowed_secagg_service_matches_plain_over_survivors() {
     }
 }
 
+/// Seed-derived client sampling end to end: a 12-round Poisson(γ)-sampled
+/// SecAgg service with a privacy ledger must (a) equal the identical Plain
+/// service bit for bit over every cohort, (b) report cohort sizes that
+/// match the policy's own derivation, and (c) surface a strictly
+/// increasing cumulative amplified ε — each round's spend strictly below
+/// the unsampled base — into the metrics sink.
+#[test]
+fn sampling_sampled_secagg_service_reports_amplified_privacy() {
+    use exact_comp::coordinator::runtime::run_rounds_mech_sampled;
+    use exact_comp::coordinator::sampling::SamplingPolicy;
+    use exact_comp::dp::PrivacyLedger;
+    use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
+
+    let n = 10;
+    let d = 6;
+    let fleet = Fleet::new(n, d, 8080).with_range(-2.0, 2.0);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let mech = AggregateGaussian::new(0.05, 4.0);
+    let policy = SamplingPolicy::Poisson { gamma: 0.5 };
+    let (base_eps, base_delta) = (1.0, 1e-5);
+    let mut ledger = PrivacyLedger::new(base_eps, base_delta);
+    let mut metrics = Metrics::new("sampled-service");
+    let window = 4usize;
+    let none: Vec<Vec<usize>> = vec![Vec::new(); window];
+    let mut masked = Vec::new();
+    let mut plain = Vec::new();
+    for start in (0..12u64).step_by(window) {
+        masked.extend(run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            start,
+            window,
+            &[],
+            55,
+            &policy,
+            &none,
+            Some(&mut ledger),
+        ));
+        plain.extend(run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(Plain),
+            start,
+            window,
+            &[],
+            55,
+            &policy,
+            &none,
+            None,
+        ));
+    }
+    assert_eq!(masked.len(), 12);
+    assert_eq!(ledger.rounds(), 12);
+    let mut prev_total = 0.0;
+    for (m, p) in masked.iter().zip(&plain) {
+        assert_eq!(m.output.estimate, p.output.estimate, "round {}", m.round);
+        assert_eq!(m.cohort, p.cohort);
+        // the cohort matches the policy's own derivation (what a client
+        // would compute for itself)
+        let want = policy.cohort(55, m.round, n);
+        assert_eq!(m.cohort, want.n_alive(), "round {}", m.round);
+        assert_eq!(m.survivors, m.cohort, "no dropouts scheduled");
+        let want_mean = fleet.survivor_mean(m.round, &want);
+        for (a, b) in m.true_mean.iter().zip(&want_mean) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // amplified per-round spend, strictly growing cumulative
+        let spend = m.privacy.expect("ledger threaded through the run");
+        assert!(spend.eps_round < base_eps, "round {}: not amplified", m.round);
+        assert!(spend.eps_total > prev_total);
+        prev_total = spend.eps_total;
+        metrics.record_privacy(&spend);
+    }
+    // the sink carries the full ε trajectory
+    assert_eq!(metrics.series("dp_eps_total").unwrap().len(), 12);
+    assert_eq!(metrics.last("dp_eps_total"), Some(prev_total));
+}
+
 /// Pool shutdown is clean even with rounds in flight history.
 #[test]
 fn pool_drop_joins_threads() {

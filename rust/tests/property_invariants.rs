@@ -16,8 +16,10 @@ use exact_comp::mechanisms::{
 };
 use exact_comp::quantizer::{DirectLayered, PointQuantizer, ShiftedLayered, SubtractiveDither};
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
+use exact_comp::coordinator::sampling::SamplingPolicy;
 use exact_comp::testing::{
-    assert_window_closes_exactly, dropout_schedule, forall, gen_f64, gen_usize, Fleet, PropConfig,
+    assert_sampled_window_closes_exactly, assert_window_closes_exactly, dropout_schedule,
+    forall, gen_f64, gen_usize, Fleet, PropConfig,
 };
 use exact_comp::transforms::hadamard::RandomizedRotation;
 use exact_comp::util::rng::Rng;
@@ -623,6 +625,181 @@ fn dropout_seed_matrix_windows_close_exactly() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// seed-derived client sampling: cohort sessions ≡ Plain over the cohort,
+// exact error laws at cohort size, amplified accounting
+// ---------------------------------------------------------------------------
+
+/// The CI sampling suite: a fixed seed matrix — 3 seeds × γ ∈ {0.25, 0.5,
+/// 1.0} Poisson sampling — every cell's W=4 sampled SecAgg window must be
+/// bit-identical to Plain over the same cohorts.
+/// (`scripts/ci.sh` runs this by name; keep `sampling` in the test names.)
+#[test]
+fn sampling_seed_matrix_windows_close_exactly() {
+    let n = 9;
+    for seed in [11u64, 22, 33] {
+        for gamma in [0.25f64, 0.5, 1.0] {
+            let fleet = Fleet::new(n, 5, seed);
+            let policy = SamplingPolicy::Poisson { gamma };
+            let none: Vec<Vec<usize>> = vec![Vec::new(); 4];
+            assert_sampled_window_closes_exactly(
+                &AggregateGaussian::new(0.5, 8.0),
+                &SecAgg::new(),
+                &fleet,
+                &policy,
+                &none,
+                seed,
+            );
+            assert_sampled_window_closes_exactly(
+                &IrwinHallMechanism::new(0.4, 8.0),
+                &SecAgg::new(),
+                &fleet,
+                &policy,
+                &none,
+                seed ^ 1,
+            );
+        }
+    }
+}
+
+/// Sampling composes with the PR 3 dropout path: a Poisson-sampled window
+/// where a cohort member additionally drops mid-round still closes — the
+/// sampled-out clients need no recovery, the dropped member is recovered
+/// over the final survivors, and the result equals Plain over (cohort
+/// minus dropped), bit for bit.
+#[test]
+fn sampling_composes_with_midround_dropouts_bit_identically() {
+    let n = 10;
+    let fleet = Fleet::new(n, 4, 0x5A);
+    let policy = SamplingPolicy::Poisson { gamma: 0.6 };
+    let session_seed = 0xC0;
+    // drop the first cohort member of every round that has at least two
+    // (derived from the policy, so the schedule is valid by construction)
+    let dropouts: Vec<Vec<usize>> = (0..4u64)
+        .map(|r| {
+            let cohort = policy.cohort(session_seed, r, n);
+            if cohort.n_alive() >= 2 {
+                vec![cohort.alive_iter().next().unwrap()]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect();
+    assert_sampled_window_closes_exactly(
+        &AggregateGaussian::new(0.5, 8.0),
+        &SecAgg::new(),
+        &fleet,
+        &policy,
+        &dropouts,
+        session_seed,
+    );
+}
+
+/// The KS-exactness acceptance for sampling: with a fixed-size cohort of
+/// k out of n, the aggregate Gaussian's error against the COHORT mean is
+/// exactly N(0, (σ·n/k)²) — the survivor-aware decoder completes the
+/// sampled-out clients' dither terms and rescales, exactly as for
+/// dropouts, so the law holds at cohort size n′ = k.
+#[test]
+fn sampling_error_is_exactly_gaussian_at_cohort_scale() {
+    use exact_comp::mechanisms::run_window_sampled;
+    let sigma = 0.5;
+    let (n, k, d) = (6usize, 4usize, 4usize);
+    let fleet = Fleet::new(n, d, 0xF00D);
+    let xs = fleet.round_data(0);
+    let policy = SamplingPolicy::FixedSize { k };
+    let mech = AggregateGaussian::new(sigma, 8.0);
+    let mut errs = Vec::new();
+    for r in 0..900u64 {
+        let seed = 90_000 + r;
+        let cohort = policy.cohort(seed, 0, n);
+        let out = run_window_sampled(
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            &[(xs.as_slice(), seed)],
+            seed,
+            std::slice::from_ref(&cohort),
+            &[Vec::new()],
+        );
+        let cmean = fleet.survivor_mean(0, &cohort);
+        for j in 0..d {
+            errs.push(out[0].estimate[j] - cmean[j]);
+        }
+    }
+    let rescaled_sd = sigma * n as f64 / k as f64; // σ·n/n′ = 0.75
+    let g = Gaussian::new(0.0, rescaled_sd);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| g.cdf(e));
+    assert!(res.p_value > 0.003, "sampling exactness violated: p={}", res.p_value);
+    let v = exact_comp::util::stats::variance(&errs);
+    assert!((v - rescaled_sd * rescaled_sd).abs() < 0.05, "var={v}");
+}
+
+/// Irwin–Hall companion: the same sampled decode keeps the exact n-term
+/// IH law at scale σ·n/k against the cohort mean.
+#[test]
+fn sampling_error_is_exactly_irwin_hall_at_cohort_scale() {
+    use exact_comp::dist::IrwinHall;
+    use exact_comp::mechanisms::run_window_sampled;
+    let sigma = 0.6;
+    let (n, k, d) = (8usize, 5usize, 4usize);
+    let fleet = Fleet::new(n, d, 0xABBA);
+    let xs = fleet.round_data(0);
+    let policy = SamplingPolicy::FixedSize { k };
+    let mech = IrwinHallMechanism::new(sigma, 8.0);
+    let mut errs = Vec::new();
+    for r in 0..800u64 {
+        let seed = 50_000 + r;
+        let cohort = policy.cohort(seed, 0, n);
+        let out = run_window_sampled(
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            &[(xs.as_slice(), seed)],
+            seed,
+            std::slice::from_ref(&cohort),
+            &[Vec::new()],
+        );
+        let cmean = fleet.survivor_mean(0, &cohort);
+        for j in 0..d {
+            errs.push(out[0].estimate[j] - cmean[j]);
+        }
+    }
+    let scale = sigma * n as f64 / k as f64;
+    let ih = IrwinHall::new(n as u64, 0.0, scale);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| ih.cdf(e));
+    assert!(res.p_value > 0.003, "sampled IH exactness violated: p={}", res.p_value);
+    let v = exact_comp::util::stats::variance(&errs);
+    assert!((v - scale * scale).abs() < 0.1, "var={v}");
+}
+
+/// The ledger acceptance: amplified ε strictly below the unsampled ε for
+/// every γ < 1, exact agreement with `amplify_by_subsampling` at W=1, and
+/// additive composition across a window.
+#[test]
+fn sampling_privacy_ledger_reports_amplified_spend() {
+    use exact_comp::dp::{amplify_by_subsampling, PrivacyLedger};
+    let (base_eps, base_delta) = (1.2, 1e-5);
+    for gamma in [0.25f64, 0.5, 0.9] {
+        let mut ledger = PrivacyLedger::new(base_eps, base_delta);
+        let s = ledger.record(0, gamma);
+        let (want_eps, want_delta) = amplify_by_subsampling(base_eps, base_delta, gamma);
+        assert_eq!(s.eps_round, want_eps, "gamma={gamma}: W=1 identity");
+        assert_eq!(s.delta_round, want_delta);
+        assert!(s.eps_round < base_eps, "gamma={gamma}: not amplified");
+        for r in 1..5u64 {
+            ledger.record(r, gamma);
+        }
+        let (total, _) = ledger.basic_eps_delta();
+        assert!((total - 5.0 * want_eps).abs() < 1e-9, "gamma={gamma}: composition");
+        assert!(total < 5.0 * base_eps);
+    }
+    // γ = 1 spends exactly the base guarantee
+    let mut unsampled = PrivacyLedger::new(base_eps, base_delta);
+    let s = unsampled.record(0, 1.0);
+    assert!((s.eps_round - base_eps).abs() < 1e-12);
 }
 
 /// The KS-exactness satellite: the aggregate Gaussian's survivor-only

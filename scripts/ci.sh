@@ -47,6 +47,23 @@ cargo test -q
 echo "== dropout property suite (seed matrix: 3 seeds x {0,1,ceil(n/4)} dropouts) =="
 cargo test -q dropout
 
+# Client-sampling suite, run by name for the same visibility: the fixed
+# seed matrix (3 seeds × γ ∈ {0.25, 0.5, 1.0} Poisson cohorts) lives in
+# `sampling_seed_matrix_windows_close_exactly`, plus every cohort/ledger/
+# KS-at-cohort-scale test across the lib, property and integration
+# targets. Redundant with the full `cargo test -q` above by construction —
+# a failure here names the sampling contract directly.
+echo "== client-sampling property suite (seed matrix: 3 seeds x gamma in {0.25,0.5,1.0}) =="
+cargo test -q sampling
+
+echo "== clippy (deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "cargo-clippy not installed in this toolchain; skipping (install the clippy" \
+         "component to enforce the gate locally)"
+fi
+
 echo "== rustdoc (deny warnings) =="
 # keeps the crate/module docs — including intra-doc links — green
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
