@@ -4,12 +4,12 @@
 use std::sync::Arc;
 
 use exact_comp::coordinator::runtime::{
-    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_sampled,
-    run_rounds_mech_with_dropouts, ClientPool,
+    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_chunked,
+    run_rounds_mech_sampled, run_rounds_mech_with_dropouts, ClientPool,
 };
 use exact_comp::coordinator::sampling::SamplingPolicy;
 use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
-use exact_comp::mechanisms::IrwinHallMechanism;
+use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
 use exact_comp::transforms::hadamard::{fwht, RandomizedRotation};
 use exact_comp::util::benchkit::{black_box, Suite};
@@ -45,6 +45,20 @@ fn main() {
             || {
                 round2 += 1;
                 black_box(run_round_mech(&pool, &mech, Arc::new(Plain), round2, &[], 42));
+            },
+        );
+        // the aggregate mechanism's encode is dominated by the
+        // Decomposer's ψ-layer boundary search — this series is where the
+        // per-n lookup table (built once, bracketing every draw to one
+        // table cell) shows up against the old full-range bisection
+        let agg = AggregateGaussian::new(0.5, 4.0);
+        let mut round3 = 0u64;
+        s.bench_elements(
+            &format!("coordinator/round_encoded_aggregate(n={n},d={d})"),
+            Some((n * d) as u64),
+            || {
+                round3 += 1;
+                black_box(run_round_mech(&pool, &agg, Arc::new(Plain), round3, &[], 42));
             },
         );
     }
@@ -161,6 +175,69 @@ fn main() {
                 },
             );
         }
+    }
+
+    // chunked coordinate-space streaming: the same windowed SecAgg
+    // session run over chunk plans c ∈ {64, 1024, d} — wall time plus the
+    // session's measured peak accumulator bytes, asserting the O(c)
+    // memory model (the whole point of chunking: peak scales with c, not
+    // d, while estimates stay bit-identical).
+    {
+        let n = 16usize;
+        let d = 4096usize;
+        let w = 4usize;
+        let pool = ClientPool::spawn_with_threads(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+            Some(4),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let mut peaks = Vec::new();
+        for chunk in [64usize, 1024, d] {
+            let mut start = 0u64;
+            let mut peak = 0usize;
+            s.bench_elements(
+                &format!("coordinator/rounds_chunked(n={n},d={d},W={w},c={chunk})"),
+                Some((n * d * w) as u64),
+                || {
+                    let (reps, stats) = run_rounds_mech_chunked(
+                        &pool,
+                        &mech,
+                        Arc::new(SecAgg::new()),
+                        start,
+                        w,
+                        &[],
+                        42,
+                        d,
+                        chunk,
+                    );
+                    start += w as u64;
+                    peak = peak.max(stats.peak_accumulator_bytes);
+                    black_box(reps);
+                },
+            );
+            println!(
+                "  coordinator/rounds_chunked(c={chunk}): peak accumulator bytes = {peak}"
+            );
+            peaks.push((chunk, peak));
+        }
+        // the memory-model acceptance: peak accumulator bytes are O(c) —
+        // the c=64 run must stay far below the whole-d run's peak, and
+        // within a small constant of (shards + in-flight) · W · c
+        let (c_small, small) = peaks[0];
+        let (_, whole) = peaks[peaks.len() - 1];
+        assert!(
+            small * 8 < whole,
+            "chunked peak {small} not O(c) vs whole-d peak {whole}"
+        );
+        let budget = 3 * (4 + 1) * w * c_small * 8;
+        assert!(
+            small <= budget,
+            "chunked peak {small} exceeds O(shards·W·c) budget {budget}"
+        );
     }
 
     // SecAgg masking

@@ -71,24 +71,37 @@ impl MechSpec for Csgm {
 
 impl ClientEncoder for Csgm {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        self.encode_chunk(client, x, 0..x.len(), round)
+    }
+
+    /// Chunk-ranged encode: the Bernoulli(γ) selection AND the dither of
+    /// coordinate j come from seekable per-coordinate streams (the same
+    /// subsample family SIGM reads, so the matched-subsample comparison
+    /// of Figs. 5/7 survives chunking), so any chunking concatenates to
+    /// the whole-vector encode bit for bit.
+    fn encode_chunk(
+        &self,
+        client: usize,
+        x: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
         let w = self.step();
-        // the client derives only ITS OWN subsample row stream — O(d)
-        // encode, no cached O(n·d) matrix (same `SharedRound::subsample_rng`
-        // derivation SIGM uses, so the two see identical subsamples)
-        let mut brng = round.subsample_rng(client);
-        let mut rng = round.client_rng(client);
+        // the client touches only ITS OWN per-coordinate streams — O(c)
+        // work for the chunk, no cached O(n·d) matrix anywhere
+        let select = round.subsample_coord_stream(client);
+        let dither = round.client_coord_stream(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
-        let ms: Vec<i64> = x
-            .iter()
-            .map(|&xj| {
-                if !brng.bernoulli(self.gamma) {
+        let ms: Vec<i64> = range
+            .map(|j| {
+                if !select.at(j).bernoulli(self.gamma) {
                     // unselected coordinates transmit nothing; a zero in
                     // the dense vector leaves Σm untouched
                     return 0;
                 }
-                let u = rng.u01();
-                let m = round_half_up(xj / w + u);
+                let u = dither.at(j).u01();
+                let m = round_half_up(x[j] / w + u);
                 bits.add_description(m);
                 fixed_total += self.bits as f64;
                 m
@@ -120,31 +133,51 @@ impl ServerDecoder for Csgm {
         round: &SharedRound,
         survivors: &SurvivorSet,
     ) -> Vec<f64> {
+        let est = self.decode_survivors_chunk(payload, 0, round, survivors);
+        assert_eq!(est.len(), round.dim, "payload does not cover the coordinate space");
+        est
+    }
+
+    fn chunk_decodable(&self) -> bool {
+        true
+    }
+
+    /// The chunk-ranged core of the decode: selections, dithers and the
+    /// server-side noise draws are all per-coordinate seekable streams,
+    /// so the server works in O(c) state per chunk and the concatenation
+    /// over any chunking equals the whole-d decode bit for bit.
+    fn decode_survivors_chunk(
+        &self,
+        payload: &Payload,
+        lo: usize,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
         let n = round.n_clients;
         assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
-        let d = round.dim;
         let w = self.step();
         let m_sum = payload.description_sum();
-        assert_eq!(m_sum.len(), d);
-        // re-derive the selected SURVIVORS' dithers (shared randomness),
-        // row stream by row stream — O(d) working state, no cached matrix
-        let mut s_sum = vec![0.0f64; d];
+        let len = m_sum.len();
+        assert!(lo + len <= round.dim, "chunk exceeds the coordinate space");
+        // re-derive the selected SURVIVORS' dithers (shared randomness)
+        // for this chunk — O(c) working state, no cached matrix
+        let mut s_sum = vec![0.0f64; len];
         for i in survivors.alive_iter() {
-            let mut brng = round.subsample_rng(i);
-            let mut rng = round.client_rng(i);
-            for sj in s_sum.iter_mut() {
-                if brng.bernoulli(self.gamma) {
-                    *sj += rng.u01();
+            let select = round.subsample_coord_stream(i);
+            let dither = round.client_coord_stream(i);
+            for (k, sj) in s_sum.iter_mut().enumerate() {
+                if select.at(lo + k).bernoulli(self.gamma) {
+                    *sj += dither.at(lo + k).u01();
                 }
             }
         }
         // divide by γn′ and add the calibrated server-side Gaussian noise
         let nf = survivors.n_alive() as f64;
-        let mut nrng = round.aux_rng(2);
-        (0..d)
-            .map(|j| {
-                (m_sum[j] as f64 - s_sum[j]) * w / (self.gamma * nf)
-                    + nrng.normal_ms(0.0, self.sigma)
+        let noise = round.aux_coord_stream(2);
+        (0..len)
+            .map(|k| {
+                (m_sum[k] as f64 - s_sum[k]) * w / (self.gamma * nf)
+                    + noise.at(lo + k).normal_ms(0.0, self.sigma)
             })
             .collect()
     }

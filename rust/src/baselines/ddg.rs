@@ -22,8 +22,8 @@
 
 use crate::dist::discrete_gaussian::discrete_gaussian;
 use crate::mechanisms::pipeline::{
-    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache, SecAgg,
-    ServerDecoder, SharedRound, SurvivorSet,
+    impl_mean_mechanism, ChunkCache, ClientEncoder, Descriptions, MechSpec, Payload, RoundCache,
+    SecAgg, ServerDecoder, SharedRound, SurvivorSet,
 };
 use crate::mechanisms::traits::BitsAccount;
 use crate::secagg::{from_field, to_field, SecAggParams};
@@ -42,12 +42,34 @@ pub struct Ddg {
     pub bits: u32,
     /// round-derived shared rotation (clients + server)
     round_rot: RoundCache<RandomizedRotation>,
+    /// per-(round, client) clipped + rotated vectors, used ONLY by
+    /// partial-range `encode_chunk` calls: a chunked client streams
+    /// ⌈d/c⌉ chunk encodes per round, and the O(d log d) rotation must
+    /// run once, not once per chunk. The cache key reuses [`ChunkCache`]
+    /// with the degenerate "range" `client..client + 1` standing in for
+    /// the client id (documented abuse — the cache is per (round,
+    /// client)). Client-side memory, FIFO-capped at the working set of
+    /// one session window — n·MAX_WINDOW entries, one per (in-flight
+    /// round, cohort member), each revisited once per chunk pass — so a
+    /// chunked window never thrashes back into per-chunk re-rotation;
+    /// whole-range (legacy) encodes bypass it. Keys include a fingerprint
+    /// of the input vector ([`Ddg::rot_key_seed`]), so re-encoding the
+    /// same (round, client) with DIFFERENT data (new model state) can
+    /// never reuse a stale rotation.
+    rot_vec: ChunkCache<Vec<f64>>,
 }
 
 impl Ddg {
     pub fn new(sigma_lattice: f64, gamma_q: f64, clip_c: f64, bits: u32) -> Self {
         assert!(sigma_lattice > 0.0 && gamma_q > 0.0 && bits >= 2 && bits <= 40);
-        Self { sigma_lattice, gamma_q, clip_c, bits, round_rot: RoundCache::new() }
+        Self {
+            sigma_lattice,
+            gamma_q,
+            clip_c,
+            bits,
+            round_rot: RoundCache::new(),
+            rot_vec: ChunkCache::new(),
+        }
     }
 
     /// Calibrate for (ε, δ)-DP at n clients, dimension d: pick the total
@@ -104,6 +126,22 @@ impl Ddg {
     pub fn transport(&self) -> SecAgg {
         SecAgg::with_params(SecAggParams { modulus: self.modulus() })
     }
+
+    /// Cache-key fingerprint of (round seed, input vector): an FNV-1a
+    /// fold of the raw f64 bits seeded by the round seed. The rotated
+    /// vector depends on the DATA, not just on (round, client) — the
+    /// coordinator recomputes `local_update(c, round, state)` against
+    /// whatever model state it holds — so the data must be part of the
+    /// key or a re-encode with new state would silently reuse a stale
+    /// rotation. O(d) per encode_chunk call, negligible next to the
+    /// O(d log d) rotation it guards.
+    fn rot_key_seed(&self, round_seed: u64, x: &[f64]) -> u64 {
+        let mut h = round_seed ^ 0xcbf2_9ce4_8422_2325;
+        for v in x {
+            h = (h ^ v.to_bits()).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
 }
 
 impl MechSpec for Ddg {
@@ -131,19 +169,89 @@ impl MechSpec for Ddg {
 
 impl ClientEncoder for Ddg {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        self.encode_chunk(client, x, 0..x.len(), round)
+    }
+
+    /// Chunk-ranged encode. The clip + rotation are deterministic
+    /// whole-vector transforms of the client's OWN data (clients always
+    /// hold their own x — client memory is not what the chunked pipeline
+    /// bounds); the per-coordinate randomness — stochastic rounding and
+    /// the discrete Gaussian, whose sampler consumes a variable number of
+    /// raw draws — comes from seekable per-coordinate streams, so any
+    /// chunking concatenates to the whole-vector encode bit for bit.
+    ///
+    /// Two DDG-specific caveats: (a) DDG's *description* space is the
+    /// rotation's padded power-of-two dimension, so partial chunking is
+    /// supported only when `d` is already a power of two (description
+    /// coordinates then ARE data coordinates; otherwise only the full
+    /// range is accepted and the padded tail rides along, exactly as in
+    /// the unchunked path); (b) the DECODE side stays whole-d
+    /// (`chunk_decodable` = false): the inverse rotation needs every
+    /// coordinate, so the streaming runner assembles the O(d) sum — the
+    /// size of the estimate itself — before decoding.
+    fn encode_chunk(
+        &self,
+        client: usize,
+        x: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
         let rot = self.rotation(round);
-        let dim = rot.dim;
-        let mut rng = round.client_rng(client);
-        // clip to the l2 ball of radius c
-        let norm = l2_norm(x);
-        let scale = if norm > self.clip_c { self.clip_c / norm } else { 1.0 };
-        let clipped: Vec<f64> = x.iter().map(|v| v * scale).collect();
-        // rotate + lattice-scale
-        let rotated = rot.forward(&clipped);
+        let full_range = range.start == 0 && range.end == x.len();
+        let desc_range = if full_range {
+            // full-range call: describe the whole (possibly padded)
+            // rotated space, exactly as the legacy whole-d encode did
+            0..rot.dim
+        } else {
+            assert!(
+                rot.dim == x.len(),
+                "ddg fails closed under chunking: dimension {} pads to a {}-dim rotation — \
+                 chunked DDG needs a power-of-two dimension",
+                x.len(),
+                rot.dim,
+            );
+            range
+        };
+        let noise_stream = round.client_coord_stream(client);
+        // clip to the l2 ball of radius c, then rotate — an O(d log d)
+        // whole-vector transform. A chunked client calls encode_chunk
+        // ⌈d/c⌉ times per round, so partial-range calls memoize the
+        // rotated vector per (round, client) instead of re-rotating per
+        // chunk; the legacy full-range call computes it directly.
+        let compute_rotated = || {
+            let norm = l2_norm(x);
+            let scale = if norm > self.clip_c { self.clip_c / norm } else { 1.0 };
+            let clipped: Vec<f64> = x.iter().map(|v| v * scale).collect();
+            rot.forward(&clipped)
+        };
+        let cached;
+        let owned;
+        let rotated: &[f64] = if full_range {
+            owned = compute_rotated();
+            &owned
+        } else {
+            // keyed by (round seed ⊕ data fingerprint, n, dim, client) —
+            // the degenerate range client..client+1 carries the client id
+            // — with capacity = the window's working set; see the
+            // `rot_vec` field docs
+            let cap = round
+                .n_clients
+                .saturating_mul(crate::mechanisms::session::MAX_WINDOW);
+            let key = (
+                self.rot_key_seed(round.seed, x),
+                round.n_clients,
+                round.dim,
+                client,
+                client + 1,
+            );
+            cached = self.rot_vec.get_or_keyed(key, cap, compute_rotated);
+            &cached
+        };
         let mut bits = BitsAccount::default();
-        let mut ms: Vec<i64> = Vec::with_capacity(dim);
-        for &v in &rotated {
-            let z = v / self.gamma_q;
+        let mut ms: Vec<i64> = Vec::with_capacity(desc_range.len());
+        for j in desc_range {
+            let mut rng = noise_stream.at(j);
+            let z = rotated[j] / self.gamma_q;
             // unbiased stochastic rounding
             let fl = z.floor();
             let frac = z - fl;
@@ -154,7 +262,7 @@ impl ClientEncoder for Ddg {
             bits.add_description(m);
             ms.push(m);
         }
-        bits.fixed_total = Some(self.bits as f64 * dim as f64);
+        bits.fixed_total = Some(self.bits as f64 * ms.len() as f64);
         Descriptions { ms, aux: vec![], bits }
     }
 }

@@ -89,29 +89,50 @@ impl MechSpec for UnbiasedQuantizer {
 
 impl ClientEncoder for UnbiasedQuantizer {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        self.encode_chunk(client, x, 0..x.len(), round)
+    }
+
+    /// Chunk-ranged encode: the ℓ∞ norm is computed over the client's
+    /// FULL vector (it is the client's own data), while coordinate j's
+    /// dither comes from its seekable per-coordinate stream — so chunk
+    /// encodes concatenate to the whole-vector encode bit for bit (the
+    /// 32-bit norm transmission is accounted once, on the chunk starting
+    /// at coordinate 0). NOTE: no transport can carry per-chunk unicast
+    /// messages today — this mechanism rides [`Unicast`], which runs only
+    /// under single-chunk plans — so partial ranges are exercised by the
+    /// chunk-invariance unit test below and kept so the encoder is ready
+    /// if a chunk-capable per-client transport lands.
+    fn encode_chunk(
+        &self,
+        client: usize,
+        x: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
         let scale = linf_norm(x);
         let mut bits = BitsAccount::default();
+        let norm_bits = if range.start == 0 { 32.0 } else { 0.0 };
         if scale == 0.0 {
             // nothing to send beyond the (zero) norm: 32 bits on both
             // accountings, same convention as the non-zero branch
-            bits.variable_total += 32.0;
-            bits.fixed_total = Some(32.0);
-            return Descriptions { ms: vec![0; x.len()], aux: vec![0.0], bits };
+            bits.variable_total += norm_bits;
+            bits.fixed_total = Some(norm_bits);
+            return Descriptions { ms: vec![0; range.len()], aux: vec![0.0], bits };
         }
         let w = self.step();
-        let mut rng = round.client_rng(client);
-        let ms: Vec<i64> = x
-            .iter()
-            .map(|&v| {
-                let u = rng.u01();
-                let m = round_half_up(v / (scale * w) + u);
+        let dither = round.client_coord_stream(client);
+        let ms: Vec<i64> = range
+            .clone()
+            .map(|j| {
+                let u = dither.at(j).u01();
+                let m = round_half_up(x[j] / (scale * w) + u);
                 bits.add_description(m);
                 m
             })
             .collect();
         // 32 bits for the transmitted norm, on both accountings
-        bits.variable_total += 32.0;
-        bits.fixed_total = Some(self.bits as f64 * x.len() as f64 + 32.0);
+        bits.variable_total += norm_bits;
+        bits.fixed_total = Some(self.bits as f64 * range.len() as f64 + norm_bits);
         Descriptions { ms, aux: vec![scale], bits }
     }
 }
@@ -131,13 +152,13 @@ impl ServerDecoder for UnbiasedQuantizer {
         for (i, (ms, aux)) in list.iter().enumerate() {
             let scale = aux[0];
             if scale == 0.0 {
-                // the zero vector transmitted nothing; no dither stream was
-                // consumed on the client either
+                // the zero vector transmitted nothing (and its dither
+                // streams were never touched)
                 continue;
             }
-            let mut rng = round.client_rng(i);
-            for (ej, &m) in estimate.iter_mut().zip(ms) {
-                let u = rng.u01();
+            let dither = round.client_coord_stream(i);
+            for (j, (ej, &m)) in estimate.iter_mut().zip(ms).enumerate() {
+                let u = dither.at(j).u01();
                 *ej += (m as f64 - u) * w * scale;
             }
         }
@@ -214,6 +235,49 @@ mod tests {
             let avg = acc[j] / rounds as f64;
             assert!((avg - m[j]).abs() < 0.02, "j={j} avg={avg} want={}", m[j]);
         }
+    }
+
+    #[test]
+    fn chunked_encode_concatenates_to_whole_encode() {
+        // chunk encodes reproduce the whole-vector encode bit for bit —
+        // descriptions, aux norm, and accounting (norm bits counted once)
+        let d = 9usize;
+        let mut drng = Rng::new(515);
+        let x: Vec<f64> = (0..d).map(|_| drng.uniform(-3.0, 3.0)).collect();
+        let q = UnbiasedQuantizer::new(5);
+        let round = crate::mechanisms::pipeline::SharedRound::new(77, 3, d);
+        let whole = q.encode(1, &x, &round);
+        for c in [1usize, 4, d, d + 2] {
+            let mut ms = Vec::new();
+            let mut variable = 0.0;
+            let mut fixed = 0.0;
+            let mut messages = 0u64;
+            let mut lo = 0;
+            while lo < d {
+                let hi = (lo + c).min(d);
+                let part = q.encode_chunk(1, &x, lo..hi, &round);
+                assert_eq!(part.aux, whole.aux, "norm travels with every chunk");
+                ms.extend(part.ms);
+                variable += part.bits.variable_total;
+                fixed += part.bits.fixed_total.unwrap();
+                messages += part.bits.messages;
+                lo = hi;
+            }
+            assert_eq!(ms, whole.ms, "chunk {c}");
+            assert_eq!(variable, whole.bits.variable_total);
+            assert_eq!(fixed, whole.bits.fixed_total.unwrap());
+            assert_eq!(messages, whole.bits.messages);
+        }
+        // the zero vector chunks consistently too
+        let zeros = vec![0.0f64; d];
+        let zwhole = q.encode(0, &zeros, &round);
+        let z0 = q.encode_chunk(0, &zeros, 0..4, &round);
+        let z1 = q.encode_chunk(0, &zeros, 4..d, &round);
+        assert_eq!(z0.ms.len() + z1.ms.len(), zwhole.ms.len());
+        assert_eq!(
+            z0.bits.fixed_total.unwrap() + z1.bits.fixed_total.unwrap(),
+            zwhole.bits.fixed_total.unwrap()
+        );
     }
 
     #[test]

@@ -22,9 +22,19 @@
 //! ([`runtime::run_rounds_encoded_with_dropouts`]) nor touch every client
 //! every round: [`runtime::run_rounds_encoded_sampled`] derives each
 //! round's cohort from the root seed through a
-//! [`sampling::SamplingPolicy`], opens the masked session over the cohort
-//! only, and threads the subsampling-amplified DP spend through a
+//! [`sampling::SamplingPolicy`] (flat Poisson/fixed-size rates or a
+//! per-round [`sampling::SamplingPolicy::Schedule`]), opens the masked
+//! session over the cohort only, and threads each round's
+//! subsampling-amplified DP spend through a
 //! [`crate::dp::PrivacyLedger`].
+//!
+//! Models too large for whole-vector buffers stream their coordinate
+//! space: [`runtime::run_rounds_encoded_chunked`] runs the window over a
+//! [`crate::mechanisms::pipeline::ChunkPlan`] — one bounded channel
+//! message per (shard, chunk), a cross-shard chunk barrier, and per-chunk
+//! unmask + decode — so peak orchestrator memory is O(shards·c) instead
+//! of O(shards·d), bit-identical to the whole-d runner for every chunk
+//! size.
 //!
 //! * [`config`] — experiment configuration (file + CLI overrides)
 //! * [`metrics`] — per-round metric recording, CSV/JSON export
@@ -40,8 +50,8 @@ pub use config::Config;
 pub use metrics::Metrics;
 pub use runtime::{
     run_round, run_round_encoded, run_round_mech, run_rounds_encoded,
-    run_rounds_encoded_sampled, run_rounds_encoded_with_dropouts, run_rounds_mech,
-    run_rounds_mech_sampled, run_rounds_mech_with_dropouts, ClientPool, LocalCompute,
-    RoundReport,
+    run_rounds_encoded_chunked, run_rounds_encoded_sampled, run_rounds_encoded_with_dropouts,
+    run_rounds_mech, run_rounds_mech_chunked, run_rounds_mech_sampled,
+    run_rounds_mech_with_dropouts, ChunkStreamStats, ClientPool, LocalCompute, RoundReport,
 };
 pub use sampling::SamplingPolicy;

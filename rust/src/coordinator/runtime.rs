@@ -52,16 +52,30 @@
 //! schedule over the cohort only (sampled-out ≠ dropped: no masks, no
 //! recovery shares), sampling composes with the mid-round dropout path,
 //! and an optional [`PrivacyLedger`] records every executed round's
-//! subsampling-amplified (ε, δ) spend into [`RoundReport::privacy`].
+//! subsampling-amplified (ε, δ) spend into [`RoundReport::privacy`] —
+//! per round, so γ *schedules*
+//! ([`crate::coordinator::sampling::SamplingPolicy::Schedule`]) account
+//! each round at exactly the rate it sampled at.
+//!
+//! Real models also outgrow whole-vector buffers:
+//! [`run_rounds_encoded_chunked`] streams the window over a
+//! [`ChunkPlan`] — shards ship one bounded-channel message per chunk
+//! (all W rounds' O(c) partials), a cross-shard barrier keeps the fleet
+//! in chunk lockstep, and the orchestrator unmasks, decodes and frees
+//! each (round, chunk) as its last shard fold lands. Peak orchestrator
+//! accumulator memory is O(shards·c) instead of O(shards·d)
+//! ([`ChunkStreamStats`] reports the measured high-water mark), and the
+//! results are bit-identical to the whole-d runner for every chunk size.
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::thread::JoinHandle;
 
 use super::sampling::SamplingPolicy;
 use crate::dp::ledger::{PrivacyLedger, PrivacySpend};
 use crate::mechanisms::pipeline::{
-    ClientEncoder, ServerDecoder, SharedRound, SurvivorSet, Transport, TransportPartial,
+    ChunkPlan, ClientEncoder, Payload, ServerDecoder, SharedRound, SurvivorSet, Transport,
+    TransportPartial,
 };
 use crate::mechanisms::session::{
     derive_session_seed, session_round_transports_sampled, RoundDropouts, TransportSession,
@@ -109,6 +123,29 @@ enum ShardMsg {
         /// orchestrator's session will unmask)
         transports: Arc<Vec<Arc<dyn Transport>>>,
     },
+    /// The chunk-streamed sibling of `EncodeWindow`: the shard computes
+    /// its clients' window vectors once (client-side memory — a client
+    /// always holds its own update), then streams ONE message per *chunk*
+    /// covering all W rounds' O(c) partials for that coordinate range.
+    /// Backpressure is structural: `results` is a bounded channel (one
+    /// slot per shard) and `barrier` holds every shard at the end of each
+    /// chunk, so at most two chunks' accumulators are ever live at the
+    /// orchestrator — the O(shards·c) streaming memory model.
+    EncodeWindowChunked {
+        start_round: u64,
+        state: Arc<Vec<f64>>,
+        seeds: Arc<Vec<u64>>,
+        active: Arc<Vec<Vec<bool>>>,
+        encoder: Arc<dyn ClientEncoder>,
+        transports: Arc<Vec<Arc<dyn Transport>>>,
+        /// the model dimension d — explicit so a shard whose clients are
+        /// ALL sampled out still walks the identical chunk plan (it never
+        /// computes a vector to measure)
+        dim: usize,
+        chunk: usize,
+        results: mpsc::SyncSender<ShardChunkWindow>,
+        barrier: Arc<Barrier>,
+    },
     Shutdown,
 }
 
@@ -122,6 +159,27 @@ struct ShardRoundFold {
     partial: Option<TransportPartial>,
     bits: BitsAccount,
     x_sum: Vec<f64>,
+    clients: Vec<usize>,
+}
+
+/// One (shard, chunk) message of a chunk-streamed window: per round, the
+/// O(c) chunk partial, the bits folded for that chunk, the chunk slice of
+/// the shard's survivor x-sum, and the folded client ids.
+struct ShardChunkWindow {
+    /// first global client id of the shard — the orchestrator folds the
+    /// f64 x-sum contributions in shard order (f64 addition is not
+    /// associative, and the true-mean metric must be bit-identical to the
+    /// whole-d runner, which sorts shard pieces for exactly this reason)
+    start: usize,
+    /// chunk index k of the window's [`ChunkPlan`]
+    chunk: usize,
+    rounds: Vec<ShardChunkFold>,
+}
+
+struct ShardChunkFold {
+    partial: Option<TransportPartial>,
+    bits: BitsAccount,
+    x_sum_chunk: Vec<f64>,
     clients: Vec<usize>,
 }
 
@@ -255,6 +313,168 @@ impl ClientPool {
                                     .is_err()
                                 {
                                     return;
+                                }
+                            }
+                            ShardMsg::EncodeWindowChunked {
+                                start_round,
+                                state,
+                                seeds,
+                                active,
+                                encoder,
+                                transports,
+                                dim,
+                                chunk,
+                                results,
+                                barrier,
+                            } => {
+                                // Panic containment: a shard that dies
+                                // before pacing every chunk barrier would
+                                // park its siblings in Barrier::wait()
+                                // forever and wedge the orchestrator's
+                                // recv() — so BOTH phases (window compute
+                                // and per-chunk encode) run under
+                                // catch_unwind, a failed shard keeps
+                                // pacing the barrier without sending, and
+                                // the original panic is re-raised once
+                                // the window's rendezvous is over. The
+                                // orchestrator then observes the channel
+                                // disconnect and fails closed ("shard
+                                // result"), exactly like the non-chunked
+                                // path does.
+                                let window = seeds.len();
+                                let computed = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        (0..window)
+                                            .map(|r| {
+                                                let round = start_round + r as u64;
+                                                range2
+                                                    .clone()
+                                                    .filter(|&c| active[r][c])
+                                                    .map(|c| {
+                                                        (
+                                                            c,
+                                                            compute.local_update(
+                                                                c, round, &state,
+                                                            ),
+                                                        )
+                                                    })
+                                                    .collect::<Vec<(usize, Vec<f64>)>>()
+                                            })
+                                            .collect::<Vec<_>>()
+                                    }),
+                                );
+                                let mut panicked = None;
+                                let vecs: Vec<Vec<(usize, Vec<f64>)>> = match computed {
+                                    Ok(v) => v,
+                                    Err(p) => {
+                                        panicked = Some(p);
+                                        Vec::new()
+                                    }
+                                };
+                                let plan = ChunkPlan::new(dim, chunk);
+                                let mut dead = panicked.is_some();
+                                for k in 0..plan.n_chunks() {
+                                    if dead {
+                                        // still rendezvous: every shard
+                                        // must pace every chunk barrier
+                                        barrier.wait();
+                                        continue;
+                                    }
+                                    let range = plan.range(k);
+                                    let encoded = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| {
+                                            let mut rounds_out =
+                                                Vec::with_capacity(window);
+                                            for (r, (&seed, transport)) in
+                                                seeds.iter().zip(transports.iter()).enumerate()
+                                            {
+                                                let shared =
+                                                    SharedRound::new(seed, n_clients, dim);
+                                                let mut partial: Option<TransportPartial> =
+                                                    None;
+                                                let mut bits = BitsAccount::default();
+                                                let mut x_sum_chunk =
+                                                    vec![0.0f64; range.len()];
+                                                let mut clients: Vec<usize> = Vec::new();
+                                                for (c, x) in &vecs[r] {
+                                                    assert_eq!(
+                                                        x.len(),
+                                                        dim,
+                                                        "ragged client vectors"
+                                                    );
+                                                    for (o, j) in
+                                                        x_sum_chunk.iter_mut().zip(range.clone())
+                                                    {
+                                                        *o += x[j];
+                                                    }
+                                                    let msg = encoder.encode_chunk(
+                                                        *c,
+                                                        x,
+                                                        range.clone(),
+                                                        &shared,
+                                                    );
+                                                    let part =
+                                                        partial.get_or_insert_with(|| {
+                                                            transport.empty(&shared)
+                                                        });
+                                                    transport.submit_chunk(
+                                                        part,
+                                                        *c,
+                                                        &msg,
+                                                        range.start,
+                                                        &shared,
+                                                    );
+                                                    bits.merge(&msg.bits);
+                                                    clients.push(*c);
+                                                }
+                                                rounds_out.push(ShardChunkFold {
+                                                    partial,
+                                                    bits,
+                                                    x_sum_chunk,
+                                                    clients,
+                                                });
+                                            }
+                                            rounds_out
+                                        }),
+                                    );
+                                    match encoded {
+                                        Ok(rounds_out) => {
+                                            if results
+                                                .send(ShardChunkWindow {
+                                                    start: range2.start,
+                                                    chunk: k,
+                                                    rounds: rounds_out,
+                                                })
+                                                .is_err()
+                                            {
+                                                // the orchestrator died
+                                                // (e.g. a fail-closed panic
+                                                // mid-stream): keep pacing
+                                                // the barrier so sibling
+                                                // shards already parked in
+                                                // wait() are released
+                                                // instead of deadlocking
+                                                // ClientPool::drop
+                                                dead = true;
+                                            }
+                                        }
+                                        Err(p) => {
+                                            panicked = Some(p);
+                                            dead = true;
+                                        }
+                                    }
+                                    // chunk-lockstep: no shard starts
+                                    // chunk k+1 before every shard sent
+                                    // chunk k
+                                    barrier.wait();
+                                }
+                                // disconnect BEFORE re-raising, so the
+                                // orchestrator's recv() observes the
+                                // failure instead of waiting on a sender
+                                // pinned by an unwinding thread
+                                drop(results);
+                                if let Some(p) = panicked {
+                                    std::panic::resume_unwind(p);
                                 }
                             }
                             ShardMsg::Shutdown => return,
@@ -554,11 +774,6 @@ pub fn run_rounds_encoded_sampled(
         })
         .collect();
     let shared: Vec<SharedRound> = (0..window).map(|r| *session.round(r)).collect();
-    let gamma = policy.amplification_gamma(n);
-    // Poisson's empty-cohort redraw deviates from the idealized sampler
-    // by TV ≤ (1−γ)^(n−1) on every neighboring dataset — surrendered as
-    // a per-round δ surcharge
-    let tv = policy.conditioning_tv(n);
     session
         .close_with_dropouts(&announced)
         .into_iter()
@@ -571,6 +786,13 @@ pub fn run_rounds_encoded_sampled(
             let true_mean: Vec<f64> =
                 x_sum.into_iter().map(|v| v / n_alive as f64).collect();
             let round_id = start_round + r as u64;
+            // per-round rate: γ schedules amplify each round with exactly
+            // the rate it sampled at. Poisson's empty-cohort redraw
+            // deviates from the idealized sampler by TV ≤ (1−γ)^(n−1) on
+            // every neighboring dataset — surrendered as a per-round δ
+            // surcharge
+            let gamma = policy.amplification_gamma(n, round_id);
+            let tv = policy.conditioning_tv(n, round_id);
             let privacy =
                 ledger.as_deref_mut().map(|l| l.record_with_tv_slack(round_id, gamma, tv));
             RoundReport {
@@ -583,6 +805,276 @@ pub fn run_rounds_encoded_sampled(
             }
         })
         .collect()
+}
+
+/// Memory summary of one chunk-streamed window (what the
+/// `rounds_chunked` bench series reports and asserts on).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkStreamStats {
+    /// high-water mark of the orchestrator session's live accumulator
+    /// payload bytes — O(shards-in-flight · c), never O(d)
+    pub peak_accumulator_bytes: usize,
+    /// the chunk size actually used (clamped to d)
+    pub chunk: usize,
+    pub n_chunks: usize,
+}
+
+/// The chunk-streamed sibling of [`run_rounds_encoded_sampled`]: the
+/// whole window runs over a [`ChunkPlan`] of chunk size `chunk`. Shards
+/// compute their clients' window vectors once, then stream ONE channel
+/// message per (shard, chunk) — each carrying the W rounds' O(c) chunk
+/// partials — through a bounded channel with a cross-shard chunk
+/// barrier, so the orchestrator (and the channel) hold O(shards·c) bytes
+/// instead of O(shards·d). The orchestrator folds each message into the
+/// chunked [`TransportSession`], finishes and decodes every (round,
+/// chunk) the moment its last shard fold lands, and releases the
+/// accumulator before the next chunk streams in.
+///
+/// `dim` is explicit — the model dimension is a deployment constant, and
+/// a shard whose clients are all sampled out of the window could not
+/// otherwise agree on the chunk plan. Bit-identity: for every chunk
+/// size, estimates, bits and reports equal
+/// [`run_rounds_encoded_sampled`] exactly (property-tested); the
+/// returned [`ChunkStreamStats`] carries the measured accumulator peak.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_encoded_chunked(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    policy: &SamplingPolicy,
+    dropouts: &[Vec<usize>],
+    mut ledger: Option<&mut PrivacyLedger>,
+    dim: usize,
+    chunk: usize,
+) -> (Vec<RoundReport>, ChunkStreamStats) {
+    assert!(window > 0, "a session window needs at least one round");
+    assert!(
+        window <= crate::mechanisms::session::MAX_WINDOW,
+        "session window of {window} rounds exceeds MAX_WINDOW ({}) — split the run into \
+         multiple windows",
+        crate::mechanisms::session::MAX_WINDOW,
+    );
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    assert_eq!(
+        dropouts.len(),
+        window,
+        "dropout schedule must cover every round of the window"
+    );
+    let n = pool.n_clients;
+    let cohorts: Vec<SurvivorSet> = policy.cohorts(root_seed, start_round, window, n);
+    let survivor_sets: Vec<SurvivorSet> = cohorts
+        .iter()
+        .zip(dropouts)
+        .enumerate()
+        .map(|(r, (cohort, dropped))| cohort.drop_cohort_members(dropped, r))
+        .collect();
+    let session_seed = derive_session_seed(root_seed, start_round);
+    let seeds: Arc<Vec<u64>> = Arc::new(
+        (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
+    );
+    let transports: Arc<Vec<Arc<dyn Transport>>> = Arc::new(session_round_transports_sampled(
+        transport.as_ref(),
+        session_seed,
+        &cohorts,
+    ));
+    let active: Arc<Vec<Vec<bool>>> =
+        Arc::new(survivor_sets.iter().map(|s| s.alive_mask().to_vec()).collect());
+    let state = Arc::new(state.to_vec());
+    let n_shards = pool.shards.len();
+    // bounded per-chunk channel + chunk barrier: at most one in-flight
+    // message per shard, and no shard runs ahead a full chunk
+    let (chunk_tx, chunk_rx) = mpsc::sync_channel::<ShardChunkWindow>(n_shards);
+    let barrier = Arc::new(Barrier::new(n_shards));
+    for shard in &pool.shards {
+        shard
+            .tx
+            .send(ShardMsg::EncodeWindowChunked {
+                start_round,
+                state: state.clone(),
+                seeds: seeds.clone(),
+                active: active.clone(),
+                encoder: encoder.clone(),
+                transports: transports.clone(),
+                dim,
+                chunk,
+                results: chunk_tx.clone(),
+                barrier: barrier.clone(),
+            })
+            .expect("shard died");
+    }
+    drop(chunk_tx);
+    let mut session = TransportSession::open_sampled_chunked(
+        transport.as_ref(),
+        session_seed,
+        n,
+        dim,
+        seeds.as_slice(),
+        &cohorts,
+        chunk,
+    );
+    let plan = session.plan();
+    // announce dropouts up front so every chunk can recover + unmask the
+    // moment its last shard fold lands
+    for (r, (survivors, dropped)) in survivor_sets.iter().zip(dropouts).enumerate() {
+        session.announce_dropouts(
+            r,
+            &RoundDropouts::announce_among(session_seed, r as u64, survivors, dropped),
+        );
+    }
+    let mut x_sums = vec![vec![0.0f64; dim]; window];
+    let mut estimates: Vec<Vec<f64>> = vec![vec![0.0f64; dim]; window];
+    let mut sums: Vec<Vec<i64>> = if decoder.chunk_decodable() {
+        Vec::new()
+    } else {
+        vec![vec![0i64; dim]; window]
+    };
+    let shared: Vec<SharedRound> =
+        (0..window).map(|r| SharedRound::new(seeds[r], n, dim)).collect();
+    let total_msgs = n_shards * plan.n_chunks();
+    // the f64 x-sum metric folds in SHARD order, not channel-arrival
+    // order (f64 addition is not associative; the whole-d runner sorts
+    // shard pieces for the same reason) — chunk-k contributions are
+    // buffered until every shard's chunk-k message landed, which the
+    // chunk barrier guarantees happens before any chunk-k+1 message
+    let mut x_pending: Vec<(usize, usize, Vec<Vec<f64>>)> = Vec::with_capacity(n_shards);
+    for _ in 0..total_msgs {
+        let msg = chunk_rx.recv().expect("shard result");
+        let k = msg.chunk;
+        let range = plan.range(k);
+        let mut x_chunks: Vec<Vec<f64>> = Vec::with_capacity(window);
+        for (r, fold) in msg.rounds.into_iter().enumerate() {
+            x_chunks.push(fold.x_sum_chunk);
+            match fold.partial {
+                Some(p) => session.fold_chunk_partial(r, k, p, &fold.clients, &fold.bits),
+                None => assert!(fold.clients.is_empty(), "shard lost a partial"),
+            }
+            // the chunk closes — and its accumulator frees — the moment
+            // the last shard's fold lands
+            if session.chunk_complete(r, k) {
+                let payload = session.finish_chunk(r, k);
+                if decoder.chunk_decodable() {
+                    let est = decoder.decode_survivors_chunk(
+                        &payload,
+                        range.start,
+                        &shared[r],
+                        &survivor_sets[r],
+                    );
+                    estimates[r][range.clone()].copy_from_slice(&est);
+                } else {
+                    match payload {
+                        Payload::Sum(v) if !plan.is_whole() => {
+                            sums[r][range.clone()].copy_from_slice(&v)
+                        }
+                        p => {
+                            estimates[r] = decoder.decode_survivors(
+                                &p,
+                                &shared[r],
+                                &survivor_sets[r],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        x_pending.push((msg.start, k, x_chunks));
+        if x_pending.len() == n_shards {
+            x_pending.sort_by_key(|&(start, _, _)| start);
+            for (_, pk, shard_chunks) in x_pending.drain(..) {
+                // the chunk barrier + FIFO channel group messages by chunk
+                assert_eq!(pk, k, "shard chunk messages interleaved across chunks");
+                for (r, chunk_sum) in shard_chunks.into_iter().enumerate() {
+                    for (o, v) in x_sums[r][range.clone()].iter_mut().zip(&chunk_sum) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+    }
+    let stats = ChunkStreamStats {
+        peak_accumulator_bytes: session.peak_accumulator_bytes(),
+        chunk: plan.chunk(),
+        n_chunks: plan.n_chunks(),
+    };
+    let closed = session.close_streamed();
+    let reports = closed
+        .into_iter()
+        .enumerate()
+        .map(|(r, (bits, survivors))| {
+            let estimate = if !decoder.chunk_decodable()
+                && transport.sum_only()
+                && !plan.is_whole()
+            {
+                decoder.decode_survivors(
+                    &Payload::Sum(std::mem::take(&mut sums[r])),
+                    &shared[r],
+                    &survivors,
+                )
+            } else {
+                std::mem::take(&mut estimates[r])
+            };
+            let n_alive = survivors.n_alive();
+            let true_mean: Vec<f64> =
+                std::mem::take(&mut x_sums[r]).into_iter().map(|v| v / n_alive as f64).collect();
+            let round_id = start_round + r as u64;
+            let gamma = policy.amplification_gamma(n, round_id);
+            let tv = policy.conditioning_tv(n, round_id);
+            let privacy =
+                ledger.as_deref_mut().map(|l| l.record_with_tv_slack(round_id, gamma, tv));
+            RoundReport {
+                round: round_id,
+                output: RoundOutput { estimate, bits },
+                true_mean,
+                survivors: n_alive,
+                cohort: cohorts[r].n_alive(),
+                privacy,
+            }
+        })
+        .collect();
+    (reports, stats)
+}
+
+/// Chunk-streamed convenience wrapper for mechanisms implementing both
+/// pipeline ends (see [`run_rounds_encoded_chunked`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_mech_chunked<M>(
+    pool: &ClientPool,
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    dim: usize,
+    chunk: usize,
+) -> (Vec<RoundReport>, ChunkStreamStats)
+where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+    let none: Vec<Vec<usize>> = vec![Vec::new(); window];
+    run_rounds_encoded_chunked(
+        pool,
+        encoder,
+        transport,
+        mech,
+        start_round,
+        window,
+        state,
+        root_seed,
+        &SamplingPolicy::Full,
+        &none,
+        None,
+        dim,
+        chunk,
+    )
 }
 
 /// Run one round, pipeline shape — the W=1 special case of
@@ -1124,6 +1616,158 @@ mod tests {
         }
         assert_eq!(estimates[0], estimates[1]);
         assert_eq!(estimates[0], estimates[2]);
+    }
+
+    #[test]
+    fn chunked_coordinator_window_matches_whole_d_window_bit_for_bit() {
+        // the tentpole acceptance at the coordinator level: the
+        // chunk-streamed runner equals the whole-d sampled runner for
+        // every chunk size — estimates, bits, true means, reports — with
+        // sampling and dropouts composed
+        let n = 9;
+        let d = 5;
+        let pool = ClientPool::spawn(n, Arc::new(round_varying_compute));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let policy = SamplingPolicy::Poisson { gamma: 0.7 };
+        // drop one cohort member in round 1 (derived so the schedule is
+        // valid for this root seed)
+        let schedule: Vec<Vec<usize>> = (0..3u64)
+            .map(|r| {
+                if r == 1 {
+                    let cohort = policy.cohort(77, r, n);
+                    if cohort.n_alive() >= 2 {
+                        return vec![cohort.alive_iter().next().unwrap()];
+                    }
+                }
+                Vec::new()
+            })
+            .collect();
+        let whole = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            3,
+            &[],
+            77,
+            &policy,
+            &schedule,
+            None,
+        );
+        for chunk in [1usize, 2, d, d + 3] {
+            let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+            let (chunked, stats) = run_rounds_encoded_chunked(
+                &pool,
+                encoder,
+                Arc::new(SecAgg::new()),
+                &mech,
+                0,
+                3,
+                &[],
+                77,
+                &policy,
+                &schedule,
+                None,
+                d,
+                chunk,
+            );
+            assert_eq!(stats.chunk, chunk.min(d));
+            assert_eq!(stats.n_chunks, d.div_ceil(chunk.min(d)));
+            for (c, w) in chunked.iter().zip(&whole) {
+                assert_eq!(c.output.estimate, w.output.estimate, "chunk {chunk}, round {}", w.round);
+                assert_eq!(c.output.bits.messages, w.output.bits.messages);
+                assert_eq!(c.output.bits.variable_total, w.output.bits.variable_total);
+                assert_eq!(c.true_mean, w.true_mean);
+                assert_eq!(c.survivors, w.survivors);
+                assert_eq!(c.cohort, w.cohort);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_coordinator_peak_accumulator_bytes_scale_with_chunk() {
+        // the memory-model acceptance: the orchestrator's peak
+        // accumulator bytes are O(shards · c), never O(d) — with the
+        // lock-step barrier at most ~2 chunks per round are in flight
+        let n = 8;
+        let d = 64;
+        let w = 4;
+        let pool = ClientPool::spawn_with_threads(n, Arc::new(round_varying_compute), Some(4));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let chunk = 4usize;
+        let (_, small) = run_rounds_mech_chunked(
+            &pool, &mech, Arc::new(SecAgg::new()), 0, w, &[], 5, d, chunk,
+        );
+        let (_, big) = run_rounds_mech_chunked(
+            &pool, &mech, Arc::new(SecAgg::new()), 0, w, &[], 5, d, d,
+        );
+        // whole-d streaming still pins O(shards·W·d); the chunked run
+        // must stay far below it, within a small constant of
+        // (shards + in-flight) · W · c accumulator payloads
+        assert!(small.peak_accumulator_bytes < big.peak_accumulator_bytes / 4, "small {} big {}", small.peak_accumulator_bytes, big.peak_accumulator_bytes);
+        let budget = 3 * (4 + 1) * w * chunk * 8; // shards + slack, W rounds, c u64s
+        assert!(
+            small.peak_accumulator_bytes <= budget,
+            "peak {} exceeds O(shards·W·c) budget {budget}",
+            small.peak_accumulator_bytes,
+        );
+    }
+
+    #[test]
+    fn chunked_rounds_invariant_under_worker_count() {
+        let mech = AggregateGaussian::new(0.4, 8.0);
+        let mut estimates: Vec<Vec<Vec<f64>>> = Vec::new();
+        for threads in [1usize, 3, 7] {
+            let pool = ClientPool::spawn_with_threads(
+                11,
+                Arc::new(round_varying_compute),
+                Some(threads),
+            );
+            let (reps, _) = run_rounds_mech_chunked(
+                &pool, &mech, Arc::new(SecAgg::new()), 1, 3, &[], 77, 5, 2,
+            );
+            estimates.push(reps.into_iter().map(|r| r.output.estimate).collect());
+        }
+        assert_eq!(estimates[0], estimates[1]);
+        assert_eq!(estimates[0], estimates[2]);
+    }
+
+    #[test]
+    fn sampling_schedule_policy_threads_per_round_gamma_into_reports() {
+        use crate::dp::ledger::PrivacyLedger;
+        let n = 10;
+        let pool = ClientPool::spawn(n, Arc::new(round_varying_compute));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let policy = SamplingPolicy::Schedule { gammas: vec![0.3, 0.6, 0.9] };
+        let none: Vec<Vec<usize>> = vec![Vec::new(); 4];
+        let mut ledger = PrivacyLedger::new(1.0, 1e-5);
+        let reps = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            4,
+            &[],
+            91,
+            &policy,
+            &none,
+            Some(&mut ledger),
+        );
+        for rep in &reps {
+            let gamma = policy.round_gamma(rep.round);
+            let spend = rep.privacy.expect("ledger threaded");
+            assert_eq!(spend.gamma, gamma, "round {}", rep.round);
+            let (want_eps, _) = crate::dp::amplify_by_subsampling(1.0, 1e-5, gamma);
+            assert!((spend.eps_round - want_eps).abs() < 1e-12, "round {}", rep.round);
+            // cohorts really were drawn at the scheduled rate
+            let want_cohort = policy.cohort(91, rep.round, n).n_alive();
+            assert_eq!(rep.cohort, want_cohort);
+        }
+        // warmup: later rounds spend more ε than the γ=0.3 round
+        let eps: Vec<f64> = reps.iter().map(|r| r.privacy.unwrap().eps_round).collect();
+        assert!(eps[0] < eps[1] && eps[1] < eps[2]);
+        // the last rate persists: round 3 spends like round 2
+        assert!((eps[2] - eps[3]).abs() < 1e-12);
     }
 
     #[test]

@@ -32,7 +32,7 @@ use crate::mechanisms::pipeline::SurvivorSet;
 use crate::util::rng::{seed_domain, Rng};
 
 /// How each round's participating cohort is drawn from the fleet.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum SamplingPolicy {
     /// Every round touches every client (the pre-sampling behavior; no
     /// privacy amplification).
@@ -47,25 +47,63 @@ pub enum SamplingPolicy {
     /// distinct clients per round (uniform over k-subsets). The ledger
     /// accounts for it at rate γ = k/n.
     FixedSize { k: usize },
+    /// A per-round Poisson *rate schedule*: round r samples at
+    /// `gammas[min(r, len − 1)]` — the last rate persists past the end,
+    /// so a finite schedule describes an infinite run (e.g. a γ warmup:
+    /// `[0.1, 0.25, 0.5]` ramps up and then holds 0.5). Every rate must
+    /// lie in (0, 1]. The cohort draw, the amplification accounting and
+    /// the TV surcharge are all per-round quantities of that round's γ —
+    /// the coordinator threads the per-round rate into
+    /// [`crate::dp::PrivacyLedger::record_with_tv_slack`] and each
+    /// `RoundReport.privacy`.
+    Schedule { gammas: Vec<f64> },
 }
 
 impl SamplingPolicy {
     /// Fail-closed parameter validation against a concrete fleet size.
     pub fn validate(&self, n_clients: usize) {
         assert!(n_clients > 0, "need at least one client");
-        match *self {
+        match self {
             SamplingPolicy::Full => {}
             SamplingPolicy::Poisson { gamma } => {
                 assert!(
-                    gamma > 0.0 && gamma <= 1.0,
+                    *gamma > 0.0 && *gamma <= 1.0,
                     "Poisson sampling rate must lie in (0, 1], got {gamma}"
                 );
             }
             SamplingPolicy::FixedSize { k } => {
                 assert!(
-                    (1..=n_clients).contains(&k),
+                    (1..=n_clients).contains(k),
                     "fixed-size cohort k={k} out of range for {n_clients} clients"
                 );
+            }
+            SamplingPolicy::Schedule { gammas } => {
+                assert!(
+                    !gammas.is_empty(),
+                    "a sampling-rate schedule needs at least one rate"
+                );
+                for (r, gamma) in gammas.iter().enumerate() {
+                    assert!(
+                        *gamma > 0.0 && *gamma <= 1.0,
+                        "Poisson sampling rate must lie in (0, 1], got {gamma} (schedule \
+                         entry {r})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The Poisson rate round `round` runs at under this policy: γ for a
+    /// flat Poisson policy, the schedule entry (last one persisting) for
+    /// [`SamplingPolicy::Schedule`], and 1 for the exact policies (which
+    /// do not sample per-client coins).
+    pub fn round_gamma(&self, round: u64) -> f64 {
+        match self {
+            SamplingPolicy::Full => 1.0,
+            SamplingPolicy::Poisson { gamma } => *gamma,
+            SamplingPolicy::FixedSize { .. } => 1.0,
+            SamplingPolicy::Schedule { gammas } => {
+                gammas[(round as usize).min(gammas.len() - 1)]
             }
         }
     }
@@ -92,11 +130,17 @@ impl SamplingPolicy {
     ///   substitution (e.g. doubled sensitivity); composing it with an
     ///   add/remove-calibrated base overstates the guarantee. Poisson is
     ///   the add/remove bound.
-    pub fn amplification_gamma(&self, n_clients: usize) -> f64 {
-        match *self {
+    /// * `Schedule` — the *per-round* Poisson rate
+    ///   ([`SamplingPolicy::round_gamma`]): round r's spend is amplified
+    ///   with exactly the rate round r sampled at, which is why the
+    ///   accounting (and [`SamplingPolicy::conditioning_tv`]) take the
+    ///   round index.
+    pub fn amplification_gamma(&self, n_clients: usize, round: u64) -> f64 {
+        match self {
             SamplingPolicy::Full => 1.0,
-            SamplingPolicy::Poisson { gamma } => gamma,
-            SamplingPolicy::FixedSize { k } => k as f64 / n_clients as f64,
+            SamplingPolicy::Poisson { gamma } => *gamma,
+            SamplingPolicy::FixedSize { k } => *k as f64 / n_clients as f64,
+            SamplingPolicy::Schedule { .. } => self.round_gamma(round),
         }
     }
 
@@ -113,16 +157,20 @@ impl SamplingPolicy {
     /// price of replacing a mechanism by one within TV distance t on each
     /// neighboring dataset
     /// ([`crate::dp::PrivacyLedger::record_with_tv_slack`]).
-    pub fn conditioning_tv(&self, n_clients: usize) -> f64 {
-        match *self {
+    pub fn conditioning_tv(&self, n_clients: usize, round: u64) -> f64 {
+        match self {
             SamplingPolicy::Full | SamplingPolicy::FixedSize { .. } => 0.0,
-            // γ = 1 is deterministic full participation on every dataset —
-            // no draw is ever empty, no conditioning happens (the n = 1
-            // exponent-zero case would otherwise evaluate 0⁰ = 1 and
-            // charge a bogus surcharge)
-            SamplingPolicy::Poisson { gamma } if gamma >= 1.0 => 0.0,
-            SamplingPolicy::Poisson { gamma } => {
-                (1.0 - gamma).powf(n_clients.saturating_sub(1) as f64)
+            SamplingPolicy::Poisson { .. } | SamplingPolicy::Schedule { .. } => {
+                let gamma = self.round_gamma(round);
+                // γ = 1 is deterministic full participation on every
+                // dataset — no draw is ever empty, no conditioning
+                // happens (the n = 1 exponent-zero case would otherwise
+                // evaluate 0⁰ = 1 and charge a bogus surcharge)
+                if gamma >= 1.0 {
+                    0.0
+                } else {
+                    (1.0 - gamma).powf(n_clients.saturating_sub(1) as f64)
+                }
             }
         }
     }
@@ -148,9 +196,10 @@ impl SamplingPolicy {
     /// [`SamplingPolicy::conditioning_tv`].)
     pub fn cohort(&self, root_seed: u64, round: u64, n_clients: usize) -> SurvivorSet {
         self.validate(n_clients);
-        match *self {
+        match self {
             SamplingPolicy::Full => SurvivorSet::full(n_clients),
-            SamplingPolicy::Poisson { gamma } => {
+            SamplingPolicy::Poisson { .. } | SamplingPolicy::Schedule { .. } => {
+                let gamma = self.round_gamma(round);
                 let mut rng = Rng::new(Self::cohort_seed(root_seed, round));
                 // empty draws are rejected and redrawn deterministically
                 // (the stream position after a rejection is itself
@@ -175,7 +224,7 @@ impl SamplingPolicy {
             SamplingPolicy::FixedSize { k } => {
                 let mut rng = Rng::new(Self::cohort_seed(root_seed, round));
                 let mut alive = vec![false; n_clients];
-                for i in rng.sample_indices(n_clients, k) {
+                for i in rng.sample_indices(n_clients, *k) {
                     alive[i] = true;
                 }
                 SurvivorSet::from_alive_mask(alive)
@@ -216,7 +265,7 @@ mod tests {
     fn sampling_full_policy_is_the_whole_fleet() {
         let c = SamplingPolicy::Full.cohort(7, 0, 9);
         assert!(c.is_full());
-        assert_eq!(SamplingPolicy::Full.amplification_gamma(9), 1.0);
+        assert_eq!(SamplingPolicy::Full.amplification_gamma(9, 0), 1.0);
     }
 
     #[test]
@@ -227,7 +276,7 @@ mod tests {
             assert_eq!(c.n_alive(), 4, "round {round}");
             assert_eq!(c.n(), 11);
         }
-        assert!((p.amplification_gamma(11) - 4.0 / 11.0).abs() < 1e-15);
+        assert!((p.amplification_gamma(11, 0) - 4.0 / 11.0).abs() < 1e-15);
     }
 
     #[test]
@@ -260,22 +309,22 @@ mod tests {
         // neighboring dataset (n−1 clients under add/remove adjacency):
         // (1−γ)^(n−1)
         let p = SamplingPolicy::Poisson { gamma: 0.01 };
-        let tv2 = p.conditioning_tv(2);
+        let tv2 = p.conditioning_tv(2, 0);
         assert!((tv2 - 0.99).abs() < 1e-15, "tv2={tv2}");
         assert!(tv2 > 0.9, "tiny γ·n: the gap is O(1), not negligible");
         // a single-client fleet: conditioning pins participation, no
         // amplification survives
-        assert_eq!(p.conditioning_tv(1), 1.0);
+        assert_eq!(p.conditioning_tv(1, 0), 1.0);
         // large γ·n: the gap is negligible (0.99^9999 ≈ 2e-44)
-        assert!(p.conditioning_tv(10_000) < 1e-40);
+        assert!(p.conditioning_tv(10_000, 0) < 1e-40);
         // the rate itself stays the raw BBG γ in every regime
-        assert_eq!(p.amplification_gamma(2), 0.01);
+        assert_eq!(p.amplification_gamma(2, 0), 0.01);
         // exact samplers carry no surcharge — including γ = 1 Poisson,
         // which is deterministic full participation even at n = 1
-        assert_eq!(SamplingPolicy::Full.conditioning_tv(8), 0.0);
-        assert_eq!(SamplingPolicy::FixedSize { k: 3 }.conditioning_tv(8), 0.0);
-        assert_eq!(SamplingPolicy::Poisson { gamma: 1.0 }.conditioning_tv(1), 0.0);
-        assert_eq!(SamplingPolicy::Poisson { gamma: 1.0 }.conditioning_tv(8), 0.0);
+        assert_eq!(SamplingPolicy::Full.conditioning_tv(8, 0), 0.0);
+        assert_eq!(SamplingPolicy::FixedSize { k: 3 }.conditioning_tv(8, 0), 0.0);
+        assert_eq!(SamplingPolicy::Poisson { gamma: 1.0 }.conditioning_tv(1, 0), 0.0);
+        assert_eq!(SamplingPolicy::Poisson { gamma: 1.0 }.conditioning_tv(8, 0), 0.0);
     }
 
     #[test]
@@ -302,6 +351,61 @@ mod tests {
     #[should_panic(expected = "must lie in (0, 1]")]
     fn sampling_poisson_rejects_zero_gamma() {
         SamplingPolicy::Poisson { gamma: 0.0 }.validate(5);
+    }
+
+    #[test]
+    fn sampling_schedule_rates_apply_per_round_and_last_persists() {
+        let p = SamplingPolicy::Schedule { gammas: vec![0.1, 0.25, 0.5] };
+        assert_eq!(p.round_gamma(0), 0.1);
+        assert_eq!(p.round_gamma(1), 0.25);
+        assert_eq!(p.round_gamma(2), 0.5);
+        // the last rate persists past the schedule's end
+        assert_eq!(p.round_gamma(3), 0.5);
+        assert_eq!(p.round_gamma(1000), 0.5);
+        // the accountant sees the per-round rate, and the TV surcharge
+        // tracks it
+        assert_eq!(p.amplification_gamma(16, 0), 0.1);
+        assert_eq!(p.amplification_gamma(16, 7), 0.5);
+        assert!((p.conditioning_tv(4, 0) - 0.9f64.powi(3)).abs() < 1e-12);
+        assert!((p.conditioning_tv(4, 9) - 0.5f64.powi(3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_schedule_round_matches_flat_poisson_at_that_rate() {
+        // round r of a schedule draws the exact cohort a flat Poisson
+        // policy at that round's rate would draw — the schedule changes
+        // the RATE, never the derivation
+        let sched = SamplingPolicy::Schedule { gammas: vec![0.2, 0.7] };
+        let n = 16;
+        for round in 0..6u64 {
+            let flat = SamplingPolicy::Poisson { gamma: sched.round_gamma(round) };
+            assert_eq!(sched.cohort(42, round, n), flat.cohort(42, round, n), "round {round}");
+        }
+    }
+
+    #[test]
+    fn sampling_schedule_warmup_grows_expected_cohorts() {
+        // empirical sanity: a γ warmup yields visibly growing cohorts
+        let p = SamplingPolicy::Schedule { gammas: vec![0.1, 0.9] };
+        let n = 60usize;
+        let rounds = 300u64;
+        let early: usize = (0..rounds).map(|r| p.cohort(7 + r, 0, n).n_alive()).sum();
+        let late: usize = (0..rounds).map(|r| p.cohort(7 + r, 5, n).n_alive()).sum();
+        let (early, late) = (early as f64 / rounds as f64, late as f64 / rounds as f64);
+        assert!((early - 0.1 * n as f64).abs() < 2.0, "early {early}");
+        assert!((late - 0.9 * n as f64).abs() < 2.0, "late {late}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one rate")]
+    fn sampling_schedule_rejects_empty_schedule() {
+        SamplingPolicy::Schedule { gammas: vec![] }.validate(5);
+    }
+
+    #[test]
+    #[should_panic(expected = "must lie in (0, 1]")]
+    fn sampling_schedule_rejects_out_of_range_rate() {
+        SamplingPolicy::Schedule { gammas: vec![0.5, 1.5] }.validate(5);
     }
 
     #[test]

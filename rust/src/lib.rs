@@ -58,9 +58,16 @@
 //! session open — masked transports pair masks among the cohort only, so
 //! *sampled-out* costs no recovery (unlike *dropped*, the mid-round
 //! path; the two compose) — and a [`dp::PrivacyLedger`] composes the
-//! subsampling-amplified (ε, δ) spend per executed round. Everything
-//! stays deterministic given the root seed — see the determinism ADR in
-//! `docs/determinism.md`.
+//! subsampling-amplified (ε, δ) spend per executed round. Models too
+//! large for whole-vector buffers stream their coordinate space over a
+//! [`mechanisms::pipeline::ChunkPlan`]
+//! ([`mechanisms::session::run_window_chunked`],
+//! [`coordinator::runtime::run_rounds_encoded_chunked`]): O(c) chunk
+//! accumulators that unmask and free as they fill, O(shards·c)
+//! orchestrator memory — and, because every per-coordinate stream is
+//! seekable ([`util::rng::Rng::derive_coord`]), bit-identical results for
+//! every chunk size. Everything stays deterministic given the root seed —
+//! see the determinism ADR in `docs/determinism.md`.
 //!
 //! ## Layout (three-layer architecture, Python never on the request path)
 //!

@@ -14,11 +14,12 @@
 //! `Mutex`-based caches (never `Rc<RefCell>`) so the mechanism is
 //! `Send + Sync` and usable from the coordinator's worker shards.
 
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
 use super::decompose::Decomposer;
 use super::pipeline::{
-    impl_mean_mechanism, ClientEncoder, Descriptions, MechSpec, Payload, Plain, RoundCache,
+    impl_mean_mechanism, ChunkCache, ClientEncoder, Descriptions, MechSpec, Payload, Plain,
     ServerDecoder, SharedRound, SurvivorSet,
 };
 use super::traits::BitsAccount;
@@ -32,8 +33,9 @@ pub struct AggregateGaussian {
     pub input_range_t: f64,
     /// n-keyed decomposer (expensive grid build; shared across rounds)
     decomposer_n: Mutex<Option<(usize, Arc<Decomposer>)>>,
-    /// per-round (A_j, B_j) global shared randomness
-    round_ab: RoundCache<Vec<(f64, f64)>>,
+    /// per-(round, chunk) (A_j, B_j) global shared randomness — each
+    /// entry is O(c), so a bounded-memory streaming run stays bounded
+    round_ab: ChunkCache<Vec<(f64, f64)>>,
 }
 
 impl Clone for AggregateGaussian {
@@ -44,7 +46,7 @@ impl Clone for AggregateGaussian {
             sigma: self.sigma,
             input_range_t: self.input_range_t,
             decomposer_n: Mutex::new(cached),
-            round_ab: RoundCache::new(),
+            round_ab: ChunkCache::new(),
         }
     }
 }
@@ -56,7 +58,7 @@ impl AggregateGaussian {
             sigma,
             input_range_t,
             decomposer_n: Mutex::new(None),
-            round_ab: RoundCache::new(),
+            round_ab: ChunkCache::new(),
         }
     }
 
@@ -73,13 +75,22 @@ impl AggregateGaussian {
         }
     }
 
-    /// The round's global shared randomness T = (A_j, B_j): every client
-    /// and the server derive the identical stream (seed, GLOBAL_STREAM).
-    fn ab(&self, round: &SharedRound) -> Arc<Vec<(f64, f64)>> {
+    /// The round's global shared randomness T = (A_j, B_j) for one
+    /// coordinate chunk: coordinate j's draw comes from its own seekable
+    /// stream of the global family, so every client and the server derive
+    /// the identical pair for any chunking — and a chunked run only ever
+    /// materializes O(c) of the (A, B) vector at a time.
+    fn ab_range(&self, round: &SharedRound, range: &Range<usize>) -> Arc<Vec<(f64, f64)>> {
         let dec = self.decomposer(round.n_clients);
-        self.round_ab.get_or(round, || {
-            let mut trng = round.global_rng();
-            (0..round.dim).map(|_| dec.draw(&mut trng)).collect()
+        self.round_ab.get_or(round, range, || {
+            let global = round.global_coord_stream();
+            range
+                .clone()
+                .map(|j| {
+                    let mut rng = global.at(j);
+                    dec.draw(&mut rng)
+                })
+                .collect()
         })
     }
 
@@ -117,17 +128,30 @@ impl MechSpec for AggregateGaussian {
 
 impl ClientEncoder for AggregateGaussian {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        self.encode_chunk(client, x, 0..x.len(), round)
+    }
+
+    /// Chunk-ranged encode: dithers AND the (A, B) decomposition draws
+    /// are per-coordinate seekable streams, so any chunking concatenates
+    /// to the whole-vector encode bit for bit while touching only O(c)
+    /// of the (A, B) vector.
+    fn encode_chunk(
+        &self,
+        client: usize,
+        x: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
         let w = self.step(round.n_clients);
-        let ab = self.ab(round);
-        let mut rng = round.client_rng(client);
+        let ab = self.ab_range(round, &range);
+        let dither = round.client_coord_stream(client);
         let mut bits = BitsAccount::default();
-        let ms: Vec<i64> = x
-            .iter()
+        let ms: Vec<i64> = range
             .zip(ab.iter())
-            .map(|(&xj, &(a, _))| {
-                let s = rng.u01() - 0.5;
+            .map(|(j, &(a, _))| {
+                let s = dither.at(j).u01() - 0.5;
                 let inv_aw = 1.0 / (a * w);
-                let m = round_half_up(xj * inv_aw + s);
+                let m = round_half_up(x[j] * inv_aw + s);
                 bits.add_description(m);
                 m
             })
@@ -151,8 +175,8 @@ impl ServerDecoder for AggregateGaussian {
     /// a survivor-only sum carries only n′ dither-error terms — an
     /// A·IH(n′) mixture, which is NOT Gaussian. The decoder restores the
     /// n-term law by completing the n − n′ missing U(−1/2, 1/2) terms from
-    /// the shared [`SharedRound::dropout_rng`] streams and rescaling the B
-    /// leg by n/n′:
+    /// the shared per-dropout completion streams and rescaling the B leg
+    /// by n/n′:
     ///
     ///   y = (A·w/n′)(Σ_S m − Σ_S s + Σ_D ũ) + B·σ·(n/n′)
     ///
@@ -164,34 +188,57 @@ impl ServerDecoder for AggregateGaussian {
         round: &SharedRound,
         survivors: &SurvivorSet,
     ) -> Vec<f64> {
+        let est = self.decode_survivors_chunk(payload, 0, round, survivors);
+        assert_eq!(est.len(), round.dim, "payload does not cover the coordinate space");
+        est
+    }
+
+    fn chunk_decodable(&self) -> bool {
+        true
+    }
+
+    /// The chunk-ranged core of the survivor-aware decode (see
+    /// [`ServerDecoder::decode_survivors`] above for the law): every
+    /// stream — survivor dithers, (A, B) draws, dropout completions — is
+    /// seekable per coordinate, so the server works in O(c) state per
+    /// chunk and the concatenation over any chunking is bit-identical to
+    /// the whole-d decode.
+    fn decode_survivors_chunk(
+        &self,
+        payload: &Payload,
+        lo: usize,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
         let n = round.n_clients;
         assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
-        let d = round.dim;
-        let ab = self.ab(round);
         let m_sum = payload.description_sum();
-        assert_eq!(m_sum.len(), d);
-        // re-derive the SURVIVORS' dithers from the shared seed: O(d) state
-        let mut s_sum = vec![0.0f64; d];
+        let len = m_sum.len();
+        assert!(lo + len <= round.dim, "chunk exceeds the coordinate space");
+        let range = lo..lo + len;
+        let ab = self.ab_range(round, &range);
+        // re-derive the SURVIVORS' dithers for this chunk: O(c) state
+        let mut s_sum = vec![0.0f64; len];
         for i in survivors.alive_iter() {
-            let mut rng = round.client_rng(i);
-            for sj in s_sum.iter_mut() {
-                *sj += rng.u01() - 0.5;
+            let dither = round.client_coord_stream(i);
+            for (k, sj) in s_sum.iter_mut().enumerate() {
+                *sj += dither.at(lo + k).u01() - 0.5;
             }
         }
-        let mut topup = vec![0.0f64; d];
+        let mut topup = vec![0.0f64; len];
         for j in survivors.dropped_iter() {
-            let mut rng = round.dropout_rng(j);
-            for tj in topup.iter_mut() {
-                *tj += rng.dither();
+            let comp = round.dropout_coord_stream(j);
+            for (k, tj) in topup.iter_mut().enumerate() {
+                *tj += comp.at(lo + k).dither();
             }
         }
         let w = self.step(n);
         let n_alive = survivors.n_alive() as f64;
         let rescale = n as f64 / n_alive;
-        (0..d)
-            .map(|j| {
-                let (a, b) = ab[j];
-                a * w / n_alive * (m_sum[j] as f64 - s_sum[j] + topup[j])
+        (0..len)
+            .map(|k| {
+                let (a, b) = ab[k];
+                a * w / n_alive * (m_sum[k] as f64 - s_sum[k] + topup[k])
                     + b * self.sigma * rescale
             })
             .collect()
@@ -279,17 +326,23 @@ mod tests {
         let seed = 777;
         let out = mech.aggregate(&xs, seed);
 
-        // reconstruct: shared randomness from seed
+        // reconstruct: shared randomness from the per-coordinate streams
+        let round = SharedRound::new(seed, n, d);
         let dec = Decomposer::new(n as u64);
-        let mut trng = Rng::derive(seed, u64::MAX);
-        let ab: Vec<(f64, f64)> = (0..d).map(|_| dec.draw(&mut trng)).collect();
+        let global = round.global_coord_stream();
+        let ab: Vec<(f64, f64)> = (0..d)
+            .map(|j| {
+                let mut rng = global.at(j);
+                dec.draw(&mut rng)
+            })
+            .collect();
         let w = mech.step(n);
         let mut m_sum = vec![0.0f64; d];
         let mut s_sum = vec![0.0f64; d];
         for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
+            let dither = round.client_coord_stream(i);
             for j in 0..d {
-                let s = rng.u01() - 0.5;
+                let s = dither.at(j).u01() - 0.5;
                 m_sum[j] += round_half_up(x[j] / (ab[j].0 * w) + s) as f64;
                 s_sum[j] += s;
             }

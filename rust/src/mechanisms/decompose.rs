@@ -27,7 +27,18 @@ pub struct Decomposer {
     pub lambda: f64,
     /// support length L = 2·sup{x : f(x) > 0} = 2√(3n)
     pub support_l: f64,
+    /// ψ-layer boundary lookup table: (x_i, h(x_i)) with h = g − λf on a
+    /// uniform grid of [0, x_max], x ascending / h nonincreasing (see
+    /// [`Decomposer::psi_layer_boundary`]). Built once per n; every draw
+    /// reduces its boundary search to one binary search over the table
+    /// plus a short in-cell bisection, replacing the per-draw expanding
+    /// bracket + 60 full-range bisection iterations that used to dominate
+    /// encode at large d.
+    psi_table: Vec<(f64, f64)>,
 }
+
+/// Grid resolution of the ψ-boundary table.
+const PSI_TABLE_POINTS: usize = 2048;
 
 impl Decomposer {
     pub fn new(n: u64) -> Self {
@@ -36,7 +47,30 @@ impl Decomposer {
         let g = Gaussian::standard();
         let support_l = 2.0 * f.support_half_width();
         let lambda = if n >= 3 { Self::compute_lambda(&f, &g) } else { 0.0 };
-        Self { n, f, g, lambda, support_l }
+        let psi_table = Self::build_psi_table(&f, &g, lambda);
+        Self { n, f, g, lambda, support_l, psi_table }
+    }
+
+    /// Tabulate h(x) = g(x) − λf(x) on [0, x_max], where x_max is pushed
+    /// out until h has decayed to the smallest layer heights a draw can
+    /// realize. h is symmetric and nonincreasing on x ≥ 0 by the choice
+    /// of λ; residual quadrature wiggle in the IH tail is clamped so the
+    /// stored table is monotone by construction (a non-monotone table
+    /// would mis-bracket the in-cell bisection).
+    fn build_psi_table(f: &IrwinHall, g: &Gaussian, lambda: f64) -> Vec<(f64, f64)> {
+        let h = |x: f64| g.pdf(x) - lambda * f.pdf(x);
+        let mut x_max = f.support_half_width().max(8.0);
+        while h(x_max) > 1e-300 && x_max < 1e6 {
+            x_max *= 2.0;
+        }
+        let mut table = Vec::with_capacity(PSI_TABLE_POINTS + 1);
+        let mut floor = f64::INFINITY;
+        for i in 0..=PSI_TABLE_POINTS {
+            let x = x_max * i as f64 / PSI_TABLE_POINTS as f64;
+            floor = h(x).max(0.0).min(floor);
+            table.push((x, floor));
+        }
+        table
     }
 
     /// λ = inf_{x>0} g'(x)/f'(x) on a dense grid of the interior of supp f,
@@ -67,17 +101,33 @@ impl Decomposer {
         lam.max(0.0)
     }
 
-    /// ψ-layer boundary: s = sup{x ≥ 0 : v <= g(x) − λ f(x)} by bisection
-    /// (h = g − λf is symmetric, nonincreasing on x > 0 by choice of λ).
+    /// ψ-layer boundary: s = sup{x ≥ 0 : v <= g(x) − λ f(x)} (h = g − λf
+    /// is symmetric, nonincreasing on x > 0 by choice of λ). The
+    /// precomputed table brackets s between two adjacent grid points in
+    /// one binary search; a 40-step bisection inside that ~(x_max/2048)
+    /// cell polishes it to ≪ 1e-12 absolute — far below anything the
+    /// downstream f64 arithmetic can see — instead of re-bisecting the
+    /// whole [0, x_max] range per draw.
     fn psi_layer_boundary(&self, v: f64) -> f64 {
         let h = |x: f64| self.g.pdf(x) - self.lambda * self.f.pdf(x);
-        // expanding upper bracket: h decays like the Gaussian tail
-        let mut hi = self.f.support_half_width().max(8.0);
-        while h(hi) > v && hi < 1e6 {
-            hi *= 2.0;
+        let table = &self.psi_table;
+        let last = table[table.len() - 1];
+        if v <= last.1 {
+            // beyond the table floor (astronomically rare: v below the
+            // tabulated tail): legacy expanding bracket
+            let mut hi = last.0;
+            while h(hi) > v && hi < 1e6 {
+                hi *= 2.0;
+            }
+            return crate::util::interp::bisect_monotone(h, v, last.0, hi, true, 60);
         }
-        // 60 halvings reach ~1e-18 relative bracket width
-        crate::util::interp::bisect_monotone(h, v, 0.0, hi, true, 60)
+        // first grid point with h < v: s lies in the cell before it
+        let idx = table.partition_point(|&(_, hv)| hv >= v);
+        if idx == 0 {
+            return 0.0; // v ≥ h(0): an empty layer boundary
+        }
+        let (lo, hi) = (table[idx - 1].0, table[idx].0);
+        crate::util::interp::bisect_monotone(h, v, lo, hi, true, 40)
     }
 
     /// DecomposeUnif (Algorithm 1) on the standardized f̃ supported on
@@ -203,6 +253,35 @@ mod tests {
             }
             let res = ks_test(&samples, crate::util::special::norm_cdf);
             assert!(res.p_value > 0.003, "n={n} p={} d={}", res.p_value, res.statistic);
+        }
+    }
+
+    #[test]
+    fn psi_table_boundary_matches_direct_bisection() {
+        // the lookup-table fast path must reproduce the full-range
+        // bisection it replaced, over the whole realizable height range
+        for &n in &[3u64, 8, 64] {
+            let d = Decomposer::new(n);
+            let h = |x: f64| d.g.pdf(x) - d.lambda * d.f.pdf(x);
+            let h0 = h(0.0);
+            for i in 1..100 {
+                // log-spaced heights from near h(0) down to ~1e-7·h(0) —
+                // comfortably above the IH grid's quadrature noise floor,
+                // below which a "boundary" is ill-defined for both paths
+                let v = h0 * (-(i as f64) * 0.15).exp();
+                let fast = d.psi_layer_boundary(v);
+                let mut hi = d.f.support_half_width().max(8.0);
+                while h(hi) > v && hi < 1e6 {
+                    hi *= 2.0;
+                }
+                let slow = crate::util::interp::bisect_monotone(h, v, 0.0, hi, true, 80);
+                assert!(
+                    (fast - slow).abs() <= 1e-9 * (1.0 + slow.abs()),
+                    "n={n} v={v:e}: fast={fast} slow={slow}"
+                );
+                // and it really is a boundary: h is above v just inside
+                assert!(h((fast - 1e-6).max(0.0)) >= v - 1e-12, "n={n} v={v:e}");
+            }
         }
     }
 

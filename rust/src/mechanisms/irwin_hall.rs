@@ -63,16 +63,28 @@ impl MechSpec for IrwinHallMechanism {
 
 impl ClientEncoder for IrwinHallMechanism {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+        self.encode_chunk(client, x, 0..x.len(), round)
+    }
+
+    /// Chunk-ranged encode: coordinate j's dither comes from the seekable
+    /// per-coordinate client stream, so any chunking concatenates to the
+    /// whole-vector encode bit for bit.
+    fn encode_chunk(
+        &self,
+        client: usize,
+        x: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
         let w = self.step(round.n_clients);
         let code_bits = FixedCode::from_support_bound(self.input_range_t, w).bits() as f64;
-        let mut rng = round.client_rng(client);
+        let dither = round.client_coord_stream(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
-        let ms: Vec<i64> = x
-            .iter()
-            .map(|&xj| {
-                let s = rng.u01();
-                let m = round_half_up(xj / w + s);
+        let ms: Vec<i64> = range
+            .map(|j| {
+                let s = dither.at(j).u01();
+                let m = round_half_up(x[j] / w + s);
                 bits.add_description(m);
                 fixed_total += code_bits;
                 m
@@ -95,43 +107,66 @@ impl ServerDecoder for IrwinHallMechanism {
     /// Survivor-aware decode. The step w was sized to the *announced* n at
     /// encode time, so with n′ < n survivors the decoder (a) sums only the
     /// survivors' re-derived dithers, (b) completes the n − n′ missing
-    /// U(−1/2, 1/2] quantization-error terms from the shared
-    /// [`SharedRound::dropout_rng`] streams, and (c) averages over n′.
-    /// The aggregate error keeps its exact n-term Irwin–Hall law at the
-    /// rescaled scale σ·n/n′ (KS-tested).
+    /// U(−1/2, 1/2] quantization-error terms from the shared per-dropout
+    /// completion streams, and (c) averages over n′. The aggregate error
+    /// keeps its exact n-term Irwin–Hall law at the rescaled scale σ·n/n′
+    /// (KS-tested).
     fn decode_survivors(
         &self,
         payload: &Payload,
         round: &SharedRound,
         survivors: &SurvivorSet,
     ) -> Vec<f64> {
+        let est = self.decode_survivors_chunk(payload, 0, round, survivors);
+        assert_eq!(est.len(), round.dim, "payload does not cover the coordinate space");
+        est
+    }
+
+    fn chunk_decodable(&self) -> bool {
+        true
+    }
+
+    /// The chunk-ranged core of the decode: every stream it touches —
+    /// survivor dithers, dropout completions — is seekable per
+    /// coordinate, so the server re-derives only the active chunk's slice
+    /// (O(c) working state) and the concatenation over any
+    /// [`crate::mechanisms::pipeline::ChunkPlan`] equals the whole-d
+    /// decode bit for bit.
+    fn decode_survivors_chunk(
+        &self,
+        payload: &Payload,
+        lo: usize,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
         let n = round.n_clients;
         assert_eq!(survivors.n(), n, "survivor set shaped for a different fleet");
-        let d = round.dim;
         let m_sum = payload.description_sum();
-        assert_eq!(m_sum.len(), d);
-        // shared randomness: the server re-derives the SURVIVORS' dithers —
-        // O(d) state, never the per-client descriptions
-        let mut s_sum = vec![0.0f64; d];
+        let len = m_sum.len();
+        assert!(lo + len <= round.dim, "chunk exceeds the coordinate space");
+        // shared randomness: the server re-derives the SURVIVORS' dithers
+        // for this chunk only — O(c) state, never the per-client
+        // descriptions
+        let mut s_sum = vec![0.0f64; len];
         for i in survivors.alive_iter() {
-            let mut rng = round.client_rng(i);
-            for sj in s_sum.iter_mut() {
-                *sj += rng.u01();
+            let dither = round.client_coord_stream(i);
+            for (k, sj) in s_sum.iter_mut().enumerate() {
+                *sj += dither.at(lo + k).u01();
             }
         }
         // dropout noise completion: a fresh shared U(−1/2, 1/2) draw
         // stands in for each dropped client's unknowable dithered
         // quantization error
-        let mut topup = vec![0.0f64; d];
+        let mut topup = vec![0.0f64; len];
         for j in survivors.dropped_iter() {
-            let mut rng = round.dropout_rng(j);
-            for tj in topup.iter_mut() {
-                *tj += rng.dither();
+            let comp = round.dropout_coord_stream(j);
+            for (k, tj) in topup.iter_mut().enumerate() {
+                *tj += comp.at(lo + k).dither();
             }
         }
         let w = self.step(n);
         let n_alive = survivors.n_alive() as f64;
-        (0..d).map(|j| w * (m_sum[j] as f64 - s_sum[j] + topup[j]) / n_alive).collect()
+        (0..len).map(|k| w * (m_sum[k] as f64 - s_sum[k] + topup[k]) / n_alive).collect()
     }
 }
 
@@ -196,15 +231,16 @@ mod tests {
         let mech = IrwinHallMechanism::new(1.0, 16.0);
         let w = mech.step(n);
         let seed = 31337;
-        // reproduce client encodings
+        // reproduce client encodings from the per-coordinate streams
         let d = 3;
+        let round = crate::mechanisms::pipeline::SharedRound::new(seed, n, d);
         let mut per_client = vec![0.0f64; d];
         let mut m_sum = vec![0.0f64; d];
         let mut s_sum = vec![0.0f64; d];
         for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
+            let dither = round.client_coord_stream(i);
             for j in 0..d {
-                let s = rng.u01();
+                let s = dither.at(j).u01();
                 let m = round_half_up(x[j] / w + s);
                 per_client[j] += (m as f64 - s) * w;
                 m_sum[j] += m as f64;
@@ -229,12 +265,13 @@ mod tests {
         let seed = 31337;
         let out = mech.aggregate(&xs, seed);
         let d = 3;
+        let round = crate::mechanisms::pipeline::SharedRound::new(seed, n, d);
         let mut m_sum = vec![0.0f64; d];
         let mut s_sum = vec![0.0f64; d];
         for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
+            let dither = round.client_coord_stream(i);
             for j in 0..d {
-                let s = rng.u01();
+                let s = dither.at(j).u01();
                 m_sum[j] += round_half_up(x[j] / w + s) as f64;
                 s_sum[j] += s;
             }
@@ -245,6 +282,40 @@ mod tests {
         }
         assert_eq!(out.bits.messages, (n * d) as u64);
         assert!(out.bits.fixed_total.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chunked_encode_concatenates_to_whole_encode() {
+        // chunk-ranged encodes over any chunk size reproduce the
+        // whole-vector encode bit for bit — descriptions AND accounting
+        let n = 4;
+        let d = 7;
+        let xs = client_data(n, d, 13);
+        let mech = IrwinHallMechanism::new(0.6, 16.0);
+        let round = crate::mechanisms::pipeline::SharedRound::new(99, n, d);
+        for (i, x) in xs.iter().enumerate() {
+            let whole = mech.encode(i, x, &round);
+            for c in [1usize, 3, d, d + 2] {
+                let mut ms = Vec::new();
+                let mut messages = 0u64;
+                let mut variable = 0.0;
+                let mut fixed = 0.0;
+                let mut lo = 0;
+                while lo < d {
+                    let hi = (lo + c).min(d);
+                    let part = mech.encode_chunk(i, x, lo..hi, &round);
+                    ms.extend(part.ms);
+                    messages += part.bits.messages;
+                    variable += part.bits.variable_total;
+                    fixed += part.bits.fixed_total.unwrap();
+                    lo = hi;
+                }
+                assert_eq!(ms, whole.ms, "client {i}, chunk {c}");
+                assert_eq!(messages, whole.bits.messages);
+                assert_eq!(variable, whole.bits.variable_total);
+                assert_eq!(fixed, whole.bits.fixed_total.unwrap());
+            }
+        }
     }
 
     #[test]

@@ -24,7 +24,12 @@
 //! * [`session`] — batched multi-round transport sessions: one opening per
 //!   window of W rounds, a ring of per-round accumulators, one batched
 //!   unmask (with Bonawitz-style pairwise-seed recovery for announced
-//!   dropouts); single-round aggregation is the W=1 special case.
+//!   dropouts); single-round aggregation is the W=1 special case. The
+//!   coordinate space runs under a [`pipeline::ChunkPlan`]: chunked
+//!   sessions keep O(c) accumulators per chunk, unmask and release each
+//!   chunk as it completes, and — because every per-coordinate stream is
+//!   seekable — decode bit-identically to the whole-d path for every
+//!   chunk size (the whole-d path IS the single-chunk plan).
 
 pub mod traits;
 pub mod pipeline;
@@ -40,12 +45,13 @@ pub use decompose::Decomposer;
 pub use individual::{IndividualGaussian, LayeredVariant};
 pub use irwin_hall::IrwinHallMechanism;
 pub use pipeline::{
-    run_pipeline, ClientEncoder, Descriptions, MechSpec, Payload, Pipeline, Plain, RoundCache,
-    SecAgg, ServerDecoder, SharedRound, SurvivorSet, Transport, TransportPartial, Unicast,
+    run_pipeline, ChunkCache, ChunkPlan, ClientEncoder, CoordStream, Descriptions, MechSpec,
+    Payload, Pipeline, Plain, RoundCache, SecAgg, ServerDecoder, SharedRound, SurvivorSet,
+    Transport, TransportPartial, Unicast,
 };
 pub use session::{
-    derive_session_seed, run_window, run_window_sampled, run_window_with_dropouts,
-    session_recovery_share, RoundDropouts, TransportSession,
+    derive_session_seed, run_window, run_window_chunked, run_window_sampled,
+    run_window_with_dropouts, session_recovery_share, RoundDropouts, TransportSession,
 };
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

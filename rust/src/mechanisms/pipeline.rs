@@ -18,9 +18,15 @@
 //! unbiased-quant) inherently require.
 //!
 //! Shared randomness: every stream is derived from the round seed —
-//! `Rng::derive(seed, client)` for per-client randomness and
-//! `Rng::derive(seed, GLOBAL_STREAM − k)` for globally shared draws — so
-//! encoder and decoder reconstruct identical values without communication.
+//! *seekable per-coordinate families* ([`SharedRound::coord_stream`],
+//! [`crate::util::rng::Rng::derive_coord`]) for everything the
+//! chunk-capable mechanisms draw (dithers, global (A, B) draws, dropout
+//! completions, subsample selections), and legacy sequential streams
+//! (`Rng::derive(seed, client)`, `Rng::derive(seed, GLOBAL_STREAM − k)`)
+//! for the non-chunkable mechanisms' draws — so encoder and decoder
+//! reconstruct identical values without communication, and a chunk-ranged
+//! encode ([`ClientEncoder::encode_chunk`]) reproduces exactly the bits of
+//! the whole-vector encode for any [`ChunkPlan`].
 //! [`RoundCache`] memoizes one round's derived shared randomness purely as
 //! a simulation speedup (in a deployment each party derives it once).
 //! (Why ALL randomness must flow through seeded streams is recorded in the
@@ -50,11 +56,12 @@
 //! exactly over ℤ_m before the signed lift) and is enforced by property
 //! tests per mechanism, both per round and for whole windowed sessions.
 
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::secagg::{self, SecAggParams};
-use crate::util::rng::Rng;
+use crate::util::rng::{seed_domain, Rng};
 
 /// Stream id of globally shared randomness (all clients + server).
 pub const GLOBAL_STREAM: u64 = u64::MAX;
@@ -73,6 +80,81 @@ pub const DROPOUT_NOISE_STREAM: u64 = 0xD809_B07E_0000_0000;
 /// the high 32 bits differ from every other tag for any fleet below 2³²
 /// clients (see `session_stream_ids_are_pairwise_distinct`).
 pub const SUBSAMPLE_STREAM: u64 = 0x5AB5_C0DE_0000_0000;
+
+/// The chunking of a round's coordinate space: `⌈dim/chunk⌉` contiguous
+/// chunks of at most `chunk` coordinates each. A `ChunkPlan` is *transport
+/// shape only* — because every per-coordinate stream is seekable
+/// ([`Rng::derive_coord`], [`SharedRound::coord_stream`]), the plan can
+/// never change a drawn bit, so any two plans over the same round decode
+/// bit-identically. The whole-`d` pipeline is the single-chunk
+/// (`chunk = dim`) special case ([`ChunkPlan::whole`]); a requested chunk
+/// size larger than `dim` clamps to it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    dim: usize,
+    chunk: usize,
+}
+
+impl ChunkPlan {
+    pub fn new(dim: usize, chunk: usize) -> Self {
+        assert!(dim > 0, "a chunk plan needs at least one coordinate");
+        assert!(chunk > 0, "chunk size must be at least one coordinate");
+        Self { dim, chunk: chunk.min(dim) }
+    }
+
+    /// The unchunked special case: one chunk covering all of `dim`.
+    pub fn whole(dim: usize) -> Self {
+        Self::new(dim, dim)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The (clamped) chunk size c.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.dim.div_ceil(self.chunk)
+    }
+
+    pub fn is_whole(&self) -> bool {
+        self.chunk == self.dim
+    }
+
+    /// Coordinate range of chunk k (the last chunk may be short).
+    pub fn range(&self, k: usize) -> Range<usize> {
+        assert!(k < self.n_chunks(), "chunk {k} out of range for {} chunks", self.n_chunks());
+        let lo = k * self.chunk;
+        lo..(lo + self.chunk).min(self.dim)
+    }
+
+    /// All chunk ranges, in coordinate order.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.n_chunks()).map(|k| self.range(k))
+    }
+}
+
+/// A hoisted per-coordinate stream family of one round: the family seed is
+/// derived once ([`SharedRound::coord_family_seed`]), after which
+/// [`CoordStream::at`] seeks to any coordinate in O(1). Coordinate j's
+/// generator depends only on (round, family, j) — never on how many
+/// coordinates were drawn before it — which is the property that makes
+/// chunked and unchunked encodes bit-identical by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordStream {
+    family: u64,
+}
+
+impl CoordStream {
+    /// Coordinate `coord`'s own generator.
+    #[inline]
+    pub fn at(&self, coord: usize) -> Rng {
+        Rng::derive_coord(self.family, coord as u64)
+    }
+}
 
 /// One aggregation round's public context: the shared seed plus the round
 /// shape. Identical on every client and the server.
@@ -116,23 +198,78 @@ impl SharedRound {
         Rng::derive(self.seed, DROPOUT_NOISE_STREAM ^ dropped as u64)
     }
 
-    /// Client i's coordinate-subsampling row stream. SIGM and CSGM both
-    /// derive their Bernoulli(γ) subsample rows through this one stream,
-    /// which is what guarantees the two see IDENTICAL subsamples for a
-    /// given seed — the matched-subsample comparison of Figs. 5/7 depends
-    /// on it. Per-row derivation (stream `SUBSAMPLE_STREAM ^ i`) means a
-    /// client derives only its own O(d) row at encode time; before the
-    /// seed-format bump the rows were drawn row-major from one global
-    /// stream, forcing every party to materialize — and the mechanisms to
-    /// cache — the full O(n·d) matrix.
-    pub fn subsample_rng(&self, client: usize) -> Rng {
-        Rng::derive(self.seed, SUBSAMPLE_STREAM ^ client as u64)
+    // -- per-coordinate (seekable) stream families --------------------
+    //
+    // The chunked pipeline's seed format: instead of one sequential
+    // stream per (round, purpose) whose position depends on how many
+    // coordinates were processed, each purpose owns a *family* of
+    // per-coordinate streams ([`Rng::derive_coord`]). Seeking to
+    // coordinate j is O(1) and independent of any chunking, so
+    // `encode_chunk` over any [`ChunkPlan`] reproduces the whole-vector
+    // encode bit for bit — the invariant the chunked ≡ unchunked property
+    // matrix enforces. Families live in their own seed domain
+    // ([`seed_domain::COORD_FAMILY`]), structurally disjoint from the
+    // sequential streams above (which remain in use by the
+    // non-chunk-capable mechanisms, e.g. SIGM's ragged step draws).
+
+    /// Seed of the per-coordinate family tagged `stream` (same tag space
+    /// as the sequential streams: client ids, [`GLOBAL_STREAM`] − k,
+    /// [`DROPOUT_NOISE_STREAM`] ^ j, [`SUBSAMPLE_STREAM`] ^ i).
+    pub fn coord_family_seed(&self, stream: u64) -> u64 {
+        Rng::derive_domain(self.seed, seed_domain::COORD_FAMILY, stream)
+    }
+
+    /// The hoisted family handle — derive once per encode/decode, then
+    /// [`CoordStream::at`] per coordinate.
+    pub fn coord_stream(&self, stream: u64) -> CoordStream {
+        CoordStream { family: self.coord_family_seed(stream) }
+    }
+
+    /// Client i's per-coordinate dither/noise streams.
+    pub fn client_coord_stream(&self, client: usize) -> CoordStream {
+        self.coord_stream(client as u64)
+    }
+
+    /// The round's global per-coordinate shared randomness (e.g. the
+    /// aggregate mechanism's (A, B) draws).
+    pub fn global_coord_stream(&self) -> CoordStream {
+        self.coord_stream(GLOBAL_STREAM)
+    }
+
+    /// Additional global per-coordinate families (offset ≥ 1), e.g.
+    /// CSGM's server-noise draws (offset 2).
+    pub fn aux_coord_stream(&self, offset: u64) -> CoordStream {
+        self.coord_stream(GLOBAL_STREAM - offset)
+    }
+
+    /// Per-coordinate dropout-noise-completion streams for a dropped
+    /// client (the seekable sibling of [`SharedRound::dropout_rng`]; used
+    /// by the chunk-decodable mechanisms).
+    pub fn dropout_coord_stream(&self, dropped: usize) -> CoordStream {
+        self.coord_stream(DROPOUT_NOISE_STREAM ^ dropped as u64)
+    }
+
+    /// Client i's per-coordinate subsample streams. SIGM and CSGM both
+    /// derive their Bernoulli(γ) subsample decisions through this one
+    /// family, which is what guarantees the two see IDENTICAL subsamples
+    /// for a given seed — the matched-subsample comparison of Figs. 5/7
+    /// depends on it. A client touches only its own family at encode time
+    /// (O(d) work, no O(n·d) matrix anywhere), and per-coordinate
+    /// derivation makes the decision for coordinate j independent of any
+    /// chunking.
+    pub fn subsample_coord_stream(&self, client: usize) -> CoordStream {
+        self.coord_stream(SUBSAMPLE_STREAM ^ client as u64)
+    }
+
+    /// Client i's Bernoulli(γ) subsample decision for coordinate `coord`.
+    pub fn subsample_coord(&self, client: usize, coord: usize, gamma: f64) -> bool {
+        self.subsample_coord_stream(client).at(coord).bernoulli(gamma)
     }
 
     /// Client i's materialized Bernoulli(γ) subsample row.
     pub fn subsample_row(&self, client: usize, gamma: f64) -> Vec<bool> {
-        let mut rng = self.subsample_rng(client);
-        (0..self.dim).map(|_| rng.bernoulli(gamma)).collect()
+        let s = self.subsample_coord_stream(client);
+        (0..self.dim).map(|j| s.at(j).bernoulli(gamma)).collect()
     }
 
     fn key(&self) -> (u64, usize, usize) {
@@ -308,6 +445,33 @@ impl Payload {
 /// deterministic in `(client, x, round)`.
 pub trait ClientEncoder: Send + Sync {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions;
+
+    /// Encode only coordinates `range` of this client's vector. `x` is the
+    /// client's FULL vector (clients always hold their own data; whole-`x`
+    /// access keeps data-dependent encoders — an ℓ∞ norm, an ℓ2 clip, a
+    /// rotation — well-defined per chunk), and the returned descriptions
+    /// cover exactly `range`.
+    ///
+    /// Chunk-capable encoders draw coordinate j's randomness from the
+    /// seekable per-coordinate streams ([`SharedRound::coord_stream`]), so
+    /// concatenating chunk encodes over ANY [`ChunkPlan`] reproduces
+    /// [`ClientEncoder::encode`] bit for bit — the chunked ≡ unchunked
+    /// invariant. The default fails closed on partial ranges: an encoder
+    /// that has not opted in refuses to be chunked rather than silently
+    /// double-drawing a sequential stream.
+    fn encode_chunk(
+        &self,
+        client: usize,
+        x: &[f64],
+        range: Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
+        assert!(
+            range.start == 0 && range.end == x.len(),
+            "encoder fails closed under chunking: it is not chunk-capable"
+        );
+        self.encode(client, x, round)
+    }
 }
 
 /// A mergeable in-flight uplink accumulator. Shards fold their clients into
@@ -341,6 +505,37 @@ pub trait Transport: Send + Sync {
         msg: &Descriptions,
         round: &SharedRound,
     );
+
+    /// Whether per-chunk submission with coordinate offsets is supported.
+    /// The summing transports opt in: [`Plain`]'s fold is offset-free and
+    /// [`SecAgg`] expands only the mask slice of the active chunk from its
+    /// seekable per-coordinate pair streams. [`Unicast`] does not — its
+    /// per-client lists (and ragged/aux messages) have no coordinate
+    /// offsets — so it runs only under single-chunk plans.
+    fn chunk_capable(&self) -> bool {
+        false
+    }
+
+    /// Fold one client's *chunk* message — descriptions covering
+    /// coordinates `[lo, lo + msg.ms.len())` — into a chunk accumulator
+    /// (O(c) state). Must produce, chunk by chunk, exactly the bits a
+    /// whole-vector [`Transport::submit`] produces for those coordinates.
+    /// The default fails closed for any nonzero offset.
+    fn submit_chunk(
+        &self,
+        part: &mut TransportPartial,
+        client: usize,
+        msg: &Descriptions,
+        lo: usize,
+        round: &SharedRound,
+    ) {
+        assert!(
+            lo == 0,
+            "transport {} fails closed under chunking: it is not chunk-capable",
+            self.name(),
+        );
+        self.submit(part, client, msg, round)
+    }
 
     /// Merge another accumulator (another shard's partial) into `a`.
     fn merge(&self, a: &mut TransportPartial, b: TransportPartial);
@@ -462,6 +657,23 @@ impl Transport for Plain {
             TransportPartial::Sum(acc) => add_i64(acc, &msg.ms),
             _ => panic!("Plain transport got a foreign partial"),
         }
+    }
+
+    fn chunk_capable(&self) -> bool {
+        true
+    }
+
+    fn submit_chunk(
+        &self,
+        part: &mut TransportPartial,
+        client: usize,
+        msg: &Descriptions,
+        _lo: usize,
+        round: &SharedRound,
+    ) {
+        // plain summation is coordinate-offset-free: a chunk accumulator
+        // is just a shorter sum
+        self.submit(part, client, msg, round)
     }
 
     fn merge(&self, a: &mut TransportPartial, b: TransportPartial) {
@@ -647,24 +859,44 @@ impl Transport for SecAgg {
         msg: &Descriptions,
         round: &SharedRound,
     ) {
+        // the whole-d submit IS the lo = 0 chunk submit: mask expansion is
+        // per-coordinate ([`crate::secagg::mask_descriptions_range`]), so
+        // the two paths produce identical field vectors by construction
+        self.submit_chunk(part, client, msg, 0, round)
+    }
+
+    fn chunk_capable(&self) -> bool {
+        true
+    }
+
+    fn submit_chunk(
+        &self,
+        part: &mut TransportPartial,
+        client: usize,
+        msg: &Descriptions,
+        lo: usize,
+        round: &SharedRound,
+    ) {
         assert!(
             msg.aux.is_empty(),
             "aux side information cannot pass through secure aggregation"
         );
         let masked = match &self.cohort {
-            Some(members) => secagg::mask_descriptions_among(
+            Some(members) => secagg::mask_descriptions_among_range(
                 &msg.ms,
                 client,
                 members,
                 self.mask_root_for(round),
                 self.params,
+                lo,
             ),
-            None => secagg::mask_descriptions(
+            None => secagg::mask_descriptions_range(
                 &msg.ms,
                 client,
                 round.n_clients,
                 self.mask_root_for(round),
                 self.params,
+                lo,
             ),
         };
         match part {
@@ -781,6 +1013,47 @@ pub trait ServerDecoder: Send + Sync {
             "decoder fails closed under dropouts: it is not survivor-aware"
         );
         self.decode(payload, round)
+    }
+
+    /// Whether [`ServerDecoder::decode_survivors_chunk`] supports partial
+    /// coordinate ranges — i.e. whether the decoder is a per-coordinate
+    /// function of the (chunk) sum and seekable shared randomness. The
+    /// rotation-based decoders (DDG) are not: they need the whole-`d` sum,
+    /// so the streaming runner assembles it before decoding.
+    fn chunk_decodable(&self) -> bool {
+        false
+    }
+
+    /// Decode coordinates `[lo, lo + L)` from a payload carrying only that
+    /// chunk's server view (for sum transports, `L` is the chunk's sum
+    /// length). Chunk-decodable mechanisms re-derive shared randomness —
+    /// dithers, global draws, dropout completions — from the seekable
+    /// per-coordinate streams, so the concatenation over any
+    /// [`ChunkPlan`] equals [`ServerDecoder::decode_survivors`] bit for
+    /// bit while the server holds only O(c) working state per chunk.
+    ///
+    /// The default fails closed unless the chunk IS the whole coordinate
+    /// space (`lo == 0` and, for sum payloads, `L == dim`), in which case
+    /// it forwards to `decode_survivors` — single-chunk plans therefore
+    /// work for every decoder, chunk-aware or not.
+    fn decode_survivors_chunk(
+        &self,
+        payload: &Payload,
+        lo: usize,
+        round: &SharedRound,
+        survivors: &SurvivorSet,
+    ) -> Vec<f64> {
+        assert!(
+            lo == 0,
+            "decoder fails closed under chunking: it is not chunk-decodable"
+        );
+        if let Payload::Sum(v) = payload {
+            assert!(
+                v.len() == round.dim,
+                "decoder fails closed under chunking: it is not chunk-decodable"
+            );
+        }
+        self.decode_survivors(payload, round, survivors)
     }
 }
 
@@ -1025,6 +1298,111 @@ impl<V> Clone for RoundCache<V> {
 impl<V> std::fmt::Debug for RoundCache<V> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str("RoundCache")
+    }
+}
+
+/// How many (round, chunk) entries a [`ChunkCache`] retains: enough for a
+/// full session window with a handful of in-flight chunks per round, so
+/// lock-step streaming never thrashes.
+pub(crate) const CHUNK_CACHE_CAP: usize = 64;
+
+/// The chunk-ranged sibling of [`RoundCache`]: memoizes derived shared
+/// randomness per (round, coordinate range) — e.g. the aggregate
+/// mechanism's (A, B) chunk — with FIFO eviction past
+/// [`CHUNK_CACHE_CAP`]. Two bounds keep the cache from outgrowing the
+/// memory model it serves: partial-range entries are O(c) each (so a
+/// streaming run pins at most O(cap · c)), while *whole-dimension*
+/// entries — what every unchunked (c = d) run inserts, each O(d) — are
+/// additionally capped at [`ROUND_CACHE_CAP`], matching the whole-d
+/// memory footprint the [`RoundCache`] they replaced had. Cloning yields
+/// a fresh empty cache (contents are always re-derivable from the seed).
+pub struct ChunkCache<V> {
+    slots: Mutex<Vec<((u64, usize, usize, usize, usize), Arc<V>)>>,
+}
+
+impl<V> ChunkCache<V> {
+    pub fn new() -> Self {
+        Self { slots: Mutex::new(Vec::new()) }
+    }
+
+    pub fn get_or(
+        &self,
+        round: &SharedRound,
+        range: &Range<usize>,
+        make: impl FnOnce() -> V,
+    ) -> Arc<V> {
+        let (seed, n, dim) = round.key();
+        let key = (seed, n, dim, range.start, range.end);
+        let mut slots = self.slots.lock().expect("chunk cache poisoned");
+        if let Some((_, v)) = slots.iter().find(|(k, _)| *k == key) {
+            return v.clone();
+        }
+        let v = Arc::new(make());
+        let is_whole = |k: &(u64, usize, usize, usize, usize)| k.3 == 0 && k.4 == k.2;
+        if is_whole(&key)
+            && slots.iter().filter(|(k, _)| is_whole(k)).count() == ROUND_CACHE_CAP
+        {
+            // O(d) entries stay bounded exactly like the RoundCache the
+            // whole-d path used before chunking existed
+            let oldest = slots
+                .iter()
+                .position(|(k, _)| is_whole(k))
+                .expect("a whole-dim entry exists");
+            slots.remove(oldest);
+        }
+        if slots.len() == CHUNK_CACHE_CAP {
+            slots.remove(0);
+        }
+        slots.push((key, v.clone()));
+        v
+    }
+
+    /// Raw-key lookup with an explicit FIFO capacity, for callers that
+    /// (a) have a working set KNOWN to exceed [`CHUNK_CACHE_CAP`] and (b)
+    /// must fold extra key material in. The one consumer is DDG's
+    /// per-(round, client) rotated-vector memo: one live entry per cohort
+    /// member per in-flight round (capacity n·MAX_WINDOW — any smaller
+    /// cap would miss on every lookup and silently re-run the O(d log d)
+    /// rotation per chunk), keyed with a fingerprint of the input vector
+    /// in the first slot so a (round, client) that re-encodes *different
+    /// data* (same seeds, new model state) can never reuse a stale cached
+    /// value. The caller owns the memory story for the capacity it picks
+    /// (the whole-dim sub-cap of `get_or` does not apply here).
+    pub fn get_or_keyed(
+        &self,
+        key: (u64, usize, usize, usize, usize),
+        cap: usize,
+        make: impl FnOnce() -> V,
+    ) -> Arc<V> {
+        assert!(cap > 0, "cache capacity must be positive");
+        let mut slots = self.slots.lock().expect("chunk cache poisoned");
+        if let Some((_, v)) = slots.iter().find(|(k, _)| *k == key) {
+            return v.clone();
+        }
+        let v = Arc::new(make());
+        while slots.len() >= cap {
+            slots.remove(0);
+        }
+        slots.push((key, v.clone()));
+        v
+    }
+}
+
+impl<V> Default for ChunkCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> Clone for ChunkCache<V> {
+    fn clone(&self) -> Self {
+        Self::new()
+    }
+}
+
+impl<V> std::fmt::Debug for ChunkCache<V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ChunkCache")
     }
 }
 
@@ -1444,6 +1822,192 @@ mod tests {
         assert_eq!(x, r0b.next_u64());
         assert_ne!(x, r1.next_u64());
         assert_ne!(x, c0.next_u64());
+    }
+
+    #[test]
+    fn chunked_plan_covers_the_coordinate_space_exactly() {
+        for (d, c) in [(10usize, 3usize), (10, 1), (10, 10), (10, 13), (7, 7), (1, 1)] {
+            let plan = ChunkPlan::new(d, c);
+            assert_eq!(plan.dim(), d);
+            assert!(plan.chunk() <= d, "chunk clamps to dim");
+            let mut covered = Vec::new();
+            for r in plan.ranges() {
+                assert!(!r.is_empty());
+                assert!(r.len() <= plan.chunk());
+                covered.extend(r);
+            }
+            assert_eq!(covered, (0..d).collect::<Vec<_>>(), "d={d} c={c}");
+            assert_eq!(plan.n_chunks(), d.div_ceil(plan.chunk()));
+        }
+        assert!(ChunkPlan::whole(5).is_whole());
+        assert!(ChunkPlan::new(5, 9).is_whole(), "oversized chunk clamps to whole");
+        assert!(!ChunkPlan::new(5, 2).is_whole());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one coordinate")]
+    fn chunked_plan_rejects_zero_chunk() {
+        let _ = ChunkPlan::new(8, 0);
+    }
+
+    #[test]
+    fn chunked_coord_streams_are_seekable_and_family_distinct() {
+        let round = SharedRound::new(77, 4, 16);
+        // seeking is position-free: coordinate 9's draw is the same
+        // whether or not other coordinates were touched first
+        let s = round.client_coord_stream(2);
+        let x = s.at(9).u01();
+        let _ = s.at(0).u01();
+        assert_eq!(x, round.client_coord_stream(2).at(9).u01());
+        // distinct across coords, clients, and families
+        assert_ne!(x, s.at(10).u01());
+        assert_ne!(x, round.client_coord_stream(3).at(9).u01());
+        assert_ne!(x, round.global_coord_stream().at(9).u01());
+        assert_ne!(x, round.dropout_coord_stream(2).at(9).u01());
+        assert_ne!(x, round.subsample_coord_stream(2).at(9).u01());
+        // and disjoint from the sequential stream of the same tag
+        let mut seq = round.client_rng(2);
+        assert_ne!(x, seq.u01());
+    }
+
+    #[test]
+    fn chunked_subsample_row_matches_per_coordinate_decisions() {
+        let round = SharedRound::new(99, 6, 32);
+        let r2 = round.subsample_row(2, 0.5);
+        for (j, &b) in r2.iter().enumerate() {
+            assert_eq!(b, round.subsample_coord(2, j, 0.5), "j={j}");
+        }
+        // γ boundaries and fleet-size independence still hold
+        assert!(round.subsample_row(0, 1.0).iter().all(|&b| b));
+        assert!(!round.subsample_row(0, 0.0).iter().any(|&b| b));
+        let other = SharedRound::new(99, 100, 32);
+        assert_eq!(r2, other.subsample_row(2, 0.5));
+    }
+
+    #[test]
+    fn chunked_secagg_submit_chunks_reproduce_whole_submit() {
+        // folding a client's vector chunk by chunk (offset masking) must
+        // produce the exact field vector the whole-d submit produces —
+        // concatenated across any chunk size
+        let xs = data();
+        let d = xs[0].len();
+        let round = SharedRound::new(41, xs.len(), d);
+        let enc = RoundToInt;
+        let t = SecAgg::new();
+        let mut whole = t.empty(&round);
+        for (i, x) in xs.iter().enumerate() {
+            t.submit(&mut whole, i, &enc.encode(i, x, &round), &round);
+        }
+        let whole_sum = match whole {
+            TransportPartial::Masked { sum: Some(v), .. } => v,
+            _ => panic!("wrong partial shape"),
+        };
+        for c in [1usize, 2, d] {
+            let plan = ChunkPlan::new(d, c);
+            let mut got = vec![0u64; d];
+            for r in plan.ranges() {
+                let mut part = t.empty(&round);
+                for (i, x) in xs.iter().enumerate() {
+                    let full = enc.encode(i, x, &round);
+                    let msg = Descriptions {
+                        ms: full.ms[r.clone()].to_vec(),
+                        aux: vec![],
+                        bits: BitsAccount::default(),
+                    };
+                    t.submit_chunk(&mut part, i, &msg, r.start, &round);
+                }
+                match part {
+                    TransportPartial::Masked { sum: Some(v), .. } => {
+                        got[r].copy_from_slice(&v)
+                    }
+                    _ => panic!("wrong partial shape"),
+                }
+            }
+            assert_eq!(got, whole_sum, "chunk size {c}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not chunk-capable")]
+    fn chunked_unicast_fails_closed_on_offset_submit() {
+        let xs = data();
+        let round = SharedRound::new(3, xs.len(), xs[0].len());
+        let t = Unicast;
+        let mut p = t.empty(&round);
+        t.submit_chunk(&mut p, 0, &RoundToInt.encode(0, &xs[0], &round), 1, &round);
+    }
+
+    #[test]
+    #[should_panic(expected = "not chunk-capable")]
+    fn chunked_default_encoder_fails_closed_on_partial_range() {
+        let xs = data();
+        let round = SharedRound::new(3, xs.len(), xs[0].len());
+        let _ = RoundToInt.encode_chunk(0, &xs[0], 0..1, &round);
+    }
+
+    #[test]
+    #[should_panic(expected = "not chunk-decodable")]
+    fn chunked_default_decoder_fails_closed_on_partial_chunk() {
+        let round = SharedRound::new(1, 3, 4);
+        let payload = Payload::Sum(vec![0, 0]); // 2 of 4 coordinates
+        let _ = RoundToInt.decode_survivors_chunk(&payload, 0, &round, &SurvivorSet::full(3));
+    }
+
+    #[test]
+    fn chunked_default_decoder_accepts_the_whole_chunk() {
+        // single-chunk plans must work for every decoder: the default
+        // forwards the whole-d chunk to decode_survivors
+        let round = SharedRound::new(1, 4, 2);
+        let payload = Payload::Sum(vec![8, 4]);
+        let est = RoundToInt.decode_survivors_chunk(&payload, 0, &round, &SurvivorSet::full(4));
+        assert_eq!(est, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn chunked_cache_is_range_keyed() {
+        let cache: ChunkCache<u64> = ChunkCache::new();
+        let round = SharedRound::new(5, 4, 8);
+        let mut calls = 0;
+        let a = cache.get_or(&round, &(0..4), || {
+            calls += 1;
+            10
+        });
+        let a2 = cache.get_or(&round, &(0..4), || {
+            calls += 1;
+            11
+        });
+        assert_eq!((*a, *a2, calls), (10, 10, 1));
+        let b = cache.get_or(&round, &(4..8), || {
+            calls += 1;
+            20
+        });
+        assert_eq!((*b, calls), (20, 2));
+    }
+
+    #[test]
+    fn chunked_cache_caps_whole_dim_entries_at_round_cache_cap() {
+        // the unchunked (c = d) path inserts O(d) entries — those must
+        // stay bounded exactly like the RoundCache they replaced, even
+        // though partial-range entries get the larger cap
+        let cache: ChunkCache<u64> = ChunkCache::new();
+        let d = 8usize;
+        for i in 0..=ROUND_CACHE_CAP as u64 {
+            let _ = cache.get_or(&SharedRound::new(i, 4, d), &(0..d), || i);
+        }
+        // round 0's whole-dim entry was evicted (cap + 1 inserts)...
+        let mut rebuilt = false;
+        let _ = cache.get_or(&SharedRound::new(0, 4, d), &(0..d), || {
+            rebuilt = true;
+            0
+        });
+        assert!(rebuilt);
+        // ...while the most recent one survived
+        let mut rebuilt_last = false;
+        let _ = cache.get_or(&SharedRound::new(ROUND_CACHE_CAP as u64, 4, d), &(0..d), || {
+            rebuilt_last = true;
+            0
+        });
+        assert!(!rebuilt_last);
     }
 
     #[test]

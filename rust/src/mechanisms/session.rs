@@ -10,9 +10,32 @@
 //! [`crate::mechanisms::pipeline::SecAgg`], the ℤ_m mask schedule of
 //! [`crate::secagg::session_mask_root`]) from a single *session seed* via
 //! the seeded-PRNG stream derivation of [`crate::util::rng::Rng::derive`],
-//! folds incoming per-round [`TransportPartial`]s into a ring of W
-//! per-round accumulators — still O(d) server state per in-flight round
-//! for the summing transports — and closes with one batched unmask.
+//! folds incoming per-round [`TransportPartial`]s into a ring of
+//! per-round accumulators, and closes with one batched unmask.
+//!
+//! ## The chunked memory model (d ≫ RAM)
+//!
+//! The coordinate space runs under a [`ChunkPlan`]: each round keeps a
+//! ring of `⌈d/c⌉` O(c) chunk accumulators instead of one O(d) vector,
+//! chunks are fed in coordinate order
+//! ([`TransportSession::submit_chunk`] /
+//! [`TransportSession::fold_chunk_partial`]), and a chunk unmasks — with
+//! per-range Bonawitz mask recovery for announced dropouts — and
+//! releases its payload the moment every survivor has folded it
+//! ([`TransportSession::finish_chunk`]). Peak accumulator state is
+//! O(active chunks · c) ([`TransportSession::peak_accumulator_bytes`]);
+//! per-round tracking metadata stays O(n + d/c). The legacy whole-d
+//! session IS the single-chunk (c = d) plan — every historical open
+//! path routes through it — and because every per-coordinate stream is
+//! seekable ([`crate::util::rng::Rng::derive_coord`]), the chunking can
+//! never change a decoded bit (the chunked ≡ unchunked property
+//! matrix). A streamed session seals with
+//! [`TransportSession::close_streamed`]; the batched
+//! [`TransportSession::close_with_dropouts`] concatenates chunk views
+//! back into whole-d payloads. One trade is explicit: a streamed chunk
+//! surfaces as soon as ITS round's survivors folded it, so the
+//! whole-window all-or-nothing unmask holds per chunk, not across rounds
+//! — the batched close keeps the original all-before-any contract.
 //!
 //! Four invariants, all tested:
 //!
@@ -51,8 +74,8 @@
 use std::sync::Arc;
 
 use super::pipeline::{
-    ClientEncoder, Descriptions, Payload, ServerDecoder, SharedRound, SurvivorSet, Transport,
-    TransportPartial,
+    ChunkPlan, ClientEncoder, Descriptions, Payload, ServerDecoder, SharedRound, SurvivorSet,
+    Transport, TransportPartial,
 };
 use super::traits::{BitsAccount, RoundOutput};
 use crate::secagg::{self, RecoveryShare, SecAggParams};
@@ -169,19 +192,45 @@ impl RoundDropouts {
     }
 }
 
-/// One in-flight round of the window: its accumulator, bit accounting and
-/// submission tracking (the fail-closed gate).
-struct RoundSlot {
+/// One chunk's in-flight accumulator: O(c) payload while accumulating,
+/// released the moment the chunk finishes.
+struct ChunkSlot {
     partial: TransportPartial,
-    bits: BitsAccount,
     submitted: usize,
-    /// which clients submitted — directly or through a shard fold.
-    /// Duplicates must not stand in for a missing client's count, and
-    /// dropout announcements are checked against this record at close.
-    seen: Vec<bool>,
+    finished: bool,
+}
+
+/// A round's validated dropout announcement (set by
+/// [`TransportSession::announce_dropouts`]): the final decode set plus the
+/// recovery shares each chunk close re-expands for its own range.
+struct Announced {
+    survivors: SurvivorSet,
+    dropped: Vec<usize>,
+    shares: Vec<RecoveryShare>,
+}
+
+/// One in-flight round of the window: its per-chunk accumulators, bit
+/// accounting and submission tracking (the fail-closed gate).
+///
+/// Submission is tracked per client as the *next expected chunk*
+/// (`next_chunk[client]`): clients stream their chunks in coordinate
+/// order, duplicates (`k` below the cursor, or a fully-submitted client
+/// re-submitting) and out-of-order chunks fail closed, and dropout
+/// announcements are checked against the same record — a client that
+/// touched ANY chunk cannot be announced dropped. The record is O(n + K)
+/// metadata; only the active chunks carry O(c) payloads.
+struct RoundSlot {
+    chunks: Vec<ChunkSlot>,
+    bits: BitsAccount,
+    /// per-client cursor: how many chunks this client has submitted
+    next_chunk: Vec<u32>,
+    /// whether this round saw direct submits (folds then fail closed)
+    has_direct: bool,
     /// whether this round is fed by pre-folded shard partials; folds and
     /// direct submits must not mix (one aggregation discipline per round)
     folded: bool,
+    /// the round's validated dropout announcement, if any
+    announced: Option<Announced>,
 }
 
 /// A transport opened once for a window of W rounds (see the module docs).
@@ -201,9 +250,32 @@ pub struct TransportSession {
     /// sessions): submissions from outside it fail closed, completeness
     /// and dropout accounting are measured against it
     cohorts: Vec<SurvivorSet>,
+    /// the coordinate-space chunking every round of this session runs
+    /// under (single-chunk = the legacy whole-d session)
+    plan: ChunkPlan,
     /// set once a close succeeded: every later submit/fold/announce/close
     /// fails closed (nothing can be amended post-unmask)
     closed: bool,
+    /// accumulator-payload bytes currently live across all rounds/chunks
+    live_bytes: usize,
+    /// high-water mark of `live_bytes` — what the `rounds_chunked` bench
+    /// asserts is O(c), not O(d)
+    peak_bytes: usize,
+}
+
+/// Payload bytes a partial currently pins (the quantity the streaming
+/// memory bound is about — tracking metadata is excluded).
+fn partial_bytes(p: &TransportPartial) -> usize {
+    match p {
+        TransportPartial::Sum(Some(v)) => v.len() * std::mem::size_of::<i64>(),
+        TransportPartial::Sum(None) => 0,
+        TransportPartial::Masked { sum: Some(v), .. } => v.len() * std::mem::size_of::<u64>(),
+        TransportPartial::Masked { sum: None, .. } => 0,
+        TransportPartial::List(l) => l
+            .iter()
+            .map(|(_, ms, aux)| std::mem::size_of_val(&ms[..]) + std::mem::size_of_val(&aux[..]))
+            .sum(),
+    }
 }
 
 impl TransportSession {
@@ -242,6 +314,37 @@ impl TransportSession {
         round_seeds: &[u64],
         cohorts: &[SurvivorSet],
     ) -> Self {
+        Self::open_sampled_chunked(
+            transport,
+            session_seed,
+            n_clients,
+            dim,
+            round_seeds,
+            cohorts,
+            dim,
+        )
+    }
+
+    /// The general opening: a sampled session whose coordinate space runs
+    /// under a [`ChunkPlan`] of chunk size `chunk` (clamped to `dim`; see
+    /// the memory model in the module docs). Every round keeps a ring of
+    /// `⌈dim/chunk⌉` O(chunk) accumulators instead of one O(dim)
+    /// accumulator; a chunk's payload is released the moment it finishes
+    /// ([`TransportSession::finish_chunk`]). Multi-chunk plans require a
+    /// chunk-capable transport ([`Transport::chunk_capable`] — the
+    /// summing transports; [`crate::mechanisms::pipeline::Unicast`] runs
+    /// only under the single-chunk plan). Because every per-coordinate
+    /// stream is seekable, the plan can never change a decoded bit — the
+    /// chunked ≡ unchunked property matrix enforces it.
+    pub fn open_sampled_chunked(
+        transport: &dyn Transport,
+        session_seed: u64,
+        n_clients: usize,
+        dim: usize,
+        round_seeds: &[u64],
+        cohorts: &[SurvivorSet],
+        chunk: usize,
+    ) -> Self {
         assert!(!round_seeds.is_empty(), "a session window needs at least one round");
         assert!(
             round_seeds.len() <= MAX_WINDOW,
@@ -262,6 +365,12 @@ impl TransportSession {
                 "round {r}: cohort shaped for a different fleet"
             );
         }
+        let plan = ChunkPlan::new(dim, chunk);
+        assert!(
+            plan.is_whole() || transport.chunk_capable(),
+            "transport {} fails closed under chunking: it is not chunk-capable",
+            transport.name(),
+        );
         let transports = session_round_transports_sampled(transport, session_seed, cohorts);
         let rounds: Vec<SharedRound> =
             round_seeds.iter().map(|&s| SharedRound::new(s, n_clients, dim)).collect();
@@ -269,11 +378,18 @@ impl TransportSession {
             .iter()
             .zip(&transports)
             .map(|(round, t)| RoundSlot {
-                partial: t.empty(round),
+                chunks: (0..plan.n_chunks())
+                    .map(|_| ChunkSlot {
+                        partial: t.empty(round),
+                        submitted: 0,
+                        finished: false,
+                    })
+                    .collect(),
                 bits: BitsAccount::default(),
-                submitted: 0,
-                seen: vec![false; n_clients],
+                next_chunk: vec![0; n_clients],
+                has_direct: false,
                 folded: false,
+                announced: None,
             })
             .collect();
         Self {
@@ -282,7 +398,10 @@ impl TransportSession {
             transports,
             slots,
             cohorts: cohorts.to_vec(),
+            plan,
             closed: false,
+            live_bytes: 0,
+            peak_bytes: 0,
         }
     }
 
@@ -313,39 +432,138 @@ impl TransportSession {
         &self.transports[r]
     }
 
-    /// Fold one client's message into round r of the ring. Panics on a
-    /// duplicate submission — a client submitting twice must not be able
-    /// to stand in for a missing client in the fail-closed count (with
-    /// SecAgg, double-counted masks would unmask to garbage).
-    pub fn submit(&mut self, r: usize, client: usize, msg: &Descriptions) {
-        assert!(!self.closed, "fails closed: the session is already closed");
+    /// The coordinate-space chunking this session runs under.
+    pub fn plan(&self) -> ChunkPlan {
+        self.plan
+    }
+
+    /// High-water mark of live accumulator-payload bytes across the whole
+    /// session — O(active chunks · c), the quantity the chunked memory
+    /// model bounds (and the `rounds_chunked` bench series reports).
+    pub fn peak_accumulator_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// The set round r currently decodes over: the announced survivors
+    /// once [`TransportSession::announce_dropouts`] ran, the open-time
+    /// cohort otherwise.
+    pub fn survivors(&self, r: usize) -> &SurvivorSet {
+        match &self.slots[r].announced {
+            Some(a) => &a.survivors,
+            None => &self.cohorts[r],
+        }
+    }
+
+    /// Round r's bit accounting folded so far.
+    pub fn round_bits(&self, r: usize) -> BitsAccount {
+        self.slots[r].bits
+    }
+
+    fn note_bytes(&mut self, before: usize, after: usize) {
+        self.live_bytes = self.live_bytes - before + after;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+    }
+
+    /// Participation gate shared by both feeding paths: sampled-out
+    /// clients and announced-dropped clients cannot submit.
+    fn assert_may_submit(&self, r: usize, client: usize) {
         assert!(
             self.cohorts[r].is_alive(client),
             "fails closed: client {client} is sampled out of round {r} of the window and \
              cannot submit"
         );
+        if let Some(a) = &self.slots[r].announced {
+            assert!(
+                a.survivors.is_alive(client),
+                "fails closed: client {client} was announced dropped in round {r} of the \
+                 window and cannot submit"
+            );
+        }
+    }
+
+    /// Advance `client`'s chunk cursor to `k` + 1, failing closed on
+    /// duplicates (any re-submission of a chunk already covered — a client
+    /// submitting twice must not stand in for a missing client in the
+    /// fail-closed counts; with SecAgg, double-counted masks would unmask
+    /// to garbage) and on out-of-order chunks (the streaming discipline:
+    /// coordinate order, no gaps).
+    fn advance_cursor(slot: &mut RoundSlot, r: usize, k: usize, client: usize, n_chunks: usize) {
+        let nc = slot.next_chunk[client] as usize;
+        assert!(
+            k >= nc && nc < n_chunks,
+            "duplicate submission from client {client} in round {r} of the window"
+        );
+        assert!(
+            k == nc,
+            "out-of-order chunk submission from client {client} in round {r} of the window \
+             (got chunk {k}, expected chunk {nc})"
+        );
+        slot.next_chunk[client] = (k + 1) as u32;
+    }
+
+    /// Fold one client's whole-vector message into round r. On a chunked
+    /// session the dense description vector is split along the plan and
+    /// folded chunk by chunk — bit-identical to the client streaming its
+    /// chunks itself. Panics on duplicate submissions.
+    pub fn submit(&mut self, r: usize, client: usize, msg: &Descriptions) {
+        if self.plan.is_whole() {
+            self.submit_chunk(r, 0, client, msg);
+            return;
+        }
+        assert_eq!(
+            msg.ms.len(),
+            self.plan.dim(),
+            "whole-vector submit into a chunked session needs dense descriptions"
+        );
+        let plan = self.plan;
+        for (k, range) in plan.ranges().enumerate() {
+            let chunk_msg = Descriptions {
+                ms: msg.ms[range].to_vec(),
+                aux: msg.aux.clone(),
+                // bit accounting is a round-level quantity: count it once
+                bits: if k == 0 { msg.bits } else { BitsAccount::default() },
+            };
+            self.submit_chunk(r, k, client, &chunk_msg);
+        }
+    }
+
+    /// Fold one client's *chunk* message — descriptions covering the
+    /// plan's chunk `k` — into round r's chunk accumulator. Clients
+    /// stream chunks in coordinate order; duplicates and out-of-order
+    /// chunks fail closed, as do submissions into a chunk that already
+    /// finished.
+    pub fn submit_chunk(&mut self, r: usize, k: usize, client: usize, msg: &Descriptions) {
+        assert!(!self.closed, "fails closed: the session is already closed");
+        self.assert_may_submit(r, client);
+        let n_chunks = self.plan.n_chunks();
+        let lo = self.plan.range(k).start;
+        let transport = self.transports[r].clone();
+        let round = self.rounds[r];
         let slot = &mut self.slots[r];
         assert!(
             !slot.folded,
             "cannot mix direct submits with shard folds in round {r} of the window"
         );
+        slot.has_direct = true;
+        Self::advance_cursor(slot, r, k, client, n_chunks);
+        let chunk = &mut slot.chunks[k];
         assert!(
-            !slot.seen[client],
-            "duplicate submission from client {client} in round {r} of the window"
+            !chunk.finished,
+            "fails closed: chunk {k} of round {r} of the window already closed"
         );
-        slot.seen[client] = true;
         slot.bits.merge(&msg.bits);
-        self.transports[r].submit(&mut slot.partial, client, msg, &self.rounds[r]);
-        slot.submitted += 1;
+        let before = partial_bytes(&chunk.partial);
+        transport.submit_chunk(&mut chunk.partial, client, msg, lo, &round);
+        chunk.submitted += 1;
+        let after = partial_bytes(&chunk.partial);
+        self.note_bytes(before, after);
     }
 
     /// Fold a pre-folded shard partial covering the listed `clients`
     /// (global ids) into round r of the ring (the coordinator path: the
-    /// orchestrator never sees per-client messages). Every listed client
-    /// is marked submitted, so overlapping shard partials are rejected
-    /// like duplicate direct submissions, and dropout announcements are
-    /// checked against the same record at close — the fail-closed
-    /// contract is identical on both feeding paths.
+    /// orchestrator never sees per-client messages). Whole-vector shape —
+    /// requires the single-chunk plan; chunked coordinators ship
+    /// [`TransportSession::fold_chunk_partial`]s instead.
     pub fn fold_partial(
         &mut self,
         r: usize,
@@ -353,34 +571,69 @@ impl TransportSession {
         clients: &[usize],
         bits: &BitsAccount,
     ) {
+        assert!(
+            self.plan.is_whole(),
+            "whole-vector folds need a single-chunk plan — ship per-chunk partials \
+             (fold_chunk_partial) on a chunked session"
+        );
+        self.fold_chunk_partial(r, 0, partial, clients, bits);
+    }
+
+    /// Fold a shard's pre-folded *chunk* partial covering the listed
+    /// `clients` into round r's chunk `k`. Every listed client's cursor is
+    /// advanced, so overlapping shard partials are rejected like duplicate
+    /// direct submissions, and dropout announcements are checked against
+    /// the same record — the fail-closed contract is identical on both
+    /// feeding paths.
+    pub fn fold_chunk_partial(
+        &mut self,
+        r: usize,
+        k: usize,
+        partial: TransportPartial,
+        clients: &[usize],
+        bits: &BitsAccount,
+    ) {
         assert!(!self.closed, "fails closed: the session is already closed");
+        for &c in clients {
+            self.assert_may_submit(r, c);
+        }
+        let n_chunks = self.plan.n_chunks();
+        let transport = self.transports[r].clone();
         let slot = &mut self.slots[r];
         assert!(
-            slot.submitted == 0 || slot.folded,
+            !slot.has_direct,
             "cannot mix shard folds with direct submits in round {r} of the window"
         );
         slot.folded = true;
         for &c in clients {
-            assert!(
-                self.cohorts[r].is_alive(c),
-                "fails closed: client {c} is sampled out of round {r} of the window and \
-                 cannot submit"
-            );
-            assert!(
-                !slot.seen[c],
-                "duplicate submission from client {c} in round {r} of the window"
-            );
-            slot.seen[c] = true;
+            Self::advance_cursor(slot, r, k, c, n_chunks);
         }
+        let chunk = &mut slot.chunks[k];
+        assert!(
+            !chunk.finished,
+            "fails closed: chunk {k} of round {r} of the window already closed"
+        );
         slot.bits.merge(bits);
-        self.transports[r].merge(&mut slot.partial, partial);
-        slot.submitted += clients.len();
+        let before = partial_bytes(&chunk.partial);
+        transport.merge(&mut chunk.partial, partial);
+        chunk.submitted += clients.len();
+        let after = partial_bytes(&chunk.partial);
+        self.note_bytes(before, after);
     }
 
-    /// Whether every round of the window has all its *cohort's*
-    /// submissions (the full fleet on unsampled sessions).
+    /// Whether every chunk of every round has all its *expected*
+    /// submissions (the cohort, minus announced dropouts where an
+    /// announcement already ran).
     pub fn is_complete(&self) -> bool {
-        self.slots.iter().zip(&self.cohorts).all(|(s, c)| s.submitted == c.n_alive())
+        let full = self.plan.n_chunks() as u32;
+        (0..self.window()).all(|r| {
+            let expected = self.survivors(r).n_alive();
+            self.slots[r]
+                .chunks
+                .iter()
+                .all(|c| c.submitted == expected)
+                && self.slots[r].next_chunk.iter().filter(|&&c| c == full).count() == expected
+        })
     }
 
     /// Batched unmask: close every round of the window and surface the
@@ -400,20 +653,161 @@ impl TransportSession {
         self.close_with_dropouts(&none).into_iter().map(|(p, b, _)| (p, b)).collect()
     }
 
+    /// Validate and record round r's dropout announcement, fixing the
+    /// round's final decode set (see the module docs for the fail-closed
+    /// contract). In the batched close the announcements arrive AT close
+    /// ([`TransportSession::close_with_dropouts`] calls this per round);
+    /// a *streaming* close announces up front — before the round's chunks
+    /// finish — so each chunk can recover and unmask as soon as its
+    /// survivors have folded it. Either way:
+    /// * a client that submitted ANY chunk cannot be announced dropped,
+    ///   and an announced-dropped client cannot submit afterwards;
+    /// * share bundles are validated in full against the survivor set;
+    /// * nothing can be announced once the session closed, and a round
+    ///   cannot be announced twice.
+    pub fn announce_dropouts(&mut self, r: usize, ann: &RoundDropouts) {
+        assert!(
+            !self.closed,
+            "fails closed: dropout announced after close — the session is already closed"
+        );
+        assert!(
+            self.slots[r].announced.is_none(),
+            "round {r} of the window already has a dropout announcement"
+        );
+        // the final decode set: the open-time cohort minus the mid-round
+        // dropouts; only cohort members hold mask legs, so announcing a
+        // sampled-out client fails closed here
+        let survivors = self.cohorts[r].drop_cohort_members(&ann.dropped, r);
+        // the cursor record covers BOTH feeding paths (direct submits and
+        // shard folds), so this check cannot be bypassed by an
+        // announcement whose count happens to balance a real gap
+        for &j in &ann.dropped {
+            assert!(
+                self.slots[r].next_chunk[j] == 0,
+                "fails closed: client {j} submitted in round {r} but was announced \
+                 dropped — a live client cannot be recovered"
+            );
+        }
+        Self::validate_recovery_shares(r, ann, &survivors);
+        self.slots[r].announced = Some(Announced {
+            survivors,
+            dropped: ann.dropped.clone(),
+            shares: ann.shares.clone(),
+        });
+    }
+
+    /// Whether chunk k of round r has every expected submission and can
+    /// finish.
+    pub fn chunk_complete(&self, r: usize, k: usize) -> bool {
+        let c = &self.slots[r].chunks[k];
+        !c.finished && c.submitted == self.survivors(r).n_alive()
+    }
+
+    /// Close ONE chunk: reconstruct any announced dropouts' mask slice for
+    /// the chunk's coordinate range, unmask, release the accumulator, and
+    /// surface the chunk's server view. This is the streaming memory
+    /// bound in action — after this call the chunk pins no payload bytes.
+    ///
+    /// Fails closed if the chunk is missing submissions (an unannounced
+    /// gap), already finished, or the session already closed. Rounds with
+    /// dropouts must be announced (`announce_dropouts`) BEFORE their
+    /// chunks finish — the gap is otherwise indistinguishable from an
+    /// interruption.
+    pub fn finish_chunk(&mut self, r: usize, k: usize) -> Payload {
+        assert!(!self.closed, "fails closed: the session is already closed");
+        self.finish_chunk_inner(r, k)
+    }
+
+    fn finish_chunk_inner(&mut self, r: usize, k: usize) -> Payload {
+        let range = self.plan.range(k);
+        let expected = self.survivors(r).n_alive();
+        let transport = self.transports[r].clone();
+        let round = self.rounds[r];
+        let slot = &mut self.slots[r];
+        let chunk = &mut slot.chunks[k];
+        assert!(
+            !chunk.finished,
+            "fails closed: chunk {k} of round {r} of the window already closed"
+        );
+        assert!(
+            chunk.submitted == expected,
+            "interrupted session fails closed: chunk {k} of round {r} of the window has \
+             {}/{expected} expected submissions — refusing a partial unmask",
+            chunk.submitted,
+        );
+        let before = partial_bytes(&chunk.partial);
+        let mut partial = std::mem::replace(&mut chunk.partial, transport.empty(&round));
+        chunk.finished = true;
+        // masked transports: fold the reconstructed masks of every
+        // announced dropout back in — for THIS chunk's coordinate range
+        // only — so the residuals cancel before the signed lift
+        if let Some(a) = &slot.announced {
+            if let TransportPartial::Masked { sum: Some(v), modulus } = &mut partial {
+                let params = SecAggParams { modulus: *modulus };
+                for &j in &a.dropped {
+                    let shares: Vec<RecoveryShare> =
+                        a.shares.iter().filter(|s| s.dropped == j).copied().collect();
+                    let rec = secagg::reconstruct_dropped_masks_range(
+                        j,
+                        &shares,
+                        range.start,
+                        v.len(),
+                        params,
+                    );
+                    for (acc, mval) in v.iter_mut().zip(rec) {
+                        *acc = (*acc + mval) % *modulus;
+                    }
+                }
+            }
+        }
+        self.note_bytes(before, 0);
+        let survivors = self.survivors(r).clone();
+        transport.finish_survivors(partial, &round, &survivors)
+    }
+
+    /// Close a *streamed* session: every chunk of every round must already
+    /// have finished ([`TransportSession::finish_chunk`]); returns the
+    /// per-round bit accounting and survivor sets, in round order, and
+    /// seals the session. The batched sibling is
+    /// [`TransportSession::close_with_dropouts`].
+    pub fn close_streamed(&mut self) -> Vec<(BitsAccount, SurvivorSet)> {
+        assert!(!self.closed, "fails closed: the session is already closed");
+        for r in 0..self.window() {
+            for (k, c) in self.slots[r].chunks.iter().enumerate() {
+                assert!(
+                    c.finished,
+                    "interrupted session fails closed: chunk {k} of round {r} of the window \
+                     never closed"
+                );
+            }
+        }
+        self.closed = true;
+        (0..self.window()).map(|r| (self.slots[r].bits, self.survivors(r).clone())).collect()
+    }
+
     /// Batched unmask over announced dropouts: close every round of the
     /// window over its survivor set, reconstructing dropped clients'
     /// outstanding pairwise masks from the survivors' recovery shares
     /// before unmasking (see the module docs). Returns the per-round
-    /// server view, bit accounting, and survivor set, in round order.
+    /// server view, bit accounting, and survivor set, in round order. On
+    /// a chunked session the per-chunk views are concatenated back into
+    /// whole-d payloads — the single-chunk plan makes this byte-for-byte
+    /// the legacy whole-d close.
     ///
     /// Fail-closed contract (every violation panics before ANY round is
     /// unmasked):
     /// * announcing after a close already happened,
-    /// * a client that both submitted and is announced dropped,
+    /// * a client that both submitted (any chunk) and is announced
+    ///   dropped,
     /// * a submission gap no announcement explains,
     /// * a recovery share offered for a live (unannounced) client,
     /// * a share held by a dropped client, a duplicate share, or a share
-    ///   set that does not cover every survivor.
+    ///   set that does not cover every survivor,
+    /// * an announcement CONFLICTING with one a round already carries (an
+    ///   identical one is accepted — a session announced up front for
+    ///   streaming may still batch-close if no chunk finished yet),
+    /// * a session that already streamed chunk closes (those end with
+    ///   [`TransportSession::close_streamed`]).
     pub fn close_with_dropouts(
         &mut self,
         announced: &[RoundDropouts],
@@ -427,64 +821,72 @@ impl TransportSession {
             self.window(),
             "dropout announcements must cover every round of the window"
         );
-        // validate the whole window before unmasking any round
-        let mut survivor_sets = Vec::with_capacity(self.window());
-        for (r, ((slot, ann), cohort)) in
-            self.slots.iter().zip(announced).zip(&self.cohorts).enumerate()
-        {
-            // the final decode set: the open-time cohort minus the
-            // mid-round dropouts (identical to the PR 3 shape when the
-            // cohort is the full fleet); only cohort members hold mask
-            // legs, so announcing a sampled-out client fails closed here
-            let survivors = cohort.drop_cohort_members(&ann.dropped, r);
-            // the seen-record covers BOTH feeding paths (direct submits
-            // and shard folds), so this check cannot be bypassed by an
-            // announcement whose count happens to balance a real gap
-            for &j in &ann.dropped {
+        for (r, ann) in announced.iter().enumerate() {
+            // a streamed session legitimately announces up front
+            // (announce_dropouts docs); the batched close accepts a
+            // round's EXISTING announcement when it matches, and fails
+            // closed on any conflicting re-announcement
+            if self.slots[r].announced.is_some() {
+                let existing = self.slots[r].announced.as_ref().expect("checked");
                 assert!(
-                    !slot.seen[j],
-                    "fails closed: client {j} submitted in round {r} but was announced \
-                     dropped — a live client cannot be recovered"
+                    existing.dropped == ann.dropped && existing.shares == ann.shares,
+                    "fails closed: round {r} of the window already has a CONFLICTING \
+                     dropout announcement"
+                );
+            } else {
+                self.announce_dropouts(r, ann);
+            }
+        }
+        // validate the whole window before unmasking any chunk of any
+        // round: every cohort member either fully submitted or was
+        // announced dropped — partial (mid-stream) submitters are gaps
+        let full = self.plan.n_chunks() as u32;
+        for r in 0..self.window() {
+            let cohort_alive = self.cohorts[r].n_alive();
+            let dropped = cohort_alive - self.survivors(r).n_alive();
+            let slot = &self.slots[r];
+            let submitted_clients =
+                slot.next_chunk.iter().filter(|&&c| c == full).count();
+            assert!(
+                submitted_clients + dropped == cohort_alive,
+                "interrupted session fails closed: round {r} of the window has \
+                 {submitted_clients}/{cohort_alive} cohort submissions with {dropped} \
+                 announced dropouts — refusing any partial unmask",
+            );
+            for (k, c) in slot.chunks.iter().enumerate() {
+                assert!(
+                    !c.finished,
+                    "cannot batch-close round {r}: chunk {k} already closed through the \
+                     streaming path — finish the stream with close_streamed"
                 );
             }
-            assert!(
-                slot.submitted + ann.dropped.len() == cohort.n_alive(),
-                "interrupted session fails closed: round {r} of the window has {}/{} cohort \
-                 submissions with {} announced dropouts — refusing any partial unmask",
-                slot.submitted,
-                cohort.n_alive(),
-                ann.dropped.len(),
-            );
-            Self::validate_recovery_shares(r, ann, &survivors);
-            survivor_sets.push(survivors);
         }
         self.closed = true;
-        let slots = std::mem::take(&mut self.slots);
-        slots
-            .into_iter()
-            .zip(&self.rounds)
-            .zip(&self.transports)
-            .zip(announced)
-            .zip(survivor_sets)
-            .map(|((((slot, round), t), ann), survivors)| {
-                let mut partial = slot.partial;
-                // masked transports: fold the reconstructed masks of every
-                // dropped client back in so the residuals cancel
-                if let TransportPartial::Masked { sum: Some(v), modulus } = &mut partial {
-                    let params = SecAggParams { modulus: *modulus };
-                    for &j in &ann.dropped {
-                        let shares: Vec<RecoveryShare> =
-                            ann.shares.iter().filter(|s| s.dropped == j).copied().collect();
-                        let rec =
-                            secagg::reconstruct_dropped_masks(j, &shares, v.len(), params);
-                        for (a, mval) in v.iter_mut().zip(rec) {
-                            *a = (*a + mval) % *modulus;
-                        }
-                    }
-                }
-                (t.finish_survivors(partial, round, &survivors), slot.bits, survivors)
+        (0..self.window())
+            .map(|r| {
+                let payload = self.assemble_round_payload(r);
+                (payload, self.slots[r].bits, self.survivors(r).clone())
             })
             .collect()
+    }
+
+    /// Finish every chunk of round r and concatenate the views into one
+    /// whole-d payload (the batched-close path; single-chunk plans pass
+    /// the lone chunk's payload through untouched).
+    fn assemble_round_payload(&mut self, r: usize) -> Payload {
+        if self.plan.is_whole() {
+            return self.finish_chunk_inner(r, 0);
+        }
+        let mut sum: Vec<i64> = Vec::with_capacity(self.plan.dim());
+        for k in 0..self.plan.n_chunks() {
+            match self.finish_chunk_inner(r, k) {
+                Payload::Sum(v) => sum.extend(v),
+                Payload::PerClient(_) => {
+                    unreachable!("multi-chunk plans run only over sum transports")
+                }
+            }
+        }
+        Payload::Sum(sum)
     }
 
     /// The share-bundle half of the fail-closed contract (see
@@ -641,6 +1043,145 @@ pub fn run_window_sampled(
         .map(|((payload, bits, survivors), round)| RoundOutput {
             estimate: decoder.decode_survivors(&payload, &round, &survivors),
             bits,
+        })
+        .collect()
+}
+
+/// [`run_window_sampled`] over a CHUNKED coordinate space: the session
+/// opens under a [`ChunkPlan`] of chunk size `chunk`, dropouts are
+/// announced up front (the schedule is known in-process), and the window
+/// streams chunk by chunk — every survivor encodes and submits chunk k
+/// before anyone touches chunk k+1, each chunk unmasks and (for
+/// chunk-decodable mechanisms) decodes the moment its survivors have
+/// folded it, and its accumulator is released before the next chunk
+/// starts. Peak accumulator state is O(W·c) instead of O(W·d)
+/// (`TransportSession::peak_accumulator_bytes` measures it).
+///
+/// Because every per-coordinate stream is seekable, this is
+/// **bit-identical** to [`run_window_sampled`] for every chunk size —
+/// the property matrix in `rust/tests/property_chunked.rs` enforces it
+/// across mechanisms × transports × dropouts × sampling × chunk sizes.
+/// Decoders that need the whole-d sum at once
+/// ([`ServerDecoder::chunk_decodable`] = false, e.g. rotation-based DDG)
+/// still stream the transport; their chunk sums are assembled into one
+/// O(d) vector — the size of the estimate itself — and decoded at round
+/// close.
+#[allow(clippy::too_many_arguments)]
+pub fn run_window_chunked(
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    rounds: &[(&[Vec<f64>], u64)],
+    session_seed: u64,
+    cohorts: &[SurvivorSet],
+    dropouts: &[Vec<usize>],
+    chunk: usize,
+) -> Vec<RoundOutput> {
+    assert!(!rounds.is_empty(), "a session window needs at least one round");
+    assert_eq!(
+        cohorts.len(),
+        rounds.len(),
+        "cohort schedule must cover every round of the window"
+    );
+    assert_eq!(
+        dropouts.len(),
+        rounds.len(),
+        "dropout schedule must cover every round of the window"
+    );
+    let (xs0, _) = rounds[0];
+    assert!(!xs0.is_empty(), "need at least one client");
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    let n = xs0.len();
+    let dim = xs0[0].len();
+    let seeds: Vec<u64> = rounds.iter().map(|&(_, seed)| seed).collect();
+    let mut session = TransportSession::open_sampled_chunked(
+        transport,
+        session_seed,
+        n,
+        dim,
+        &seeds,
+        cohorts,
+        chunk,
+    );
+    let plan = session.plan();
+    // announce every round's dropouts before streaming: the survivors are
+    // then known per chunk, so chunks can recover + unmask as they fill
+    let survivor_sets: Vec<SurvivorSet> = (0..rounds.len())
+        .map(|r| {
+            let survivors = cohorts[r].drop_cohort_members(&dropouts[r], r);
+            session.announce_dropouts(
+                r,
+                &RoundDropouts::announce_among(session_seed, r as u64, &survivors, &dropouts[r]),
+            );
+            survivors
+        })
+        .collect();
+    let mut estimates: Vec<Vec<f64>> = vec![vec![0.0f64; dim]; rounds.len()];
+    // non-chunk-decodable mechanisms assemble the whole-d sum (the size
+    // of the estimate itself) and decode once per round
+    let mut sums: Vec<Vec<i64>> = if decoder.chunk_decodable() {
+        Vec::new()
+    } else {
+        vec![vec![0i64; dim]; rounds.len()]
+    };
+    for k in 0..plan.n_chunks() {
+        let range = plan.range(k);
+        for (r, &(xs, _)) in rounds.iter().enumerate() {
+            assert_eq!(xs.len(), n, "client count changed mid-session");
+            let round = *session.round(r);
+            for i in survivor_sets[r].alive_iter() {
+                let x = &xs[i];
+                assert_eq!(x.len(), dim, "ragged client vectors");
+                let msg = encoder.encode_chunk(i, x, range.clone(), &round);
+                session.submit_chunk(r, k, i, &msg);
+            }
+            debug_assert!(session.chunk_complete(r, k));
+            let payload = session.finish_chunk(r, k);
+            if decoder.chunk_decodable() {
+                let est =
+                    decoder.decode_survivors_chunk(&payload, range.start, &round, &survivor_sets[r]);
+                assert_eq!(est.len(), range.len(), "chunk decode length mismatch");
+                estimates[r][range.clone()].copy_from_slice(&est);
+            } else {
+                match payload {
+                    Payload::Sum(v) if !plan.is_whole() => {
+                        sums[r][range.clone()].copy_from_slice(&v)
+                    }
+                    p => {
+                        // single-chunk plans (the only shape per-client
+                        // transports and padded description spaces can
+                        // take) decode the lone chunk directly
+                        estimates[r] =
+                            decoder.decode_survivors(&p, &round, &survivor_sets[r]);
+                    }
+                }
+            }
+        }
+    }
+    let closed = session.close_streamed();
+    closed
+        .into_iter()
+        .enumerate()
+        .map(|(r, (bits, survivors))| {
+            let round = SharedRound::new(seeds[r], n, dim);
+            let estimate = if !decoder.chunk_decodable()
+                && transport.sum_only()
+                && !plan.is_whole()
+            {
+                // whole-d decode over the assembled sum (e.g. DDG's
+                // inverse rotation needs every coordinate at once)
+                decoder.decode_survivors(
+                    &Payload::Sum(std::mem::take(&mut sums[r])),
+                    &round,
+                    &survivors,
+                )
+            } else {
+                std::mem::take(&mut estimates[r])
+            };
+            RoundOutput { estimate, bits }
         })
         .collect()
 }
@@ -1269,6 +1810,351 @@ mod tests {
         assert!(!session.is_complete());
         session.submit(0, 2, &mech.encode(2, &xs[2], &round));
         assert!(session.is_complete());
+    }
+
+    // -----------------------------------------------------------------
+    // chunked coordinate-space streaming
+    // -----------------------------------------------------------------
+
+    /// Chunk-capable toy: per-coordinate seeded jitter from the seekable
+    /// client streams, decode = Σm/(4·n′) per coordinate — the minimal
+    /// homomorphic mechanism whose chunked and unchunked paths can be
+    /// compared bit for bit without real quantizer machinery.
+    #[derive(Clone, Debug)]
+    struct CoordJitter;
+
+    impl ClientEncoder for CoordJitter {
+        fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
+            self.encode_chunk(client, x, 0..x.len(), round)
+        }
+
+        fn encode_chunk(
+            &self,
+            client: usize,
+            x: &[f64],
+            range: std::ops::Range<usize>,
+            round: &SharedRound,
+        ) -> Descriptions {
+            let s = round.client_coord_stream(client);
+            let mut bits = BitsAccount::default();
+            let ms: Vec<i64> = range
+                .map(|j| {
+                    let m = round_half_up(4.0 * (x[j] + s.at(j).u01()));
+                    bits.add_description(m);
+                    m
+                })
+                .collect();
+            Descriptions { ms, aux: vec![], bits }
+        }
+    }
+
+    impl ServerDecoder for CoordJitter {
+        fn sum_decodable(&self) -> bool {
+            true
+        }
+
+        fn decode(&self, payload: &Payload, round: &SharedRound) -> Vec<f64> {
+            self.decode_survivors(payload, round, &SurvivorSet::full(round.n_clients))
+        }
+
+        fn decode_survivors(
+            &self,
+            payload: &Payload,
+            round: &SharedRound,
+            survivors: &SurvivorSet,
+        ) -> Vec<f64> {
+            self.decode_survivors_chunk(payload, 0, round, survivors)
+        }
+
+        fn chunk_decodable(&self) -> bool {
+            true
+        }
+
+        fn decode_survivors_chunk(
+            &self,
+            payload: &Payload,
+            _lo: usize,
+            _round: &SharedRound,
+            survivors: &SurvivorSet,
+        ) -> Vec<f64> {
+            payload
+                .description_sum()
+                .iter()
+                .map(|&s| s as f64 / (4.0 * survivors.n_alive() as f64))
+                .collect()
+        }
+    }
+
+    impl MechSpec for CoordJitter {
+        fn name(&self) -> String {
+            "coord-jitter".into()
+        }
+
+        fn is_homomorphic(&self) -> bool {
+            true
+        }
+
+        fn gaussian_noise(&self) -> bool {
+            false
+        }
+
+        fn fixed_length(&self) -> bool {
+            false
+        }
+
+        fn noise_sd(&self) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn chunked_streamed_window_is_bit_identical_to_batched_whole_d_close() {
+        // the tentpole invariant at session level: streaming chunk by
+        // chunk over any chunk size equals the whole-d batched session,
+        // estimates AND bits, with dropouts and a sampled cohort composed
+        let mech = CoordJitter;
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let n = inputs[0].0.len();
+        let d = inputs[0].0[0].len();
+        let cohorts: Vec<SurvivorSet> = vec![
+            SurvivorSet::full(n),
+            SurvivorSet::with_dropped(n, &[1]), // sampled-out client
+            SurvivorSet::full(n),
+            SurvivorSet::full(n),
+        ];
+        let dropouts: Vec<Vec<usize>> = vec![vec![2], vec![], vec![], vec![0]];
+        let whole = run_window_sampled(
+            &mech, &SecAgg::new(), &mech, &rounds, 0xC4, &cohorts, &dropouts,
+        );
+        for chunk in [1usize, 2, 3, d, d + 3] {
+            let streamed = run_window_chunked(
+                &mech, &SecAgg::new(), &mech, &rounds, 0xC4, &cohorts, &dropouts, chunk,
+            );
+            for (r, (s, w)) in streamed.iter().zip(&whole).enumerate() {
+                assert_eq!(s.estimate, w.estimate, "chunk {chunk}, round {r}");
+                assert_eq!(s.bits.messages, w.bits.messages, "chunk {chunk}, round {r}");
+                assert_eq!(s.bits.variable_total, w.bits.variable_total);
+                assert_eq!(s.bits.fixed_total, w.bits.fixed_total);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_streaming_peak_memory_is_o_chunk_not_o_d() {
+        // drive two sessions over the same window: the whole-d batched
+        // session peaks at W·d accumulator bytes (every round's full
+        // vector is live at close), the streamed c-chunked one at O(c)
+        let mech = CoordJitter;
+        let inputs = window_inputs();
+        let rounds: Vec<(&[Vec<f64>], u64)> =
+            inputs.iter().map(|(xs, s)| (xs.as_slice(), *s)).collect();
+        let n = inputs[0].0.len();
+        let d = inputs[0].0[0].len();
+        let w = rounds.len();
+        let seeds: Vec<u64> = rounds.iter().map(|&(_, s)| s).collect();
+        let cohorts = vec![SurvivorSet::full(n); w];
+
+        let mut whole =
+            TransportSession::open(&SecAgg::new(), 7, n, d, &seeds);
+        for (r, &(xs, _)) in rounds.iter().enumerate() {
+            let round = *whole.round(r);
+            for (i, x) in xs.iter().enumerate() {
+                whole.submit(r, i, &mech.encode(i, x, &round));
+            }
+        }
+        let _ = whole.close();
+        assert_eq!(whole.peak_accumulator_bytes(), w * d * 8);
+
+        let chunk = 1usize;
+        let mut streamed = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 7, n, d, &seeds, &cohorts, chunk,
+        );
+        let plan = streamed.plan();
+        for k in 0..plan.n_chunks() {
+            let range = plan.range(k);
+            for (r, &(xs, _)) in rounds.iter().enumerate() {
+                let round = *streamed.round(r);
+                for (i, x) in xs.iter().enumerate() {
+                    let msg = mech.encode_chunk(i, x, range.clone(), &round);
+                    streamed.submit_chunk(r, k, i, &msg);
+                }
+                let _ = streamed.finish_chunk(r, k);
+            }
+        }
+        let _ = streamed.close_streamed();
+        // one c-sized masked accumulator live at a time
+        assert_eq!(streamed.peak_accumulator_bytes(), chunk * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order chunk submission")]
+    fn chunked_out_of_order_chunk_submission_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 1,
+        );
+        let round = *session.round(0);
+        // client 0 skips chunk 0 and submits chunk 1 first
+        let msg = mech.encode_chunk(0, &xs[0], 1..2, &round);
+        session.submit_chunk(0, 1, 0, &msg);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate submission")]
+    fn chunked_duplicate_chunk_submission_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 1,
+        );
+        let round = *session.round(0);
+        let msg = mech.encode_chunk(0, &xs[0], 0..1, &round);
+        session.submit_chunk(0, 0, 0, &msg);
+        session.submit_chunk(0, 0, 0, &msg);
+    }
+
+    #[test]
+    #[should_panic(expected = "announced dropped in round 0 of the window and cannot submit")]
+    fn chunked_announced_dropped_client_cannot_submit_afterwards() {
+        // the streaming announce-first ordering closes the reverse hole of
+        // "submitted then announced": once announced dropped, a client's
+        // late chunks are rejected
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let n = xs.len();
+        let session_seed = 0xDA;
+        let cohorts = [SurvivorSet::full(n)];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), session_seed, n, xs[0].len(), &[5], &cohorts, 2,
+        );
+        let survivors = SurvivorSet::with_dropped(n, &[2]);
+        session.announce_dropouts(
+            0,
+            &RoundDropouts::announce_among(session_seed, 0, &survivors, &[2]),
+        );
+        let round = *session.round(0);
+        let msg = mech.encode_chunk(2, &xs[2], 0..2, &round);
+        session.submit_chunk(0, 0, 2, &msg);
+    }
+
+    #[test]
+    fn chunked_preannounced_session_still_batch_closes_identically() {
+        // announce-up-front (the streaming discipline) must not wall off
+        // the batched close: with no chunk finished yet, an identical
+        // announcement at close is accepted and the result equals the
+        // announce-at-close session bit for bit
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let n = xs.len();
+        let session_seed = 0xDB;
+        let survivors = SurvivorSet::with_dropped(n, &[2]);
+        let ann = RoundDropouts::announce(session_seed, 0, &survivors);
+
+        let mut early =
+            TransportSession::open(&SecAgg::new(), session_seed, n, xs[0].len(), &[5]);
+        early.announce_dropouts(0, &ann);
+        let mut late =
+            TransportSession::open(&SecAgg::new(), session_seed, n, xs[0].len(), &[5]);
+        let round = *early.round(0);
+        for i in survivors.alive_iter() {
+            let msg = mech.encode(i, &xs[i], &round);
+            early.submit(0, i, &msg);
+            late.submit(0, i, &msg);
+        }
+        let a = early.close_with_dropouts(std::slice::from_ref(&ann));
+        let b = late.close_with_dropouts(std::slice::from_ref(&ann));
+        assert_eq!(a[0].0.description_sum(), b[0].0.description_sum());
+        assert_eq!(a[0].2, b[0].2);
+    }
+
+    #[test]
+    #[should_panic(expected = "CONFLICTING")]
+    fn chunked_conflicting_reannouncement_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let n = xs.len();
+        let session_seed = 0xDC;
+        let survivors = SurvivorSet::with_dropped(n, &[2]);
+        let mut session =
+            TransportSession::open(&SecAgg::new(), session_seed, n, xs[0].len(), &[5]);
+        session.announce_dropouts(0, &RoundDropouts::announce(session_seed, 0, &survivors));
+        let round = *session.round(0);
+        for i in survivors.alive_iter() {
+            session.submit(0, i, &mech.encode(i, &xs[i], &round));
+        }
+        // same dropped set but a different (re-derived under another
+        // seed) share bundle: the batched close must refuse it
+        let other = RoundDropouts::announce(session_seed ^ 1, 0, &survivors);
+        let _ = session.close_with_dropouts(&[other]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never closed")]
+    fn chunked_close_streamed_with_unfinished_chunk_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 2,
+        );
+        let round = *session.round(0);
+        for (i, x) in xs.iter().enumerate() {
+            session.submit_chunk(0, 0, i, &mech.encode_chunk(i, x, 0..2, &round));
+        }
+        let _ = session.finish_chunk(0, 0);
+        // chunk 1 never ran
+        let _ = session.close_streamed();
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot batch-close")]
+    fn chunked_batch_close_after_streaming_finish_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 2,
+        );
+        let round = *session.round(0);
+        for (i, x) in xs.iter().enumerate() {
+            session.submit_chunk(0, 0, i, &mech.encode_chunk(i, x, 0..2, &round));
+        }
+        let _ = session.finish_chunk(0, 0);
+        for (i, x) in xs.iter().enumerate() {
+            session.submit_chunk(0, 1, i, &mech.encode_chunk(i, x, 2..3, &round));
+        }
+        let _ = session.close_with_dropouts(&[RoundDropouts::default()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not chunk-capable")]
+    fn chunked_unicast_session_fails_closed_on_multi_chunk_plans() {
+        let cohorts = [SurvivorSet::full(3)];
+        let _ = TransportSession::open_sampled_chunked(
+            &Unicast, 9, 3, 4, &[5], &cohorts, 2,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "interrupted session fails closed")]
+    fn chunked_finish_chunk_with_missing_submission_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 2,
+        );
+        let round = *session.round(0);
+        // client 2 missing from chunk 0
+        for i in [0usize, 1] {
+            session.submit_chunk(0, 0, i, &mech.encode_chunk(i, &xs[i], 0..2, &round));
+        }
+        let _ = session.finish_chunk(0, 0);
     }
 
     #[test]

@@ -11,11 +11,11 @@
 //! coordinate (Prop. 4).
 //!
 //! Pipeline shape: the subsampling rows Bᵢ are shared randomness — each
-//! client's row derives from its own stream
-//! ([`SharedRound::subsample_rng`]), so encoding derives ONE row in O(d)
-//! and no party materializes the O(n·d) matrix (the decoder re-derives
-//! rows client by client; only the O(d) selected counts ñ(j) are cached
-//! per round). A client sends one description per *selected* coordinate,
+//! client's row derives from its own per-coordinate stream family
+//! ([`SharedRound::subsample_coord_stream`]), so encoding derives ONE row
+//! in O(d) and no party materializes the O(n·d) matrix (the decoder
+//! re-derives rows client by client; only the O(d) selected counts ñ(j)
+//! are cached per round). A client sends one description per *selected* coordinate,
 //! so messages are ragged and the mechanism is NOT homomorphic — it rides
 //! the Unicast transport.
 
@@ -59,13 +59,16 @@ impl Sigm {
         let per_sd = self.sigma * self.gamma * n as f64;
         let gamma = self.gamma;
         self.round_state.get_or(round, || {
-            // ñ(j) = Σᵢ Bᵢ(j): fold each client's derived row without ever
-            // materializing the matrix — O(d) memory
+            // ñ(j) = Σᵢ Bᵢ(j): fold each client's derived selections
+            // without ever materializing the matrix — O(d) memory. The
+            // per-coordinate subsample family is shared with CSGM, so the
+            // matched-subsample comparison of Figs. 5/7 holds under any
+            // chunking of CSGM's coordinate space.
             let mut n_tilde = vec![0.0f64; d];
             for i in 0..n {
-                let mut brng = round.subsample_rng(i);
-                for nt in n_tilde.iter_mut() {
-                    if brng.bernoulli(gamma) {
+                let select = round.subsample_coord_stream(i);
+                for (j, nt) in n_tilde.iter_mut().enumerate() {
+                    if select.at(j).bernoulli(gamma) {
                         *nt += 1.0;
                     }
                 }
@@ -101,15 +104,17 @@ impl ClientEncoder for Sigm {
     fn encode(&self, client: usize, x: &[f64], round: &SharedRound) -> Descriptions {
         let st = self.state(round);
         let per_sd = self.sigma * self.gamma * round.n_clients as f64;
-        // the client derives only ITS OWN subsample row — O(d) encode
-        let mut brng = round.subsample_rng(client);
+        // the client derives only ITS OWN subsample selections — O(d)
+        // encode (the ragged step-draw stream below stays sequential:
+        // SIGM is not chunk-capable, its message has no coordinate grid)
+        let select = round.subsample_coord_stream(client);
         let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0f64;
         // ragged: one description per SELECTED coordinate, in j order
         let mut ms = Vec::new();
         for (j, &xj) in x.iter().enumerate() {
-            if !brng.bernoulli(self.gamma) {
+            if !select.at(j).bernoulli(self.gamma) {
                 continue;
             }
             let s = st.q.draw(&mut rng);
@@ -143,14 +148,15 @@ impl ServerDecoder for Sigm {
         assert_eq!(list.len(), n);
         let mut estimate = vec![0.0f64; d];
         for (i, (ms, _)) in list.iter().enumerate() {
-            // re-derive client i's subsample row and step draws; the draw
-            // stream advances only on selected coordinates, matching the
-            // encoder — O(d) working state per client, no cached matrix
-            let mut brng = round.subsample_rng(i);
+            // re-derive client i's subsample selections and step draws;
+            // the draw stream advances only on selected coordinates,
+            // matching the encoder — O(d) working state per client, no
+            // cached matrix
+            let select = round.subsample_coord_stream(i);
             let mut rng = round.client_rng(i);
             let mut k = 0usize;
-            for ej in estimate.iter_mut() {
-                if !brng.bernoulli(self.gamma) {
+            for (j, ej) in estimate.iter_mut().enumerate() {
+                if !select.at(j).bernoulli(self.gamma) {
                     continue;
                 }
                 let s = st.q.draw(&mut rng);

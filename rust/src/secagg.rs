@@ -24,6 +24,14 @@
 //!   pairwise-mask root, from which [`mask_descriptions`] expands the
 //!   per-pair ℤ_m streams.
 //!
+//! Mask expansion itself is *per coordinate* and seekable
+//! ([`crate::util::rng::Rng::derive_coord`]): coordinate j's mask under a
+//! pair seed depends only on (pair seed, j). The chunked pipeline
+//! therefore masks, sums, and — on dropout — recovers one coordinate
+//! chunk at a time ([`mask_descriptions_range`],
+//! [`reconstruct_dropped_masks_range`]) in O(chunk) state, bit-identical
+//! to whole-vector masking for every chunking.
+//!
 //! Every client and the server derive the identical schedule from the
 //! session seed alone, so no per-round communication is needed, and
 //! because each round's masks still cancel exactly over the full client
@@ -137,6 +145,18 @@ pub fn recovery_share(root_seed: u64, holder: usize, dropped: usize) -> Recovery
     RecoveryShare { dropped, holder, pair_seed: pair_seed(root_seed, holder, dropped) }
 }
 
+/// The mask of coordinate `coord` under a pairwise seed — a *seekable*
+/// per-coordinate expansion ([`Rng::derive_coord`]): the mask of
+/// coordinate j depends only on (pair seed, j), never on how many
+/// coordinates were expanded before it. This is what lets the chunked
+/// pipeline mask (and recover) only the active chunk's coordinate slice
+/// while staying bit-identical to whole-vector masking — chunk boundaries
+/// cannot change any mask bit (see docs/determinism.md).
+#[inline]
+fn coord_mask(pair_seed: u64, coord: usize, m: u64) -> u64 {
+    Rng::derive_coord(pair_seed, coord as u64).below(m)
+}
+
 /// Server-side: re-expand dropped client `dropped`'s outstanding pairwise
 /// mask legs over the share holders (mod m). Adding the result to the
 /// masked survivor sum cancels exactly the residual masks the dropped
@@ -153,8 +173,23 @@ pub fn reconstruct_dropped_masks(
     d: usize,
     params: SecAggParams,
 ) -> Vec<u64> {
+    reconstruct_dropped_masks_range(dropped, shares, 0, d, params)
+}
+
+/// [`reconstruct_dropped_masks`] for one coordinate chunk: re-expand only
+/// the mask slice covering coordinates `[lo, lo + len)` — O(len) work and
+/// state, the recovery path of the chunked session (each chunk of a round
+/// with announced dropouts re-expands the dropped clients' legs for its
+/// own range as it closes).
+pub fn reconstruct_dropped_masks_range(
+    dropped: usize,
+    shares: &[RecoveryShare],
+    lo: usize,
+    len: usize,
+    params: SecAggParams,
+) -> Vec<u64> {
     let m = params.modulus;
-    let mut out = vec![0u64; d];
+    let mut out = vec![0u64; len];
     let mut holders: Vec<usize> = Vec::with_capacity(shares.len());
     for share in shares {
         assert_eq!(
@@ -172,10 +207,9 @@ pub fn reconstruct_dropped_masks(
         // the dropped client's perspective of the pair (mirrors
         // `mask_descriptions`): it would have ADDED the stream for
         // higher-indexed peers and SUBTRACTED it for lower-indexed ones
-        let mut rng = Rng::new(share.pair_seed);
         let add = dropped < share.holder;
-        for o in out.iter_mut() {
-            let mask = rng.below(m);
+        for (k, o) in out.iter_mut().enumerate() {
+            let mask = coord_mask(share.pair_seed, lo + k, m);
             *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
         }
     }
@@ -183,14 +217,15 @@ pub fn reconstruct_dropped_masks(
 }
 
 /// Fold one pairwise mask leg (client ↔ other) into an already-lifted
-/// field vector: `client` ADDS the pair stream when it is the
-/// lower-indexed end, SUBTRACTS it otherwise — the sign convention both
-/// [`mask_descriptions`] and [`reconstruct_dropped_masks`] mirror.
-fn fold_pair_leg(out: &mut [u64], client: usize, other: usize, root_seed: u64, m: u64) {
-    let mut rng = Rng::new(pair_seed(root_seed, client, other));
+/// field vector covering coordinates `[lo, lo + out.len())`: `client`
+/// ADDS the pair stream when it is the lower-indexed end, SUBTRACTS it
+/// otherwise — the sign convention both [`mask_descriptions_range`] and
+/// [`reconstruct_dropped_masks_range`] mirror.
+fn fold_pair_leg(out: &mut [u64], client: usize, other: usize, root_seed: u64, m: u64, lo: usize) {
+    let ps = pair_seed(root_seed, client, other);
     let add = client < other;
-    for o in out.iter_mut() {
-        let mask = rng.below(m);
+    for (k, o) in out.iter_mut().enumerate() {
+        let mask = coord_mask(ps, lo + k, m);
         *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
     }
 }
@@ -204,13 +239,29 @@ pub fn mask_descriptions(
     root_seed: u64,
     params: SecAggParams,
 ) -> Vec<u64> {
+    mask_descriptions_range(ms, client, n_clients, root_seed, params, 0)
+}
+
+/// [`mask_descriptions`] for one coordinate chunk: `ms` holds the
+/// descriptions of coordinates `[lo, lo + ms.len())` and the masks are the
+/// per-coordinate expansions for exactly that slice — O(chunk) work per
+/// pair leg, and bit-identical to the corresponding slice of the
+/// whole-vector masking for any chunking.
+pub fn mask_descriptions_range(
+    ms: &[i64],
+    client: usize,
+    n_clients: usize,
+    root_seed: u64,
+    params: SecAggParams,
+    lo: usize,
+) -> Vec<u64> {
     let m = params.modulus;
     let mut out: Vec<u64> = ms.iter().map(|&v| to_field(v, m)).collect();
     for other in 0..n_clients {
         if other == client {
             continue;
         }
-        fold_pair_leg(&mut out, client, other, root_seed, m);
+        fold_pair_leg(&mut out, client, other, root_seed, m, lo);
     }
     out
 }
@@ -232,6 +283,19 @@ pub fn mask_descriptions_among(
     root_seed: u64,
     params: SecAggParams,
 ) -> Vec<u64> {
+    mask_descriptions_among_range(ms, client, members, root_seed, params, 0)
+}
+
+/// [`mask_descriptions_among`] for one coordinate chunk (see
+/// [`mask_descriptions_range`] for the chunk semantics).
+pub fn mask_descriptions_among_range(
+    ms: &[i64],
+    client: usize,
+    members: &[usize],
+    root_seed: u64,
+    params: SecAggParams,
+    lo: usize,
+) -> Vec<u64> {
     assert!(
         members.windows(2).all(|w| w[0] < w[1]),
         "cohort member list must be strictly increasing (sorted, duplicate-free)"
@@ -246,7 +310,7 @@ pub fn mask_descriptions_among(
         if other == client {
             continue;
         }
-        fold_pair_leg(&mut out, client, other, root_seed, m);
+        fold_pair_leg(&mut out, client, other, root_seed, m, lo);
     }
     out
 }
@@ -391,6 +455,54 @@ mod tests {
         // a duplicated id would fold the (0,1) leg twice for client 0 but
         // once for client 1 — an uncancelled mask, caught at the API edge
         let _ = mask_descriptions_among(&[1], 0, &[0, 1, 1], 9, SecAggParams::default());
+    }
+
+    #[test]
+    fn chunked_mask_ranges_concatenate_to_whole_masking() {
+        // per-coordinate mask expansion: masking chunk [lo, hi) produces
+        // exactly the slice of the whole-vector masking, for any chunking
+        let params = SecAggParams::default();
+        let ms: Vec<i64> = (0..11).map(|i| 3 * i - 16).collect();
+        let whole = mask_descriptions(&ms, 1, 4, 0xAB, params);
+        for c in [1usize, 3, 11, 14] {
+            let mut got = Vec::new();
+            let mut lo = 0;
+            while lo < ms.len() {
+                let hi = (lo + c).min(ms.len());
+                got.extend(mask_descriptions_range(&ms[lo..hi], 1, 4, 0xAB, params, lo));
+                lo = hi;
+            }
+            assert_eq!(got, whole, "chunk size {c}");
+        }
+        // the cohort variant slices identically
+        let members = [0usize, 1, 3];
+        let whole_c = mask_descriptions_among(&ms, 1, &members, 0xAB, params);
+        let mut got = Vec::new();
+        for lo in (0..ms.len()).step_by(4) {
+            let hi = (lo + 4).min(ms.len());
+            got.extend(mask_descriptions_among_range(
+                &ms[lo..hi], 1, &members, 0xAB, params, lo,
+            ));
+        }
+        assert_eq!(got, whole_c);
+    }
+
+    #[test]
+    fn chunked_recovery_ranges_concatenate_to_whole_reconstruction() {
+        let params = SecAggParams::default();
+        let shares = [recovery_share(9, 0, 2), recovery_share(9, 1, 2)];
+        let d = 10;
+        let whole = reconstruct_dropped_masks(2, &shares, d, params);
+        for c in [1usize, 4, 10] {
+            let mut got = Vec::new();
+            let mut lo = 0;
+            while lo < d {
+                let len = c.min(d - lo);
+                got.extend(reconstruct_dropped_masks_range(2, &shares, lo, len, params));
+                lo += len;
+            }
+            assert_eq!(got, whole, "chunk size {c}");
+        }
     }
 
     #[test]

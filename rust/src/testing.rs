@@ -17,7 +17,7 @@ use crate::coordinator::sampling::SamplingPolicy;
 use crate::mechanisms::pipeline::{
     ClientEncoder, MechSpec, Plain, ServerDecoder, SharedRound, SurvivorSet, Transport,
 };
-use crate::mechanisms::session::run_window_sampled;
+use crate::mechanisms::session::{run_window_chunked, run_window_sampled};
 use crate::mechanisms::traits::BitsAccount;
 use crate::util::rng::{seed_domain, Rng};
 
@@ -345,6 +345,80 @@ pub fn assert_sampled_window_closes_exactly<M>(
     }
 }
 
+/// The chunked ≡ unchunked acceptance check: run the SAME sampled window —
+/// cohorts derived from `policy`, `dropouts[r]` mid-round dropouts — once
+/// through the whole-d batched session ([`run_window_sampled`]) and once
+/// through the chunk-streamed session ([`run_window_chunked`]) for every
+/// chunk size in `chunks`, and assert the outputs are *bit-identical*:
+/// estimates AND bit accounting, round for round. Because every
+/// per-coordinate stream is seekable, chunk boundaries cannot change any
+/// drawn bit — this helper is the single implementation of that contract
+/// for the mechanisms × transports × scenarios × chunk-sizes property
+/// matrix in `rust/tests/property_chunked.rs`.
+pub fn assert_chunked_window_matches_unchunked<M>(
+    mech: &M,
+    transport: &dyn Transport,
+    fleet: &Fleet,
+    policy: &SamplingPolicy,
+    dropouts: &[Vec<usize>],
+    session_seed: u64,
+    chunks: &[usize],
+) where
+    M: ClientEncoder + ServerDecoder + MechSpec,
+{
+    assert!(
+        mech.sum_decodable(),
+        "assert_chunked_window_matches_unchunked needs a homomorphic mechanism ({} is not): \
+         multi-chunk plans run only over the summing transports",
+        MechSpec::name(mech),
+    );
+    assert!(!dropouts.is_empty(), "the schedule fixes the window length; it cannot be empty");
+    let n = fleet.n_clients;
+    let window = dropouts.len();
+    let cohorts: Vec<SurvivorSet> =
+        (0..window).map(|r| policy.cohort(session_seed, r as u64, n)).collect();
+    let datasets: Vec<Vec<Vec<f64>>> =
+        (0..window).map(|r| fleet.round_data(r as u64)).collect();
+    let round_seeds: Vec<u64> = (0..window)
+        .map(|r| Rng::derive_domain(session_seed, seed_domain::ROUND, r as u64))
+        .collect();
+    let rounds: Vec<(&[Vec<f64>], u64)> =
+        datasets.iter().zip(&round_seeds).map(|(xs, &s)| (xs.as_slice(), s)).collect();
+    let whole =
+        run_window_sampled(mech, transport, mech, &rounds, session_seed, &cohorts, dropouts);
+    for &chunk in chunks {
+        let streamed = run_window_chunked(
+            mech,
+            transport,
+            mech,
+            &rounds,
+            session_seed,
+            &cohorts,
+            dropouts,
+            chunk,
+        );
+        for (r, (s, w)) in streamed.iter().zip(&whole).enumerate() {
+            assert_eq!(
+                s.estimate, w.estimate,
+                "round {r}, chunk {chunk}: chunked {} window estimate != whole-d reference",
+                transport.name(),
+            );
+            assert_eq!(
+                s.bits.messages, w.bits.messages,
+                "round {r}, chunk {chunk}: message counts diverge"
+            );
+            assert_eq!(
+                s.bits.variable_total, w.bits.variable_total,
+                "round {r}, chunk {chunk}: variable-length bit accounting diverges"
+            );
+            assert_eq!(
+                s.bits.fixed_total, w.bits.fixed_total,
+                "round {r}, chunk {chunk}: fixed-length bit accounting diverges"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // generators
 // ---------------------------------------------------------------------------
@@ -497,6 +571,36 @@ mod tests {
             &policy,
             &dropouts,
             session_seed,
+        );
+    }
+
+    #[test]
+    fn chunked_window_matches_unchunked_harness_self_check() {
+        // self-check of the chunked acceptance helper on a real
+        // homomorphic mechanism with sampling and a mid-round dropout
+        use crate::mechanisms::pipeline::SecAgg;
+        use crate::mechanisms::IrwinHallMechanism;
+        let fleet = Fleet::new(6, 5, 31);
+        let policy = SamplingPolicy::FixedSize { k: 4 };
+        let session_seed = 0xC0DE;
+        let dropouts: Vec<Vec<usize>> = (0..2u64)
+            .map(|r| {
+                if r == 1 {
+                    let cohort = policy.cohort(session_seed, r, 6);
+                    vec![cohort.alive_iter().next().unwrap()]
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        assert_chunked_window_matches_unchunked(
+            &IrwinHallMechanism::new(0.4, 8.0),
+            &SecAgg::new(),
+            &fleet,
+            &policy,
+            &dropouts,
+            session_seed,
+            &[1, 2, 5, 8],
         );
     }
 

@@ -35,18 +35,25 @@ fn aggregate_gaussian_through_secagg_end_to_end() {
         // reference output (mechanism's internal homomorphic path)
         let reference = mech.aggregate(&xs, seed);
 
-        // explicit client-side encoding + SecAgg
+        // explicit client-side encoding + SecAgg, re-deriving the shared
+        // randomness from the per-coordinate (seekable) stream families
+        let round_ctx = exact_comp::mechanisms::pipeline::SharedRound::new(seed, n, d);
         let dec = Decomposer::new(n as u64);
-        let mut trng = Rng::derive(seed, u64::MAX);
-        let ab: Vec<(f64, f64)> = (0..d).map(|_| dec.draw(&mut trng)).collect();
+        let global = round_ctx.global_coord_stream();
+        let ab: Vec<(f64, f64)> = (0..d)
+            .map(|j| {
+                let mut rng = global.at(j);
+                dec.draw(&mut rng)
+            })
+            .collect();
         let w = mech.step(n);
         let mut masked_all = Vec::new();
         let mut s_sum = vec![0.0f64; d];
         for (i, x) in xs.iter().enumerate() {
-            let mut rng = Rng::derive(seed, i as u64);
+            let dither = round_ctx.client_coord_stream(i);
             let mut ms = Vec::with_capacity(d);
             for j in 0..d {
-                let s = rng.u01() - 0.5;
+                let s = dither.at(j).u01() - 0.5;
                 s_sum[j] += s;
                 ms.push(round_half_up(x[j] / (ab[j].0 * w) + s));
             }
@@ -81,13 +88,14 @@ fn irwin_hall_through_secagg_matches_direct() {
     let reference = mech.aggregate(&xs, seed);
 
     let w = mech.step(n);
+    let round_ctx = exact_comp::mechanisms::pipeline::SharedRound::new(seed, n, d);
     let mut masked_all = Vec::new();
     let mut s_sum = vec![0.0f64; d];
     for (i, x) in xs.iter().enumerate() {
-        let mut rng = Rng::derive(seed, i as u64);
+        let dither = round_ctx.client_coord_stream(i);
         let mut ms = Vec::with_capacity(d);
         for j in 0..d {
-            let s = rng.u01();
+            let s = dither.at(j).u01();
             s_sum[j] += s;
             ms.push(round_half_up(x[j] / w + s));
         }
@@ -112,14 +120,20 @@ fn elias_accounting_is_decodable() {
     let out = mech.aggregate(&xs, seed);
 
     // re-derive one client's descriptions and round-trip them
+    let round_ctx = exact_comp::mechanisms::pipeline::SharedRound::new(seed, n, d);
     let dec = Decomposer::new(n as u64);
-    let mut trng = Rng::derive(seed, u64::MAX);
-    let ab: Vec<(f64, f64)> = (0..d).map(|_| dec.draw(&mut trng)).collect();
+    let global = round_ctx.global_coord_stream();
+    let ab: Vec<(f64, f64)> = (0..d)
+        .map(|j| {
+            let mut rng = global.at(j);
+            dec.draw(&mut rng)
+        })
+        .collect();
     let w = mech.step(n);
-    let mut rng = Rng::derive(seed, 0);
+    let dither = round_ctx.client_coord_stream(0);
     let ms: Vec<i64> = (0..d)
         .map(|j| {
-            let s = rng.u01() - 0.5;
+            let s = dither.at(j).u01() - 0.5;
             round_half_up(xs[0][j] / (ab[j].0 * w) + s)
         })
         .collect();

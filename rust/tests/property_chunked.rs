@@ -1,0 +1,275 @@
+//! The chunked ≡ unchunked property matrix: for every homomorphic
+//! mechanism, over Plain AND SecAgg, composed with announced dropouts and
+//! sampled cohorts, the chunk-streamed window must be *bit-identical* —
+//! estimates and bit accounting — to the whole-d batched window for chunk
+//! sizes {1, 7, d, d + 3}. This is the seed-format guarantee of the
+//! chunked pipeline: every per-coordinate stream is seekable
+//! (`Rng::derive_coord`), so chunk boundaries cannot change any drawn bit
+//! (docs/determinism.md has the argument).
+//!
+//! The KS companions check that the *exact error laws* — the paper's
+//! whole point — survive the chunked path verbatim: the aggregate
+//! Gaussian stays exactly N(0, (σn/n′)²) and Irwin–Hall stays exactly
+//! IH(n) at the rescaled scale, decoded chunk by chunk under dropouts.
+
+use exact_comp::coordinator::sampling::SamplingPolicy;
+use exact_comp::dist::{Continuous, Gaussian, IrwinHall};
+use exact_comp::mechanisms::pipeline::{Plain, SecAgg, SurvivorSet};
+use exact_comp::mechanisms::session::run_window_chunked;
+use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
+use exact_comp::testing::{assert_chunked_window_matches_unchunked, dropout_schedule, Fleet};
+
+/// Chunk sizes of the acceptance matrix for a given d: {1, 7, d, d + 3}.
+fn matrix_chunks(d: usize) -> Vec<usize> {
+    vec![1, 7, d, d + 3]
+}
+
+/// One dropout schedule per matrix cell: round 0 clean, round 1 loses one
+/// cohort member (derived from the policy so the schedule is valid).
+fn one_dropout_schedule(policy: &SamplingPolicy, session_seed: u64, n: usize) -> Vec<Vec<usize>> {
+    (0..2u64)
+        .map(|r| {
+            if r == 1 {
+                let cohort = policy.cohort(session_seed, r, n);
+                if cohort.n_alive() >= 2 {
+                    return vec![cohort.alive_iter().next().unwrap()];
+                }
+            }
+            Vec::new()
+        })
+        .collect()
+}
+
+#[test]
+fn chunked_matrix_irwin_hall_plain_and_secagg() {
+    let (n, d) = (6usize, 11usize);
+    let fleet = Fleet::new(n, d, 0x1A4);
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    for (policy, seed) in [
+        (SamplingPolicy::Full, 0xA1u64),
+        (SamplingPolicy::FixedSize { k: 4 }, 0xA2),
+    ] {
+        let dropouts = one_dropout_schedule(&policy, seed, n);
+        assert_chunked_window_matches_unchunked(
+            &mech, &Plain, &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+        assert_chunked_window_matches_unchunked(
+            &mech, &SecAgg::new(), &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+    }
+}
+
+#[test]
+fn chunked_matrix_aggregate_gaussian_plain_and_secagg() {
+    let (n, d) = (7usize, 11usize);
+    let fleet = Fleet::new(n, d, 0xB0);
+    let mech = AggregateGaussian::new(0.6, 8.0);
+    for (policy, seed) in [
+        (SamplingPolicy::Full, 0xB1u64),
+        (SamplingPolicy::Poisson { gamma: 0.7 }, 0xB2),
+    ] {
+        let dropouts = one_dropout_schedule(&policy, seed, n);
+        assert_chunked_window_matches_unchunked(
+            &mech, &Plain, &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+        assert_chunked_window_matches_unchunked(
+            &mech, &SecAgg::new(), &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+    }
+}
+
+#[test]
+fn chunked_matrix_csgm_plain_and_secagg() {
+    let (n, d) = (6usize, 11usize);
+    let fleet = Fleet::new(n, d, 0xC0);
+    let mech = exact_comp::baselines::Csgm::new(0.2, 0.6, 4.0, 6);
+    for (policy, seed) in [
+        (SamplingPolicy::Full, 0xC1u64),
+        (SamplingPolicy::FixedSize { k: 5 }, 0xC2),
+    ] {
+        let dropouts = one_dropout_schedule(&policy, seed, n);
+        assert_chunked_window_matches_unchunked(
+            &mech, &Plain, &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+        assert_chunked_window_matches_unchunked(
+            &mech, &SecAgg::new(), &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+    }
+}
+
+#[test]
+fn chunked_matrix_ddg_over_its_own_modular_secagg() {
+    // DDG chunks its description space, which is the rotation's padded
+    // power-of-two dimension — so the matrix runs at d = 8 (see the
+    // encode_chunk caveat in baselines/ddg.rs). Its decoder needs the
+    // whole-d sum (inverse rotation), exercising the streamed runner's
+    // assemble-then-decode path.
+    let (n, d) = (6usize, 8usize);
+    let fleet = Fleet::new(n, d, 0xD0).with_range(-1.0, 1.0);
+    let mech = exact_comp::baselines::Ddg::new(1.5, 1e-2, 4.0, 26);
+    for (policy, seed) in [
+        (SamplingPolicy::Full, 0xD1u64),
+        (SamplingPolicy::FixedSize { k: 4 }, 0xD2),
+    ] {
+        let dropouts = one_dropout_schedule(&policy, seed, n);
+        assert_chunked_window_matches_unchunked(
+            &mech, &Plain, &fleet, &policy, &dropouts, seed, &matrix_chunks(d),
+        );
+        assert_chunked_window_matches_unchunked(
+            &mech,
+            &mech.transport(),
+            &fleet,
+            &policy,
+            &dropouts,
+            seed,
+            &matrix_chunks(d),
+        );
+    }
+}
+
+/// The CI chunk suite: a fixed seed matrix — 3 seeds × chunk ∈ {1, 64, d}
+/// — every cell's W=3 chunked SecAgg window (with ⌈n/4⌉ dropouts per
+/// round) must be bit-identical to the whole-d batched window.
+/// (`scripts/ci.sh` runs this by name; keep `chunked` in the test names.)
+#[test]
+fn chunked_seed_matrix_windows_close_exactly() {
+    let n = 9;
+    let d = 96;
+    for seed in [11u64, 22, 33] {
+        let fleet = Fleet::new(n, d, seed);
+        let schedule = dropout_schedule(n, 3, n.div_ceil(4), seed ^ 0xC4);
+        assert_chunked_window_matches_unchunked(
+            &AggregateGaussian::new(0.5, 8.0),
+            &SecAgg::new(),
+            &fleet,
+            &SamplingPolicy::Full,
+            &schedule,
+            seed,
+            &[1, 64, d],
+        );
+        assert_chunked_window_matches_unchunked(
+            &IrwinHallMechanism::new(0.4, 8.0),
+            &SecAgg::new(),
+            &fleet,
+            &SamplingPolicy::Full,
+            &schedule,
+            seed ^ 1,
+            &[1, 64, d],
+        );
+    }
+}
+
+/// KS exactness on the CHUNKED path: the aggregate Gaussian's survivor
+/// error, decoded chunk by chunk (c = 3 over d = 4 — a ragged final
+/// chunk) under an announced dropout, is STILL exactly N(0, (σ·n/n′)²).
+#[test]
+fn chunked_gaussian_error_is_exactly_gaussian_under_dropouts() {
+    let sigma = 0.5;
+    let n = 6;
+    let d = 4;
+    let fleet = Fleet::new(n, d, 0xF00D);
+    let xs = fleet.round_data(0);
+    let dropped = vec![3usize];
+    let survivors = SurvivorSet::with_dropped(n, &dropped);
+    let smean = fleet.survivor_mean(0, &survivors);
+    let mech = AggregateGaussian::new(sigma, 8.0);
+    let mut errs = Vec::new();
+    for r in 0..900u64 {
+        let seed = 90_000 + r;
+        let out = run_window_chunked(
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            &[(xs.as_slice(), seed)],
+            seed,
+            &[SurvivorSet::full(n)],
+            &[dropped.clone()],
+            3,
+        );
+        for j in 0..d {
+            errs.push(out[0].estimate[j] - smean[j]);
+        }
+    }
+    let rescaled_sd = sigma * n as f64 / survivors.n_alive() as f64;
+    let g = Gaussian::new(0.0, rescaled_sd);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| g.cdf(e));
+    assert!(res.p_value > 0.003, "chunked exactness violated: p={}", res.p_value);
+    let v = exact_comp::util::stats::variance(&errs);
+    assert!((v - rescaled_sd * rescaled_sd).abs() < 0.03, "var={v}");
+}
+
+/// Irwin–Hall companion: the chunked decode keeps the exact n-term IH law
+/// at scale σ·n/n′ against the survivor mean, chunk size 1 (every
+/// coordinate its own chunk).
+#[test]
+fn chunked_irwin_hall_error_is_exactly_irwin_hall_under_dropouts() {
+    let sigma = 0.6;
+    let n = 8;
+    let d = 4;
+    let fleet = Fleet::new(n, d, 0xABBA);
+    let xs = fleet.round_data(0);
+    let dropped = vec![5usize];
+    let survivors = SurvivorSet::with_dropped(n, &dropped);
+    let smean = fleet.survivor_mean(0, &survivors);
+    let mech = IrwinHallMechanism::new(sigma, 8.0);
+    let mut errs = Vec::new();
+    for r in 0..800u64 {
+        let seed = 50_000 + r;
+        let out = run_window_chunked(
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            &[(xs.as_slice(), seed)],
+            seed,
+            &[SurvivorSet::full(n)],
+            &[dropped.clone()],
+            1,
+        );
+        for j in 0..d {
+            errs.push(out[0].estimate[j] - smean[j]);
+        }
+    }
+    let scale = sigma * n as f64 / survivors.n_alive() as f64;
+    let ih = IrwinHall::new(n as u64, 0.0, scale);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| ih.cdf(e));
+    assert!(res.p_value > 0.003, "chunked IH exactness violated: p={}", res.p_value);
+    let v = exact_comp::util::stats::variance(&errs);
+    assert!((v - scale * scale).abs() < 0.1, "var={v}");
+}
+
+/// The non-chunk-capable mechanisms still ride the chunked runner under
+/// the single-chunk plan — c = d IS the legacy path for every mechanism.
+#[test]
+fn chunked_single_chunk_plan_covers_non_chunkable_mechanisms() {
+    use exact_comp::mechanisms::pipeline::Unicast;
+    use exact_comp::mechanisms::session::run_window_sampled;
+    use exact_comp::mechanisms::{IndividualGaussian, LayeredVariant, Sigm};
+    use exact_comp::util::rng::{seed_domain, Rng};
+    let (n, d) = (5usize, 6usize);
+    let fleet = Fleet::new(n, d, 0xE0);
+    let datasets: Vec<Vec<Vec<f64>>> = (0..2).map(|r| fleet.round_data(r as u64)).collect();
+    let seeds: Vec<u64> =
+        (0..2).map(|r| Rng::derive_domain(0xE1, seed_domain::ROUND, r as u64)).collect();
+    let rounds: Vec<(&[Vec<f64>], u64)> =
+        datasets.iter().zip(&seeds).map(|(xs, &s)| (xs.as_slice(), s)).collect();
+    let cohorts = vec![SurvivorSet::full(n); 2];
+    let none: Vec<Vec<usize>> = vec![Vec::new(); 2];
+    let sigm = Sigm::new(0.3, 0.5, 4.0);
+    let indiv = IndividualGaussian::new(0.3, LayeredVariant::Shifted, 4.0);
+    let whole_sigm =
+        run_window_sampled(&sigm, &Unicast, &sigm, &rounds, 0xE1, &cohorts, &none);
+    let chunked_sigm =
+        run_window_chunked(&sigm, &Unicast, &sigm, &rounds, 0xE1, &cohorts, &none, d);
+    for (a, b) in whole_sigm.iter().zip(&chunked_sigm) {
+        assert_eq!(a.estimate, b.estimate);
+        assert_eq!(a.bits.messages, b.bits.messages);
+    }
+    let whole_ind =
+        run_window_sampled(&indiv, &Unicast, &indiv, &rounds, 0xE2, &cohorts, &none);
+    let chunked_ind =
+        run_window_chunked(&indiv, &Unicast, &indiv, &rounds, 0xE2, &cohorts, &none, d + 5);
+    for (a, b) in whole_ind.iter().zip(&chunked_ind) {
+        assert_eq!(a.estimate, b.estimate);
+        assert_eq!(a.bits.messages, b.bits.messages);
+    }
+}

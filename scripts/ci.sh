@@ -56,6 +56,18 @@ cargo test -q dropout
 echo "== client-sampling property suite (seed matrix: 3 seeds x gamma in {0.25,0.5,1.0}) =="
 cargo test -q sampling
 
+# Chunked-streaming suite, run by name for the same visibility: the fixed
+# seed matrix (3 seeds × chunk ∈ {1, 64, d}) lives in
+# `chunked_seed_matrix_windows_close_exactly`, plus every chunked ≡
+# unchunked bit-identity cell (mechanisms × {Plain, SecAgg} × dropouts ×
+# sampled cohorts × chunk {1, 7, d, d+3}), the chunked KS-exactness tests,
+# and the session/coordinator streaming memory-model tests across the lib,
+# property and integration targets. Redundant with the full
+# `cargo test -q` above by construction — a failure here names the chunked
+# contract directly.
+echo "== chunked-streaming property suite (seed matrix: 3 seeds x chunk in {1,64,d}) =="
+cargo test -q chunked
+
 echo "== clippy (deny warnings) =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
