@@ -1,5 +1,14 @@
 //! Coordinator / substrate benchmarks: round loop, SecAgg masking, FWHT,
-//! Huffman construction, statistics.
+//! Huffman construction, statistics, and the `kernels/*` scalar-vs-batched
+//! series that feed the recorded `BENCH_*.json` perf trajectory.
+//!
+//! Worker threads are pinned to 4 by default so numbers are comparable
+//! across machines; `BENCH_THREADS` overrides the pin and the effective
+//! value is recorded in the emitted JSON. A full run writes
+//! `BENCH_6.json` at the repo root (the trajectory artifact compared by
+//! `scripts/bench_diff.sh`); `BENCH_QUICK=1` smoke runs write to
+//! `target/BENCH_quick.json` instead so a quick pass can never overwrite
+//! a recorded trajectory point.
 
 use std::sync::Arc;
 
@@ -8,19 +17,25 @@ use exact_comp::coordinator::runtime::{
     run_rounds_mech_sampled, run_rounds_mech_with_dropouts, ClientPool,
 };
 use exact_comp::coordinator::sampling::SamplingPolicy;
-use exact_comp::mechanisms::pipeline::{Plain, SecAgg};
+use exact_comp::mechanisms::pipeline::{ClientEncoder, Plain, SecAgg, SharedRound};
 use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
-use exact_comp::secagg::{aggregate_masked, mask_descriptions, SecAggParams};
-use exact_comp::transforms::hadamard::{fwht, RandomizedRotation};
-use exact_comp::util::benchkit::{black_box, Suite};
-use exact_comp::util::rng::Rng;
+use exact_comp::quantizer::round_half_up;
+use exact_comp::secagg::{aggregate_masked, mask_descriptions, pair_seed, SecAggParams};
+use exact_comp::transforms::hadamard::{fwht, fwht_threaded, RandomizedRotation};
+use exact_comp::util::benchkit::{bench_threads, black_box, Suite};
+use exact_comp::util::rng::{fill_below_coords, fill_u01_coords, Rng};
 use exact_comp::util::stats::ks_test;
 
+/// Bump per PR: the trajectory artifact this bench emits on a full run.
+const TRAJECTORY_FILE: &str = "BENCH_6.json";
+
 fn main() {
-    let mut s = Suite::new();
+    let mut s = Suite::from_env();
+    let threads = bench_threads(4);
 
     // round loop: parallel local compute + aggregation. Worker count is
-    // pinned so numbers are comparable across machines.
+    // pinned (BENCH_THREADS-overridable) so numbers are comparable across
+    // machines.
     for n in [8usize, 64] {
         let d = 256;
         let pool = ClientPool::spawn_with_threads(
@@ -29,7 +44,7 @@ fn main() {
                 let mut rng = Rng::derive(r, c as u64);
                 (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
             }),
-            Some(4),
+            Some(threads),
         );
         let mech = IrwinHallMechanism::new(0.5, 4.0);
         let mut round = 0u64;
@@ -75,7 +90,7 @@ fn main() {
                 let mut rng = Rng::derive(r, c as u64);
                 (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
             }),
-            Some(4),
+            Some(threads),
         );
         let mech = IrwinHallMechanism::new(0.5, 4.0);
         for w in [1usize, 4, 16] {
@@ -145,7 +160,7 @@ fn main() {
                 let mut rng = Rng::derive(r, c as u64);
                 (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
             }),
-            Some(4),
+            Some(threads),
         );
         let mech = IrwinHallMechanism::new(0.5, 4.0);
         let w = 4usize;
@@ -192,7 +207,7 @@ fn main() {
                 let mut rng = Rng::derive(r, c as u64);
                 (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
             }),
-            Some(4),
+            Some(threads),
         );
         let mech = IrwinHallMechanism::new(0.5, 4.0);
         let mut peaks = Vec::new();
@@ -233,7 +248,7 @@ fn main() {
             small * 8 < whole,
             "chunked peak {small} not O(c) vs whole-d peak {whole}"
         );
-        let budget = 3 * (4 + 1) * w * c_small * 8;
+        let budget = 3 * (threads + 1) * w * c_small * 8;
         assert!(
             small <= budget,
             "chunked peak {small} exceeds O(shards·W·c) budget {budget}"
@@ -288,5 +303,94 @@ fn main() {
         });
     }
 
+    // lane-batched kernel series: scalar-vs-batched pairs so the speedup
+    // is itself a recorded trajectory number. The scalar baselines
+    // replicate what the library did before lane batching — a fresh
+    // xoshiro generator derived per coordinate for a single draw.
+    {
+        let d = 1usize << 16;
+        let m = SecAggParams::default().modulus;
+        let fam = Rng::derive_domain(0xBE, exact_comp::util::rng::seed_domain::COORD_FAMILY, 1);
+        let ps = pair_seed(fam, 0, 1);
+
+        // mask expansion: the SecAgg pair-leg kernel (one below(m) per
+        // coordinate) — the acceptance pair for the ≥4× batched speedup
+        let mut masks = vec![0u64; d];
+        s.bench_elements(&format!("kernels/mask_expand_scalar(d={d})"), Some(d as u64), || {
+            for (j, o) in masks.iter_mut().enumerate() {
+                *o = Rng::derive_coord(black_box(ps), j as u64).below(m);
+            }
+            black_box(&masks);
+        });
+        let scalar_mask = s.results.last().unwrap().throughput_mps();
+        s.bench_elements(&format!("kernels/mask_expand_batched(d={d})"), Some(d as u64), || {
+            fill_below_coords(black_box(ps), 0, m, &mut masks);
+            black_box(&masks);
+        });
+        let batched_mask = s.results.last().unwrap().throughput_mps();
+        if let (Some(a), Some(b)) = (scalar_mask, batched_mask) {
+            println!("  kernels/mask_expand batched-vs-scalar speedup: {:.2}x", b / a);
+        }
+
+        // dither fill: one u01 per coordinate stream (the IH/aggregate
+        // encode and survivor-decode kernel)
+        let mut dithers = vec![0.0f64; d];
+        s.bench_elements(&format!("kernels/dither_fill_scalar(d={d})"), Some(d as u64), || {
+            for (j, o) in dithers.iter_mut().enumerate() {
+                *o = Rng::derive_coord(black_box(fam), j as u64).u01();
+            }
+            black_box(&dithers);
+        });
+        s.bench_elements(&format!("kernels/dither_fill_batched(d={d})"), Some(d as u64), || {
+            fill_u01_coords(black_box(fam), 0, &mut dithers);
+            black_box(&dithers);
+        });
+
+        // FWHT: blocked serial vs top-levels-threaded
+        let mut rng = Rng::new(9);
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        s.bench_elements(&format!("kernels/fwht(d={d})"), Some(d as u64), || {
+            fwht(black_box(&mut v));
+        });
+        s.bench_elements(
+            &format!("kernels/fwht_threaded(d={d},threads={threads})"),
+            Some(d as u64),
+            || {
+                fwht_threaded(black_box(&mut v), threads);
+            },
+        );
+
+        // quantizer encode (Irwin–Hall layer): the full dither + scale +
+        // round-half-up description loop, scalar reference vs the
+        // lane-batched library path
+        let n = 16usize;
+        let round = SharedRound::new(7, n, d);
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let w = mech.step(n);
+        let x: Vec<f64> = (0..d).map(|j| ((j % 97) as f64 - 48.0) / 24.0).collect();
+        s.bench_elements(&format!("kernels/quant_encode_scalar(d={d})"), Some(d as u64), || {
+            let dither = round.client_coord_stream(3);
+            let ms: Vec<i64> =
+                (0..d).map(|j| round_half_up(x[j] / w + dither.at(j).u01())).collect();
+            black_box(ms);
+        });
+        s.bench_elements(&format!("kernels/quant_encode_batched(d={d})"), Some(d as u64), || {
+            black_box(mech.encode(3, &x, &round));
+        });
+    }
+
     s.report();
+
+    // trajectory emission: full runs record the artifact at the repo
+    // root; BENCH_QUICK smoke runs write under target/ so they can never
+    // overwrite a recorded trajectory point
+    let path = if Suite::quick_mode() {
+        std::fs::create_dir_all("target").ok();
+        "target/BENCH_quick.json".to_string()
+    } else {
+        TRAJECTORY_FILE.to_string()
+    };
+    s.write_json(&path, "bench_coordinator", threads)
+        .unwrap_or_else(|e| panic!("failed to write {path}: {e}"));
+    println!("wrote {path}");
 }

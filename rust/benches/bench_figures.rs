@@ -10,7 +10,7 @@ use exact_comp::mechanisms::{AggregateGaussian, Decomposer};
 use exact_comp::util::benchkit::{black_box, Suite};
 
 fn main() {
-    let mut s = Suite::new();
+    let mut s = Suite::from_env();
 
     // Fig 2: one exact conditional-entropy evaluation
     s.bench("fig2/cond_entropy(t=1024)", || {

@@ -14,7 +14,7 @@ use exact_comp::util::benchkit::{black_box, Suite};
 use exact_comp::util::rng::Rng;
 
 fn main() {
-    let mut s = Suite::new();
+    let mut s = Suite::from_env();
     let mut rng = Rng::new(1);
 
     // --- point quantizers -------------------------------------------------

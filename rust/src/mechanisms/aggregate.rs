@@ -144,12 +144,16 @@ impl ClientEncoder for AggregateGaussian {
     ) -> Descriptions {
         let w = self.step(round.n_clients);
         let ab = self.ab_range(round, &range);
-        let dither = round.client_coord_stream(client);
+        // lane-batched centred-dither fill (u01 − ½ per coordinate
+        // stream), bit-identical to the scalar at(j) loop; the (A, B)
+        // draws stay scalar — they consume a variable number of raws per
+        // coordinate and are chunk-cached anyway
+        let mut dithers = vec![0.0f64; range.len()];
+        round.client_coord_stream(client).fill_dither(range.start, &mut dithers);
         let mut bits = BitsAccount::default();
         let ms: Vec<i64> = range
-            .zip(ab.iter())
-            .map(|(j, &(a, _))| {
-                let s = dither.at(j).u01() - 0.5;
+            .zip(ab.iter().zip(dithers.iter()))
+            .map(|(j, (&(a, _), &s))| {
                 let inv_aw = 1.0 / (a * w);
                 let m = round_half_up(x[j] * inv_aw + s);
                 bits.add_description(m);
@@ -219,17 +223,18 @@ impl ServerDecoder for AggregateGaussian {
         let ab = self.ab_range(round, &range);
         // re-derive the SURVIVORS' dithers for this chunk: O(c) state
         let mut s_sum = vec![0.0f64; len];
+        let mut scratch = vec![0.0f64; len];
         for i in survivors.alive_iter() {
-            let dither = round.client_coord_stream(i);
-            for (k, sj) in s_sum.iter_mut().enumerate() {
-                *sj += dither.at(lo + k).u01() - 0.5;
+            round.client_coord_stream(i).fill_dither(lo, &mut scratch);
+            for (sj, &v) in s_sum.iter_mut().zip(scratch.iter()) {
+                *sj += v;
             }
         }
         let mut topup = vec![0.0f64; len];
         for j in survivors.dropped_iter() {
-            let comp = round.dropout_coord_stream(j);
-            for (k, tj) in topup.iter_mut().enumerate() {
-                *tj += comp.at(lo + k).dither();
+            round.dropout_coord_stream(j).fill_dither(lo, &mut scratch);
+            for (tj, &v) in topup.iter_mut().zip(scratch.iter()) {
+                *tj += v;
             }
         }
         let w = self.step(n);

@@ -78,12 +78,15 @@ impl ClientEncoder for IrwinHallMechanism {
     ) -> Descriptions {
         let w = self.step(round.n_clients);
         let code_bits = FixedCode::from_support_bound(self.input_range_t, w).bits() as f64;
-        let dither = round.client_coord_stream(client);
+        // lane-batched dither fill: one u01 per coordinate stream,
+        // bit-identical to the scalar at(j).u01() loop
+        let mut dithers = vec![0.0f64; range.len()];
+        round.client_coord_stream(client).fill_u01(range.start, &mut dithers);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
         let ms: Vec<i64> = range
-            .map(|j| {
-                let s = dither.at(j).u01();
+            .zip(dithers.iter())
+            .map(|(j, &s)| {
                 let m = round_half_up(x[j] / w + s);
                 bits.add_description(m);
                 fixed_total += code_bits;
@@ -148,10 +151,11 @@ impl ServerDecoder for IrwinHallMechanism {
         // for this chunk only — O(c) state, never the per-client
         // descriptions
         let mut s_sum = vec![0.0f64; len];
+        let mut scratch = vec![0.0f64; len];
         for i in survivors.alive_iter() {
-            let dither = round.client_coord_stream(i);
-            for (k, sj) in s_sum.iter_mut().enumerate() {
-                *sj += dither.at(lo + k).u01();
+            round.client_coord_stream(i).fill_u01(lo, &mut scratch);
+            for (sj, &v) in s_sum.iter_mut().zip(scratch.iter()) {
+                *sj += v;
             }
         }
         // dropout noise completion: a fresh shared U(−1/2, 1/2) draw
@@ -159,9 +163,9 @@ impl ServerDecoder for IrwinHallMechanism {
         // quantization error
         let mut topup = vec![0.0f64; len];
         for j in survivors.dropped_iter() {
-            let comp = round.dropout_coord_stream(j);
-            for (k, tj) in topup.iter_mut().enumerate() {
-                *tj += comp.at(lo + k).dither();
+            round.dropout_coord_stream(j).fill_dither(lo, &mut scratch);
+            for (tj, &v) in topup.iter_mut().zip(scratch.iter()) {
+                *tj += v;
             }
         }
         let w = self.step(n);

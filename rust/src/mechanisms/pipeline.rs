@@ -154,6 +154,31 @@ impl CoordStream {
     pub fn at(&self, coord: usize) -> Rng {
         Rng::derive_coord(self.family, coord as u64)
     }
+
+    /// Lane-batched fill of the FIRST u01 draw of coordinates
+    /// `[lo, lo + out.len())`: `out[k] = self.at(lo + k).u01()`, bit for
+    /// bit ([`crate::util::rng::fill_u01_coords`]). This is the hot form
+    /// of the per-coordinate dither loops — one draw per coordinate
+    /// stream, exactly what the mechanisms consume.
+    #[inline]
+    pub fn fill_u01(&self, lo: usize, out: &mut [f64]) {
+        crate::util::rng::fill_u01_coords(self.family, lo as u64, out);
+    }
+
+    /// Lane-batched fill of the first U(-1/2, 1/2) draw:
+    /// `out[k] = self.at(lo + k).dither()`, bit for bit.
+    #[inline]
+    pub fn fill_dither(&self, lo: usize, out: &mut [f64]) {
+        crate::util::rng::fill_dither_coords(self.family, lo as u64, out);
+    }
+
+    /// Lane-batched fill of the first `below(n)` draw:
+    /// `out[k] = self.at(lo + k).below(n)`, bit for bit, with the Lemire
+    /// rejection threshold hoisted out of the loop.
+    #[inline]
+    pub fn fill_below(&self, lo: usize, n: u64, out: &mut [u64]) {
+        crate::util::rng::fill_below_coords(self.family, lo as u64, n, out);
+    }
 }
 
 /// One aggregation round's public context: the shared seed plus the round
@@ -266,10 +291,14 @@ impl SharedRound {
         self.subsample_coord_stream(client).at(coord).bernoulli(gamma)
     }
 
-    /// Client i's materialized Bernoulli(γ) subsample row.
+    /// Client i's materialized Bernoulli(γ) subsample row — lane-batched:
+    /// `bernoulli(γ)` is `u01() < γ` on the first draw of each coordinate
+    /// stream, so the row is one [`CoordStream::fill_u01`] plus a compare,
+    /// bit-identical to the per-coordinate decisions (property tested).
     pub fn subsample_row(&self, client: usize, gamma: f64) -> Vec<bool> {
-        let s = self.subsample_coord_stream(client);
-        (0..self.dim).map(|j| s.at(j).bernoulli(gamma)).collect()
+        let mut u = vec![0.0f64; self.dim];
+        self.subsample_coord_stream(client).fill_u01(0, &mut u);
+        u.into_iter().map(|v| v < gamma).collect()
     }
 
     fn key(&self) -> (u64, usize, usize) {
@@ -1868,6 +1897,27 @@ mod tests {
         // and disjoint from the sequential stream of the same tag
         let mut seq = round.client_rng(2);
         assert_ne!(x, seq.u01());
+    }
+
+    #[test]
+    fn coord_stream_fills_match_per_coordinate_draws() {
+        // the lane-batched fills are the at()-loop, bit for bit, at every
+        // alignment
+        let round = SharedRound::new(123, 4, 64);
+        let s = round.client_coord_stream(1);
+        for (lo, len) in [(0usize, 1usize), (3, 7), (0, 16), (5, 33)] {
+            let mut u = vec![0.0; len];
+            s.fill_u01(lo, &mut u);
+            let want: Vec<f64> = (0..len).map(|k| s.at(lo + k).u01()).collect();
+            assert_eq!(u, want, "u01 lo={lo} len={len}");
+            s.fill_dither(lo, &mut u);
+            let want: Vec<f64> = (0..len).map(|k| s.at(lo + k).dither()).collect();
+            assert_eq!(u, want, "dither lo={lo} len={len}");
+            let mut b = vec![0u64; len];
+            s.fill_below(lo, 1 << 40, &mut b);
+            let want: Vec<u64> = (0..len).map(|k| s.at(lo + k).below(1 << 40)).collect();
+            assert_eq!(b, want, "below lo={lo} len={len}");
+        }
     }
 
     #[test]

@@ -744,19 +744,21 @@ impl TransportSession {
         if let Some(a) = &slot.announced {
             if let TransportPartial::Masked { sum: Some(v), modulus } = &mut partial {
                 let params = SecAggParams { modulus: *modulus };
+                // one lane-expansion scratch for ALL dropouts of the chunk:
+                // the reconstructed legs fold straight into the masked
+                // accumulator, so recovery allocates no per-dropout vector
+                let mut scratch = secagg::MaskScratch::default();
                 for &j in &a.dropped {
                     let shares: Vec<RecoveryShare> =
                         a.shares.iter().filter(|s| s.dropped == j).copied().collect();
-                    let rec = secagg::reconstruct_dropped_masks_range(
+                    secagg::add_reconstructed_masks_range(
+                        v,
                         j,
                         &shares,
                         range.start,
-                        v.len(),
                         params,
+                        &mut scratch,
                     );
-                    for (acc, mval) in v.iter_mut().zip(rec) {
-                        *acc = (*acc + mval) % *modulus;
-                    }
                 }
             }
         }

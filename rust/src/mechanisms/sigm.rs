@@ -64,11 +64,14 @@ impl Sigm {
             // per-coordinate subsample family is shared with CSGM, so the
             // matched-subsample comparison of Figs. 5/7 holds under any
             // chunking of CSGM's coordinate space.
+            // lane-batched selection rows: bernoulli(γ) is u01() < γ on
+            // the first draw of each coordinate stream
             let mut n_tilde = vec![0.0f64; d];
+            let mut u = vec![0.0f64; d];
             for i in 0..n {
-                let select = round.subsample_coord_stream(i);
-                for (j, nt) in n_tilde.iter_mut().enumerate() {
-                    if select.at(j).bernoulli(gamma) {
+                round.subsample_coord_stream(i).fill_u01(0, &mut u);
+                for (nt, &uj) in n_tilde.iter_mut().zip(u.iter()) {
+                    if uj < gamma {
                         *nt += 1.0;
                     }
                 }
@@ -107,14 +110,15 @@ impl ClientEncoder for Sigm {
         // the client derives only ITS OWN subsample selections — O(d)
         // encode (the ragged step-draw stream below stays sequential:
         // SIGM is not chunk-capable, its message has no coordinate grid)
-        let select = round.subsample_coord_stream(client);
+        let mut sel = vec![0.0f64; x.len()];
+        round.subsample_coord_stream(client).fill_u01(0, &mut sel);
         let mut rng = round.client_rng(client);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0f64;
         // ragged: one description per SELECTED coordinate, in j order
         let mut ms = Vec::new();
         for (j, &xj) in x.iter().enumerate() {
-            if !select.at(j).bernoulli(self.gamma) {
+            if sel[j] >= self.gamma {
                 continue;
             }
             let s = st.q.draw(&mut rng);
@@ -147,16 +151,17 @@ impl ServerDecoder for Sigm {
         let list = payload.per_client();
         assert_eq!(list.len(), n);
         let mut estimate = vec![0.0f64; d];
+        let mut sel = vec![0.0f64; d];
         for (i, (ms, _)) in list.iter().enumerate() {
             // re-derive client i's subsample selections and step draws;
             // the draw stream advances only on selected coordinates,
             // matching the encoder — O(d) working state per client, no
             // cached matrix
-            let select = round.subsample_coord_stream(i);
+            round.subsample_coord_stream(i).fill_u01(0, &mut sel);
             let mut rng = round.client_rng(i);
             let mut k = 0usize;
             for (j, ej) in estimate.iter_mut().enumerate() {
-                if !select.at(j).bernoulli(self.gamma) {
+                if sel[j] >= self.gamma {
                     continue;
                 }
                 let s = st.q.draw(&mut rng);

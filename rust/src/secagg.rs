@@ -63,7 +63,7 @@
 //! is the consumer; it fails closed unless every dropped client's share
 //! set covers exactly the survivor set.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{fill_below_coords, Rng};
 
 /// Stream tag separating the session mask schedule from every other use of
 /// the session seed (client streams, global streams, round seeds).
@@ -145,16 +145,67 @@ pub fn recovery_share(root_seed: u64, holder: usize, dropped: usize) -> Recovery
     RecoveryShare { dropped, holder, pair_seed: pair_seed(root_seed, holder, dropped) }
 }
 
-/// The mask of coordinate `coord` under a pairwise seed — a *seekable*
-/// per-coordinate expansion ([`Rng::derive_coord`]): the mask of
-/// coordinate j depends only on (pair seed, j), never on how many
-/// coordinates were expanded before it. This is what lets the chunked
-/// pipeline mask (and recover) only the active chunk's coordinate slice
-/// while staying bit-identical to whole-vector masking — chunk boundaries
-/// cannot change any mask bit (see docs/determinism.md).
-#[inline]
-fn coord_mask(pair_seed: u64, coord: usize, m: u64) -> u64 {
-    Rng::derive_coord(pair_seed, coord as u64).below(m)
+/// Reusable scratch for the lane-batched mask expansion: one pair leg's
+/// worth of field elements. The masking and recovery hot paths fold
+/// O(n_pairs) legs per chunk — reusing one buffer per caller (or per
+/// thread, see [`mask_descriptions_range`]) caps the temporary
+/// field-vector allocation at a single chunk-sized buffer instead of one
+/// fresh `Vec` per (pair-leg, chunk).
+#[derive(Clone, Debug, Default)]
+pub struct MaskScratch {
+    masks: Vec<u64>,
+}
+
+// The zero-argument public wrappers ([`mask_descriptions_range`],
+// [`reconstruct_dropped_masks_range`]) serve the session masking path
+// through the object-safe `Transport` trait, which has no scratch
+// parameter and is called concurrently from the shard workers — a shared
+// Mutex scratch would serialize them, so the wrapper scratch lives per
+// worker thread instead.
+thread_local! {
+    static TL_SCRATCH: std::cell::RefCell<MaskScratch> =
+        std::cell::RefCell::new(MaskScratch::default());
+}
+
+fn with_thread_scratch<R>(f: impl FnOnce(&mut MaskScratch) -> R) -> R {
+    TL_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Expand one pairwise mask stream over coordinates `[lo, lo + out.len())`
+/// and fold it into `out` (mod m) with the given sign — the shared core of
+/// masking ([`mask_descriptions_range`]) and recovery
+/// ([`reconstruct_dropped_masks_range`]).
+///
+/// The expansion is *seekable* per coordinate ([`Rng::derive_coord`]): the
+/// mask of coordinate j depends only on (pair seed, j), never on how many
+/// coordinates were expanded before it — so the chunked pipeline masks
+/// (and recovers) only the active chunk's slice, bit-identical to
+/// whole-vector masking for every chunking (see docs/determinism.md). The
+/// expansion runs through the lane-batched
+/// [`crate::util::rng::fill_below_coords`] kernel (Lemire threshold
+/// hoisted, straight-line lane code), which is bit-identical to deriving a
+/// fresh scalar generator per coordinate; the sign branch is hoisted out
+/// of the per-coordinate loop.
+fn fold_mask_stream(
+    out: &mut [u64],
+    pair_seed: u64,
+    add: bool,
+    m: u64,
+    lo: usize,
+    scratch: &mut MaskScratch,
+) {
+    let masks = &mut scratch.masks;
+    masks.resize(out.len(), 0);
+    fill_below_coords(pair_seed, lo as u64, m, masks);
+    if add {
+        for (o, &mask) in out.iter_mut().zip(masks.iter()) {
+            *o = (*o + mask) % m;
+        }
+    } else {
+        for (o, &mask) in out.iter_mut().zip(masks.iter()) {
+            *o = (*o + m - mask) % m;
+        }
+    }
 }
 
 /// Server-side: re-expand dropped client `dropped`'s outstanding pairwise
@@ -188,8 +239,27 @@ pub fn reconstruct_dropped_masks_range(
     len: usize,
     params: SecAggParams,
 ) -> Vec<u64> {
-    let m = params.modulus;
     let mut out = vec![0u64; len];
+    with_thread_scratch(|scratch| {
+        add_reconstructed_masks_range(&mut out, dropped, shares, lo, params, scratch)
+    });
+    out
+}
+
+/// [`reconstruct_dropped_masks_range`] folded DIRECTLY into an existing
+/// field accumulator covering coordinates `[acc_lo, acc_lo + acc.len())`
+/// — the session recovery path uses this to cancel a dropped client's
+/// residual masks in place, with a caller-provided scratch, so closing a
+/// chunk allocates no per-dropout reconstruction vector at all.
+pub fn add_reconstructed_masks_range(
+    acc: &mut [u64],
+    dropped: usize,
+    shares: &[RecoveryShare],
+    acc_lo: usize,
+    params: SecAggParams,
+    scratch: &mut MaskScratch,
+) {
+    let m = params.modulus;
     let mut holders: Vec<usize> = Vec::with_capacity(shares.len());
     for share in shares {
         assert_eq!(
@@ -208,26 +278,28 @@ pub fn reconstruct_dropped_masks_range(
         // `mask_descriptions`): it would have ADDED the stream for
         // higher-indexed peers and SUBTRACTED it for lower-indexed ones
         let add = dropped < share.holder;
-        for (k, o) in out.iter_mut().enumerate() {
-            let mask = coord_mask(share.pair_seed, lo + k, m);
-            *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
-        }
+        fold_mask_stream(acc, share.pair_seed, add, m, acc_lo, scratch);
     }
-    out
 }
 
 /// Fold one pairwise mask leg (client ↔ other) into an already-lifted
 /// field vector covering coordinates `[lo, lo + out.len())`: `client`
 /// ADDS the pair stream when it is the lower-indexed end, SUBTRACTS it
 /// otherwise — the sign convention both [`mask_descriptions_range`] and
-/// [`reconstruct_dropped_masks_range`] mirror.
-fn fold_pair_leg(out: &mut [u64], client: usize, other: usize, root_seed: u64, m: u64, lo: usize) {
+/// [`reconstruct_dropped_masks_range`] mirror. The pair seed is derived
+/// once per leg; the per-coordinate expansion is the lane-batched
+/// [`fold_mask_stream`].
+fn fold_pair_leg(
+    out: &mut [u64],
+    client: usize,
+    other: usize,
+    root_seed: u64,
+    m: u64,
+    lo: usize,
+    scratch: &mut MaskScratch,
+) {
     let ps = pair_seed(root_seed, client, other);
-    let add = client < other;
-    for (k, o) in out.iter_mut().enumerate() {
-        let mask = coord_mask(ps, lo + k, m);
-        *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
-    }
+    fold_mask_stream(out, ps, client < other, m, lo, scratch);
 }
 
 /// Client-side masking: add `Σ_{j>i} PRG_ij − Σ_{j<i} PRG_ij` (mod m) to
@@ -255,13 +327,31 @@ pub fn mask_descriptions_range(
     params: SecAggParams,
     lo: usize,
 ) -> Vec<u64> {
+    with_thread_scratch(|scratch| {
+        mask_descriptions_range_scratch(ms, client, n_clients, root_seed, params, lo, scratch)
+    })
+}
+
+/// [`mask_descriptions_range`] with a caller-provided scratch buffer —
+/// the allocation-capped form for callers that mask many chunks (the
+/// zero-argument wrapper reuses a per-thread scratch for the `Transport`
+/// trait path, which cannot thread one through).
+pub fn mask_descriptions_range_scratch(
+    ms: &[i64],
+    client: usize,
+    n_clients: usize,
+    root_seed: u64,
+    params: SecAggParams,
+    lo: usize,
+    scratch: &mut MaskScratch,
+) -> Vec<u64> {
     let m = params.modulus;
     let mut out: Vec<u64> = ms.iter().map(|&v| to_field(v, m)).collect();
     for other in 0..n_clients {
         if other == client {
             continue;
         }
-        fold_pair_leg(&mut out, client, other, root_seed, m, lo);
+        fold_pair_leg(&mut out, client, other, root_seed, m, lo, scratch);
     }
     out
 }
@@ -306,12 +396,14 @@ pub fn mask_descriptions_among_range(
     );
     let m = params.modulus;
     let mut out: Vec<u64> = ms.iter().map(|&v| to_field(v, m)).collect();
-    for &other in members {
-        if other == client {
-            continue;
+    with_thread_scratch(|scratch| {
+        for &other in members {
+            if other == client {
+                continue;
+            }
+            fold_pair_leg(&mut out, client, other, root_seed, m, lo, scratch);
         }
-        fold_pair_leg(&mut out, client, other, root_seed, m, lo);
-    }
+    });
     out
 }
 
@@ -503,6 +595,62 @@ mod tests {
             }
             assert_eq!(got, whole, "chunk size {c}");
         }
+    }
+
+    #[test]
+    fn batched_masking_matches_scalar_per_coordinate_expansion() {
+        // the lane-batched fold must reproduce the definitional scalar
+        // expansion: a fresh derive_coord(pair_seed, j).below(m) per
+        // (leg, coordinate), folded with the i<j sign convention
+        let params = SecAggParams::default();
+        let m = params.modulus;
+        let root = 0x1234_5678;
+        let (client, n) = (2usize, 5usize);
+        let ms: Vec<i64> = (0..19).map(|i| 11 * i - 90).collect();
+        for lo in [0usize, 1, 9] {
+            let mut want: Vec<u64> = ms.iter().map(|&v| to_field(v, m)).collect();
+            for other in 0..n {
+                if other == client {
+                    continue;
+                }
+                let ps = pair_seed(root, client, other);
+                let add = client < other;
+                for (k, o) in want.iter_mut().enumerate() {
+                    let mask = Rng::derive_coord(ps, (lo + k) as u64).below(m);
+                    *o = if add { (*o + mask) % m } else { (*o + m - mask) % m };
+                }
+            }
+            assert_eq!(
+                mask_descriptions_range(&ms, client, n, root, params, lo),
+                want,
+                "lo={lo}"
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_variants_match_wrappers_and_reuse_the_buffer() {
+        let params = SecAggParams::default();
+        let ms = vec![5i64, -3, 77, 0, -1];
+        let mut scratch = MaskScratch::default();
+        for lo in [0usize, 4] {
+            assert_eq!(
+                mask_descriptions_range_scratch(&ms, 1, 6, 0xAB, params, lo, &mut scratch),
+                mask_descriptions_range(&ms, 1, 6, 0xAB, params, lo),
+            );
+        }
+        // in-place recovery fold equals reconstruct-then-add
+        let shares = [recovery_share(9, 0, 2), recovery_share(9, 1, 2)];
+        let m = params.modulus;
+        let mut acc: Vec<u64> = (0..7u64).map(|v| v * 1000 % m).collect();
+        let mut want = acc.clone();
+        for (a, r) in
+            want.iter_mut().zip(reconstruct_dropped_masks_range(2, &shares, 3, 7, params))
+        {
+            *a = (*a + r) % m;
+        }
+        add_reconstructed_masks_range(&mut acc, 2, &shares, 3, params, &mut scratch);
+        assert_eq!(acc, want);
     }
 
     #[test]

@@ -7,9 +7,16 @@
 
 use crate::util::rng::Rng;
 
-/// In-place fast Walsh–Hadamard transform (unnormalized). Length must be a
-/// power of two.
-pub fn fwht(x: &mut [f64]) {
+/// L1-resident tile: 2¹² f64 = 32 KiB. The bottom log₂(TILE) butterfly
+/// levels of each tile run back to back while the tile stays cache-hot;
+/// only the top levels stream the full vector.
+const FWHT_TILE: usize = 1 << 12;
+
+/// The textbook h-doubling butterfly — the reference schedule every
+/// blocked/threaded variant must match bit for bit (reordering butterflies
+/// across independent 2h-blocks never changes any operand, so equality is
+/// exact, not approximate).
+pub fn fwht_naive(x: &mut [f64]) {
     let n = x.len();
     assert!(n.is_power_of_two(), "FWHT length must be a power of 2, got {n}");
     let mut h = 1;
@@ -26,6 +33,113 @@ pub fn fwht(x: &mut [f64]) {
         }
         h *= 2;
     }
+}
+
+/// The butterfly levels h = h0, 2·h0, …, n/2: each group's two halves are
+/// contiguous disjoint slices (`split_at_mut`), giving the autovectorizer
+/// two cache-line-sequential streams per combine.
+fn fwht_top_levels(x: &mut [f64], h0: usize) {
+    let n = x.len();
+    let mut h = h0;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            let (a, b) = x[i..i + 2 * h].split_at_mut(h);
+            for (aj, bj) in a.iter_mut().zip(b.iter_mut()) {
+                let s = *aj + *bj;
+                *bj = *aj - *bj;
+                *aj = s;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform (unnormalized). Length must be a
+/// power of two.
+///
+/// Cache-blocked: butterflies with h < [`FWHT_TILE`] never straddle a
+/// tile boundary, so each tile's bottom levels run while it is
+/// L1-resident, then the top levels stream the whole vector once per
+/// level. The schedule only reorders butterflies across independent
+/// blocks — every addition sees exactly the operands of the naive
+/// schedule, so the result is bit-identical to [`fwht_naive`]
+/// (debug-asserted below on sizes where the blocked path is active,
+/// property tested at larger sizes).
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of 2, got {n}");
+    if n == 1 {
+        return; // H₁ = [1]: the transform is the identity
+    }
+    if n <= FWHT_TILE {
+        fwht_naive(x);
+        return;
+    }
+    #[cfg(debug_assertions)]
+    let want = (n <= FWHT_TILE << 2).then(|| {
+        let mut c = x.to_vec();
+        fwht_naive(&mut c);
+        c
+    });
+    for tile in x.chunks_exact_mut(FWHT_TILE) {
+        fwht_naive(tile);
+    }
+    fwht_top_levels(x, FWHT_TILE);
+    #[cfg(debug_assertions)]
+    if let Some(want) = want {
+        debug_assert!(x == &want[..], "blocked FWHT diverged from the naive butterfly");
+    }
+}
+
+/// Multithreaded [`fwht`]: the vector is halved recursively across scoped
+/// threads (levels below the split never straddle it), then each
+/// midpoint combine runs as parallel chunked slices. Bit-identical to the
+/// serial transform — the parallel schedule pairs exactly the operands of
+/// the naive butterfly. `threads` is rounded down to a power of two;
+/// small inputs fall back to the serial blocked path. Intended for
+/// whole-vector server-side transforms and benches — worker shards
+/// already parallelize across clients and should keep calling [`fwht`].
+pub fn fwht_threaded(x: &mut [f64], threads: usize) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of 2, got {n}");
+    let threads = threads.max(1);
+    let lanes = if threads.is_power_of_two() {
+        threads
+    } else {
+        threads.next_power_of_two() / 2
+    };
+    fwht_recursive(x, lanes.min(n / (2 * FWHT_TILE).max(1)));
+}
+
+fn fwht_recursive(x: &mut [f64], lanes: usize) {
+    let n = x.len();
+    if lanes <= 1 || n <= 2 * FWHT_TILE {
+        fwht(x);
+        return;
+    }
+    let h = n / 2;
+    let (lo, hi) = x.split_at_mut(h);
+    std::thread::scope(|s| {
+        s.spawn(move || fwht_recursive(lo, lanes / 2));
+        fwht_recursive(hi, lanes / 2);
+    });
+    // midpoint combine, chunked across threads: disjoint (a, b) slice
+    // pairs at matching offsets
+    let (a, b) = x.split_at_mut(h);
+    let chunk = h.div_ceil(lanes).max(FWHT_TILE);
+    std::thread::scope(|s| {
+        for (ca, cb) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (aj, bj) in ca.iter_mut().zip(cb.iter_mut()) {
+                    let sum = *aj + *bj;
+                    *bj = *aj - *bj;
+                    *aj = sum;
+                }
+            });
+        }
+    });
 }
 
 /// Next power of two >= n.
@@ -107,6 +221,43 @@ mod tests {
         let mut x = vec![1.0, 2.0, 3.0, 4.0];
         fwht(&mut x);
         assert_eq!(x, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_length_one_is_identity() {
+        let mut x = vec![5.5];
+        fwht(&mut x);
+        assert_eq!(x, vec![5.5]);
+        fwht_threaded(&mut x, 4);
+        assert_eq!(x, vec![5.5]);
+    }
+
+    #[test]
+    fn blocked_fwht_matches_naive_bit_for_bit() {
+        // sizes past the tile so the blocked top-level schedule is active
+        let mut rng = Rng::new(84);
+        for n in [1usize << 13, 1 << 14] {
+            let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = x.clone();
+            fwht_naive(&mut want);
+            fwht(&mut x);
+            assert_eq!(x, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn threaded_fwht_matches_serial_bit_for_bit() {
+        let mut rng = Rng::new(85);
+        for n in [1usize << 12, 1 << 14, 1 << 15] {
+            let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = base.clone();
+            fwht(&mut want);
+            for threads in [1usize, 2, 3, 4, 7] {
+                let mut x = base.clone();
+                fwht_threaded(&mut x, threads);
+                assert_eq!(x, want, "n={n} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 pub use std::hint::black_box;
 
 /// One benchmark measurement.
@@ -69,6 +71,21 @@ impl Suite {
             measure: Duration::from_millis(200),
             min_samples: 5,
             results: Vec::new(),
+        }
+    }
+
+    /// True when `BENCH_QUICK=1` is set — the CI smoke mode, which shrinks
+    /// warmup/measure so all bench binaries run in seconds.
+    pub fn quick_mode() -> bool {
+        std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+    }
+
+    /// [`Suite::quick`] under `BENCH_QUICK=1`, [`Suite::new`] otherwise.
+    pub fn from_env() -> Self {
+        if Self::quick_mode() {
+            Self::quick()
+        } else {
+            Self::new()
         }
     }
 
@@ -135,6 +152,41 @@ impl Suite {
         self.results.last().unwrap()
     }
 
+    /// Emit the suite's measurements as a `BENCH_*.json` trajectory
+    /// artifact: one object per series (name, iters, mean/p50/p95 ns,
+    /// elements, throughput in Melem/s) plus run metadata — bench name,
+    /// effective worker-thread count, quick-mode flag, and the git
+    /// revision — so numbers from different machines and commits stay
+    /// interpretable. `scripts/bench_diff.sh` compares consecutive
+    /// artifacts and gates on `kernels/*` regressions.
+    pub fn write_json(&self, path: &str, bench: &str, threads: usize) -> std::io::Result<()> {
+        let series: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                Json::obj()
+                    .push("name", m.name.as_str())
+                    .push("iters", m.iters as i64)
+                    .push("mean_ns", m.mean_ns)
+                    .push("p50_ns", m.p50_ns)
+                    .push("p95_ns", m.p95_ns)
+                    .push("elements", m.elements.map(|e| Json::Int(e as i64)).unwrap_or(Json::Null))
+                    .push(
+                        "throughput_meps",
+                        m.throughput_mps().map(Json::Num).unwrap_or(Json::Null),
+                    )
+            })
+            .collect();
+        let doc = Json::obj()
+            .push("schema", "benchkit-v1")
+            .push("bench", bench)
+            .push("git_rev", git_rev())
+            .push("threads", threads)
+            .push("quick", Self::quick_mode())
+            .push("series", series);
+        std::fs::write(path, doc.render() + "\n")
+    }
+
     /// Print a summary table of all measurements.
     pub fn report(&self) {
         println!("\n== benchkit report ({} benchmarks) ==", self.results.len());
@@ -152,6 +204,38 @@ impl Suite {
 /// Re-export-style helper so benches read like criterion code.
 pub fn consume<T>(x: T) -> T {
     bb(x)
+}
+
+/// Worker-thread count for benches: the pinned `default` (comparable
+/// numbers across machines) unless `BENCH_THREADS` overrides it. Fails
+/// loudly on a malformed value — a silently ignored override would record
+/// misattributed throughput in the trajectory.
+pub fn bench_threads(default: usize) -> usize {
+    match std::env::var("BENCH_THREADS") {
+        Ok(v) => {
+            let t: usize = v
+                .parse()
+                .unwrap_or_else(|_| panic!("BENCH_THREADS must be a positive integer, got {v:?}"));
+            assert!(t > 0, "BENCH_THREADS must be positive");
+            t
+        }
+        Err(_) => default,
+    }
+}
+
+/// Best-effort short git revision for trajectory metadata ("unknown"
+/// outside a git checkout — never an error: metadata must not fail a
+/// bench run).
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 #[cfg(test)]
@@ -173,6 +257,39 @@ mod tests {
         assert_eq!(s.results.len(), 1);
         assert!(s.results[0].mean_ns > 0.0);
         assert!(s.results[0].iters > 0);
+    }
+
+    #[test]
+    fn write_json_emits_schema_and_series() {
+        let mut s = Suite {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(10),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        s.bench_elements("kernels/demo", Some(64), || {
+            black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join("benchkit_write_json_test.json");
+        let path = path.to_str().unwrap();
+        s.write_json(path, "bench_test", 4).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(text.contains(r#""schema":"benchkit-v1""#), "{text}");
+        assert!(text.contains(r#""bench":"bench_test""#));
+        assert!(text.contains(r#""threads":4"#));
+        assert!(text.contains(r#""name":"kernels/demo""#));
+        assert!(text.contains(r#""elements":64"#));
+        assert!(text.contains(r#""throughput_meps":"#));
+    }
+
+    #[test]
+    fn bench_threads_default_applies_without_env() {
+        // the env var is absent in the test harness; the pinned default
+        // must come back unchanged
+        if std::env::var("BENCH_THREADS").is_err() {
+            assert_eq!(bench_threads(4), 4);
+        }
     }
 
     #[test]

@@ -39,6 +39,26 @@ pub mod seed_domain {
     pub const COORD_FAMILY: u64 = 0xD0_0004;
 }
 
+/// SplitMix64's additive constant (the golden-ratio gamma).
+const SM64_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Coordinate-tag multiplier of [`Rng::derive_coord`] — shared with the
+/// lane-batched deriver so both compute the identical per-coordinate tag.
+const COORD_MUL: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+/// SplitMix64's output finalizer (Stafford mix13): the avalanche applied to
+/// the post-increment state. Exposed module-internally so [`CoordLanes`]
+/// can unroll the exact seed-expansion arithmetic of [`SplitMix64`] +
+/// [`Rng::new`] as straight-line lane code — one shared definition is what
+/// makes the batched path bit-identical by construction, not by parallel
+/// maintenance of two copies.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64: used for seeding and stream derivation (passes BigCrush).
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {
@@ -52,11 +72,8 @@ impl SplitMix64 {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(SM64_GAMMA);
+        mix64(self.state)
     }
 }
 
@@ -132,8 +149,21 @@ impl Rng {
     /// asserted: per-coordinate marginals are unaffected, only joint
     /// independence across colliding streams would quietly degrade.
     pub fn derive_coord(family_seed: u64, coord: u64) -> Self {
-        let mut sm = SplitMix64::new(family_seed ^ coord.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let mut sm = SplitMix64::new(family_seed ^ coord.wrapping_mul(COORD_MUL));
         Self::new(sm.next_u64())
+    }
+
+    /// Lane-batched sibling of [`Rng::derive_coord`]: lane `l` of the
+    /// returned expander is exactly the stream of coordinate
+    /// `base_coord + l`. Because `derive_coord` is position-free, batching
+    /// L consecutive coordinates is pure reassociation — no drawn bit can
+    /// differ from L scalar derivations (see docs/determinism.md and the
+    /// `property_kernels` suite).
+    pub fn derive_coord_batch<const L: usize>(
+        family_seed: u64,
+        base_coord: u64,
+    ) -> CoordLanes<L> {
+        CoordLanes::derive(family_seed, base_coord)
     }
 
     #[inline]
@@ -230,7 +260,7 @@ impl Rng {
         let mut m = (self.next_u64() as u128) * (n as u128);
         let mut lo = m as u64;
         if lo < n {
-            let t = n.wrapping_neg() % n;
+            let t = lemire_threshold(n);
             while lo < t {
                 m = (self.next_u64() as u128) * (n as u128);
                 lo = m as u64;
@@ -267,6 +297,204 @@ impl Rng {
     /// Fill a vector with U(-1/2, 1/2) dithers.
     pub fn dither_vec(&mut self, d: usize) -> Vec<f64> {
         (0..d).map(|_| self.dither()).collect()
+    }
+}
+
+/// Default lane width of the batched coordinate kernels: wide enough for
+/// two AVX2 (or one AVX-512) u64 vectors' worth of independent streams,
+/// small enough that a lane block always fits in registers.
+pub const COORD_LANES: usize = 8;
+
+/// Struct-of-arrays expander over L consecutive *seekable* coordinate
+/// streams ([`Rng::derive_coord`]): lane `l` carries the xoshiro256++
+/// state of coordinate `base_coord + l`, and every operation advances all
+/// lanes with branch-free straight-line code the autovectorizer can pack.
+///
+/// Bit-identity contract: for every lane, every draw equals what the
+/// scalar `Rng::derive_coord(family, base + l)` path produces — the
+/// derivation unrolls the exact [`SplitMix64`] + [`Rng::new`] arithmetic
+/// through the shared `mix64` finalizer, and the rejection slow path of
+/// [`CoordLanes::below`] redraws from the rejecting lane's own stream
+/// only. Batching is therefore pure reassociation of independent streams;
+/// chunk boundaries and lane widths cannot change any drawn bit.
+#[derive(Clone, Debug)]
+pub struct CoordLanes<const L: usize> {
+    s0: [u64; L],
+    s1: [u64; L],
+    s2: [u64; L],
+    s3: [u64; L],
+}
+
+impl<const L: usize> CoordLanes<L> {
+    /// Derive the streams of coordinates `base_coord .. base_coord + L`
+    /// under `family_seed` — the straight-line unroll of
+    /// `Rng::derive_coord` per lane: one SplitMix64 step over the
+    /// coordinate tag yields the xoshiro seed, four more expand the state.
+    pub fn derive(family_seed: u64, base_coord: u64) -> Self {
+        let mut s0 = [0u64; L];
+        let mut s1 = [0u64; L];
+        let mut s2 = [0u64; L];
+        let mut s3 = [0u64; L];
+        for l in 0..L {
+            let coord = base_coord.wrapping_add(l as u64);
+            let tag = family_seed ^ coord.wrapping_mul(COORD_MUL);
+            let seed = mix64(tag.wrapping_add(SM64_GAMMA));
+            s0[l] = mix64(seed.wrapping_add(SM64_GAMMA));
+            s1[l] = mix64(seed.wrapping_add(SM64_GAMMA.wrapping_mul(2)));
+            s2[l] = mix64(seed.wrapping_add(SM64_GAMMA.wrapping_mul(3)));
+            s3[l] = mix64(seed.wrapping_add(SM64_GAMMA.wrapping_mul(4)));
+        }
+        Self { s0, s1, s2, s3 }
+    }
+
+    /// One xoshiro256++ step on every lane.
+    #[inline]
+    pub fn next_u64(&mut self) -> [u64; L] {
+        let mut out = [0u64; L];
+        for l in 0..L {
+            out[l] = self.s0[l]
+                .wrapping_add(self.s3[l])
+                .rotate_left(23)
+                .wrapping_add(self.s0[l]);
+            let t = self.s1[l] << 17;
+            self.s2[l] ^= self.s0[l];
+            self.s3[l] ^= self.s1[l];
+            self.s1[l] ^= self.s2[l];
+            self.s0[l] ^= self.s3[l];
+            self.s2[l] ^= t;
+            self.s3[l] = self.s3[l].rotate_left(45);
+        }
+        out
+    }
+
+    /// One xoshiro256++ step on lane `l` only — the rejection slow path:
+    /// a rejecting lane redraws from ITS stream without advancing any
+    /// other lane, exactly like the scalar rejection loop.
+    #[inline]
+    fn next_lane(&mut self, l: usize) -> u64 {
+        let out = self.s0[l]
+            .wrapping_add(self.s3[l])
+            .rotate_left(23)
+            .wrapping_add(self.s0[l]);
+        let t = self.s1[l] << 17;
+        self.s2[l] ^= self.s0[l];
+        self.s3[l] ^= self.s1[l];
+        self.s1[l] ^= self.s2[l];
+        self.s0[l] ^= self.s3[l];
+        self.s2[l] ^= t;
+        self.s3[l] = self.s3[l].rotate_left(45);
+        out
+    }
+
+    /// Uniform [0, 1) on every lane (the [`Rng::u01`] mapping per lane).
+    #[inline]
+    pub fn u01(&mut self) -> [f64; L] {
+        let r = self.next_u64();
+        let mut out = [0.0f64; L];
+        for l in 0..L {
+            out[l] = (r[l] >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        }
+        out
+    }
+
+    /// U(-1/2, 1/2) on every lane (the [`Rng::dither`] mapping per lane).
+    #[inline]
+    pub fn dither(&mut self) -> [f64; L] {
+        let mut out = self.u01();
+        for o in out.iter_mut() {
+            *o -= 0.5;
+        }
+        out
+    }
+
+    /// Uniform integer in [0, n) on every lane — Lemire's nearly
+    /// divisionless method with the rejection threshold `t` hoisted by the
+    /// caller ([`lemire_threshold`]), so the per-coordinate loop carries
+    /// no modulo. Bit-identical per lane to [`Rng::below`]: since
+    /// t = 2⁶⁴ mod n < n, `lo < t` rejects exactly the draws the scalar
+    /// `if lo < n { while lo < t … }` rejects, and a rejecting lane
+    /// redraws from its own stream without disturbing its neighbours.
+    #[inline]
+    pub fn below(&mut self, n: u64, t: u64) -> [u64; L] {
+        debug_assert_eq!(t, lemire_threshold(n), "threshold hoisted for a different n");
+        let r = self.next_u64();
+        let mut out = [0u64; L];
+        let mut any_reject = false;
+        for l in 0..L {
+            let m = (r[l] as u128) * (n as u128);
+            out[l] = (m >> 64) as u64;
+            any_reject |= (m as u64) < t;
+        }
+        if any_reject {
+            for l in 0..L {
+                let mut m = (r[l] as u128) * (n as u128);
+                while (m as u64) < t {
+                    m = (self.next_lane(l) as u128) * (n as u128);
+                }
+                out[l] = (m >> 64) as u64;
+            }
+        }
+        out
+    }
+}
+
+/// The Lemire rejection threshold 2⁶⁴ mod n for unbiased `below(n)`
+/// draws. Hoisting it out of a per-coordinate fill removes the only
+/// division/modulo from the hot loop; always < n, so the hoisted
+/// `lo < t` test is exactly the scalar rejection condition.
+#[inline]
+pub fn lemire_threshold(n: u64) -> u64 {
+    debug_assert!(n > 0, "below(0) is ill-defined");
+    n.wrapping_neg() % n
+}
+
+/// Fill `out[k] = Rng::derive_coord(family_seed, lo + k).below(n)` for the
+/// whole slice — the lane-batched mask-expansion kernel. Full lane blocks
+/// go through [`CoordLanes`]; the tail falls back to the scalar deriver,
+/// which is bit-identical per coordinate by construction (each lane IS the
+/// scalar stream), so any split into fills concatenates exactly.
+pub fn fill_below_coords(family_seed: u64, lo: u64, n: u64, out: &mut [u64]) {
+    let t = lemire_threshold(n);
+    let mut base = lo;
+    let mut chunks = out.chunks_exact_mut(COORD_LANES);
+    for chunk in chunks.by_ref() {
+        let mut lanes: CoordLanes<COORD_LANES> = CoordLanes::derive(family_seed, base);
+        chunk.copy_from_slice(&lanes.below(n, t));
+        base = base.wrapping_add(COORD_LANES as u64);
+    }
+    for (k, o) in chunks.into_remainder().iter_mut().enumerate() {
+        *o = Rng::derive_coord(family_seed, base.wrapping_add(k as u64)).below(n);
+    }
+}
+
+/// Fill `out[k] = Rng::derive_coord(family_seed, lo + k).u01()` — the
+/// lane-batched dither/uniform fill (first draw of each coordinate
+/// stream), scalar-tail rules as in [`fill_below_coords`].
+pub fn fill_u01_coords(family_seed: u64, lo: u64, out: &mut [f64]) {
+    let mut base = lo;
+    let mut chunks = out.chunks_exact_mut(COORD_LANES);
+    for chunk in chunks.by_ref() {
+        let mut lanes: CoordLanes<COORD_LANES> = CoordLanes::derive(family_seed, base);
+        chunk.copy_from_slice(&lanes.u01());
+        base = base.wrapping_add(COORD_LANES as u64);
+    }
+    for (k, o) in chunks.into_remainder().iter_mut().enumerate() {
+        *o = Rng::derive_coord(family_seed, base.wrapping_add(k as u64)).u01();
+    }
+}
+
+/// Fill `out[k] = Rng::derive_coord(family_seed, lo + k).dither()` — the
+/// U(-1/2, 1/2) sibling of [`fill_u01_coords`].
+pub fn fill_dither_coords(family_seed: u64, lo: u64, out: &mut [f64]) {
+    let mut base = lo;
+    let mut chunks = out.chunks_exact_mut(COORD_LANES);
+    for chunk in chunks.by_ref() {
+        let mut lanes: CoordLanes<COORD_LANES> = CoordLanes::derive(family_seed, base);
+        chunk.copy_from_slice(&lanes.dither());
+        base = base.wrapping_add(COORD_LANES as u64);
+    }
+    for (k, o) in chunks.into_remainder().iter_mut().enumerate() {
+        *o = Rng::derive_coord(family_seed, base.wrapping_add(k as u64)).dither();
     }
 }
 
@@ -413,6 +641,107 @@ mod tests {
         }
         for &c in &counts {
             assert!((c as f64 - 20_000.0).abs() < 1_000.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn coord_lanes_match_scalar_streams_draw_for_draw() {
+        // every lane of the batched deriver IS the scalar per-coordinate
+        // stream: successive raw draws agree bit for bit
+        let fam = Rng::derive_domain(7, seed_domain::COORD_FAMILY, 0);
+        for base in [0u64, 1, 13, 1_000_003] {
+            let mut lanes: CoordLanes<8> = Rng::derive_coord_batch(fam, base);
+            let mut scalars: Vec<Rng> =
+                (0..8).map(|l| Rng::derive_coord(fam, base + l)).collect();
+            for _ in 0..16 {
+                let batch = lanes.next_u64();
+                for (l, s) in scalars.iter_mut().enumerate() {
+                    assert_eq!(batch[l], s.next_u64(), "lane {l} base {base}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coord_lanes_below_matches_scalar_under_heavy_rejection() {
+        // n just above 2^63 gives t = 2^64 mod n ≈ 2^62: ~1/4 of draws
+        // reject, so the per-lane slow path is exercised constantly and
+        // must consume exactly the scalar redraw sequence
+        let fam = Rng::derive_domain(11, seed_domain::COORD_FAMILY, 2);
+        for n in [3u64, 7, (1 << 40), (1 << 63) + (1 << 61), u64::MAX - 1] {
+            let t = lemire_threshold(n);
+            for base in [0u64, 5, 129] {
+                let mut lanes: CoordLanes<8> = CoordLanes::derive(fam, base);
+                let batch = lanes.below(n, t);
+                for (l, &got) in batch.iter().enumerate() {
+                    let want = Rng::derive_coord(fam, base + l as u64).below(n);
+                    assert_eq!(got, want, "n={n} lane {l} base {base}");
+                    assert!(got < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coord_fills_match_scalar_loops_for_unaligned_lengths() {
+        // fills over lengths straddling every lane-alignment case (< L,
+        // = L, non-multiples) equal the scalar per-coordinate loop
+        let fam = Rng::derive_domain(23, seed_domain::COORD_FAMILY, 5);
+        let n = 1u64 << 40;
+        for len in [0usize, 1, 7, 8, 9, 64, 100] {
+            for lo in [0u64, 1, 13] {
+                let mut got = vec![0u64; len];
+                fill_below_coords(fam, lo, n, &mut got);
+                let want: Vec<u64> =
+                    (0..len).map(|k| Rng::derive_coord(fam, lo + k as u64).below(n)).collect();
+                assert_eq!(got, want, "below len {len} lo {lo}");
+
+                let mut gf = vec![0.0f64; len];
+                fill_u01_coords(fam, lo, &mut gf);
+                let wf: Vec<f64> =
+                    (0..len).map(|k| Rng::derive_coord(fam, lo + k as u64).u01()).collect();
+                assert_eq!(gf, wf, "u01 len {len} lo {lo}");
+
+                fill_dither_coords(fam, lo, &mut gf);
+                let wd: Vec<f64> =
+                    (0..len).map(|k| Rng::derive_coord(fam, lo + k as u64).dither()).collect();
+                assert_eq!(gf, wd, "dither len {len} lo {lo}");
+            }
+        }
+    }
+
+    #[test]
+    fn coord_lanes_are_lane_width_invariant() {
+        // the same coordinate produces the same bits no matter which lane
+        // width (or lane position) covers it — batching is reassociation
+        let fam = Rng::derive_domain(31, seed_domain::COORD_FAMILY, 1);
+        let want: Vec<u64> = (0..32).map(|j| Rng::derive_coord(fam, j).next_u64()).collect();
+        macro_rules! check_width {
+            ($w:literal) => {
+                let mut got = Vec::new();
+                let mut base = 0u64;
+                while (base as usize) < 32 {
+                    let mut lanes: CoordLanes<$w> = CoordLanes::derive(fam, base);
+                    got.extend(lanes.next_u64());
+                    base += $w;
+                }
+                got.truncate(32);
+                assert_eq!(got, want, "lane width {}", $w);
+            };
+        }
+        check_width!(1);
+        check_width!(2);
+        check_width!(4);
+        check_width!(8);
+        check_width!(16);
+    }
+
+    #[test]
+    fn lemire_threshold_is_two_pow_64_mod_n() {
+        for n in [1u64, 2, 3, 7, 1 << 40, (1 << 63) + 1, u64::MAX] {
+            let want = ((1u128 << 64) % n as u128) as u64;
+            assert_eq!(lemire_threshold(n), want, "n={n}");
+            assert!(lemire_threshold(n) < n);
         }
     }
 

@@ -1,0 +1,296 @@
+//! The lane-batched ≡ scalar kernel property matrix.
+//!
+//! PR 6 rewrites every per-coordinate hot loop — SecAgg mask expansion,
+//! dither/u01 fills, the quantizer encode paths — on the lane-batched
+//! coordinate expander (`CoordLanes`). The batching is pure
+//! reassociation of position-free derivations (docs/determinism.md has
+//! the argument), so NONE of it may change a single drawn bit. This
+//! suite is the enforcement: batched expansions are compared against
+//! literal scalar `Rng::derive_coord` loops across lane widths and chunk
+//! geometries, and the end-to-end identities the repo already guarantees
+//! (Plain ≡ SecAgg, chunked ≡ unchunked) are re-proven THROUGH the
+//! batched kernels.
+//!
+//! Every test name carries the `kernels_` prefix so `cargo test -q
+//! kernels` runs exactly this matrix (plus the in-module kernel unit
+//! tests).
+
+use exact_comp::coordinator::sampling::SamplingPolicy;
+use exact_comp::mechanisms::pipeline::{
+    ChunkPlan, ClientEncoder, Plain, SecAgg, SharedRound,
+};
+use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
+use exact_comp::secagg::{self, pair_seed, SecAggParams};
+use exact_comp::testing::{
+    assert_chunked_window_matches_unchunked, assert_window_closes_exactly, Fleet,
+};
+use exact_comp::transforms::hadamard::{fwht, fwht_naive, fwht_threaded};
+use exact_comp::util::rng::{
+    fill_below_coords, fill_dither_coords, fill_u01_coords, lemire_threshold, seed_domain,
+    Rng,
+};
+
+/// The chunk geometries of the acceptance matrix for dimension d:
+/// {1, 7, 64, d, d + 3} — sub-lane, non-multiple-of-lane, multi-lane,
+/// exact, and past-the-end chunk sizes.
+fn matrix_chunks(d: usize) -> Vec<usize> {
+    vec![1, 7, 64, d, d + 3]
+}
+
+/// A deterministic stand-in for a coordinate-stream family seed.
+fn family(tag: u64) -> u64 {
+    Rng::derive_domain(0x6B65_726E, seed_domain::COORD_FAMILY, tag)
+}
+
+// --- raw fill kernels vs scalar derivations ----------------------------
+
+#[test]
+fn kernels_fill_below_matches_scalar_derive_coord_loop() {
+    let d = 257usize; // prime: exercises every lane-tail combination
+    let m = SecAggParams::default().modulus;
+    for (f, n) in [(family(1), m), (family(2), 3), (family(3), (1u64 << 63) + (1 << 61))] {
+        for chunk in matrix_chunks(d) {
+            let plan = ChunkPlan::new(d, chunk);
+            let mut got = vec![0u64; d];
+            for r in plan.ranges() {
+                let lo = r.start;
+                fill_below_coords(f, lo as u64, n, &mut got[r]);
+            }
+            let want: Vec<u64> =
+                (0..d).map(|j| Rng::derive_coord(f, j as u64).below(n)).collect();
+            assert_eq!(got, want, "fill_below n={n} chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn kernels_fill_u01_and_dither_match_scalar_draws() {
+    let d = 129usize;
+    let f = family(4);
+    for chunk in matrix_chunks(d) {
+        let plan = ChunkPlan::new(d, chunk);
+        let mut u = vec![0.0f64; d];
+        let mut s = vec![0.0f64; d];
+        for r in plan.ranges() {
+            let lo = r.start as u64;
+            fill_u01_coords(f, lo, &mut u[r.clone()]);
+            fill_dither_coords(f, lo, &mut s[r]);
+        }
+        for j in 0..d {
+            let mut a = Rng::derive_coord(f, j as u64);
+            let mut b = Rng::derive_coord(f, j as u64);
+            assert_eq!(u[j], a.u01(), "u01 j={j} chunk={chunk}");
+            assert_eq!(s[j], b.dither(), "dither j={j} chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn kernels_lane_width_does_not_change_any_bit() {
+    // the same coordinate block expanded at every lane width must agree
+    // with the scalar stream draw for draw, including through rejection
+    // sampling (n chosen so below() rejects ~1/4 of raw u64 draws)
+    let f = family(5);
+    let n = (1u64 << 63) + (1 << 61);
+    let t = lemire_threshold(n);
+    macro_rules! check_width {
+        ($L:literal) => {{
+            let mut lanes = Rng::derive_coord_batch::<$L>(f, 40);
+            let raw = lanes.next_u64();
+            let us = lanes.u01();
+            let bs = lanes.below(n, t);
+            for l in 0..$L {
+                let mut scalar = Rng::derive_coord(f, 40 + l as u64);
+                assert_eq!(raw[l], scalar.next_u64(), "L={} lane={l} raw", $L);
+                assert_eq!(us[l], scalar.u01(), "L={} lane={l} u01", $L);
+                assert_eq!(bs[l], scalar.below(n), "L={} lane={l} below", $L);
+            }
+        }};
+    }
+    check_width!(1);
+    check_width!(2);
+    check_width!(4);
+    check_width!(8);
+    check_width!(16);
+}
+
+// --- SecAgg mask expansion ---------------------------------------------
+
+#[test]
+fn kernels_mask_expansion_matches_scalar_reference() {
+    let params = SecAggParams::default();
+    let m = params.modulus;
+    let (n_clients, d) = (5usize, 83usize);
+    let root = family(6);
+    let ms: Vec<i64> = (0..d as i64).map(|j| (j * 7 - 120) % 50).collect();
+    for client in 0..n_clients {
+        // scalar reference: per-leg, per-coordinate derive_coord loop —
+        // the pre-batching implementation, kept alive here as the spec
+        let mut want: Vec<u64> = ms.iter().map(|&v| secagg::to_field(v, m)).collect();
+        for other in 0..n_clients {
+            if other == client {
+                continue;
+            }
+            let ps = pair_seed(root, client, other);
+            for (j, w) in want.iter_mut().enumerate() {
+                let mask = Rng::derive_coord(ps, j as u64).below(m);
+                *w = if client < other { (*w + mask) % m } else { (*w + m - mask) % m };
+            }
+        }
+        let got = secagg::mask_descriptions(&ms, client, n_clients, root, params);
+        assert_eq!(got, want, "client {client}: batched masking diverged from scalar");
+        // and chunked: concatenation over every matrix geometry
+        for chunk in matrix_chunks(d) {
+            let plan = ChunkPlan::new(d, chunk);
+            let mut cat = Vec::with_capacity(d);
+            for r in plan.ranges() {
+                cat.extend(secagg::mask_descriptions_range(
+                    &ms[r.clone()],
+                    client,
+                    n_clients,
+                    root,
+                    params,
+                    r.start,
+                ));
+            }
+            assert_eq!(cat, want, "client {client} chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn kernels_mask_reconstruction_matches_scalar_reference() {
+    let params = SecAggParams::default();
+    let m = params.modulus;
+    let (n_clients, d, dropped) = (6usize, 41usize, 2usize);
+    let root = family(7);
+    let shares: Vec<_> = (0..n_clients)
+        .filter(|&h| h != dropped)
+        .map(|h| secagg::recovery_share(root, h, dropped))
+        .collect();
+    let mut want = vec![0u64; d];
+    for share in &shares {
+        for (j, w) in want.iter_mut().enumerate() {
+            let mask = Rng::derive_coord(share.pair_seed, j as u64).below(m);
+            *w = if dropped < share.holder { (*w + mask) % m } else { (*w + m - mask) % m };
+        }
+    }
+    assert_eq!(secagg::reconstruct_dropped_masks(dropped, &shares, d, params), want);
+    for chunk in matrix_chunks(d) {
+        let plan = ChunkPlan::new(d, chunk);
+        let mut cat = Vec::with_capacity(d);
+        for r in plan.ranges() {
+            cat.extend(secagg::reconstruct_dropped_masks_range(
+                dropped,
+                &shares,
+                r.start,
+                r.len(),
+                params,
+            ));
+        }
+        assert_eq!(cat, want, "chunk={chunk}");
+    }
+}
+
+// --- quantizer encode kernels ------------------------------------------
+
+#[test]
+fn kernels_quantizer_encode_chunks_match_whole_vector() {
+    let (n, d) = (7usize, 83usize);
+    let round = SharedRound::new(family(8), n, d);
+    let mut rng = Rng::new(31);
+    let xs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
+    let ih = IrwinHallMechanism::new(0.4, 4.0);
+    let ag = AggregateGaussian::new(0.4, 4.0);
+    for client in [0usize, 3, 6] {
+        let ih_whole = ih.encode(client, &xs[client], &round);
+        let ag_whole = ag.encode(client, &xs[client], &round);
+        for chunk in matrix_chunks(d) {
+            let plan = ChunkPlan::new(d, chunk);
+            let mut ih_cat: Vec<i64> = Vec::with_capacity(d);
+            let mut ag_cat: Vec<i64> = Vec::with_capacity(d);
+            for r in plan.ranges() {
+                ih_cat.extend(ih.encode_chunk(client, &xs[client], r.clone(), &round).ms);
+                ag_cat.extend(ag.encode_chunk(client, &xs[client], r, &round).ms);
+            }
+            assert_eq!(ih_cat, ih_whole.ms, "IH client {client} chunk={chunk}");
+            assert_eq!(ag_cat, ag_whole.ms, "AG client {client} chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn kernels_irwin_hall_dither_matches_scalar_stream() {
+    // the batched encode must consume exactly one u01 per coordinate of
+    // the client stream — the scalar spec is round_half_up(x/w + u01(j))
+    let (n, d) = (5usize, 67usize);
+    let round = SharedRound::new(family(9), n, d);
+    let ih = IrwinHallMechanism::new(0.3, 4.0);
+    let w = ih.step(n);
+    let mut rng = Rng::new(32);
+    let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+    let got = ih.encode(1, &x, &round).ms;
+    let stream = round.client_coord_stream(1);
+    let want: Vec<i64> = (0..d)
+        .map(|j| {
+            let s = stream.at(j).u01();
+            exact_comp::quantizer::round_half_up(x[j] / w + s)
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+// --- end-to-end identities through the batched kernels -----------------
+
+#[test]
+fn kernels_plain_equals_secagg_through_batched_path() {
+    let fleet = Fleet::new(6, 37, 91);
+    let schedule = vec![vec![], vec![1, 4], vec![]];
+    let mech = IrwinHallMechanism::new(0.5, 4.0);
+    assert_window_closes_exactly(&mech, &SecAgg::new(), &fleet, &schedule, family(10));
+    let mech = AggregateGaussian::new(0.5, 4.0);
+    assert_window_closes_exactly(&mech, &SecAgg::new(), &fleet, &schedule, family(11));
+}
+
+#[test]
+fn kernels_chunked_equals_unchunked_through_batched_path() {
+    let d = 37usize;
+    let fleet = Fleet::new(6, d, 92);
+    let schedule = vec![vec![], vec![2]];
+    let mech = IrwinHallMechanism::new(0.5, 4.0);
+    for transport in [&Plain as &dyn exact_comp::mechanisms::pipeline::Transport, &SecAgg::new()]
+    {
+        assert_chunked_window_matches_unchunked(
+            &mech,
+            transport,
+            &fleet,
+            &SamplingPolicy::Full,
+            &schedule,
+            family(12),
+            &matrix_chunks(d),
+        );
+    }
+}
+
+// --- FWHT schedules ----------------------------------------------------
+
+#[test]
+fn kernels_fwht_blocked_and_threaded_match_naive() {
+    // past the tile (2¹²) so both the blocked top levels and the
+    // recursive threaded split are active
+    let mut rng = Rng::new(33);
+    for n in [1usize << 13, 1 << 15] {
+        let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut want = base.clone();
+        fwht_naive(&mut want);
+        let mut blocked = base.clone();
+        fwht(&mut blocked);
+        assert_eq!(blocked, want, "blocked n={n}");
+        for threads in [1usize, 2, 4, 6] {
+            let mut x = base.clone();
+            fwht_threaded(&mut x, threads);
+            assert_eq!(x, want, "threaded n={n} threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+#!/usr/bin/env bash
+# Bench trajectory regression gate.
+#
+# Compares a fresh BENCH_*.json artifact (argument 1, or the
+# highest-numbered BENCH_N.json at the repo root) against the most recent
+# PRIOR trajectory artifact and fails loudly if any `kernels/*` series
+# lost more than 20% throughput. Non-kernel series are reported but do not
+# gate: figure/mechanism benches measure whole experiments whose cost
+# legitimately moves as the repro grows; the kernel series are the
+# contract this gate protects.
+#
+# Artifacts marked `"quick": true` (BENCH_QUICK smoke runs) or
+# `"pending": true` (committed placeholders awaiting a toolchain) carry no
+# comparable numbers: they are schema-checked only and the gate exits 0.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+fresh="${1:-}"
+if [ -z "$fresh" ]; then
+    fresh=$(ls BENCH_*.json 2>/dev/null | sort -t_ -k2 -n | tail -n 1 || true)
+fi
+if [ -z "$fresh" ] || [ ! -f "$fresh" ]; then
+    echo "bench_diff: no trajectory artifact found (expected BENCH_N.json at the repo root)" >&2
+    exit 1
+fi
+
+# baseline: the newest BENCH_*.json at the repo root that is not the fresh
+# artifact itself
+baseline=""
+for f in $(ls BENCH_*.json 2>/dev/null | sort -t_ -k2 -n -r); do
+    if [ "$(readlink -f "$f")" != "$(readlink -f "$fresh")" ]; then
+        baseline="$f"
+        break
+    fi
+done
+
+python3 - "$fresh" "$baseline" <<'PY'
+import json
+import sys
+
+fresh_path, baseline_path = sys.argv[1], sys.argv[2]
+
+
+def load(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != "benchkit-v1":
+        sys.exit(f"bench_diff: {path}: unknown schema {doc.get('schema')!r}")
+    for s in doc.get("series", []):
+        if "name" not in s or "mean_ns" not in s:
+            sys.exit(f"bench_diff: {path}: malformed series entry {s!r}")
+    return doc
+
+
+fresh = load(fresh_path)
+print(f"bench_diff: {fresh_path}: schema OK, {len(fresh.get('series', []))} series")
+
+def incomparable(doc, path):
+    if doc.get("pending"):
+        return f"{path} is a pending placeholder (no recorded numbers)"
+    if doc.get("quick"):
+        return f"{path} is a BENCH_QUICK smoke artifact (not a trajectory point)"
+    if not doc.get("series"):
+        return f"{path} has an empty series list"
+    return None
+
+
+reason = incomparable(fresh, fresh_path)
+if reason:
+    print(f"bench_diff: skipping comparison: {reason}")
+    sys.exit(0)
+
+if not baseline_path:
+    print("bench_diff: no prior trajectory artifact — nothing to compare against")
+    sys.exit(0)
+
+base = load(baseline_path)
+reason = incomparable(base, baseline_path)
+if reason:
+    print(f"bench_diff: skipping comparison: {reason}")
+    sys.exit(0)
+
+
+def throughputs(doc):
+    out = {}
+    for s in doc["series"]:
+        t = s.get("throughput_meps")
+        if t:
+            out[s["name"]] = t
+    return out
+
+
+old = throughputs(base)
+new = throughputs(fresh)
+regressions = []
+for name in sorted(set(old) & set(new)):
+    ratio = new[name] / old[name]
+    marker = ""
+    if ratio < 0.8:
+        marker = "  <-- REGRESSION" if name.startswith("kernels/") else "  (slower, not gated)"
+        if name.startswith("kernels/"):
+            regressions.append((name, ratio))
+    print(f"bench_diff: {name}: {old[name]:.2f} -> {new[name]:.2f} Melem/s ({ratio:.2f}x){marker}")
+
+if regressions:
+    print(
+        f"bench_diff: FAIL — {len(regressions)} kernels/* series lost >20% throughput "
+        f"vs {baseline_path}:",
+        file=sys.stderr,
+    )
+    for name, ratio in regressions:
+        print(f"bench_diff:   {name}: {ratio:.2f}x of baseline", file=sys.stderr)
+    sys.exit(1)
+
+print(f"bench_diff: OK — no kernels/* series regressed >20% vs {baseline_path}")
+PY

@@ -68,6 +68,29 @@ cargo test -q sampling
 echo "== chunked-streaming property suite (seed matrix: 3 seeds x chunk in {1,64,d}) =="
 cargo test -q chunked
 
+# Lane-batched kernel suite, run by name for the same visibility: every
+# batched ≡ scalar bit-identity cell (mask expansion, mask recovery,
+# u01/dither fills, quantizer encodes × lane widths × chunk geometries
+# {1, 7, 64, d, d+3}), the blocked/threaded FWHT schedule identities, and
+# the end-to-end Plain ≡ SecAgg and chunked ≡ unchunked re-proofs THROUGH
+# the batched kernels. Redundant with the full `cargo test -q` above by
+# construction — a failure here names the kernel-batching contract
+# directly.
+echo "== lane-batched kernel property suite (batched == scalar bit-identity) =="
+cargo test -q kernels
+
+# Bench smoke: every bench binary must still run end to end. BENCH_QUICK=1
+# shrinks warmup/measure so the three binaries finish in seconds;
+# bench_coordinator writes its artifact to target/BENCH_quick.json in this
+# mode (never the committed BENCH_N.json trajectory — quick numbers are
+# not trajectory points). bench_diff.sh then schema-checks the artifact;
+# it skips the regression comparison for quick artifacts by design.
+echo "== bench smoke (BENCH_QUICK=1) =="
+BENCH_QUICK=1 cargo bench --bench bench_mechanisms
+BENCH_QUICK=1 cargo bench --bench bench_coordinator
+BENCH_QUICK=1 cargo bench --bench bench_figures
+scripts/bench_diff.sh target/BENCH_quick.json
+
 echo "== clippy (deny warnings) =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
