@@ -50,8 +50,9 @@ pub use config::Config;
 pub use metrics::Metrics;
 pub use runtime::{
     run_round, run_round_encoded, run_round_mech, run_rounds_encoded,
-    run_rounds_encoded_chunked, run_rounds_encoded_sampled, run_rounds_encoded_with_dropouts,
-    run_rounds_mech, run_rounds_mech_chunked, run_rounds_mech_sampled,
+    run_rounds_encoded_chunked, run_rounds_encoded_sampled, run_rounds_encoded_scheduled,
+    run_rounds_encoded_with_dropouts, run_rounds_mech, run_rounds_mech_chunked,
+    run_rounds_mech_sampled,
     run_rounds_mech_with_dropouts, ChunkStreamStats, ClientPool, LocalCompute, RoundReport,
 };
 pub use sampling::SamplingPolicy;

@@ -527,7 +527,11 @@ impl Drop for ClientPool {
 }
 
 /// Outcome of one orchestrated round.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact (bit-level f64) equality across every field —
+/// what the snapshot/resume and scheduled-vs-sampled bit-identity tests
+/// assert.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundReport {
     pub round: u64,
     pub output: RoundOutput,
@@ -663,6 +667,97 @@ pub fn run_rounds_encoded_sampled(
     root_seed: u64,
     policy: &SamplingPolicy,
     dropouts: &[Vec<usize>],
+    ledger: Option<&mut PrivacyLedger>,
+) -> Vec<RoundReport> {
+    let n = pool.n_clients;
+    // derive the cohorts and per-round accounting rates from the policy;
+    // the cohort-explicit core does the rest
+    let cohorts: Vec<SurvivorSet> = policy.cohorts(root_seed, start_round, window, n);
+    // per-round rate: γ schedules amplify each round with exactly the
+    // rate it sampled at. Poisson's empty-cohort redraw deviates from the
+    // idealized sampler by TV ≤ (1−γ)^(n−1) on every neighboring dataset
+    // — surrendered as a per-round δ surcharge
+    let rates: Vec<(f64, f64)> = (0..window)
+        .map(|r| {
+            let round_id = start_round + r as u64;
+            (policy.amplification_gamma(n, round_id), policy.conditioning_tv(n, round_id))
+        })
+        .collect();
+    run_rounds_encoded_cohorts(
+        pool, encoder, transport, decoder, start_round, window, state, root_seed, &cohorts,
+        &rates, dropouts, ledger,
+    )
+}
+
+/// The scenario-scheduled sibling of [`run_rounds_encoded_sampled`]:
+/// round r's participating cohort is given EXPLICITLY instead of being
+/// derived from a [`SamplingPolicy`] — the shape a scenario engine
+/// produces, where membership comes from simulated churn rather than a
+/// sampling scheme (`window = cohorts.len()`). Session opening, shard
+/// masking, dropout recovery and decode run through the identical core,
+/// so explicit cohorts equal to a policy's derived ones reproduce
+/// [`run_rounds_encoded_sampled`] bit for bit.
+///
+/// Ledger accounting: with no sampling scheme there is no scheme-derived
+/// amplification rate, so each executed round is recorded at its
+/// *realized* participation rate γᵣ = |cohort r| / n with zero TV slack.
+/// Under data-dependent (e.g. adversarial-churn) membership this is
+/// honest bookkeeping of the realized rate, NOT a subsampling
+/// amplification guarantee — amplification requires a randomized,
+/// data-independent sampler (see `dp/ledger.rs`'s scope notes).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_encoded_scheduled(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    state: &[f64],
+    root_seed: u64,
+    cohorts: &[SurvivorSet],
+    dropouts: &[Vec<usize>],
+    ledger: Option<&mut PrivacyLedger>,
+) -> Vec<RoundReport> {
+    let n = pool.n_clients;
+    for (r, c) in cohorts.iter().enumerate() {
+        assert_eq!(c.n(), n, "round {r}: scheduled cohort shaped for a different fleet");
+    }
+    let rates: Vec<(f64, f64)> =
+        cohorts.iter().map(|c| (c.n_alive() as f64 / n as f64, 0.0)).collect();
+    run_rounds_encoded_cohorts(
+        pool,
+        encoder,
+        transport,
+        decoder,
+        start_round,
+        cohorts.len(),
+        state,
+        root_seed,
+        cohorts,
+        &rates,
+        dropouts,
+        ledger,
+    )
+}
+
+/// The shared cohort-explicit core of the windowed runners: cohorts and
+/// per-round (γ, tv) accounting rates arrive precomputed; everything else
+/// — session opening over the cohorts, shard fan-out, dropout
+/// announcement, survivor decode, ledger recording — is identical for the
+/// policy-sampled and scenario-scheduled entry points.
+#[allow(clippy::too_many_arguments)]
+fn run_rounds_encoded_cohorts(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    cohorts: &[SurvivorSet],
+    rates: &[(f64, f64)],
+    dropouts: &[Vec<usize>],
     mut ledger: Option<&mut PrivacyLedger>,
 ) -> Vec<RoundReport> {
     assert!(window > 0, "a session window needs at least one round");
@@ -681,11 +776,20 @@ pub fn run_rounds_encoded_sampled(
         window,
         "dropout schedule must cover every round of the window"
     );
+    assert_eq!(
+        cohorts.len(),
+        window,
+        "cohort schedule must cover every round of the window"
+    );
+    assert_eq!(
+        rates.len(),
+        window,
+        "accounting-rate schedule must cover every round of the window"
+    );
     let n = pool.n_clients;
-    // derive the cohorts and validate the whole schedule before any shard
-    // does work (fail closed): dropouts must name cohort members, and
-    // every round must keep at least one survivor
-    let cohorts: Vec<SurvivorSet> = policy.cohorts(root_seed, start_round, window, n);
+    // validate the whole schedule before any shard does work (fail
+    // closed): dropouts must name cohort members, and every round must
+    // keep at least one survivor
     let survivor_sets: Vec<SurvivorSet> = cohorts
         .iter()
         .zip(dropouts)
@@ -701,7 +805,7 @@ pub fn run_rounds_encoded_sampled(
     let transports: Arc<Vec<Arc<dyn Transport>>> = Arc::new(session_round_transports_sampled(
         transport.as_ref(),
         session_seed,
-        &cohorts,
+        cohorts,
     ));
     let active: Arc<Vec<Vec<bool>>> =
         Arc::new(survivor_sets.iter().map(|s| s.alive_mask().to_vec()).collect());
@@ -747,7 +851,7 @@ pub fn run_rounds_encoded_sampled(
         n,
         dim,
         seeds.as_slice(),
-        &cohorts,
+        cohorts,
     );
     let mut x_sums = vec![vec![0.0f64; dim]; window];
     for (_, rounds) in pieces {
@@ -786,13 +890,7 @@ pub fn run_rounds_encoded_sampled(
             let true_mean: Vec<f64> =
                 x_sum.into_iter().map(|v| v / n_alive as f64).collect();
             let round_id = start_round + r as u64;
-            // per-round rate: γ schedules amplify each round with exactly
-            // the rate it sampled at. Poisson's empty-cohort redraw
-            // deviates from the idealized sampler by TV ≤ (1−γ)^(n−1) on
-            // every neighboring dataset — surrendered as a per-round δ
-            // surcharge
-            let gamma = policy.amplification_gamma(n, round_id);
-            let tv = policy.conditioning_tv(n, round_id);
+            let (gamma, tv) = rates[r];
             let privacy =
                 ledger.as_deref_mut().map(|l| l.record_with_tv_slack(round_id, gamma, tv));
             RoundReport {

@@ -58,7 +58,11 @@ use super::renyi::{rdp_gaussian, rdp_to_eps};
 
 /// One round's recorded privacy spend, plus the cumulative
 /// basic-composition totals up to and including it.
-#[derive(Clone, Copy, Debug)]
+///
+/// `PartialEq` is exact f64 equality on purpose: two spends compare equal
+/// iff they are byte-identical, which is what the snapshot/resume
+/// bit-identity tests assert.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PrivacySpend {
     pub round: u64,
     /// the subsampling rate this round was amplified with (1 = unsampled)
@@ -88,6 +92,25 @@ pub struct PrivacyLedger {
     /// this sum, and EVERY certification path must surrender it
     tv_total: f64,
     spends: Vec<PrivacySpend>,
+}
+
+/// The complete externalized state of a [`PrivacyLedger`], for
+/// snapshot/resume: every private field, including the running TV total
+/// and the full spend history (the cumulative totals live in the spends,
+/// so restoring them restores the composition state exactly).
+///
+/// A ledger restored via [`PrivacyLedger::from_snapshot`] records future
+/// rounds bit-identically to the ledger it was captured from — the
+/// accounting paths ([`PrivacyLedger::record_with_tv_slack`],
+/// [`PrivacyLedger::renyi_eps`], [`PrivacyLedger::eps_at`]) read nothing
+/// but this state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LedgerSnapshot {
+    pub base_eps: f64,
+    pub base_delta: f64,
+    pub noise_multiplier: Option<f64>,
+    pub tv_total: f64,
+    pub spends: Vec<PrivacySpend>,
 }
 
 impl PrivacyLedger {
@@ -134,6 +157,44 @@ impl PrivacyLedger {
     /// All recorded spends in execution order.
     pub fn spends(&self) -> &[PrivacySpend] {
         &self.spends
+    }
+
+    /// Capture the ledger's complete accounting state (see
+    /// [`LedgerSnapshot`]).
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        LedgerSnapshot {
+            base_eps: self.base_eps,
+            base_delta: self.base_delta,
+            noise_multiplier: self.noise_multiplier,
+            tv_total: self.tv_total,
+            spends: self.spends.clone(),
+        }
+    }
+
+    /// Rebuild a ledger from a captured snapshot: future `record` calls
+    /// produce spends bit-identical to what the captured ledger would
+    /// have produced. Validates the same base-guarantee invariants as
+    /// [`PrivacyLedger::new`], so a corrupted snapshot fails loudly.
+    pub fn from_snapshot(snap: &LedgerSnapshot) -> Self {
+        assert!(
+            snap.base_eps > 0.0 && snap.base_delta > 0.0,
+            "ledger snapshot carries a malformed base guarantee \
+             (ε₀ = {}, δ₀ = {})",
+            snap.base_eps,
+            snap.base_delta
+        );
+        assert!(
+            snap.tv_total >= 0.0,
+            "ledger snapshot carries a negative TV total {}",
+            snap.tv_total
+        );
+        Self {
+            base_eps: snap.base_eps,
+            base_delta: snap.base_delta,
+            noise_multiplier: snap.noise_multiplier,
+            tv_total: snap.tv_total,
+            spends: snap.spends.clone(),
+        }
     }
 
     /// Record one executed round at subsampling rate `gamma` and return
@@ -370,6 +431,43 @@ mod tests {
         // one heavily amplified round: basic composition wins
         assert_eq!(ledger.eps_at(1e-5), basic.min(ledger.renyi_eps(1e-5).unwrap()));
         assert!(ledger.eps_at(1e-5) <= basic);
+    }
+
+    #[test]
+    fn snapshot_resume_continues_accounting_bit_identically() {
+        // capture mid-run, keep recording on both the original and the
+        // restored ledger: every subsequent spend must be byte-identical,
+        // as must the certified bounds — the ledger half of the scenario
+        // snapshot/resume contract
+        let nm = analytic_gaussian_sigma(0.7, 1e-6, 1.0);
+        let mut live = PrivacyLedger::new(0.7, 1e-6).with_noise_multiplier(nm);
+        for r in 0..5u64 {
+            live.record_with_tv_slack(r, 0.4, 1e-9);
+        }
+        let snap = live.snapshot();
+        assert_eq!(snap.spends.len(), 5);
+        let mut resumed = PrivacyLedger::from_snapshot(&snap);
+        assert_eq!(resumed.snapshot(), snap, "restore must be lossless");
+        for r in 5..12u64 {
+            let a = live.record_with_tv_slack(r, 0.4, 1e-9);
+            let b = resumed.record_with_tv_slack(r, 0.4, 1e-9);
+            assert_eq!(a, b, "round {r} spend diverged after resume");
+        }
+        assert_eq!(live.basic_eps_delta(), resumed.basic_eps_delta());
+        assert_eq!(live.renyi_eps(1e-5), resumed.renyi_eps(1e-5));
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed base guarantee")]
+    fn corrupted_ledger_snapshot_fails_closed() {
+        let snap = LedgerSnapshot {
+            base_eps: 0.0,
+            base_delta: 1e-6,
+            noise_multiplier: None,
+            tv_total: 0.0,
+            spends: Vec::new(),
+        };
+        let _ = PrivacyLedger::from_snapshot(&snap);
     }
 
     #[test]

@@ -20,5 +20,5 @@ pub use accountant::{
     amplify_by_subsampling, analytic_gaussian_eps, analytic_gaussian_sigma,
     classical_gaussian_sigma, deamplify_eps, gaussian_delta,
 };
-pub use ledger::{PrivacyLedger, PrivacySpend};
+pub use ledger::{LedgerSnapshot, PrivacyLedger, PrivacySpend};
 pub use renyi::{rdp_gaussian, zcdp_to_eps, zcdp_sigma_for_eps};

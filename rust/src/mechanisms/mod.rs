@@ -51,7 +51,8 @@ pub use pipeline::{
 };
 pub use session::{
     derive_session_seed, run_window, run_window_chunked, run_window_sampled,
-    run_window_with_dropouts, session_recovery_share, RoundDropouts, TransportSession,
+    run_window_with_dropouts, session_recovery_share, ChunkSlotState, RoundDropouts,
+    RoundSlotState, SessionState, TransportSession,
 };
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

@@ -506,7 +506,12 @@ pub trait ClientEncoder: Send + Sync {
 /// A mergeable in-flight uplink accumulator. Shards fold their clients into
 /// private partials; partials merge associatively into the round total —
 /// the server side stays O(d) for the summing transports.
-#[derive(Clone, Debug)]
+///
+/// Plain data end to end (integers, masked residues, collected messages),
+/// which is what lets a [`crate::mechanisms::session::TransportSession`]
+/// externalize its accumulator ring for snapshot/resume; `PartialEq` is
+/// the exact equality those bit-identity tests assert.
+#[derive(Clone, Debug, PartialEq)]
 pub enum TransportPartial {
     /// running Σ mᵢ (None until the first submit fixes the length)
     Sum(Option<Vec<i64>>),

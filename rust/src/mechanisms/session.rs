@@ -192,6 +192,55 @@ impl RoundDropouts {
     }
 }
 
+/// One chunk accumulator's externalized state (see [`SessionState`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkSlotState {
+    pub partial: TransportPartial,
+    pub submitted: usize,
+    pub finished: bool,
+}
+
+/// One round slot's externalized state (see [`SessionState`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundSlotState {
+    pub chunks: Vec<ChunkSlotState>,
+    pub bits: BitsAccount,
+    /// per-client chunk cursor (index = global client id)
+    pub next_chunk: Vec<u32>,
+    pub has_direct: bool,
+    pub folded: bool,
+    /// the round's dropout announcement, if any: (dropped ids, shares)
+    pub announced: Option<(Vec<usize>, Vec<RecoveryShare>)>,
+}
+
+/// The complete externalized state of a [`TransportSession`] — the
+/// accumulator ring, per-client chunk cursors, dropout announcements and
+/// byte accounting — plus the opening parameters needed to re-derive the
+/// deterministic parts (per-round transports, shared rounds) at restore.
+///
+/// Everything here is plain data. Nothing transport-internal is captured
+/// because the transport schedule is a pure function of
+/// (transport, session seed, cohorts): [`TransportSession::restore`]
+/// re-derives it and overlays this mutable state on top, after which the
+/// restored session's future submissions, closes and decodes are
+/// bit-identical to the captured session's — the session half of the
+/// scenario snapshot/resume contract (see docs/determinism.md).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionState {
+    pub session_seed: u64,
+    pub n_clients: usize,
+    pub dim: usize,
+    /// the session's chunk size (the [`ChunkPlan`] is `(dim, chunk)`)
+    pub chunk: usize,
+    pub round_seeds: Vec<u64>,
+    /// per-round cohort alive-masks (index = global client id)
+    pub cohort_masks: Vec<Vec<bool>>,
+    pub slots: Vec<RoundSlotState>,
+    pub closed: bool,
+    pub live_bytes: usize,
+    pub peak_bytes: usize,
+}
+
 /// One chunk's in-flight accumulator: O(c) payload while accumulating,
 /// released the moment the chunk finishes.
 struct ChunkSlot {
@@ -243,6 +292,10 @@ struct RoundSlot {
 /// round is incomplete, surfacing nothing.
 pub struct TransportSession {
     n_clients: usize,
+    /// the seed the per-round transport schedule was derived from — kept
+    /// so [`TransportSession::extract_state`] can record it and
+    /// [`TransportSession::restore`] can re-derive the identical schedule
+    session_seed: u64,
     rounds: Vec<SharedRound>,
     transports: Vec<Arc<dyn Transport>>,
     slots: Vec<RoundSlot>,
@@ -394,6 +447,7 @@ impl TransportSession {
             .collect();
         Self {
             n_clients,
+            session_seed,
             rounds,
             transports,
             slots,
@@ -403,6 +457,11 @@ impl TransportSession {
             live_bytes: 0,
             peak_bytes: 0,
         }
+    }
+
+    /// The seed this session's transport schedule was derived from.
+    pub fn session_seed(&self) -> u64 {
+        self.session_seed
     }
 
     /// Number of rounds in the window.
@@ -537,6 +596,22 @@ impl TransportSession {
         self.assert_may_submit(r, client);
         let n_chunks = self.plan.n_chunks();
         let lo = self.plan.range(k).start;
+        // Multi-chunk plans fix each chunk's description length to its
+        // coordinate range — a malformed length is a byzantine submission
+        // and fails closed HERE, before touching any accumulator. The
+        // single-chunk (whole-d) plan stays length-flexible: some
+        // mechanisms legitimately describe more than `dim` values there
+        // (DDG's padded rotation space), and the accumulators themselves
+        // reject any mid-round length change.
+        if !self.plan.is_whole() {
+            let expected_len = self.plan.range(k).len();
+            assert_eq!(
+                msg.ms.len(),
+                expected_len,
+                "fails closed: malformed chunk submission from client {client} in round {r} \
+                 of the window — chunk {k} covers {expected_len} coordinates",
+            );
+        }
         let transport = self.transports[r].clone();
         let round = self.rounds[r];
         let slot = &mut self.slots[r];
@@ -936,6 +1011,130 @@ impl TransportSession {
                 );
             }
         }
+    }
+
+    /// Capture the session's complete mutable state (see
+    /// [`SessionState`]). Non-destructive — a scenario engine can
+    /// snapshot mid-window at any tick boundary and keep running.
+    pub fn extract_state(&self) -> SessionState {
+        SessionState {
+            session_seed: self.session_seed,
+            n_clients: self.n_clients,
+            dim: self.rounds[0].dim,
+            chunk: self.plan.chunk(),
+            round_seeds: self.rounds.iter().map(|r| r.seed).collect(),
+            cohort_masks: self.cohorts.iter().map(|c| c.alive_mask().to_vec()).collect(),
+            slots: self
+                .slots
+                .iter()
+                .map(|s| RoundSlotState {
+                    chunks: s
+                        .chunks
+                        .iter()
+                        .map(|c| ChunkSlotState {
+                            partial: c.partial.clone(),
+                            submitted: c.submitted,
+                            finished: c.finished,
+                        })
+                        .collect(),
+                    bits: s.bits,
+                    next_chunk: s.next_chunk.clone(),
+                    has_direct: s.has_direct,
+                    folded: s.folded,
+                    announced: s
+                        .announced
+                        .as_ref()
+                        .map(|a| (a.dropped.clone(), a.shares.clone())),
+                })
+                .collect(),
+            closed: self.closed,
+            live_bytes: self.live_bytes,
+            peak_bytes: self.peak_bytes,
+        }
+    }
+
+    /// Rebuild a session from a captured [`SessionState`]: re-open the
+    /// deterministic schedule from (transport, session seed, cohorts),
+    /// overlay the captured accumulator ring and cursors, and REPLAY each
+    /// captured dropout announcement through the validating
+    /// [`TransportSession::announce_dropouts`] path — a snapshot cannot
+    /// smuggle in an announcement the live session would have rejected.
+    /// The restored session continues bit-identically; corrupted
+    /// snapshots (shape mismatches, byte-accounting drift, invalid
+    /// announcements) fail closed.
+    pub fn restore(transport: &dyn Transport, state: &SessionState) -> Self {
+        let cohorts: Vec<SurvivorSet> = state
+            .cohort_masks
+            .iter()
+            .map(|m| SurvivorSet::from_alive_mask(m.clone()))
+            .collect();
+        let mut session = Self::open_sampled_chunked(
+            transport,
+            state.session_seed,
+            state.n_clients,
+            state.dim,
+            &state.round_seeds,
+            &cohorts,
+            state.chunk,
+        );
+        assert_eq!(
+            state.slots.len(),
+            session.window(),
+            "session snapshot fails closed: slot count does not match the window"
+        );
+        let n_chunks = session.plan.n_chunks();
+        for (r, slot_state) in state.slots.iter().enumerate() {
+            assert_eq!(
+                slot_state.chunks.len(),
+                n_chunks,
+                "session snapshot fails closed: round {r} carries {} chunk slots for a \
+                 {n_chunks}-chunk plan",
+                slot_state.chunks.len(),
+            );
+            assert_eq!(
+                slot_state.next_chunk.len(),
+                state.n_clients,
+                "session snapshot fails closed: round {r}'s cursor record is shaped for a \
+                 different fleet"
+            );
+            let slot = &mut session.slots[r];
+            for (k, c) in slot_state.chunks.iter().enumerate() {
+                slot.chunks[k] = ChunkSlot {
+                    partial: c.partial.clone(),
+                    submitted: c.submitted,
+                    finished: c.finished,
+                };
+            }
+            slot.bits = slot_state.bits;
+            slot.next_chunk = slot_state.next_chunk.clone();
+            slot.has_direct = slot_state.has_direct;
+            slot.folded = slot_state.folded;
+        }
+        // replay announcements AFTER the cursors are in place, so the
+        // "announced-dropped client never submitted" check sees exactly
+        // what the live session saw when the announcement first ran
+        for (r, slot_state) in state.slots.iter().enumerate() {
+            if let Some((dropped, shares)) = &slot_state.announced {
+                let ann =
+                    RoundDropouts { dropped: dropped.clone(), shares: shares.clone() };
+                session.announce_dropouts(r, &ann);
+            }
+        }
+        let live: usize = session
+            .slots
+            .iter()
+            .flat_map(|s| s.chunks.iter())
+            .map(|c| partial_bytes(&c.partial))
+            .sum();
+        assert_eq!(
+            live, state.live_bytes,
+            "session snapshot fails closed: captured live accumulator bytes disagree with \
+             the restored payloads"
+        );
+        session.live_bytes = state.live_bytes;
+        session.peak_bytes = state.peak_bytes;
+        session.closed = state.closed;
+        session
     }
 }
 
@@ -2172,5 +2371,95 @@ mod tests {
             assert_eq!(oa.estimate, ob.estimate);
             assert_eq!(oa.bits.messages, ob.bits.messages);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed chunk submission")]
+    fn chunked_malformed_length_submission_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 2,
+        );
+        let round = *session.round(0);
+        let mut msg = mech.encode_chunk(0, &xs[0], 0..2, &round);
+        msg.ms.push(0); // one description too many for a 2-coordinate chunk
+        session.submit_chunk(0, 0, 0, &msg);
+    }
+
+    #[test]
+    fn session_snapshot_restore_mid_window_is_bit_identical() {
+        // capture a chunked SecAgg session mid-window — with an announced
+        // dropout, partially submitted chunks, and an untouched round —
+        // then drive the captured copy and the uninterrupted original
+        // through the identical suffix: every unmasked chunk sum must be
+        // byte-identical (the session half of snapshot/resume)
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let (n, d) = (xs.len(), xs[0].len());
+        let session_seed = 0x5AFE;
+        let cohorts = vec![SurvivorSet::full(n); 2];
+        let mut live = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), session_seed, n, d, &[5, 6], &cohorts, 2,
+        );
+        // prefix: round 0 announces client 2 dropped, clients 0/1 submit
+        // chunk 0; round 1 sees only client 0's first chunk
+        let survivors = SurvivorSet::full(n).drop_clients(&[2]);
+        live.announce_dropouts(
+            0,
+            &RoundDropouts::announce_among(session_seed, 0, &survivors, &[2]),
+        );
+        let round0 = *live.round(0);
+        let round1 = *live.round(1);
+        for i in [0usize, 1] {
+            live.submit_chunk(0, 0, i, &mech.encode_chunk(i, &xs[i], 0..2, &round0));
+        }
+        live.submit_chunk(1, 0, 0, &mech.encode_chunk(0, &xs[0], 0..2, &round1));
+        let snap = live.extract_state();
+        let mut resumed = TransportSession::restore(&SecAgg::new(), &snap);
+        assert_eq!(resumed.extract_state(), snap, "restore must be lossless");
+        let drive_suffix = |s: &mut TransportSession| -> Vec<Vec<i64>> {
+            for i in [0usize, 1] {
+                s.submit_chunk(0, 1, i, &mech.encode_chunk(i, &xs[i], 2..3, &round0));
+            }
+            for i in [1usize, 2] {
+                s.submit_chunk(1, 0, i, &mech.encode_chunk(i, &xs[i], 0..2, &round1));
+            }
+            for i in 0..n {
+                s.submit_chunk(1, 1, i, &mech.encode_chunk(i, &xs[i], 2..3, &round1));
+            }
+            let mut sums = Vec::new();
+            for r in 0..2 {
+                for k in 0..2 {
+                    match s.finish_chunk(r, k) {
+                        Payload::Sum(v) => sums.push(v),
+                        Payload::PerClient(_) => unreachable!("sum transport"),
+                    }
+                }
+            }
+            let _ = s.close_streamed();
+            sums
+        };
+        let a = drive_suffix(&mut live);
+        let b = drive_suffix(&mut resumed);
+        assert_eq!(a, b, "resumed session diverged from the uninterrupted run");
+        assert_eq!(live.extract_state(), resumed.extract_state());
+    }
+
+    #[test]
+    #[should_panic(expected = "live accumulator bytes")]
+    fn corrupted_session_snapshot_fails_closed() {
+        let mech = CoordJitter;
+        let xs = data(0.0);
+        let cohorts = [SurvivorSet::full(xs.len())];
+        let mut session = TransportSession::open_sampled_chunked(
+            &SecAgg::new(), 9, xs.len(), xs[0].len(), &[5], &cohorts, 2,
+        );
+        let round = *session.round(0);
+        session.submit_chunk(0, 0, 0, &mech.encode_chunk(0, &xs[0], 0..2, &round));
+        let mut snap = session.extract_state();
+        snap.live_bytes += 1; // byte-accounting drift: refuse the restore
+        let _ = TransportSession::restore(&SecAgg::new(), &snap);
     }
 }

@@ -3,7 +3,11 @@
 use crate::coding::elias;
 
 /// Communication accounting for one aggregation round.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// `PartialEq` is exact f64 equality: two accounts compare equal iff they
+/// are byte-identical, which is what the snapshot/resume and
+/// chunked ≡ unchunked bit-identity tests assert.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct BitsAccount {
     /// total variable-length bits (Elias gamma over all descriptions sent)
     pub variable_total: f64,
@@ -40,7 +44,10 @@ impl BitsAccount {
 }
 
 /// Result of one aggregation round.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact (bit-level f64) equality, for the bit-identity
+/// property tests.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundOutput {
     /// the server's estimate Y of the mean (length d)
     pub estimate: Vec<f64>,

@@ -1,0 +1,687 @@
+//! The tick-driven fleet scenario engine: deterministic churn, regional
+//! outages, heavy-tailed stragglers, non-i.i.d. data drift and generated
+//! byzantine campaigns, composed over the real windowed transport
+//! machinery ([`crate::mechanisms::session::TransportSession`]).
+//!
+//! One [`ScenarioEngine::tick`] executes one aggregation round. Every
+//! `cfg.window` ticks the engine opens a fresh session window and plans
+//! it in full: the five subsystems run in a FIXED order — churn →
+//! outages → stragglers → data-drift → byzantine — each drawing only
+//! from its own domain-separated RNG slot ([`super::scenario::slot`]),
+//! so no subsystem's draw count can perturb another's stream. The plan
+//! ([`super::scenario::WindowPlan`]) is then immutable: cohorts become
+//! the session's sampled cohorts, outage/straggler dropouts are
+//! announced up front on the Bonawitz recovery path (streamed-close
+//! style), drifted data feeds the honest encoders, and byzantine probes
+//! are replayed against a restored replica of the live session — a probe
+//! that does NOT panic the fail-closed surface panics the engine itself
+//! ("fails open"), so every campaign ends in an exact close or a
+//! fail-closed panic, never a third outcome.
+//!
+//! Snapshot/resume: [`ScenarioEngine::snapshot`] captures the engine
+//! tick, all five RNG slot states (*stream positions*, not reseeds —
+//! [`crate::util::rng::RngState`]), the fleet membership and drift
+//! state, the event log, the active window plan, the transport-session
+//! state and the privacy ledger. [`ScenarioEngine::from_snapshot`]
+//! re-enters exactly that state, and the resumed engine's subsequent
+//! [`crate::coordinator::RoundReport`]s are bit-identical to an
+//! uninterrupted run's — the contract `rust/tests/property_scenarios.rs`
+//! enforces across mechanisms × transports × chunk sizes (see
+//! docs/determinism.md).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::coordinator::RoundReport;
+use crate::dp::PrivacyLedger;
+use crate::mechanisms::pipeline::{
+    ChunkPlan, ClientEncoder, Payload, ServerDecoder, SurvivorSet, Transport,
+};
+use crate::mechanisms::session::{derive_session_seed, RoundDropouts, TransportSession};
+use crate::mechanisms::traits::RoundOutput;
+use crate::util::rng::{seed_domain, Rng};
+
+use super::scenario::{slot, Attack, ScenarioConfig, ScenarioEvent, WindowPlan};
+use super::snapshot::ScenarioSnapshot;
+use super::validate_dropout_schedule;
+
+/// Snapshot cadence of [`run_scenario_checked`]: a snapshot/resume
+/// round-trip is exercised every this many ticks (including mid-window
+/// ticks, where the session state is live).
+pub const SNAPSHOT_INTERVAL: u64 = 8;
+
+/// The deterministic fleet scenario engine (see the module docs).
+///
+/// The engine owns only *state* — fleet membership, drift means, RNG
+/// slots, the current window plan and its live session. The mechanism
+/// triple (encoder, transport, decoder) is passed into every
+/// [`ScenarioEngine::tick`] and must stay the same across a scenario:
+/// the transport schedule and session state are derived for it.
+pub struct ScenarioEngine {
+    cfg: ScenarioConfig,
+    /// global tick = global round id (each tick executes one round)
+    tick: u64,
+    /// per-subsystem RNG slots, indexed by [`slot`] in execution order
+    rngs: [Rng; slot::COUNT],
+    /// current fleet membership (the churn subsystem's persistent state)
+    active: Vec<bool>,
+    /// per-client data-mean random walk (the drift subsystem's state)
+    drift: Vec<f64>,
+    ledger: Option<PrivacyLedger>,
+    events: Vec<ScenarioEvent>,
+    plan: Option<WindowPlan>,
+    session: Option<TransportSession>,
+}
+
+impl ScenarioEngine {
+    pub fn new(cfg: ScenarioConfig) -> Self {
+        cfg.validate();
+        let rngs = std::array::from_fn(|i| {
+            Rng::new(Rng::derive_domain(cfg.seed, seed_domain::SCENARIO, i as u64))
+        });
+        Self {
+            cfg,
+            tick: 0,
+            rngs,
+            active: vec![true; cfg.n_clients],
+            drift: vec![0.0; cfg.n_clients],
+            ledger: None,
+            events: Vec::new(),
+            plan: None,
+            session: None,
+        }
+    }
+
+    /// Thread a privacy ledger through the scenario: every executed round
+    /// is recorded at its *realized* participation rate γ = n′_cohort/n
+    /// with zero TV slack — honest bookkeeping under data-dependent
+    /// churn, NOT a subsampling-amplification guarantee (see
+    /// [`crate::coordinator::run_rounds_encoded_scheduled`]).
+    pub fn with_ledger(mut self, ledger: PrivacyLedger) -> Self {
+        self.ledger = Some(ledger);
+        self
+    }
+
+    /// The next tick to execute (= number of rounds executed so far).
+    pub fn tick_count(&self) -> u64 {
+        self.tick
+    }
+
+    /// The replayable event log so far.
+    pub fn events(&self) -> &[ScenarioEvent] {
+        &self.events
+    }
+
+    /// Consume the engine, surfacing its event log.
+    pub fn into_events(self) -> Vec<ScenarioEvent> {
+        self.events
+    }
+
+    /// Capture the engine's complete state. The capture is
+    /// non-destructive; resuming from it
+    /// ([`ScenarioEngine::from_snapshot`]) re-enters the exact stream
+    /// positions of every RNG slot, so resume ≡ uninterrupted run, bit
+    /// for bit.
+    pub fn snapshot(&self) -> ScenarioSnapshot {
+        ScenarioSnapshot {
+            cfg: self.cfg,
+            tick: self.tick,
+            rng_states: std::array::from_fn(|i| self.rngs[i].state()),
+            active: self.active.clone(),
+            drift: self.drift.clone(),
+            ledger: self.ledger.as_ref().map(|l| l.snapshot()),
+            events: self.events.clone(),
+            plan: self.plan.clone(),
+            session: self.session.as_ref().map(|s| s.extract_state()),
+        }
+    }
+
+    /// Re-enter a captured scenario state. `transport` must be the same
+    /// transport the captured engine was ticking with — the session's
+    /// masking schedule is re-derived from it
+    /// ([`TransportSession::restore`]).
+    pub fn from_snapshot(snap: &ScenarioSnapshot, transport: &dyn Transport) -> Self {
+        snap.cfg.validate();
+        assert_eq!(
+            snap.active.len(),
+            snap.cfg.n_clients,
+            "scenario snapshot fails closed: membership mask shaped for a different fleet"
+        );
+        assert_eq!(
+            snap.drift.len(),
+            snap.cfg.n_clients,
+            "scenario snapshot fails closed: drift state shaped for a different fleet"
+        );
+        assert_eq!(
+            snap.plan.is_some(),
+            snap.session.is_some(),
+            "scenario snapshot fails closed: a window plan and its session are captured \
+             together or not at all"
+        );
+        if let Some(p) = &snap.plan {
+            assert!(
+                snap.tick >= p.start_tick
+                    && snap.tick - p.start_tick < p.round_seeds.len() as u64,
+                "scenario snapshot fails closed: tick {} lies outside its captured window",
+                snap.tick,
+            );
+        }
+        Self {
+            cfg: snap.cfg,
+            tick: snap.tick,
+            rngs: std::array::from_fn(|i| Rng::from_state(snap.rng_states[i])),
+            active: snap.active.clone(),
+            drift: snap.drift.clone(),
+            ledger: snap.ledger.as_ref().map(PrivacyLedger::from_snapshot),
+            events: snap.events.clone(),
+            plan: snap.plan.clone(),
+            session: snap.session.as_ref().map(|st| TransportSession::restore(transport, st)),
+        }
+    }
+
+    /// Execute one round: open a window if none is active (planning all
+    /// its rounds subsystem by subsystem), replay this tick's byzantine
+    /// probes against a restored session replica, run the honest round
+    /// chunk-by-chunk through the live session, and close the window on
+    /// its last tick.
+    pub fn tick(
+        &mut self,
+        encoder: &dyn ClientEncoder,
+        transport: &dyn Transport,
+        decoder: &dyn ServerDecoder,
+    ) -> RoundReport {
+        assert!(
+            !transport.sum_only() || decoder.sum_decodable(),
+            "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+        );
+        if self.plan.is_none() {
+            self.open_window(transport);
+        }
+        let (r, window, attacks) = {
+            let plan = self.plan.as_ref().expect("window just opened");
+            let r = (self.tick - plan.start_tick) as usize;
+            (r, plan.round_seeds.len(), plan.attacks[r].clone())
+        };
+        for atk in attacks {
+            self.probe_attack(atk, encoder, transport);
+        }
+        let report = self.run_round(r, encoder, decoder);
+        self.tick += 1;
+        if r + 1 == window {
+            let mut session = self.session.take().expect("window has a live session");
+            session.close_streamed();
+            self.plan = None;
+        }
+        report
+    }
+
+    /// Plan one whole window — subsystems in fixed order, one RNG slot
+    /// each — then open the session over the planned cohorts and announce
+    /// every round's dropouts up front (the streamed-close discipline,
+    /// which also guarantees [`Attack::ConflictingReannounce`] always
+    /// hits an existing announcement).
+    fn open_window(&mut self, transport: &dyn Transport) {
+        let cfg = self.cfg;
+        let n = cfg.n_clients;
+        let start_tick = self.tick;
+        let session_seed = derive_session_seed(cfg.seed, start_tick);
+        let round_seeds: Vec<u64> = (0..cfg.window)
+            .map(|r| Rng::derive_domain(cfg.seed, seed_domain::ROUND, start_tick + r as u64))
+            .collect();
+        let multi_chunk = ChunkPlan::new(cfg.dim, cfg.chunk).n_chunks() > 1;
+        let mut cohorts: Vec<Vec<bool>> = Vec::with_capacity(cfg.window);
+        let mut dropouts: Vec<Vec<usize>> = Vec::with_capacity(cfg.window);
+        let mut data: Vec<Vec<Vec<f64>>> = Vec::with_capacity(cfg.window);
+        let mut attacks: Vec<Vec<Attack>> = Vec::with_capacity(cfg.window);
+        for r in 0..cfg.window {
+            let tick = start_tick + r as u64;
+            // 1. churn — membership flips, then the floor revives the
+            // lowest-id inactive clients (deterministic, no draw)
+            for c in 0..n {
+                if self.rngs[slot::CHURN].bernoulli(cfg.churn_rate) {
+                    self.active[c] = !self.active[c];
+                    self.events.push(if self.active[c] {
+                        ScenarioEvent::ClientJoined { tick, client: c }
+                    } else {
+                        ScenarioEvent::ClientLeft { tick, client: c }
+                    });
+                }
+            }
+            let mut alive = self.active.iter().filter(|&&a| a).count();
+            for c in 0..n {
+                if alive >= cfg.min_active {
+                    break;
+                }
+                if !self.active[c] {
+                    self.active[c] = true;
+                    alive += 1;
+                    self.events.push(ScenarioEvent::ClientJoined { tick, client: c });
+                }
+            }
+            let cohort = SurvivorSet::from_alive_mask(self.active.clone());
+            // 2. regional outage — a contiguous client-id span drops
+            let mut dropped: Vec<usize> = Vec::new();
+            let mut outage: Option<(usize, usize)> = None;
+            if self.rngs[slot::OUTAGE].bernoulli(cfg.outage_rate) {
+                let lo = self.rngs[slot::OUTAGE].below(n as u64) as usize;
+                let hi = (lo + cfg.outage_span).min(n);
+                outage = Some((lo, hi));
+                dropped.extend((lo..hi).filter(|&c| cohort.is_alive(c)));
+            }
+            // 3. stragglers — Pareto(α = 1) delays past the deadline drop
+            let mut stragglers: Vec<(usize, f64)> = Vec::new();
+            for c in cohort.alive_iter() {
+                if dropped.contains(&c) {
+                    continue;
+                }
+                if self.rngs[slot::STRAGGLER].bernoulli(cfg.straggler_rate) {
+                    let delay =
+                        cfg.straggler_scale / (1.0 - self.rngs[slot::STRAGGLER].u01());
+                    if delay > cfg.deadline {
+                        dropped.push(c);
+                        stragglers.push((c, delay));
+                    }
+                }
+            }
+            dropped.sort_unstable();
+            // the engine never drops a round to zero survivors: reprieve
+            // the highest-id dropouts until one cohort member remains
+            while dropped.len() >= cohort.n_alive() {
+                let reprieved = dropped.pop().expect("a non-empty dropout list");
+                stragglers.retain(|&(c, _)| c != reprieved);
+            }
+            if let Some((lo, hi)) = outage {
+                let in_region = dropped.iter().filter(|&&c| (lo..hi).contains(&c)).count();
+                self.events.push(ScenarioEvent::RegionalOutage {
+                    tick,
+                    lo,
+                    hi,
+                    dropped: in_region,
+                });
+            }
+            for (client, delay) in stragglers {
+                self.events.push(ScenarioEvent::StragglerDropped { tick, client, delay });
+            }
+            // 4. data drift — every client's mean random-walks (clamped
+            // well inside the mechanisms' input range), data = mean +
+            // bounded noise; the walk advances for inactive clients too,
+            // so membership cannot perturb the drift stream
+            let rng = &mut self.rngs[slot::DRIFT];
+            let mut round_data: Vec<Vec<f64>> = Vec::with_capacity(n);
+            for c in 0..n {
+                self.drift[c] =
+                    (self.drift[c] + cfg.drift_step * rng.normal()).clamp(-3.0, 3.0);
+                let mean = self.drift[c];
+                round_data.push(
+                    (0..cfg.dim)
+                        .map(|_| (mean + rng.uniform(-0.5, 0.5)).clamp(-3.5, 3.5))
+                        .collect(),
+                );
+            }
+            // 5. byzantine — generate a probe guaranteed to violate the
+            // session contract; kinds without a valid target this round
+            // fall back to a conflicting re-announcement, which always
+            // has one (every round is announced at open)
+            let mut round_attacks = Vec::new();
+            if self.rngs[slot::BYZANTINE].bernoulli(cfg.attack_rate) {
+                let survivors = cohort.drop_clients(&dropped);
+                let target =
+                    survivors.alive_iter().next().expect("the floor keeps one survivor");
+                let atk = match self.rngs[slot::BYZANTINE].below(6) {
+                    0 if multi_chunk => Attack::MalformedChunkLen { round: r, client: target },
+                    0 | 1 => Attack::DuplicateChunk { round: r, client: target },
+                    2 => Attack::OutOfOrderChunk { round: r, client: target },
+                    3 => match (0..n).find(|&c| !cohort.is_alive(c)) {
+                        Some(c) => Attack::OutOfCohortSubmit { round: r, client: c },
+                        None => Attack::ConflictingReannounce { round: r },
+                    },
+                    4 => match dropped.first() {
+                        Some(&c) => Attack::SubmitAfterDrop { round: r, client: c },
+                        None => Attack::ConflictingReannounce { round: r },
+                    },
+                    _ => Attack::ConflictingReannounce { round: r },
+                };
+                round_attacks.push(atk);
+            }
+            cohorts.push(self.active.clone());
+            dropouts.push(dropped);
+            data.push(round_data);
+            attacks.push(round_attacks);
+        }
+        // planning self-check, then open + announce everything up front
+        validate_dropout_schedule(n, &dropouts);
+        let cohort_sets: Vec<SurvivorSet> =
+            cohorts.iter().map(|m| SurvivorSet::from_alive_mask(m.clone())).collect();
+        let mut session = TransportSession::open_sampled_chunked(
+            transport,
+            session_seed,
+            n,
+            cfg.dim,
+            &round_seeds,
+            &cohort_sets,
+            cfg.chunk,
+        );
+        for (r, (cohort, dropped)) in cohort_sets.iter().zip(&dropouts).enumerate() {
+            let survivors = cohort.drop_cohort_members(dropped, r);
+            session.announce_dropouts(
+                r,
+                &RoundDropouts::announce_among(session_seed, r as u64, &survivors, dropped),
+            );
+        }
+        self.events.push(ScenarioEvent::WindowOpened {
+            tick: start_tick,
+            window: cfg.window,
+            session_seed,
+        });
+        self.plan = Some(WindowPlan {
+            start_tick,
+            session_seed,
+            round_seeds,
+            cohorts,
+            dropouts,
+            data,
+            attacks,
+        });
+        self.session = Some(session);
+    }
+
+    /// Replay one byzantine probe against a restored replica of the live
+    /// session (the replica is built from
+    /// [`TransportSession::extract_state`], so probing can never corrupt
+    /// the real session). The probe MUST panic on the fail-closed
+    /// surface; a probe the session absorbs panics the engine itself.
+    fn probe_attack(
+        &mut self,
+        atk: Attack,
+        encoder: &dyn ClientEncoder,
+        transport: &dyn Transport,
+    ) {
+        let state = self.session.as_ref().expect("window has a live session").extract_state();
+        let data = self.plan.as_ref().expect("window open").data[atk.round()].clone();
+        // restore OUTSIDE the catch: a restore panic is an engine bug,
+        // not a rejected attack
+        let mut replica = TransportSession::restore(transport, &state);
+        let outcome = catch_unwind(AssertUnwindSafe(move || {
+            apply_attack(&mut replica, encoder, &data, atk);
+        }));
+        match outcome {
+            Err(_) => {
+                self.events.push(ScenarioEvent::AttackRejected { tick: self.tick, attack: atk })
+            }
+            Ok(()) => panic!(
+                "scenario fails open: byzantine probe {atk:?} was absorbed at tick {} \
+                 without tripping the fail-closed surface",
+                self.tick,
+            ),
+        }
+    }
+
+    /// Run round `r` of the active window honestly: every survivor
+    /// encodes and submits chunk by chunk, each chunk unmasks the moment
+    /// it completes, and the round decodes over its survivor set.
+    fn run_round(
+        &mut self,
+        r: usize,
+        encoder: &dyn ClientEncoder,
+        decoder: &dyn ServerDecoder,
+    ) -> RoundReport {
+        let data: Vec<Vec<f64>> = self.plan.as_ref().expect("window open").data[r].clone();
+        let session = self.session.as_mut().expect("window has a live session");
+        let chunk_plan = session.plan();
+        let round = *session.round(r);
+        let survivors = session.survivors(r).clone();
+        let cohort_alive = session.cohort(r).n_alive();
+        let n = self.cfg.n_clients;
+        let dim = self.cfg.dim;
+        let whole = chunk_plan.is_whole();
+        let chunk_dec = decoder.chunk_decodable();
+        let mut estimate = vec![0.0f64; dim];
+        // non-chunk-decodable mechanisms over a multi-chunk plan assemble
+        // the whole-d sum — O(d), the size of the estimate itself
+        let mut sums: Vec<i64> = vec![0; if chunk_dec || whole { 0 } else { dim }];
+        for k in 0..chunk_plan.n_chunks() {
+            let range = chunk_plan.range(k);
+            for i in survivors.alive_iter() {
+                let msg = encoder.encode_chunk(i, &data[i], range.clone(), &round);
+                session.submit_chunk(r, k, i, &msg);
+            }
+            let payload = session.finish_chunk(r, k);
+            if chunk_dec {
+                let est =
+                    decoder.decode_survivors_chunk(&payload, range.start, &round, &survivors);
+                estimate[range.clone()].copy_from_slice(&est);
+            } else if whole {
+                estimate = decoder.decode_survivors(&payload, &round, &survivors);
+            } else {
+                match payload {
+                    Payload::Sum(v) => sums[range.clone()].copy_from_slice(&v),
+                    _ => unreachable!("multi-chunk sessions run only over summing transports"),
+                }
+            }
+        }
+        if !chunk_dec && !whole {
+            estimate = decoder.decode_survivors(
+                &Payload::Sum(std::mem::take(&mut sums)),
+                &round,
+                &survivors,
+            );
+        }
+        let bits = session.round_bits(r);
+        let n_alive = survivors.n_alive();
+        let mut true_mean = vec![0.0f64; dim];
+        for i in survivors.alive_iter() {
+            for (mj, xj) in true_mean.iter_mut().zip(&data[i]) {
+                *mj += xj;
+            }
+        }
+        for mj in true_mean.iter_mut() {
+            *mj /= n_alive as f64;
+        }
+        let tick = self.tick;
+        let gamma = n_alive as f64 / n as f64;
+        let privacy =
+            self.ledger.as_mut().map(|l| l.record_with_tv_slack(tick, gamma, 0.0));
+        self.events.push(ScenarioEvent::RoundClosed {
+            tick: self.tick,
+            survivors: n_alive,
+            cohort: cohort_alive,
+        });
+        RoundReport {
+            round: self.tick,
+            output: RoundOutput { estimate, bits },
+            true_mean,
+            survivors: n_alive,
+            cohort: cohort_alive,
+            privacy,
+        }
+    }
+}
+
+/// Apply one attack to a session replica. Contains NO assertions of its
+/// own — every panic comes from the session's fail-closed surface, which
+/// is exactly what the probe is measuring.
+fn apply_attack(
+    replica: &mut TransportSession,
+    encoder: &dyn ClientEncoder,
+    data: &[Vec<f64>],
+    atk: Attack,
+) {
+    let r = atk.round();
+    let round = *replica.round(r);
+    let plan = replica.plan();
+    match atk {
+        Attack::MalformedChunkLen { client, .. } => {
+            let range = plan.range(0);
+            let mut msg = encoder.encode_chunk(client, &data[client], range, &round);
+            msg.ms.push(0); // one description too many for the chunk's range
+            replica.submit_chunk(r, 0, client, &msg);
+        }
+        Attack::DuplicateChunk { client, .. } => {
+            let range = plan.range(0);
+            let msg = encoder.encode_chunk(client, &data[client], range, &round);
+            replica.submit_chunk(r, 0, client, &msg);
+            replica.submit_chunk(r, 0, client, &msg);
+        }
+        Attack::OutOfOrderChunk { client, .. } => {
+            let range = plan.range(0);
+            let msg = encoder.encode_chunk(client, &data[client], range, &round);
+            replica.submit_chunk(r, 1, client, &msg);
+        }
+        Attack::OutOfCohortSubmit { client, .. } | Attack::SubmitAfterDrop { client, .. } => {
+            let range = plan.range(0);
+            let msg = encoder.encode_chunk(client, &data[client], range, &round);
+            replica.submit_chunk(r, 0, client, &msg);
+        }
+        Attack::ConflictingReannounce { .. } => {
+            replica.announce_dropouts(r, &RoundDropouts::default());
+        }
+    }
+}
+
+/// Run a scenario end to end with the snapshot/resume contract ON THE
+/// MAINLINE: every [`SNAPSHOT_INTERVAL`] ticks the engine is captured,
+/// serialized to bytes, deserialized, resumed — and the run CONTINUES
+/// from the resumed engine, asserting the round-trip was lossless at
+/// every step. Returns the per-tick reports and the event log.
+pub fn run_scenario_checked(
+    cfg: ScenarioConfig,
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    ticks: u64,
+    ledger: Option<PrivacyLedger>,
+) -> (Vec<RoundReport>, Vec<ScenarioEvent>) {
+    let mut engine = ScenarioEngine::new(cfg);
+    if let Some(l) = ledger {
+        engine = engine.with_ledger(l);
+    }
+    let mut reports = Vec::with_capacity(ticks as usize);
+    for t in 0..ticks {
+        if t > 0 && t % SNAPSHOT_INTERVAL == 0 {
+            let snap = engine.snapshot();
+            let bytes = snap.to_bytes();
+            let back = ScenarioSnapshot::from_bytes(&bytes);
+            assert_eq!(back, snap, "snapshot byte round-trip must be lossless");
+            let resumed = ScenarioEngine::from_snapshot(&back, transport);
+            assert_eq!(
+                resumed.snapshot(),
+                snap,
+                "resume must re-enter the exact captured state"
+            );
+            engine = resumed;
+        }
+        reports.push(engine.tick(encoder, transport, decoder));
+    }
+    (reports, engine.into_events())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mechanisms::pipeline::{Plain, SecAgg};
+    use crate::mechanisms::{AggregateGaussian, IrwinHallMechanism};
+
+    fn run(cfg: ScenarioConfig, transport: &dyn Transport, ticks: u64) -> Vec<RoundReport> {
+        let mech = IrwinHallMechanism::new(0.4, 8.0);
+        let mut engine = ScenarioEngine::new(cfg);
+        (0..ticks).map(|_| engine.tick(&mech, transport, &mech)).collect()
+    }
+
+    #[test]
+    fn scenario_engine_replays_bit_identically() {
+        let cfg = ScenarioConfig::churn(6, 4, 3, 2, 0xFEED);
+        let a = run(cfg, &SecAgg::new(), 7);
+        let b = run(cfg, &SecAgg::new(), 7);
+        assert_eq!(a, b, "same config must replay the same run, bit for bit");
+        assert_ne!(
+            a,
+            run(ScenarioConfig::churn(6, 4, 3, 2, 0xFEE0), &SecAgg::new(), 7),
+            "a different scenario seed must change the run"
+        );
+    }
+
+    #[test]
+    fn scenario_resume_mid_window_matches_uninterrupted_run() {
+        let cfg = ScenarioConfig::churn(6, 4, 3, 2, 0xBEE5);
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let transport = SecAgg::new();
+        let straight: Vec<RoundReport> = {
+            let mut e = ScenarioEngine::new(cfg).with_ledger(PrivacyLedger::new(0.8, 1e-6));
+            (0..7).map(|_| e.tick(&mech, &transport, &mech)).collect()
+        };
+        // snapshot at tick 4 — mid-way through the second window
+        let mut e = ScenarioEngine::new(cfg).with_ledger(PrivacyLedger::new(0.8, 1e-6));
+        let mut resumed_reports = Vec::new();
+        for t in 0..7 {
+            if t == 4 {
+                let bytes = e.snapshot().to_bytes();
+                e = ScenarioEngine::from_snapshot(
+                    &ScenarioSnapshot::from_bytes(&bytes),
+                    &transport,
+                );
+            }
+            resumed_reports.push(e.tick(&mech, &transport, &mech));
+        }
+        assert_eq!(straight, resumed_reports, "resume must be bit-identical, ledger included");
+    }
+
+    #[test]
+    fn scenario_byzantine_probes_are_all_rejected() {
+        let cfg = ScenarioConfig::byzantine(6, 4, 3, 2, 0xD00F);
+        let mech = IrwinHallMechanism::new(0.4, 8.0);
+        let mut engine = ScenarioEngine::new(cfg);
+        for _ in 0..9 {
+            engine.tick(&mech, &SecAgg::new(), &mech);
+        }
+        let rejected = engine
+            .events()
+            .iter()
+            .filter(|e| matches!(e, ScenarioEvent::AttackRejected { .. }))
+            .count();
+        assert!(rejected >= 1, "a byzantine scenario must have probed the surface");
+        let closed = engine
+            .events()
+            .iter()
+            .filter(|e| matches!(e, ScenarioEvent::RoundClosed { .. }))
+            .count();
+        assert_eq!(closed, 9, "every probed round must still close exactly");
+    }
+
+    #[test]
+    fn scenario_churn_floor_holds() {
+        let cfg = ScenarioConfig {
+            churn_rate: 0.9,
+            min_active: 2,
+            ..ScenarioConfig::churn(5, 3, 2, 3, 0xAB)
+        };
+        for report in run(cfg, &Plain, 8) {
+            assert!(report.cohort >= 2, "churn floor violated: cohort {}", report.cohort);
+            assert!(report.survivors >= 1, "a round closed without survivors");
+        }
+    }
+
+    #[test]
+    fn scenario_checked_runner_exercises_snapshots() {
+        let cfg = ScenarioConfig::churn(5, 3, 3, 3, 0x5EED);
+        let mech = IrwinHallMechanism::new(0.4, 8.0);
+        let ticks = SNAPSHOT_INTERVAL * 2 + 3;
+        let (reports, events) = run_scenario_checked(
+            cfg,
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            ticks,
+            Some(PrivacyLedger::new(1.0, 1e-6)),
+        );
+        assert_eq!(reports.len(), ticks as usize);
+        // the checked runner (two snapshot/resume round-trips) must match
+        // an uninterrupted engine exactly
+        let straight: Vec<RoundReport> = {
+            let mut e = ScenarioEngine::new(cfg).with_ledger(PrivacyLedger::new(1.0, 1e-6));
+            (0..ticks).map(|_| e.tick(&mech, &SecAgg::new(), &mech)).collect()
+        };
+        assert_eq!(reports, straight);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, ScenarioEvent::WindowOpened { .. })));
+    }
+}

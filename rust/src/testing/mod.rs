@@ -11,7 +11,24 @@
 //! * [`assert_window_closes_exactly`] — the dropout-recovery acceptance
 //!   check: a windowed session over any sum-only transport, with
 //!   announced dropouts and mask recovery, must decode *bit-identically*
-//!   to Plain summation over the same survivor set, round for round.
+//!   to Plain summation over the same survivor set, round for round;
+//! * the deterministic fleet scenario engine: [`engine`] (the tick loop
+//!   with snapshot/resume), [`scenario`] (configuration presets, window
+//!   plans, the event log, the byzantine attack catalogue) and
+//!   [`snapshot`] (the versioned binary snapshot format) — see the
+//!   README's "Scenario engine & snapshots" section.
+//!
+//! Failing [`forall`] properties print the failing case's derived seed
+//! and a one-line reproduction command; set the `FORALL_REPLAY`
+//! environment variable to that seed to re-run exactly that case.
+
+pub mod engine;
+pub mod scenario;
+pub mod snapshot;
+
+pub use engine::{run_scenario_checked, ScenarioEngine, SNAPSHOT_INTERVAL};
+pub use scenario::{Attack, ScenarioConfig, ScenarioEvent, WindowPlan};
+pub use snapshot::ScenarioSnapshot;
 
 use crate::coordinator::sampling::SamplingPolicy;
 use crate::mechanisms::pipeline::{
@@ -109,15 +126,52 @@ impl<A: Shrinkable, B: Shrinkable> Shrinkable for (A, B) {
 }
 
 /// Run `prop` on `cfg.cases` generated inputs; on failure, greedily shrink
-/// and panic with the minimal counterexample.
-pub fn forall<T, G, P>(name: &str, cfg: PropConfig, generator: G, mut prop: P)
+/// and panic with the minimal counterexample, the failing case's derived
+/// seed, and a one-line reproduction command.
+///
+/// Each case draws from its own seed
+/// (`Rng::derive_domain(cfg.seed, seed_domain::PROP_CASE, case)`), so a
+/// single case replays without re-running the cases before it: set the
+/// `FORALL_REPLAY` environment variable to the printed case seed (hex,
+/// with or without `0x`) and re-run the test. Properties that do not
+/// match the seed skip silently — the variable can stay set while a whole
+/// suite runs.
+pub fn forall<T, G, P>(name: &str, cfg: PropConfig, generator: G, prop: P)
 where
     T: Shrinkable,
     G: Fn(&mut Rng) -> T,
     P: FnMut(&T) -> bool,
 {
-    let mut rng = Rng::new(cfg.seed);
+    let replay = std::env::var("FORALL_REPLAY").ok().map(|v| {
+        let hex = v.trim().trim_start_matches("0x");
+        u64::from_str_radix(hex, 16)
+            .unwrap_or_else(|_| panic!("FORALL_REPLAY must be a hex case seed, got `{v}`"))
+    });
+    forall_replay(name, cfg, replay, generator, prop)
+}
+
+/// [`forall`] with the replay filter passed explicitly: `Some(case_seed)`
+/// runs only the case whose derived seed matches (silently running zero
+/// cases if none of this property's seeds do), `None` runs all cases.
+pub fn forall_replay<T, G, P>(
+    name: &str,
+    cfg: PropConfig,
+    replay: Option<u64>,
+    generator: G,
+    mut prop: P,
+) where
+    T: Shrinkable,
+    G: Fn(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
     for case in 0..cfg.cases {
+        let case_seed = Rng::derive_domain(cfg.seed, seed_domain::PROP_CASE, case as u64);
+        if let Some(want) = replay {
+            if case_seed != want {
+                continue;
+            }
+        }
+        let mut rng = Rng::new(case_seed);
         let input = generator(&mut rng);
         if prop(&input) {
             continue;
@@ -139,8 +193,9 @@ where
             break;
         }
         panic!(
-            "property `{name}` failed (case {case}, seed {:#x}).\n  original: {input:?}\n  minimal:  {minimal:?}",
-            cfg.seed
+            "property `{name}` failed (case {case}, case seed {case_seed:#x}).\n  \
+             original: {input:?}\n  minimal:  {minimal:?}\n  \
+             reproduce: FORALL_REPLAY={case_seed:#x} cargo test -q {name}",
         );
     }
 }
@@ -230,13 +285,42 @@ pub fn dropout_schedule(
 ) -> Vec<Vec<usize>> {
     assert!(per_round < n_clients, "every round needs at least one survivor");
     let mut rng = Rng::derive(seed, 0xD80);
-    (0..window)
+    let schedule: Vec<Vec<usize>> = (0..window)
         .map(|_| {
             let mut ids = rng.sample_indices(n_clients, per_round);
             ids.sort_unstable();
             ids
         })
-        .collect()
+        .collect();
+    // sample_indices draws without replacement, so this is a self-check —
+    // but the generator and the validator must never drift apart
+    validate_dropout_schedule(n_clients, &schedule);
+    schedule
+}
+
+/// Fail closed on dropout schedules no session can honor: a round that
+/// drops the whole fleet (recovery needs a survivor to decode toward), an
+/// id outside the fleet, or a client scheduled to drop twice in one
+/// round. Every schedule the acceptance helpers and the scenario engine
+/// run passes through here first, so a malformed hand-written schedule
+/// dies with a named round instead of a deep session panic.
+pub fn validate_dropout_schedule(n_clients: usize, schedule: &[Vec<usize>]) {
+    assert!(n_clients > 0, "a dropout schedule needs a fleet to drop from");
+    for (r, round) in schedule.iter().enumerate() {
+        assert!(
+            round.len() < n_clients,
+            "round {r}: dropping all {n_clients} clients leaves no survivor"
+        );
+        let mut seen = vec![false; n_clients];
+        for &c in round {
+            assert!(
+                c < n_clients,
+                "round {r}: dropout id {c} is outside the fleet of {n_clients}"
+            );
+            assert!(!seen[c], "round {r}: client {c} is scheduled to drop twice");
+            seen[c] = true;
+        }
+    }
 }
 
 /// The dropout-recovery acceptance check (see the module docs): run a
@@ -301,6 +385,7 @@ pub fn assert_sampled_window_closes_exactly<M>(
     );
     assert!(!dropouts.is_empty(), "the schedule fixes the window length; it cannot be empty");
     let n = fleet.n_clients;
+    validate_dropout_schedule(n, dropouts);
     let window = dropouts.len();
     let cohorts: Vec<SurvivorSet> =
         (0..window).map(|r| policy.cohort(session_seed, r as u64, n)).collect();
@@ -374,6 +459,7 @@ pub fn assert_chunked_window_matches_unchunked<M>(
     );
     assert!(!dropouts.is_empty(), "the schedule fixes the window length; it cannot be empty");
     let n = fleet.n_clients;
+    validate_dropout_schedule(n, dropouts);
     let window = dropouts.len();
     let cohorts: Vec<SurvivorSet> =
         (0..window).map(|r| policy.cohort(session_seed, r as u64, n)).collect();
@@ -511,6 +597,50 @@ mod tests {
     }
 
     #[test]
+    fn forall_failure_prints_replay_seed_and_repro_line() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                "always-false-replay",
+                PropConfig { cases: 3, ..Default::default() },
+                gen_f64(0.0, 1.0),
+                |_| false,
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        let expect_seed = Rng::derive_domain(
+            PropConfig::default().seed,
+            seed_domain::PROP_CASE,
+            0,
+        );
+        assert!(msg.contains(&format!("case seed {expect_seed:#x}")), "{msg}");
+        assert!(msg.contains(&format!("FORALL_REPLAY={expect_seed:#x}")), "{msg}");
+        assert!(msg.contains("cargo test"), "{msg}");
+    }
+
+    #[test]
+    fn forall_replay_runs_exactly_the_named_case() {
+        use std::cell::Cell;
+        let cfg = PropConfig { cases: 16, ..Default::default() };
+        let want = Rng::derive_domain(cfg.seed, seed_domain::PROP_CASE, 11);
+        let runs = Cell::new(0u32);
+        forall_replay("replay-one-case", cfg, Some(want), gen_f64(0.0, 1.0), |_| {
+            runs.set(runs.get() + 1);
+            true
+        });
+        assert_eq!(runs.get(), 1, "replay must run exactly the named case");
+        // a seed belonging to no case of this property: zero cases run
+        let runs = Cell::new(0u32);
+        forall_replay("replay-no-case", cfg, Some(!want), gen_f64(0.0, 1.0), |_| {
+            runs.set(runs.get() + 1);
+            true
+        });
+        assert_eq!(runs.get(), 0, "a foreign replay seed must skip the property");
+    }
+
+    #[test]
     fn dropout_schedule_is_seeded_and_in_range() {
         let a = dropout_schedule(9, 4, 3, 5);
         assert_eq!(a, dropout_schedule(9, 4, 3, 5));
@@ -525,6 +655,44 @@ mod tests {
             assert!(round.windows(2).all(|w| w[0] < w[1]), "sorted ascending");
         }
         assert!(dropout_schedule(9, 4, 0, 5).iter().all(|r| r.is_empty()));
+    }
+
+    #[test]
+    fn dropout_schedule_boundaries_hold() {
+        // all-but-one dropped is the extreme legal schedule
+        let extreme = dropout_schedule(5, 3, 4, 77);
+        for round in &extreme {
+            assert_eq!(round.len(), 4);
+        }
+        validate_dropout_schedule(5, &extreme);
+        // zero dropped everywhere is legal too
+        validate_dropout_schedule(5, &[vec![], vec![]]);
+        // hand-written all-but-one passes the validator
+        validate_dropout_schedule(3, &[vec![0, 2]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "every round needs at least one survivor")]
+    fn dropout_schedule_rejects_full_fleet_drop() {
+        dropout_schedule(4, 2, 4, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "leaves no survivor")]
+    fn validate_rejects_round_dropping_everyone() {
+        validate_dropout_schedule(3, &[vec![], vec![0, 1, 2]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled to drop twice")]
+    fn validate_rejects_repeated_client_id() {
+        validate_dropout_schedule(5, &[vec![1, 1, 3]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the fleet")]
+    fn validate_rejects_out_of_range_id() {
+        validate_dropout_schedule(4, &[vec![0, 7]]);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Scenario vocabulary for the tick-driven fleet engine
+//! ([`super::engine`]): configuration presets, the per-window plan the
+//! subsystems produce, the replayable event log, and the byzantine
+//! attack catalogue.
+//!
+//! Everything here is plain data — deterministically derived by the
+//! engine from its per-subsystem RNG slots, captured verbatim in a
+//! [`super::snapshot::ScenarioSnapshot`], and cheap to compare with
+//! exact (`PartialEq`, bit-level f64) equality in the snapshot/resume
+//! bit-identity tests.
+
+/// Fixed per-subsystem RNG slot indices. Each subsystem owns exactly one
+/// domain-separated stream
+/// (`Rng::derive_domain(seed, seed_domain::SCENARIO, slot)`), drawn in
+/// the fixed execution order churn → outages → stragglers → data-drift →
+/// byzantine, so no subsystem's draw count can perturb another's stream
+/// — the property that makes a scenario replay (and a snapshot resume)
+/// bit-identical.
+pub mod slot {
+    pub const CHURN: usize = 0;
+    pub const OUTAGE: usize = 1;
+    pub const STRAGGLER: usize = 2;
+    pub const DRIFT: usize = 3;
+    pub const BYZANTINE: usize = 4;
+    /// number of subsystem slots (the engine's RNG array length)
+    pub const COUNT: usize = 5;
+}
+
+/// A scenario's shape and adversity knobs. All randomness downstream of
+/// these parameters derives from `seed` alone — two configs that compare
+/// equal replay bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    /// announced fleet size n
+    pub n_clients: usize,
+    /// model dimension d
+    pub dim: usize,
+    /// rounds per session window (one [`super::engine::ScenarioEngine`]
+    /// tick executes one round; a new window opens every `window` ticks)
+    pub window: usize,
+    /// session chunk size (clamped to `dim` by the
+    /// [`crate::mechanisms::pipeline::ChunkPlan`])
+    pub chunk: usize,
+    /// the scenario root seed — every subsystem slot, round seed and
+    /// session seed derives from it
+    pub seed: u64,
+    /// per-(client, tick) probability of flipping fleet membership
+    pub churn_rate: f64,
+    /// churn floor: membership never falls below this many active clients
+    pub min_active: usize,
+    /// per-tick probability of a regional outage (a contiguous client-id
+    /// span announced dropped on the Bonawitz recovery path)
+    pub outage_rate: f64,
+    /// width of the outage span (clamped to the fleet)
+    pub outage_span: usize,
+    /// per-(cohort-member, tick) probability of straggling
+    pub straggler_rate: f64,
+    /// Pareto(α = 1) scale of straggler delays — heavy-tailed by
+    /// construction (infinite mean)
+    pub straggler_scale: f64,
+    /// delay threshold above which a straggler is dropped for the round
+    pub deadline: f64,
+    /// per-tick random-walk step of each client's data mean — the
+    /// non-i.i.d. drift subsystem (0 = i.i.d. data)
+    pub drift_step: f64,
+    /// per-tick probability of injecting one byzantine attack
+    pub attack_rate: f64,
+}
+
+impl ScenarioConfig {
+    /// No adversity at all: full fleet, no dropouts, i.i.d. data, no
+    /// attacks — the control column of the CI scenario matrix.
+    pub fn calm(n_clients: usize, dim: usize, window: usize, chunk: usize, seed: u64) -> Self {
+        Self {
+            n_clients,
+            dim,
+            window,
+            chunk,
+            seed,
+            churn_rate: 0.0,
+            min_active: n_clients.min(2).max(1),
+            outage_rate: 0.0,
+            outage_span: 0,
+            straggler_rate: 0.0,
+            straggler_scale: 1.0,
+            deadline: 4.0,
+            drift_step: 0.0,
+            attack_rate: 0.0,
+        }
+    }
+
+    /// A hostile-but-honest fleet: heavy churn, regional outages,
+    /// heavy-tailed stragglers and non-i.i.d. drift — no byzantine
+    /// clients. The configuration the KS-exactness-under-churn tests run.
+    pub fn churn(n_clients: usize, dim: usize, window: usize, chunk: usize, seed: u64) -> Self {
+        Self {
+            churn_rate: 0.3,
+            outage_rate: 0.25,
+            outage_span: (n_clients / 3).max(1),
+            straggler_rate: 0.2,
+            straggler_scale: 1.0,
+            deadline: 4.0,
+            drift_step: 0.2,
+            ..Self::calm(n_clients, dim, window, chunk, seed)
+        }
+    }
+
+    /// The churn preset plus byzantine campaigns: most ticks also probe
+    /// the session's fail-closed surface with a generated attack.
+    pub fn byzantine(
+        n_clients: usize,
+        dim: usize,
+        window: usize,
+        chunk: usize,
+        seed: u64,
+    ) -> Self {
+        Self { attack_rate: 0.8, ..Self::churn(n_clients, dim, window, chunk, seed) }
+    }
+
+    /// Fail closed on shapes no scenario can run.
+    pub fn validate(&self) {
+        assert!(self.n_clients > 0, "a scenario needs at least one client");
+        assert!(self.dim > 0, "a scenario needs at least one coordinate");
+        assert!(self.window > 0, "a scenario window needs at least one round");
+        assert!(self.chunk > 0, "a scenario needs a positive chunk size");
+        assert!(
+            self.min_active >= 1 && self.min_active <= self.n_clients,
+            "the churn floor must keep between 1 and n clients active"
+        );
+        for (name, rate) in [
+            ("churn_rate", self.churn_rate),
+            ("outage_rate", self.outage_rate),
+            ("straggler_rate", self.straggler_rate),
+            ("attack_rate", self.attack_rate),
+        ] {
+            assert!((0.0..=1.0).contains(&rate), "{name} must lie in [0, 1], got {rate}");
+        }
+        assert!(self.straggler_scale > 0.0, "straggler delays need a positive scale");
+        assert!(self.deadline > 0.0, "the round deadline must be positive");
+        assert!(self.drift_step >= 0.0, "the drift step cannot be negative");
+    }
+}
+
+/// One generated byzantine probe against the session's fail-closed
+/// surface. Every attack the generator emits is guaranteed to violate the
+/// transport-session contract — the engine panics ("fails open") if the
+/// session absorbs one silently, so a campaign has exactly two outcomes:
+/// the honest window closes exactly, or the probe panics fail-closed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Attack {
+    /// submit a chunk whose description length does not match the plan's
+    /// coordinate range (multi-chunk sessions only — rejected before any
+    /// accumulator is touched)
+    MalformedChunkLen { round: usize, client: usize },
+    /// submit the same chunk twice — a client must not stand in for a
+    /// missing one
+    DuplicateChunk { round: usize, client: usize },
+    /// skip ahead in the chunk stream (or name a chunk outside the plan)
+    OutOfOrderChunk { round: usize, client: usize },
+    /// a client outside the round's cohort submits
+    OutOfCohortSubmit { round: usize, client: usize },
+    /// a client already announced dropped submits anyway
+    SubmitAfterDrop { round: usize, client: usize },
+    /// re-announce a round that already carries a dropout announcement
+    ConflictingReannounce { round: usize },
+}
+
+impl Attack {
+    /// The window round this attack targets.
+    pub fn round(&self) -> usize {
+        match *self {
+            Attack::MalformedChunkLen { round, .. }
+            | Attack::DuplicateChunk { round, .. }
+            | Attack::OutOfOrderChunk { round, .. }
+            | Attack::OutOfCohortSubmit { round, .. }
+            | Attack::SubmitAfterDrop { round, .. }
+            | Attack::ConflictingReannounce { round } => round,
+        }
+    }
+}
+
+/// One entry of the engine's replayable event log. Events record what the
+/// subsystems decided (and that every attack was rejected) — they never
+/// record snapshot activity, so an uninterrupted run and a
+/// snapshot-resumed run produce identical logs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioEvent {
+    /// a session window opened at `tick` covering `window` rounds
+    WindowOpened { tick: u64, window: usize, session_seed: u64 },
+    /// churn flipped a client into the fleet
+    ClientJoined { tick: u64, client: usize },
+    /// churn flipped a client out of the fleet
+    ClientLeft { tick: u64, client: usize },
+    /// a regional outage dropped `dropped` cohort members of `[lo, hi)`
+    RegionalOutage { tick: u64, lo: usize, hi: usize, dropped: usize },
+    /// a straggler blew the round deadline and was dropped
+    StragglerDropped { tick: u64, client: usize, delay: f64 },
+    /// a byzantine probe hit the fail-closed surface and panicked, as it
+    /// must (an absorbed attack panics the engine instead)
+    AttackRejected { tick: u64, attack: Attack },
+    /// a round closed exactly over `survivors` of its `cohort`
+    RoundClosed { tick: u64, survivors: usize, cohort: usize },
+}
+
+/// Everything one window needs to execute, planned at window open by the
+/// subsystems in their fixed order and then immutable: per-round cohorts
+/// (churn), mid-round dropouts (outages ∪ stragglers past the deadline),
+/// per-client data (drift), and the byzantine probes. Captured verbatim
+/// in a snapshot so a mid-window resume replays the identical window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowPlan {
+    /// the tick the window's first round executes at
+    pub start_tick: u64,
+    /// the session's transport-schedule seed
+    pub session_seed: u64,
+    /// per-round shared-randomness seeds (the `seed_domain::ROUND` family
+    /// of the scenario seed, indexed by global tick)
+    pub round_seeds: Vec<u64>,
+    /// per-round cohort alive-masks (index = global client id)
+    pub cohorts: Vec<Vec<bool>>,
+    /// per-round mid-round dropouts — cohort members, sorted, distinct,
+    /// always leaving at least one survivor
+    pub dropouts: Vec<Vec<usize>>,
+    /// per-round per-client data vectors (`data[r][client]`, length d)
+    pub data: Vec<Vec<Vec<f64>>>,
+    /// per-round byzantine probes
+    pub attacks: Vec<Vec<Attack>>,
+}

@@ -1,0 +1,775 @@
+//! Scenario snapshots: the complete externalized state of a
+//! [`super::engine::ScenarioEngine`] plus a versioned, deterministic
+//! binary wire format.
+//!
+//! The capture is *stream positions, not reseeds*: every RNG slot is
+//! recorded as its raw xoshiro state ([`crate::util::rng::RngState`],
+//! including the cached polar-method Gaussian spare), the live
+//! transport-session as its full accumulator/cursor/announcement state
+//! ([`crate::mechanisms::session::SessionState`]), and the privacy
+//! ledger as its recorded spends
+//! ([`crate::dp::LedgerSnapshot`]). Resuming re-enters exactly the
+//! captured position of every stream, which is why resume ≡
+//! uninterrupted run bit for bit (see docs/determinism.md).
+//!
+//! Wire format: little-endian, length-prefixed, `f64` as IEEE-754 bit
+//! patterns (`to_bits`/`from_bits` — exact, no text round-trip loss),
+//! `Option` as a one-byte tag, every enum as a one-byte tag. A format
+//! version guards the header; any structural corruption — truncation,
+//! bad tag, trailing bytes, implausible length — fails closed with a
+//! panic rather than yielding a plausible-but-wrong scenario state.
+
+use crate::dp::{LedgerSnapshot, PrivacySpend};
+use crate::mechanisms::pipeline::TransportPartial;
+use crate::mechanisms::session::{ChunkSlotState, RoundSlotState, SessionState};
+use crate::mechanisms::traits::BitsAccount;
+use crate::secagg::RecoveryShare;
+use crate::util::rng::RngState;
+
+use super::scenario::{slot, Attack, ScenarioConfig, ScenarioEvent, WindowPlan};
+
+/// Bumped on any change to the wire format below.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: [u8; 4] = *b"XSCN";
+
+/// The complete externalized state of a scenario engine at one tick
+/// boundary: configuration, tick, all five subsystem RNG slot states,
+/// fleet membership, drift means, ledger, event log, and — when captured
+/// mid-window — the window plan and live session state.
+///
+/// `PartialEq` is exact (bit-level f64) equality: two snapshots compare
+/// equal iff the engines they capture are bit-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSnapshot {
+    pub cfg: ScenarioConfig,
+    pub tick: u64,
+    /// per-subsystem RNG stream positions, indexed by
+    /// [`super::scenario::slot`]
+    pub rng_states: [RngState; slot::COUNT],
+    /// fleet membership mask (churn state)
+    pub active: Vec<bool>,
+    /// per-client data-mean walk (drift state)
+    pub drift: Vec<f64>,
+    pub ledger: Option<LedgerSnapshot>,
+    pub events: Vec<ScenarioEvent>,
+    /// the active window's immutable plan (None at a window boundary)
+    pub plan: Option<WindowPlan>,
+    /// the active window's session state (None at a window boundary)
+    pub session: Option<SessionState>,
+}
+
+// --- writer -----------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_usize(b: &mut Vec<u8>, v: usize) {
+    put_u64(b, v as u64);
+}
+fn put_i64(b: &mut Vec<u8>, v: i64) {
+    put_u64(b, v as u64);
+}
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    put_u64(b, v.to_bits());
+}
+fn put_bool(b: &mut Vec<u8>, v: bool) {
+    put_u8(b, v as u8);
+}
+fn put_opt_f64(b: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => put_u8(b, 0),
+        Some(x) => {
+            put_u8(b, 1);
+            put_f64(b, x);
+        }
+    }
+}
+fn put_bools(b: &mut Vec<u8>, v: &[bool]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_bool(b, x);
+    }
+}
+fn put_f64s(b: &mut Vec<u8>, v: &[f64]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_f64(b, x);
+    }
+}
+fn put_u64s(b: &mut Vec<u8>, v: &[u64]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_u64(b, x);
+    }
+}
+fn put_i64s(b: &mut Vec<u8>, v: &[i64]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_i64(b, x);
+    }
+}
+fn put_usizes(b: &mut Vec<u8>, v: &[usize]) {
+    put_usize(b, v.len());
+    for &x in v {
+        put_usize(b, x);
+    }
+}
+
+fn put_cfg(b: &mut Vec<u8>, c: &ScenarioConfig) {
+    put_usize(b, c.n_clients);
+    put_usize(b, c.dim);
+    put_usize(b, c.window);
+    put_usize(b, c.chunk);
+    put_u64(b, c.seed);
+    put_f64(b, c.churn_rate);
+    put_usize(b, c.min_active);
+    put_f64(b, c.outage_rate);
+    put_usize(b, c.outage_span);
+    put_f64(b, c.straggler_rate);
+    put_f64(b, c.straggler_scale);
+    put_f64(b, c.deadline);
+    put_f64(b, c.drift_step);
+    put_f64(b, c.attack_rate);
+}
+
+fn put_rng_state(b: &mut Vec<u8>, s: &RngState) {
+    for w in s.s {
+        put_u64(b, w);
+    }
+    put_opt_f64(b, s.gauss_spare);
+}
+
+fn put_ledger(b: &mut Vec<u8>, l: &LedgerSnapshot) {
+    put_f64(b, l.base_eps);
+    put_f64(b, l.base_delta);
+    put_opt_f64(b, l.noise_multiplier);
+    put_f64(b, l.tv_total);
+    put_usize(b, l.spends.len());
+    for s in &l.spends {
+        put_u64(b, s.round);
+        put_f64(b, s.gamma);
+        put_f64(b, s.eps_round);
+        put_f64(b, s.delta_round);
+        put_f64(b, s.eps_total);
+        put_f64(b, s.delta_total);
+    }
+}
+
+fn put_attack(b: &mut Vec<u8>, a: &Attack) {
+    match *a {
+        Attack::MalformedChunkLen { round, client } => {
+            put_u8(b, 0);
+            put_usize(b, round);
+            put_usize(b, client);
+        }
+        Attack::DuplicateChunk { round, client } => {
+            put_u8(b, 1);
+            put_usize(b, round);
+            put_usize(b, client);
+        }
+        Attack::OutOfOrderChunk { round, client } => {
+            put_u8(b, 2);
+            put_usize(b, round);
+            put_usize(b, client);
+        }
+        Attack::OutOfCohortSubmit { round, client } => {
+            put_u8(b, 3);
+            put_usize(b, round);
+            put_usize(b, client);
+        }
+        Attack::SubmitAfterDrop { round, client } => {
+            put_u8(b, 4);
+            put_usize(b, round);
+            put_usize(b, client);
+        }
+        Attack::ConflictingReannounce { round } => {
+            put_u8(b, 5);
+            put_usize(b, round);
+        }
+    }
+}
+
+fn put_event(b: &mut Vec<u8>, e: &ScenarioEvent) {
+    match *e {
+        ScenarioEvent::WindowOpened { tick, window, session_seed } => {
+            put_u8(b, 0);
+            put_u64(b, tick);
+            put_usize(b, window);
+            put_u64(b, session_seed);
+        }
+        ScenarioEvent::ClientJoined { tick, client } => {
+            put_u8(b, 1);
+            put_u64(b, tick);
+            put_usize(b, client);
+        }
+        ScenarioEvent::ClientLeft { tick, client } => {
+            put_u8(b, 2);
+            put_u64(b, tick);
+            put_usize(b, client);
+        }
+        ScenarioEvent::RegionalOutage { tick, lo, hi, dropped } => {
+            put_u8(b, 3);
+            put_u64(b, tick);
+            put_usize(b, lo);
+            put_usize(b, hi);
+            put_usize(b, dropped);
+        }
+        ScenarioEvent::StragglerDropped { tick, client, delay } => {
+            put_u8(b, 4);
+            put_u64(b, tick);
+            put_usize(b, client);
+            put_f64(b, delay);
+        }
+        ScenarioEvent::AttackRejected { tick, ref attack } => {
+            put_u8(b, 5);
+            put_u64(b, tick);
+            put_attack(b, attack);
+        }
+        ScenarioEvent::RoundClosed { tick, survivors, cohort } => {
+            put_u8(b, 6);
+            put_u64(b, tick);
+            put_usize(b, survivors);
+            put_usize(b, cohort);
+        }
+    }
+}
+
+fn put_plan(b: &mut Vec<u8>, p: &WindowPlan) {
+    put_u64(b, p.start_tick);
+    put_u64(b, p.session_seed);
+    put_u64s(b, &p.round_seeds);
+    put_usize(b, p.cohorts.len());
+    for m in &p.cohorts {
+        put_bools(b, m);
+    }
+    put_usize(b, p.dropouts.len());
+    for d in &p.dropouts {
+        put_usizes(b, d);
+    }
+    put_usize(b, p.data.len());
+    for round in &p.data {
+        put_usize(b, round.len());
+        for x in round {
+            put_f64s(b, x);
+        }
+    }
+    put_usize(b, p.attacks.len());
+    for round in &p.attacks {
+        put_usize(b, round.len());
+        for a in round {
+            put_attack(b, a);
+        }
+    }
+}
+
+fn put_partial(b: &mut Vec<u8>, p: &TransportPartial) {
+    match p {
+        TransportPartial::Sum(None) => put_u8(b, 0),
+        TransportPartial::Sum(Some(v)) => {
+            put_u8(b, 1);
+            put_i64s(b, v);
+        }
+        TransportPartial::Masked { sum: None, modulus } => {
+            put_u8(b, 2);
+            put_u64(b, *modulus);
+        }
+        TransportPartial::Masked { sum: Some(v), modulus } => {
+            put_u8(b, 3);
+            put_u64s(b, v);
+            put_u64(b, *modulus);
+        }
+        TransportPartial::List(entries) => {
+            put_u8(b, 4);
+            put_usize(b, entries.len());
+            for (client, ms, aux) in entries {
+                put_usize(b, *client);
+                put_i64s(b, ms);
+                put_f64s(b, aux);
+            }
+        }
+    }
+}
+
+fn put_bits(b: &mut Vec<u8>, bits: &BitsAccount) {
+    put_f64(b, bits.variable_total);
+    put_opt_f64(b, bits.fixed_total);
+    put_u64(b, bits.messages);
+}
+
+fn put_session(b: &mut Vec<u8>, s: &SessionState) {
+    put_u64(b, s.session_seed);
+    put_usize(b, s.n_clients);
+    put_usize(b, s.dim);
+    put_usize(b, s.chunk);
+    put_u64s(b, &s.round_seeds);
+    put_usize(b, s.cohort_masks.len());
+    for m in &s.cohort_masks {
+        put_bools(b, m);
+    }
+    put_usize(b, s.slots.len());
+    for slot in &s.slots {
+        put_usize(b, slot.chunks.len());
+        for c in &slot.chunks {
+            put_partial(b, &c.partial);
+            put_usize(b, c.submitted);
+            put_bool(b, c.finished);
+        }
+        put_bits(b, &slot.bits);
+        put_usize(b, slot.next_chunk.len());
+        for &c in &slot.next_chunk {
+            put_u32(b, c);
+        }
+        put_bool(b, slot.has_direct);
+        put_bool(b, slot.folded);
+        match &slot.announced {
+            None => put_u8(b, 0),
+            Some((dropped, shares)) => {
+                put_u8(b, 1);
+                put_usizes(b, dropped);
+                put_usize(b, shares.len());
+                for sh in shares {
+                    put_usize(b, sh.dropped);
+                    put_usize(b, sh.holder);
+                    put_u64(b, sh.pair_seed);
+                }
+            }
+        }
+    }
+    put_bool(b, s.closed);
+    put_usize(b, s.live_bytes);
+    put_usize(b, s.peak_bytes);
+}
+
+// --- reader -----------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        assert!(
+            self.pos + n <= self.buf.len(),
+            "scenario snapshot fails closed: truncated at byte {}",
+            self.pos,
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+    fn u8(&mut self) -> u8 {
+        self.take(1)[0]
+    }
+    fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().expect("4 bytes"))
+    }
+    fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().expect("8 bytes"))
+    }
+    fn i64(&mut self) -> i64 {
+        self.u64() as i64
+    }
+    fn f64(&mut self) -> f64 {
+        f64::from_bits(self.u64())
+    }
+    fn usize(&mut self) -> usize {
+        self.u64() as usize
+    }
+    fn bool(&mut self) -> bool {
+        match self.u8() {
+            0 => false,
+            1 => true,
+            t => panic!(
+                "scenario snapshot fails closed: invalid bool tag {t} at byte {}",
+                self.pos - 1,
+            ),
+        }
+    }
+    /// A length prefix whose elements occupy at least `min_elem` bytes
+    /// each — fails closed on lengths the remaining buffer cannot hold
+    /// (a corrupted length must not drive allocation).
+    fn len(&mut self, min_elem: usize) -> usize {
+        let v = self.u64();
+        let remaining = (self.buf.len() - self.pos) as u64;
+        assert!(
+            v.saturating_mul(min_elem.max(1) as u64) <= remaining,
+            "scenario snapshot fails closed: implausible length {v} at byte {}",
+            self.pos - 8,
+        );
+        v as usize
+    }
+    fn opt_f64(&mut self) -> Option<f64> {
+        match self.u8() {
+            0 => None,
+            1 => Some(self.f64()),
+            t => panic!(
+                "scenario snapshot fails closed: invalid Option tag {t} at byte {}",
+                self.pos - 1,
+            ),
+        }
+    }
+    fn bools(&mut self) -> Vec<bool> {
+        let n = self.len(1);
+        (0..n).map(|_| self.bool()).collect()
+    }
+    fn f64s(&mut self) -> Vec<f64> {
+        let n = self.len(8);
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn u64s(&mut self) -> Vec<u64> {
+        let n = self.len(8);
+        (0..n).map(|_| self.u64()).collect()
+    }
+    fn i64s(&mut self) -> Vec<i64> {
+        let n = self.len(8);
+        (0..n).map(|_| self.i64()).collect()
+    }
+    fn usizes(&mut self) -> Vec<usize> {
+        let n = self.len(8);
+        (0..n).map(|_| self.usize()).collect()
+    }
+}
+
+fn get_cfg(r: &mut Reader) -> ScenarioConfig {
+    ScenarioConfig {
+        n_clients: r.usize(),
+        dim: r.usize(),
+        window: r.usize(),
+        chunk: r.usize(),
+        seed: r.u64(),
+        churn_rate: r.f64(),
+        min_active: r.usize(),
+        outage_rate: r.f64(),
+        outage_span: r.usize(),
+        straggler_rate: r.f64(),
+        straggler_scale: r.f64(),
+        deadline: r.f64(),
+        drift_step: r.f64(),
+        attack_rate: r.f64(),
+    }
+}
+
+fn get_rng_state(r: &mut Reader) -> RngState {
+    let s = [r.u64(), r.u64(), r.u64(), r.u64()];
+    RngState { s, gauss_spare: r.opt_f64() }
+}
+
+fn get_ledger(r: &mut Reader) -> LedgerSnapshot {
+    let base_eps = r.f64();
+    let base_delta = r.f64();
+    let noise_multiplier = r.opt_f64();
+    let tv_total = r.f64();
+    let n = r.len(48);
+    let spends = (0..n)
+        .map(|_| PrivacySpend {
+            round: r.u64(),
+            gamma: r.f64(),
+            eps_round: r.f64(),
+            delta_round: r.f64(),
+            eps_total: r.f64(),
+            delta_total: r.f64(),
+        })
+        .collect();
+    LedgerSnapshot { base_eps, base_delta, noise_multiplier, tv_total, spends }
+}
+
+fn get_attack(r: &mut Reader) -> Attack {
+    match r.u8() {
+        0 => Attack::MalformedChunkLen { round: r.usize(), client: r.usize() },
+        1 => Attack::DuplicateChunk { round: r.usize(), client: r.usize() },
+        2 => Attack::OutOfOrderChunk { round: r.usize(), client: r.usize() },
+        3 => Attack::OutOfCohortSubmit { round: r.usize(), client: r.usize() },
+        4 => Attack::SubmitAfterDrop { round: r.usize(), client: r.usize() },
+        5 => Attack::ConflictingReannounce { round: r.usize() },
+        t => panic!(
+            "scenario snapshot fails closed: invalid attack tag {t} at byte {}",
+            r.pos - 1,
+        ),
+    }
+}
+
+fn get_event(r: &mut Reader) -> ScenarioEvent {
+    match r.u8() {
+        0 => ScenarioEvent::WindowOpened {
+            tick: r.u64(),
+            window: r.usize(),
+            session_seed: r.u64(),
+        },
+        1 => ScenarioEvent::ClientJoined { tick: r.u64(), client: r.usize() },
+        2 => ScenarioEvent::ClientLeft { tick: r.u64(), client: r.usize() },
+        3 => ScenarioEvent::RegionalOutage {
+            tick: r.u64(),
+            lo: r.usize(),
+            hi: r.usize(),
+            dropped: r.usize(),
+        },
+        4 => ScenarioEvent::StragglerDropped {
+            tick: r.u64(),
+            client: r.usize(),
+            delay: r.f64(),
+        },
+        5 => ScenarioEvent::AttackRejected { tick: r.u64(), attack: get_attack(r) },
+        6 => ScenarioEvent::RoundClosed {
+            tick: r.u64(),
+            survivors: r.usize(),
+            cohort: r.usize(),
+        },
+        t => panic!(
+            "scenario snapshot fails closed: invalid event tag {t} at byte {}",
+            r.pos - 1,
+        ),
+    }
+}
+
+fn get_plan(r: &mut Reader) -> WindowPlan {
+    let start_tick = r.u64();
+    let session_seed = r.u64();
+    let round_seeds = r.u64s();
+    let cohorts = (0..r.len(8)).map(|_| r.bools()).collect();
+    let dropouts = (0..r.len(8)).map(|_| r.usizes()).collect();
+    let data = (0..r.len(8))
+        .map(|_| (0..r.len(8)).map(|_| r.f64s()).collect())
+        .collect();
+    let attacks = (0..r.len(8))
+        .map(|_| (0..r.len(1)).map(|_| get_attack(r)).collect())
+        .collect();
+    WindowPlan { start_tick, session_seed, round_seeds, cohorts, dropouts, data, attacks }
+}
+
+fn get_partial(r: &mut Reader) -> TransportPartial {
+    match r.u8() {
+        0 => TransportPartial::Sum(None),
+        1 => TransportPartial::Sum(Some(r.i64s())),
+        2 => TransportPartial::Masked { sum: None, modulus: r.u64() },
+        3 => TransportPartial::Masked { sum: Some(r.u64s()), modulus: r.u64() },
+        4 => {
+            let n = r.len(24);
+            TransportPartial::List(
+                (0..n).map(|_| (r.usize(), r.i64s(), r.f64s())).collect(),
+            )
+        }
+        t => panic!(
+            "scenario snapshot fails closed: invalid partial tag {t} at byte {}",
+            r.pos - 1,
+        ),
+    }
+}
+
+fn get_session(r: &mut Reader) -> SessionState {
+    let session_seed = r.u64();
+    let n_clients = r.usize();
+    let dim = r.usize();
+    let chunk = r.usize();
+    let round_seeds = r.u64s();
+    let cohort_masks = (0..r.len(8)).map(|_| r.bools()).collect();
+    let n_slots = r.len(8);
+    let slots = (0..n_slots)
+        .map(|_| {
+            let chunks = (0..r.len(2))
+                .map(|_| ChunkSlotState {
+                    partial: get_partial(r),
+                    submitted: r.usize(),
+                    finished: r.bool(),
+                })
+                .collect();
+            let bits =
+                BitsAccount { variable_total: r.f64(), fixed_total: r.opt_f64(), messages: r.u64() };
+            let next_chunk = (0..r.len(4)).map(|_| r.u32()).collect();
+            let has_direct = r.bool();
+            let folded = r.bool();
+            let announced = match r.u8() {
+                0 => None,
+                1 => {
+                    let dropped = r.usizes();
+                    let shares = (0..r.len(24))
+                        .map(|_| RecoveryShare {
+                            dropped: r.usize(),
+                            holder: r.usize(),
+                            pair_seed: r.u64(),
+                        })
+                        .collect();
+                    Some((dropped, shares))
+                }
+                t => panic!(
+                    "scenario snapshot fails closed: invalid Option tag {t} at byte {}",
+                    r.pos - 1,
+                ),
+            };
+            RoundSlotState { chunks, bits, next_chunk, has_direct, folded, announced }
+        })
+        .collect();
+    SessionState {
+        session_seed,
+        n_clients,
+        dim,
+        chunk,
+        round_seeds,
+        cohort_masks,
+        slots,
+        closed: r.bool(),
+        live_bytes: r.usize(),
+        peak_bytes: r.usize(),
+    }
+}
+
+impl ScenarioSnapshot {
+    /// Serialize to the versioned binary wire format. Deterministic: two
+    /// equal snapshots serialize to identical bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC);
+        put_u32(&mut b, FORMAT_VERSION);
+        put_cfg(&mut b, &self.cfg);
+        put_u64(&mut b, self.tick);
+        for s in &self.rng_states {
+            put_rng_state(&mut b, s);
+        }
+        put_bools(&mut b, &self.active);
+        put_f64s(&mut b, &self.drift);
+        match &self.ledger {
+            None => put_u8(&mut b, 0),
+            Some(l) => {
+                put_u8(&mut b, 1);
+                put_ledger(&mut b, l);
+            }
+        }
+        put_usize(&mut b, self.events.len());
+        for e in &self.events {
+            put_event(&mut b, e);
+        }
+        match &self.plan {
+            None => put_u8(&mut b, 0),
+            Some(p) => {
+                put_u8(&mut b, 1);
+                put_plan(&mut b, p);
+            }
+        }
+        match &self.session {
+            None => put_u8(&mut b, 0),
+            Some(s) => {
+                put_u8(&mut b, 1);
+                put_session(&mut b, s);
+            }
+        }
+        b
+    }
+
+    /// Deserialize, failing closed (panic) on any structural corruption:
+    /// bad magic, unknown format version, truncation, invalid tags, or
+    /// trailing bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut r = Reader { buf: bytes, pos: 0 };
+        assert_eq!(
+            r.take(4),
+            MAGIC,
+            "scenario snapshot fails closed: bad magic — not a scenario snapshot"
+        );
+        let version = r.u32();
+        assert_eq!(
+            version, FORMAT_VERSION,
+            "scenario snapshot fails closed: unsupported format version {version}",
+        );
+        let cfg = get_cfg(&mut r);
+        let tick = r.u64();
+        let mut states = [RngState { s: [0; 4], gauss_spare: None }; slot::COUNT];
+        for st in states.iter_mut() {
+            *st = get_rng_state(&mut r);
+        }
+        let active = r.bools();
+        let drift = r.f64s();
+        let ledger = match r.u8() {
+            0 => None,
+            1 => Some(get_ledger(&mut r)),
+            t => panic!("scenario snapshot fails closed: invalid Option tag {t}"),
+        };
+        let events = (0..r.len(9)).map(|_| get_event(&mut r)).collect();
+        let plan = match r.u8() {
+            0 => None,
+            1 => Some(get_plan(&mut r)),
+            t => panic!("scenario snapshot fails closed: invalid Option tag {t}"),
+        };
+        let session = match r.u8() {
+            0 => None,
+            1 => Some(get_session(&mut r)),
+            t => panic!("scenario snapshot fails closed: invalid Option tag {t}"),
+        };
+        assert_eq!(
+            r.pos,
+            bytes.len(),
+            "scenario snapshot fails closed: {} trailing bytes",
+            bytes.len() - r.pos,
+        );
+        Self { cfg, tick, rng_states: states, active, drift, ledger, events, plan, session }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::ScenarioEngine;
+    use super::super::scenario::ScenarioConfig;
+    use super::*;
+    use crate::dp::PrivacyLedger;
+    use crate::mechanisms::pipeline::SecAgg;
+    use crate::mechanisms::IrwinHallMechanism;
+
+    /// A mid-window snapshot with every component live: plan, session,
+    /// ledger, events, non-trivial RNG positions.
+    fn mid_window_snapshot() -> ScenarioSnapshot {
+        let cfg = ScenarioConfig::byzantine(5, 4, 3, 2, 0x51AB);
+        let mech = IrwinHallMechanism::new(0.4, 8.0);
+        let mut engine =
+            ScenarioEngine::new(cfg).with_ledger(PrivacyLedger::new(0.9, 1e-6));
+        for _ in 0..4 {
+            engine.tick(&mech, &SecAgg::new(), &mech);
+        }
+        engine.snapshot()
+    }
+
+    #[test]
+    fn snapshot_bytes_round_trip_is_lossless() {
+        let snap = mid_window_snapshot();
+        assert!(snap.plan.is_some(), "the fixture must capture a live window");
+        assert!(snap.session.is_some());
+        let bytes = snap.to_bytes();
+        assert_eq!(ScenarioSnapshot::from_bytes(&bytes), snap);
+        // deterministic serialization: equal snapshots → equal bytes
+        assert_eq!(snap.to_bytes(), bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated")]
+    fn truncated_snapshot_fails_closed() {
+        let bytes = mid_window_snapshot().to_bytes();
+        ScenarioSnapshot::from_bytes(&bytes[..bytes.len() - 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported format version")]
+    fn unknown_format_version_fails_closed() {
+        let mut bytes = mid_window_snapshot().to_bytes();
+        bytes[4] = 0xFF; // low byte of the little-endian version field
+        ScenarioSnapshot::from_bytes(&bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "trailing bytes")]
+    fn trailing_bytes_fail_closed() {
+        let mut bytes = mid_window_snapshot().to_bytes();
+        bytes.push(0);
+        ScenarioSnapshot::from_bytes(&bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad magic")]
+    fn foreign_bytes_fail_closed() {
+        ScenarioSnapshot::from_bytes(b"not a snapshot at all, sorry....");
+    }
+}

@@ -37,6 +37,16 @@ pub mod seed_domain {
     /// sequential stream — so any chunking of the coordinate space
     /// reproduces identical bits.
     pub const COORD_FAMILY: u64 = 0xD0_0004;
+    /// A scenario engine's per-subsystem RNG slots
+    /// ([`crate::testing::ScenarioEngine`]): slot i of the fixed
+    /// subsystem order (churn, outage, straggler, drift, byzantine) draws
+    /// from `derive_domain(scenario_seed, SCENARIO, i)`, so no
+    /// subsystem's draw count can displace another's stream.
+    pub const SCENARIO: u64 = 0xD0_0005;
+    /// Property-test case seeds ([`crate::testing::forall`]): case k of a
+    /// `forall` run draws from `derive_domain(cfg.seed, PROP_CASE, k)`,
+    /// which is the seed a failure report prints for `FORALL_REPLAY`.
+    pub const PROP_CASE: u64 = 0xD0_0006;
 }
 
 /// SplitMix64's additive constant (the golden-ratio gamma).
@@ -85,12 +95,42 @@ pub struct Rng {
     gauss_spare: Option<f64>,
 }
 
+/// The complete externalized state of an [`Rng`]: the xoshiro256++ word
+/// state plus the polar method's cached spare Gaussian. Capturing this is
+/// capturing the generator's exact *stream position* — restoring it via
+/// [`Rng::from_state`] continues the stream bit-for-bit where it stopped,
+/// which is what snapshot/resume bit-identity hinges on (re-*seeding*
+/// would rewind the stream and replay draws; see docs/determinism.md).
+///
+/// `gauss_spare` must be part of the state: `normal()` draws Gaussians in
+/// pairs and caches the second, so two generators with equal word state
+/// but different spares diverge on their very next `normal()` call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RngState {
+    /// xoshiro256++ state words, in order.
+    pub s: [u64; 4],
+    /// Cached second Gaussian from the last polar-method pair, if any.
+    pub gauss_spare: Option<f64>,
+}
+
 impl Rng {
     /// Seed via SplitMix64 expansion (recommended by the xoshiro authors).
     pub fn new(seed: u64) -> Self {
         let mut sm = SplitMix64::new(seed);
         let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
         Self { s, gauss_spare: None }
+    }
+
+    /// Capture the generator's exact stream position (see [`RngState`]).
+    pub fn state(&self) -> RngState {
+        RngState { s: self.s, gauss_spare: self.gauss_spare }
+    }
+
+    /// Rebuild a generator at a previously captured stream position: the
+    /// restored generator's future draws are bit-identical to what the
+    /// captured generator would have drawn next.
+    pub fn from_state(state: RngState) -> Self {
+        Self { s: state.s, gauss_spare: state.gauss_spare }
     }
 
     /// Derive an independent stream for a (seed, stream-id) pair.
@@ -560,6 +600,29 @@ mod tests {
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen.len(), len);
+    }
+
+    #[test]
+    fn state_capture_is_stream_position_not_reseed() {
+        // Snapshot/resume contract: capturing RngState mid-stream and
+        // restoring it continues the exact stream — including through an
+        // odd number of normal() draws, where the polar method has a
+        // cached spare that a reseed would lose.
+        let mut r = Rng::new(0x5EED);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        r.normal(); // leaves a gauss_spare cached
+        let snap = r.state();
+        assert!(snap.gauss_spare.is_some());
+        let mut resumed = Rng::from_state(snap);
+        for _ in 0..64 {
+            assert_eq!(r.next_u64(), resumed.next_u64());
+        }
+        assert_eq!(r.normal().to_bits(), resumed.normal().to_bits());
+        // ... whereas reseeding from scratch rewinds the stream
+        let mut reseeded = Rng::new(0x5EED);
+        assert!(reseeded.state() != snap, "fresh seed must not equal mid-stream state");
     }
 
     #[test]
