@@ -5,16 +5,18 @@
 //! Worker threads are pinned to 4 by default so numbers are comparable
 //! across machines; `BENCH_THREADS` overrides the pin and the effective
 //! value is recorded in the emitted JSON. A full run writes
-//! `BENCH_6.json` at the repo root (the trajectory artifact compared by
+//! `BENCH_8.json` at the repo root (the trajectory artifact compared by
 //! `scripts/bench_diff.sh`); `BENCH_QUICK=1` smoke runs write to
 //! `target/BENCH_quick.json` instead so a quick pass can never overwrite
 //! a recorded trajectory point.
 
 use std::sync::Arc;
 
+use exact_comp::coordinator::deadline::DeadlinePolicy;
 use exact_comp::coordinator::runtime::{
-    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_chunked,
-    run_rounds_mech_sampled, run_rounds_mech_with_dropouts, ClientPool,
+    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_async,
+    run_rounds_mech_chunked, run_rounds_mech_sampled, run_rounds_mech_with_dropouts,
+    AsyncRunConfig, ClientPool,
 };
 use exact_comp::coordinator::sampling::SamplingPolicy;
 use exact_comp::mechanisms::pipeline::{ClientEncoder, Plain, SecAgg, SharedRound};
@@ -27,7 +29,7 @@ use exact_comp::util::rng::{fill_below_coords, fill_u01_coords, Rng};
 use exact_comp::util::stats::ks_test;
 
 /// Bump per PR: the trajectory artifact this bench emits on a full run.
-const TRAJECTORY_FILE: &str = "BENCH_6.json";
+const TRAJECTORY_FILE: &str = "BENCH_8.json";
 
 fn main() {
     let mut s = Suite::from_env();
@@ -253,6 +255,128 @@ fn main() {
             small <= budget,
             "chunked peak {small} exceeds O(shards·W·c) budget {budget}"
         );
+    }
+
+    // event-driven work-stealing coordinator (no chunk barrier): the
+    // headline series is a million-client Plain round — the fleet scale
+    // the barrier runners cannot reach in a bench budget — recording wall
+    // time plus the session's peak accumulator bytes, asserting the
+    // O(ring·W·c) memory model (live accumulators are bounded by the
+    // admission ring, never O(d) and never O(n)). Plain because SecAgg's
+    // O(n) pairwise masks per client are quadratic in fleet size; the
+    // SecAgg async series below stays at n = 256 for exactly that reason.
+    {
+        let n = if Suite::quick_mode() { 20_000usize } else { 1_000_000 };
+        let d = 8usize;
+        let w = 1usize;
+        let chunk = 2usize;
+        let pool = ClientPool::spawn_with_threads(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+            Some(threads),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let cfg = AsyncRunConfig::new(d, chunk);
+        let mut start = 0u64;
+        let mut peak = 0usize;
+        s.bench_elements(
+            &format!("coordinator/rounds_async(n={n},d={d},W={w},c={chunk})"),
+            Some((n * d * w) as u64),
+            || {
+                let (reps, stats) = run_rounds_mech_async(
+                    &pool,
+                    &mech,
+                    Arc::new(Plain),
+                    start,
+                    w,
+                    &[],
+                    42,
+                    &cfg,
+                );
+                start += w as u64;
+                peak = peak.max(stats.peak_accumulator_bytes);
+                black_box(reps);
+            },
+        );
+        println!("  coordinator/rounds_async(n={n}): peak accumulator bytes = {peak}");
+        // ring waves of W rounds' O(c) accumulators, with fold slack —
+        // the same budget the runtime's unit acceptance asserts
+        let budget = 3 * (cfg.ring + 1) * w * chunk * 8;
+        assert!(
+            peak <= budget,
+            "async peak {peak} exceeds O(ring·W·c) budget {budget} at n = {n}"
+        );
+    }
+
+    // async over SecAgg at windowed-series scale (n = 256: pairwise masks
+    // are O(n) per client, so fleet size is deliberately modest) — the
+    // apples-to-apples line against coordinator/rounds_windowed
+    {
+        let n = 256usize;
+        let d = 256usize;
+        let w = 4usize;
+        let chunk = 64usize;
+        let pool = ClientPool::spawn_with_threads(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+            Some(threads),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let cfg = AsyncRunConfig::new(d, chunk);
+        let mut start = 0u64;
+        s.bench_elements(
+            &format!("coordinator/rounds_async_secagg(n={n},d={d},W={w},c={chunk})"),
+            Some((n * d * w) as u64),
+            || {
+                let (reps, _) = run_rounds_mech_async(
+                    &pool,
+                    &mech,
+                    Arc::new(SecAgg::new()),
+                    start,
+                    w,
+                    &[],
+                    42,
+                    &cfg,
+                );
+                start += w as u64;
+                black_box(reps);
+            },
+        );
+
+        // straggler deadlines on: a tiny conversion rate measures the
+        // deadline bookkeeping + Bonawitz recovery overhead riding the
+        // async path (conversions are drawn up front on the virtual
+        // clock, so the rate is exact and replayable)
+        let deadline_cfg = AsyncRunConfig::new(d, chunk)
+            .with_deadline(DeadlinePolicy::with_deadline(4.0, 0.05, 1.0));
+        let mut start = 0u64;
+        let mut converted = 0usize;
+        s.bench_elements(
+            &format!("coordinator/rounds_async_deadline(n={n},d={d},W={w},c={chunk})"),
+            Some((n * d * w) as u64),
+            || {
+                let (reps, stats) = run_rounds_mech_async(
+                    &pool,
+                    &mech,
+                    Arc::new(SecAgg::new()),
+                    start,
+                    w,
+                    &[],
+                    42,
+                    &deadline_cfg,
+                );
+                start += w as u64;
+                converted += stats.converted_stragglers;
+                black_box(reps);
+            },
+        );
+        println!("  coordinator/rounds_async_deadline: {converted} stragglers converted");
     }
 
     // SecAgg masking

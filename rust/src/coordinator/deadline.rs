@@ -1,0 +1,208 @@
+//! Deterministic straggler deadlines on a **virtual clock** — how the
+//! async coordinator ([`super::runtime::run_rounds_encoded_async`]) turns
+//! "a client missed the round deadline" into an announced dropout on the
+//! existing Bonawitz recovery path without surrendering replayability.
+//!
+//! A real deployment observes wall-clock arrival times; a reproduction
+//! must not (the determinism ADR bans platform time as an input to any
+//! decision that changes bits). Instead every (round, client) pair gets a
+//! virtual arrival delay drawn from its own seed-derived stream under
+//! [`seed_domain::DEADLINE`]: a Bernoulli(`straggler_rate`) gate picks the
+//! stragglers, and a straggler's delay is Pareto(α = 1) with scale
+//! `straggler_scale` — the same heavy-tailed law the scenario engine's
+//! straggler subsystem draws, so scenario presets and coordinator
+//! deadlines describe the same fleet. A client whose delay exceeds the
+//! deadline *is* a dropout: the conversion happens **up front**, before
+//! any shard computes, which makes "straggler past the deadline" and
+//! "pre-announced dropout" the same schedule by construction — the bit
+//! identity the async property suite asserts.
+//!
+//! `deadline = None` (∞) draws **nothing**: no client can miss an
+//! infinite deadline, so the policy touches no RNG stream at all and the
+//! async runner reproduces the barrier runner exactly.
+
+use crate::mechanisms::pipeline::SurvivorSet;
+use crate::util::rng::{seed_domain, Rng};
+
+/// A deterministic straggler-deadline policy. `PartialEq` is exact; two
+/// equal policies convert identical clients on identical seeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeadlinePolicy {
+    /// virtual-clock deadline; `None` means ∞ — no draws, no conversions
+    pub deadline: Option<f64>,
+    /// per-(round, client) probability of straggling at all
+    pub straggler_rate: f64,
+    /// Pareto(α = 1) scale of straggler delays (heavy-tailed: infinite
+    /// mean, so *some* stragglers miss any finite deadline)
+    pub straggler_scale: f64,
+}
+
+impl DeadlinePolicy {
+    /// No deadline at all: the async runner behaves exactly like the
+    /// barrier runner (and draws nothing from the DEADLINE domain).
+    pub fn none() -> Self {
+        Self { deadline: None, straggler_rate: 0.0, straggler_scale: 1.0 }
+    }
+
+    /// A finite virtual deadline with the given straggler law.
+    pub fn with_deadline(deadline: f64, straggler_rate: f64, straggler_scale: f64) -> Self {
+        let p = Self { deadline: Some(deadline), straggler_rate, straggler_scale };
+        p.validate();
+        p
+    }
+
+    /// Fail closed on shapes no deadline policy can mean.
+    pub fn validate(&self) {
+        assert!(
+            (0.0..=1.0).contains(&self.straggler_rate),
+            "straggler_rate must lie in [0, 1], got {}",
+            self.straggler_rate
+        );
+        assert!(self.straggler_scale > 0.0, "straggler delays need a positive scale");
+        if let Some(d) = self.deadline {
+            assert!(d > 0.0 && d.is_finite(), "a finite deadline must be positive");
+        }
+    }
+
+    /// The virtual arrival delay of `client` in global round `round`: 0
+    /// for non-stragglers, Pareto(α = 1, scale) for stragglers. A pure
+    /// function of `(root_seed, round, client)` — the whole point of the
+    /// virtual clock: deadline outcomes replay, snapshot, and never
+    /// depend on scheduler interleaving or host load.
+    pub fn arrival(&self, root_seed: u64, round: u64, client: usize) -> f64 {
+        let fam = Rng::derive_domain(root_seed, seed_domain::DEADLINE, round);
+        let mut rng = Rng::derive(fam, client as u64);
+        if !rng.bernoulli(self.straggler_rate) {
+            return 0.0;
+        }
+        // inverse-CDF Pareto(α = 1): scale / U, via the same
+        // scale / (1 − u01()) form the scenario engine draws (u01 ∈ [0,1))
+        self.straggler_scale / (1.0 - rng.u01())
+    }
+
+    /// Convert every cohort member whose virtual arrival misses the
+    /// deadline into an announced dropout, merged (sorted, de-duplicated
+    /// against the explicit schedule) into a new per-round dropout
+    /// schedule. Returns the merged schedule plus the total conversion
+    /// count across the window.
+    ///
+    /// This runs BEFORE any shard computes — a converted straggler is
+    /// never computed, never encoded, and is announced on the Bonawitz
+    /// recovery path exactly like a pre-announced dropout, which is what
+    /// makes the two schedules bit-identical. With `deadline = None` the
+    /// explicit schedule is returned untouched (and nothing is drawn).
+    ///
+    /// Fails closed, naming the round, if conversions would leave a round
+    /// with zero survivors — a fleet that entirely misses its deadline is
+    /// an operational error, not a recoverable dropout.
+    pub fn convert(
+        &self,
+        root_seed: u64,
+        start_round: u64,
+        cohorts: &[SurvivorSet],
+        dropouts: &[Vec<usize>],
+    ) -> (Vec<Vec<usize>>, usize) {
+        self.validate();
+        assert_eq!(
+            cohorts.len(),
+            dropouts.len(),
+            "dropout schedule must cover every round of the window"
+        );
+        let Some(deadline) = self.deadline else {
+            return (dropouts.to_vec(), 0);
+        };
+        let mut merged_schedule = Vec::with_capacity(cohorts.len());
+        let mut n_converted = 0usize;
+        for (r, (cohort, dropped)) in cohorts.iter().zip(dropouts).enumerate() {
+            let round_id = start_round + r as u64;
+            let mut already = vec![false; cohort.n()];
+            for &c in dropped {
+                assert!(c < cohort.n(), "dropped client {c} out of range");
+                already[c] = true;
+            }
+            let mut merged = dropped.clone();
+            for c in cohort.alive_iter() {
+                if already[c] {
+                    continue;
+                }
+                if self.arrival(root_seed, round_id, c) > deadline {
+                    merged.push(c);
+                    n_converted += 1;
+                }
+            }
+            assert!(
+                merged.len() < cohort.n_alive(),
+                "fail closed: round {round_id} (window round {r}) would close with zero \
+                 survivors — every cohort member is dropped or past the {deadline} deadline"
+            );
+            merged.sort_unstable();
+            merged_schedule.push(merged);
+        }
+        (merged_schedule, n_converted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_deadline_none_converts_nothing_and_draws_nothing() {
+        let cohorts = vec![SurvivorSet::full(6); 3];
+        let dropouts: Vec<Vec<usize>> = vec![vec![2], vec![], vec![5, 0]];
+        let (merged, converted) = DeadlinePolicy::none().convert(7, 0, &cohorts, &dropouts);
+        assert_eq!(merged, dropouts, "deadline = ∞ must return the schedule untouched");
+        assert_eq!(converted, 0);
+    }
+
+    #[test]
+    fn async_deadline_arrival_is_a_pure_function_of_seed_round_client() {
+        let p = DeadlinePolicy::with_deadline(2.0, 0.5, 1.0);
+        for round in 0..4u64 {
+            for client in 0..16usize {
+                let a = p.arrival(99, round, client);
+                let b = p.arrival(99, round, client);
+                assert_eq!(a.to_bits(), b.to_bits());
+                assert!(a >= 0.0);
+                if a > 0.0 {
+                    assert!(a >= 1.0, "Pareto(α=1, scale=1) delays start at the scale");
+                }
+            }
+        }
+        // the stream really is per-round: round 0 and round 1 disagree
+        // somewhere on a 16-client fleet at rate 0.5
+        assert!(
+            (0..16).any(|c| p.arrival(99, 0, c).to_bits() != p.arrival(99, 1, c).to_bits()),
+            "per-round arrival streams must differ"
+        );
+    }
+
+    #[test]
+    fn async_deadline_conversion_merges_sorted_past_explicit_dropouts() {
+        let p = DeadlinePolicy::with_deadline(1.5, 0.6, 1.0);
+        let cohorts = vec![SurvivorSet::full(24)];
+        let explicit = vec![vec![11usize]];
+        let (merged, converted) = p.convert(42, 5, &cohorts, &explicit);
+        assert_eq!(merged.len(), 1);
+        // the merged round is sorted, contains the explicit dropout, and
+        // contains exactly the members whose arrival missed the deadline
+        assert!(merged[0].windows(2).all(|w| w[0] < w[1]), "sorted, no duplicates");
+        assert!(merged[0].contains(&11));
+        for c in 0..24usize {
+            let late = c != 11 && p.arrival(42, 5, c) > 1.5;
+            assert_eq!(merged[0].contains(&c), late || c == 11, "client {c}");
+        }
+        assert_eq!(merged[0].len(), explicit[0].len() + converted);
+        assert!(converted >= 1, "rate 0.6 over 24 clients converts someone at this seed");
+    }
+
+    #[test]
+    #[should_panic(expected = "would close with zero survivors")]
+    fn async_deadline_converting_every_survivor_fails_closed_with_named_round() {
+        // rate 1 and a deadline below the Pareto scale: EVERY client
+        // straggles past the deadline
+        let p = DeadlinePolicy::with_deadline(0.5, 1.0, 1.0);
+        let cohorts = vec![SurvivorSet::full(4)];
+        let _ = p.convert(3, 9, &cohorts, &[Vec::new()]);
+    }
+}

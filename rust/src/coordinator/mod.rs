@@ -36,23 +36,40 @@
 //! of O(shards·d), bit-identical to the whole-d runner for every chunk
 //! size.
 //!
+//! And fleets at real scale drop the barrier too:
+//! [`runtime::run_rounds_encoded_async`] runs the chunked window on an
+//! event-driven work-stealing scheduler ([`scheduler::WorkStealPool`]) —
+//! no shard ever waits for another, accumulators close per (round, chunk)
+//! as their cohort's submissions arrive, backpressure comes from the
+//! bounded accumulator ring, and stragglers past a deterministic
+//! virtual-clock deadline ([`deadline::DeadlinePolicy`]) convert into
+//! announced dropouts on the Bonawitz recovery path. Straggler-free
+//! schedules reproduce the barrier runners bit for bit.
+//!
 //! * [`config`] — experiment configuration (file + CLI overrides)
+//! * [`deadline`] — deterministic virtual-clock straggler deadlines
 //! * [`metrics`] — per-round metric recording, CSV/JSON export
 //! * [`runtime`] — the threaded client pool + round loops
 //! * [`sampling`] — seed-derived per-round client sampling policies
+//! * [`scheduler`] — the std-only M:N work-stealing task pool
 
 pub mod config;
+pub mod deadline;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;
+pub mod scheduler;
 
 pub use config::Config;
+pub use deadline::DeadlinePolicy;
 pub use metrics::Metrics;
 pub use runtime::{
     run_round, run_round_encoded, run_round_mech, run_rounds_encoded,
-    run_rounds_encoded_chunked, run_rounds_encoded_sampled, run_rounds_encoded_scheduled,
-    run_rounds_encoded_with_dropouts, run_rounds_mech, run_rounds_mech_chunked,
-    run_rounds_mech_sampled,
-    run_rounds_mech_with_dropouts, ChunkStreamStats, ClientPool, LocalCompute, RoundReport,
+    run_rounds_encoded_async, run_rounds_encoded_chunked, run_rounds_encoded_sampled,
+    run_rounds_encoded_scheduled, run_rounds_encoded_with_dropouts, run_rounds_mech,
+    run_rounds_mech_async, run_rounds_mech_chunked, run_rounds_mech_sampled,
+    run_rounds_mech_with_dropouts, AsyncRunConfig, AsyncStreamStats, ChunkStreamStats,
+    ClientPool, LocalCompute, RoundReport,
 };
 pub use sampling::SamplingPolicy;
+pub use scheduler::{WorkStealPool, WorkerFailure};

@@ -66,12 +66,41 @@
 //! accumulator memory is O(shards·c) instead of O(shards·d)
 //! ([`ChunkStreamStats`] reports the measured high-water mark), and the
 //! results are bit-identical to the whole-d runner for every chunk size.
+//!
+//! And fleets at real scale cannot afford the barrier either:
+//! [`run_rounds_encoded_async`] replaces the fixed-shard chunk-lockstep
+//! runner with an event-driven M:N work-stealing runtime
+//! ([`super::scheduler::WorkStealPool`]) — client-encode jobs are
+//! (block, chunk) *tasks* on per-worker deques fed by a global injector,
+//! per-(round, chunk) accumulators close the moment their cohort's
+//! submissions arrive (no shard ever waits for another), and
+//! backpressure comes from the bounded accumulator ring: encode tasks
+//! for chunk k + R are admitted only once the session reports chunk k
+//! fully closed ([`TransportSession::chunk_fully_closed`]). Stragglers
+//! that miss a configurable deadline on a deterministic virtual clock
+//! ([`super::deadline::DeadlinePolicy`], seed-derived under
+//! [`seed_domain::DEADLINE`]) convert automatically into announced
+//! dropouts on the existing Bonawitz recovery path. On straggler-free
+//! schedules the async runner is bit-identical to the barrier runner for
+//! every chunk size, worker count and ring depth (property-tested);
+//! [`AsyncStreamStats`] reports the measured accumulator peak, which
+//! stays O(shards·c) at n = 10⁶ clients (`rounds_async` bench series).
+//!
+//! Failure propagation (all runners): a panic inside a shard or worker
+//! task is caught at its origin, and the orchestrator fails closed with
+//! an error naming the shard/worker and carrying the original panic
+//! message — never a bare "shard died" with the cause swallowed.
 
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
+use super::deadline::DeadlinePolicy;
 use super::sampling::SamplingPolicy;
+use super::scheduler::{panic_message, WorkStealPool};
 use crate::dp::ledger::{PrivacyLedger, PrivacySpend};
 use crate::mechanisms::pipeline::{
     ChunkPlan, ClientEncoder, Payload, ServerDecoder, SharedRound, SurvivorSet, Transport,
@@ -143,7 +172,7 @@ enum ShardMsg {
         /// computes a vector to measure)
         dim: usize,
         chunk: usize,
-        results: mpsc::SyncSender<ShardChunkWindow>,
+        results: mpsc::SyncSender<ChunkStreamMsg>,
         barrier: Arc<Barrier>,
     },
     Shutdown,
@@ -183,6 +212,15 @@ struct ShardChunkFold {
     clients: Vec<usize>,
 }
 
+/// What travels on the chunk-stream channel: a (shard, chunk) window
+/// message, or a failure report naming the shard and carrying the
+/// original panic message so the orchestrator's fail-closed error names
+/// the actual cause instead of a bare channel disconnect.
+enum ChunkStreamMsg {
+    Window(ShardChunkWindow),
+    Failed { shard: usize, message: String },
+}
+
 enum ShardResult {
     Computed {
         start: usize,
@@ -192,6 +230,11 @@ enum ShardResult {
         start: usize,
         rounds: Vec<ShardRoundFold>,
     },
+    /// A shard's compute/encode panicked: the originating shard id and
+    /// the panic message, propagated through the result channel so the
+    /// orchestrator can fail closed naming the cause (the shard thread
+    /// still re-raises the original panic after sending).
+    Failed { shard: usize, message: String },
 }
 
 struct Shard {
@@ -204,6 +247,15 @@ pub struct ClientPool {
     shards: Vec<Shard>,
     results_rx: mpsc::Receiver<ShardResult>,
     pub n_clients: usize,
+    /// the pool's client computation — kept so the async runner can run
+    /// the SAME clients on its work-stealing scheduler
+    compute: Arc<dyn LocalCompute>,
+    /// the contiguous client range of each shard. The async runner's task
+    /// *blocks* are exactly these ranges: the f64 true-mean fold walks
+    /// block sums in ascending-start order, which is what makes the async
+    /// runner bit-identical to the barrier runners (f64 addition is not
+    /// associative — same pieces, same order, same bits).
+    ranges: Vec<Range<usize>>,
 }
 
 impl ClientPool {
@@ -230,12 +282,14 @@ impl ClientPool {
         let per = n_clients.div_ceil(threads);
         let (results_tx, results_rx) = mpsc::channel();
         let mut shards = Vec::new();
+        let mut ranges = Vec::new();
         for s in 0..threads {
             let lo = s * per;
             let hi = ((s + 1) * per).min(n_clients);
             if lo >= hi {
                 break;
             }
+            ranges.push(lo..hi);
             let (tx, rx) = mpsc::channel::<ShardMsg>();
             let results_tx = results_tx.clone();
             let compute = compute.clone();
@@ -246,15 +300,37 @@ impl ClientPool {
                     while let Ok(msg) = rx.recv() {
                         match msg {
                             ShardMsg::Compute { round, state } => {
-                                let vecs: Vec<Vec<f64>> = range2
-                                    .clone()
-                                    .map(|c| compute.local_update(c, round, &state))
-                                    .collect();
-                                if results_tx
-                                    .send(ShardResult::Computed { start: range2.start, vecs })
-                                    .is_err()
-                                {
-                                    return;
+                                // catch task panics at their origin so the
+                                // orchestrator fails closed knowing WHICH
+                                // shard died and WHY, instead of a bare
+                                // disconnected-channel expect
+                                let computed = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        range2
+                                            .clone()
+                                            .map(|c| compute.local_update(c, round, &state))
+                                            .collect::<Vec<Vec<f64>>>()
+                                    }),
+                                );
+                                match computed {
+                                    Ok(vecs) => {
+                                        if results_tx
+                                            .send(ShardResult::Computed {
+                                                start: range2.start,
+                                                vecs,
+                                            })
+                                            .is_err()
+                                        {
+                                            return;
+                                        }
+                                    }
+                                    Err(p) => {
+                                        let _ = results_tx.send(ShardResult::Failed {
+                                            shard: s,
+                                            message: panic_message(p.as_ref()),
+                                        });
+                                        std::panic::resume_unwind(p);
+                                    }
                                 }
                             }
                             ShardMsg::EncodeWindow {
@@ -265,54 +341,77 @@ impl ClientPool {
                                 encoder,
                                 transports,
                             } => {
-                                let mut rounds = Vec::with_capacity(seeds.len());
-                                for (r, (&seed, transport)) in
-                                    seeds.iter().zip(transports.iter()).enumerate()
-                                {
-                                    let round = start_round + r as u64;
-                                    let participating = &active[r];
-                                    let mut partial: Option<TransportPartial> = None;
-                                    let mut bits = BitsAccount::default();
-                                    let mut x_sum: Vec<f64> = Vec::new();
-                                    let mut clients: Vec<usize> = Vec::new();
-                                    for c in range2.clone() {
-                                        if !participating[c] {
-                                            // sampled out or announced
-                                            // dropped: no local compute,
-                                            // no encode, no count
-                                            continue;
+                                let encoded = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        let mut rounds = Vec::with_capacity(seeds.len());
+                                        for (r, (&seed, transport)) in
+                                            seeds.iter().zip(transports.iter()).enumerate()
+                                        {
+                                            let round = start_round + r as u64;
+                                            let participating = &active[r];
+                                            let mut partial: Option<TransportPartial> = None;
+                                            let mut bits = BitsAccount::default();
+                                            let mut x_sum: Vec<f64> = Vec::new();
+                                            let mut clients: Vec<usize> = Vec::new();
+                                            for c in range2.clone() {
+                                                if !participating[c] {
+                                                    // sampled out or announced
+                                                    // dropped: no local compute,
+                                                    // no encode, no count
+                                                    continue;
+                                                }
+                                                let x =
+                                                    compute.local_update(c, round, &state);
+                                                if x_sum.is_empty() {
+                                                    x_sum = vec![0.0; x.len()];
+                                                }
+                                                assert_eq!(
+                                                    x.len(),
+                                                    x_sum.len(),
+                                                    "ragged client vectors"
+                                                );
+                                                for (a, v) in x_sum.iter_mut().zip(&x) {
+                                                    *a += v;
+                                                }
+                                                let shared =
+                                                    SharedRound::new(seed, n_clients, x.len());
+                                                let part = partial.get_or_insert_with(|| {
+                                                    transport.empty(&shared)
+                                                });
+                                                let d = encoder.encode(c, &x, &shared);
+                                                bits.merge(&d.bits);
+                                                transport.submit(part, c, &d, &shared);
+                                                clients.push(c);
+                                            }
+                                            rounds.push(ShardRoundFold {
+                                                partial,
+                                                bits,
+                                                x_sum,
+                                                clients,
+                                            });
                                         }
-                                        let x = compute.local_update(c, round, &state);
-                                        if x_sum.is_empty() {
-                                            x_sum = vec![0.0; x.len()];
+                                        rounds
+                                    }),
+                                );
+                                match encoded {
+                                    Ok(rounds) => {
+                                        if results_tx
+                                            .send(ShardResult::EncodedWindow {
+                                                start: range2.start,
+                                                rounds,
+                                            })
+                                            .is_err()
+                                        {
+                                            return;
                                         }
-                                        assert_eq!(
-                                            x.len(),
-                                            x_sum.len(),
-                                            "ragged client vectors"
-                                        );
-                                        for (a, v) in x_sum.iter_mut().zip(&x) {
-                                            *a += v;
-                                        }
-                                        let shared =
-                                            SharedRound::new(seed, n_clients, x.len());
-                                        let part = partial
-                                            .get_or_insert_with(|| transport.empty(&shared));
-                                        let d = encoder.encode(c, &x, &shared);
-                                        bits.merge(&d.bits);
-                                        transport.submit(part, c, &d, &shared);
-                                        clients.push(c);
                                     }
-                                    rounds.push(ShardRoundFold { partial, bits, x_sum, clients });
-                                }
-                                if results_tx
-                                    .send(ShardResult::EncodedWindow {
-                                        start: range2.start,
-                                        rounds,
-                                    })
-                                    .is_err()
-                                {
-                                    return;
+                                    Err(p) => {
+                                        let _ = results_tx.send(ShardResult::Failed {
+                                            shard: s,
+                                            message: panic_message(p.as_ref()),
+                                        });
+                                        std::panic::resume_unwind(p);
+                                    }
                                 }
                             }
                             ShardMsg::EncodeWindowChunked {
@@ -333,14 +432,15 @@ impl ClientPool {
                                 // forever and wedge the orchestrator's
                                 // recv() — so BOTH phases (window compute
                                 // and per-chunk encode) run under
-                                // catch_unwind, a failed shard keeps
-                                // pacing the barrier without sending, and
-                                // the original panic is re-raised once
-                                // the window's rendezvous is over. The
-                                // orchestrator then observes the channel
-                                // disconnect and fails closed ("shard
-                                // result"), exactly like the non-chunked
-                                // path does.
+                                // catch_unwind, a failed shard sends ONE
+                                // `ChunkStreamMsg::Failed` naming itself
+                                // and carrying the panic message, keeps
+                                // pacing the barrier without sending
+                                // windows, and re-raises the original
+                                // panic once the window's rendezvous is
+                                // over. The orchestrator fails closed
+                                // naming the shard and the cause, exactly
+                                // like the non-chunked path does.
                                 let window = seeds.len();
                                 let computed = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(|| {
@@ -367,6 +467,10 @@ impl ClientPool {
                                 let vecs: Vec<Vec<(usize, Vec<f64>)>> = match computed {
                                     Ok(v) => v,
                                     Err(p) => {
+                                        let _ = results.send(ChunkStreamMsg::Failed {
+                                            shard: s,
+                                            message: panic_message(p.as_ref()),
+                                        });
                                         panicked = Some(p);
                                         Vec::new()
                                     }
@@ -440,11 +544,13 @@ impl ClientPool {
                                     match encoded {
                                         Ok(rounds_out) => {
                                             if results
-                                                .send(ShardChunkWindow {
-                                                    start: range2.start,
-                                                    chunk: k,
-                                                    rounds: rounds_out,
-                                                })
+                                                .send(ChunkStreamMsg::Window(
+                                                    ShardChunkWindow {
+                                                        start: range2.start,
+                                                        chunk: k,
+                                                        rounds: rounds_out,
+                                                    },
+                                                ))
                                                 .is_err()
                                             {
                                                 // the orchestrator died
@@ -459,6 +565,10 @@ impl ClientPool {
                                             }
                                         }
                                         Err(p) => {
+                                            let _ = results.send(ChunkStreamMsg::Failed {
+                                                shard: s,
+                                                message: panic_message(p.as_ref()),
+                                            });
                                             panicked = Some(p);
                                             dead = true;
                                         }
@@ -484,21 +594,37 @@ impl ClientPool {
                 .expect("spawning shard thread");
             shards.push(Shard { tx, handle: Some(handle) });
         }
-        Self { shards, results_rx, n_clients }
+        Self { shards, results_rx, n_clients, compute, ranges }
+    }
+
+    /// The contiguous client range each shard owns (ascending by start) —
+    /// also the async runner's task-block partition.
+    pub fn shard_ranges(&self) -> &[Range<usize>] {
+        &self.ranges
     }
 
     /// Compute all clients' local vectors for one round (parallel).
     pub fn compute_round(&self, round: u64, state: &[f64]) -> Vec<Vec<f64>> {
         let state = Arc::new(state.to_vec());
-        for shard in &self.shards {
+        for (i, shard) in self.shards.iter().enumerate() {
             shard
                 .tx
                 .send(ShardMsg::Compute { round, state: state.clone() })
-                .expect("shard died");
+                .unwrap_or_else(|_| {
+                    panic!(
+                        "fail closed: shard {i} is no longer running — its thread exited \
+                         before the round was dispatched"
+                    )
+                });
         }
         let mut out: Vec<Option<Vec<f64>>> = vec![None; self.n_clients];
         for _ in 0..self.shards.len() {
-            match self.results_rx.recv().expect("shard result") {
+            match self.results_rx.recv().unwrap_or_else(|_| {
+                panic!(
+                    "fail closed: every shard disconnected before round {round} returned \
+                     a result"
+                )
+            }) {
                 ShardResult::Computed { start, vecs } => {
                     for (off, v) in vecs.into_iter().enumerate() {
                         out[start + off] = Some(v);
@@ -506,6 +632,12 @@ impl ClientPool {
                 }
                 ShardResult::EncodedWindow { .. } => {
                     unreachable!("encode result during a compute round")
+                }
+                ShardResult::Failed { shard, message } => {
+                    panic!(
+                        "fail closed: shard {shard} panicked during local compute in round \
+                         {round}: {message}"
+                    )
                 }
             }
         }
@@ -557,6 +689,35 @@ pub struct RoundReport {
 /// root seed — the seed-format bump this replaced.)
 fn round_seed(root_seed: u64, round: u64) -> u64 {
     Rng::derive_domain(root_seed, seed_domain::ROUND, round)
+}
+
+/// Validate a window's dropout schedule against its cohorts BEFORE any
+/// shard does work, failing closed with the **global round named** when a
+/// round's entire cohort is announced dropped. (The un-named
+/// [`SurvivorSet::drop_clients`] zero-survivor panic still backstops the
+/// type's own invariant, but a runner-level schedule error must say WHICH
+/// round emptied — a W=64 window gives the operator 64 candidates
+/// otherwise.)
+fn resolve_survivors(
+    cohorts: &[SurvivorSet],
+    dropouts: &[Vec<usize>],
+    start_round: u64,
+) -> Vec<SurvivorSet> {
+    cohorts
+        .iter()
+        .zip(dropouts)
+        .enumerate()
+        .map(|(r, (cohort, dropped))| {
+            assert!(
+                dropped.len() < cohort.n_alive(),
+                "fail closed: round {} (window round {r}) would close with zero survivors \
+                 — all {} cohort members are announced dropped",
+                start_round + r as u64,
+                cohort.n_alive(),
+            );
+            cohort.drop_cohort_members(dropped, r)
+        })
+        .collect()
 }
 
 /// Run one round, monolith shape: parallel local compute, then the
@@ -789,13 +950,8 @@ fn run_rounds_encoded_cohorts(
     let n = pool.n_clients;
     // validate the whole schedule before any shard does work (fail
     // closed): dropouts must name cohort members, and every round must
-    // keep at least one survivor
-    let survivor_sets: Vec<SurvivorSet> = cohorts
-        .iter()
-        .zip(dropouts)
-        .enumerate()
-        .map(|(r, (cohort, dropped))| cohort.drop_cohort_members(dropped, r))
-        .collect();
+    // keep at least one survivor — with the offending round NAMED
+    let survivor_sets = resolve_survivors(cohorts, dropouts, start_round);
     let session_seed = derive_session_seed(root_seed, start_round);
     let seeds: Arc<Vec<u64>> = Arc::new(
         (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
@@ -810,7 +966,7 @@ fn run_rounds_encoded_cohorts(
     let active: Arc<Vec<Vec<bool>>> =
         Arc::new(survivor_sets.iter().map(|s| s.alive_mask().to_vec()).collect());
     let state = Arc::new(state.to_vec());
-    for shard in &pool.shards {
+    for (i, shard) in pool.shards.iter().enumerate() {
         shard
             .tx
             .send(ShardMsg::EncodeWindow {
@@ -821,30 +977,46 @@ fn run_rounds_encoded_cohorts(
                 encoder: encoder.clone(),
                 transports: transports.clone(),
             })
-            .expect("shard died");
+            .unwrap_or_else(|_| {
+                panic!(
+                    "fail closed: shard {i} is no longer running — its thread exited \
+                     before the window was dispatched"
+                )
+            });
     }
     // collect shard windows; fold x-sums in shard order so the true-mean
     // metric is deterministic regardless of arrival order
     let mut pieces: Vec<(usize, Vec<ShardRoundFold>)> = Vec::with_capacity(pool.shards.len());
     for _ in 0..pool.shards.len() {
-        match pool.results_rx.recv().expect("shard result") {
+        match pool.results_rx.recv().unwrap_or_else(|_| {
+            panic!(
+                "fail closed: every shard disconnected before the window starting at round \
+                 {start_round} returned a result"
+            )
+        }) {
             ShardResult::EncodedWindow { start, rounds } => {
                 pieces.push((start, rounds));
             }
             ShardResult::Computed { .. } => {
                 unreachable!("compute result during an encoded round")
             }
+            ShardResult::Failed { shard, message } => {
+                panic!(
+                    "fail closed: shard {shard} panicked while encoding the window \
+                     starting at round {start_round}: {message}"
+                )
+            }
         }
     }
     pieces.sort_by_key(|&(start, _)| start);
-    // every round has >= 1 survivor (SurvivorSet guarantees it), so some
+    // resolve_survivors guaranteed every round >= 1 survivor, so some
     // shard-round fold carries a dimension
     let dim = pieces
         .iter()
         .flat_map(|(_, rounds)| rounds.iter())
         .find(|f| !f.x_sum.is_empty())
         .map(|f| f.x_sum.len())
-        .expect("every round has at least one survivor");
+        .expect("unreachable: resolve_survivors guarantees a survivor in every round");
     let mut session = TransportSession::open_sampled(
         transport.as_ref(),
         session_seed,
@@ -968,12 +1140,7 @@ pub fn run_rounds_encoded_chunked(
     );
     let n = pool.n_clients;
     let cohorts: Vec<SurvivorSet> = policy.cohorts(root_seed, start_round, window, n);
-    let survivor_sets: Vec<SurvivorSet> = cohorts
-        .iter()
-        .zip(dropouts)
-        .enumerate()
-        .map(|(r, (cohort, dropped))| cohort.drop_cohort_members(dropped, r))
-        .collect();
+    let survivor_sets = resolve_survivors(&cohorts, dropouts, start_round);
     let session_seed = derive_session_seed(root_seed, start_round);
     let seeds: Arc<Vec<u64>> = Arc::new(
         (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
@@ -989,9 +1156,9 @@ pub fn run_rounds_encoded_chunked(
     let n_shards = pool.shards.len();
     // bounded per-chunk channel + chunk barrier: at most one in-flight
     // message per shard, and no shard runs ahead a full chunk
-    let (chunk_tx, chunk_rx) = mpsc::sync_channel::<ShardChunkWindow>(n_shards);
+    let (chunk_tx, chunk_rx) = mpsc::sync_channel::<ChunkStreamMsg>(n_shards);
     let barrier = Arc::new(Barrier::new(n_shards));
-    for shard in &pool.shards {
+    for (i, shard) in pool.shards.iter().enumerate() {
         shard
             .tx
             .send(ShardMsg::EncodeWindowChunked {
@@ -1006,7 +1173,12 @@ pub fn run_rounds_encoded_chunked(
                 results: chunk_tx.clone(),
                 barrier: barrier.clone(),
             })
-            .expect("shard died");
+            .unwrap_or_else(|_| {
+                panic!(
+                    "fail closed: shard {i} is no longer running — its thread exited \
+                     before the chunked window was dispatched"
+                )
+            });
     }
     drop(chunk_tx);
     let mut session = TransportSession::open_sampled_chunked(
@@ -1044,7 +1216,17 @@ pub fn run_rounds_encoded_chunked(
     // chunk barrier guarantees happens before any chunk-k+1 message
     let mut x_pending: Vec<(usize, usize, Vec<Vec<f64>>)> = Vec::with_capacity(n_shards);
     for _ in 0..total_msgs {
-        let msg = chunk_rx.recv().expect("shard result");
+        let msg = match chunk_rx.recv() {
+            Ok(ChunkStreamMsg::Window(w)) => w,
+            Ok(ChunkStreamMsg::Failed { shard, message }) => panic!(
+                "fail closed: shard {shard} panicked while encoding the chunked window \
+                 starting at round {start_round}: {message}"
+            ),
+            Err(_) => panic!(
+                "fail closed: the chunk stream disconnected before the window starting at \
+                 round {start_round} completed — a shard thread died without reporting"
+            ),
+        };
         let k = msg.chunk;
         let range = plan.range(k);
         let mut x_chunks: Vec<Vec<f64>> = Vec::with_capacity(window);
@@ -1172,6 +1354,470 @@ where
         None,
         dim,
         chunk,
+    )
+}
+
+/// Configuration of the event-driven async runner
+/// ([`run_rounds_encoded_async`]): chunk geometry, accumulator-ring
+/// depth, scheduler width and the straggler-deadline policy.
+#[derive(Clone, Debug)]
+pub struct AsyncRunConfig {
+    /// model dimension d (explicit, exactly as in the chunked runner)
+    pub dim: usize,
+    /// chunk size c of the streaming [`ChunkPlan`]
+    pub chunk: usize,
+    /// accumulator-ring depth R: at most R chunk-waves of live
+    /// accumulators — encode tasks for chunk k + R are admitted only once
+    /// the session reports chunk k fully closed
+    /// ([`TransportSession::chunk_fully_closed`])
+    pub ring: usize,
+    /// work-stealing worker count; `None` = one worker per task block
+    pub workers: Option<usize>,
+    /// the virtual-clock straggler deadline (default: none — the runner
+    /// is then bit-identical to the barrier runners)
+    pub deadline: DeadlinePolicy,
+}
+
+impl AsyncRunConfig {
+    /// Chunk geometry with the defaults: ring depth 2, one worker per
+    /// block, no deadline.
+    pub fn new(dim: usize, chunk: usize) -> Self {
+        Self { dim, chunk, ring: 2, workers: None, deadline: DeadlinePolicy::none() }
+    }
+
+    pub fn with_ring(mut self, ring: usize) -> Self {
+        assert!(ring >= 1, "the accumulator ring needs at least one wave");
+        self.ring = ring;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        assert!(workers >= 1, "the scheduler needs at least one worker");
+        self.workers = Some(workers);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: DeadlinePolicy) -> Self {
+        deadline.validate();
+        self.deadline = deadline;
+        self
+    }
+}
+
+/// Summary of one async window (what the `rounds_async` bench series
+/// reports and asserts on).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncStreamStats {
+    /// high-water mark of the session's live accumulator payload bytes —
+    /// O(ring · W · c) by the ring admission rule, never O(d)
+    pub peak_accumulator_bytes: usize,
+    /// the chunk size actually used (clamped to d)
+    pub chunk: usize,
+    pub n_chunks: usize,
+    /// total (block, chunk) encode tasks executed
+    pub tasks: usize,
+    /// work-stealing workers the window ran on
+    pub workers: usize,
+    /// cohort members the deadline converted into announced dropouts
+    pub converted_stragglers: usize,
+}
+
+/// One work-stealing task: encode client block `block` for chunk `chunk`
+/// across every round of the window.
+#[derive(Clone, Copy)]
+struct AsyncTask {
+    block: usize,
+    chunk: usize,
+}
+
+/// One completed task's event: the block's per-round chunk folds.
+struct AsyncChunkMsg {
+    block: usize,
+    chunk: usize,
+    rounds: Vec<ShardChunkFold>,
+}
+
+/// The event-driven sibling of [`run_rounds_encoded_chunked`]: no
+/// cross-shard barrier anywhere. Client-encode jobs are (block, chunk)
+/// *tasks* on a work-stealing scheduler
+/// ([`super::scheduler::WorkStealPool`]) whose blocks are exactly the
+/// pool's shard ranges (same f64 fold tree → same bits); each
+/// per-(round, chunk) accumulator closes the moment its cohort's
+/// submissions arrive, and the bounded accumulator ring provides the
+/// backpressure the barrier used to: encode tasks for chunk k + R are
+/// injected only once chunk k is fully closed, so live accumulator
+/// memory stays O(ring · W · c) however far the scheduler races ahead.
+///
+/// Stragglers: `cfg.deadline` draws every (round, client) virtual
+/// arrival from the seed-derived [`seed_domain::DEADLINE`] stream and
+/// converts cohort members past the deadline into announced dropouts on
+/// the Bonawitz recovery path BEFORE any task runs — "straggler past
+/// deadline" and "pre-announced dropout" are the same schedule by
+/// construction, and with no deadline the runner reproduces
+/// [`run_rounds_encoded_chunked`] (hence the whole-d runners) bit for
+/// bit for every chunk size, worker count and ring depth
+/// (property-tested).
+///
+/// Failure model: a panicking task poisons the scheduler; the
+/// orchestrator fails closed naming the worker and the original panic
+/// message — it never hangs on a silent channel and never reports a bare
+/// disconnect.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_encoded_async(
+    pool: &ClientPool,
+    encoder: Arc<dyn ClientEncoder>,
+    transport: Arc<dyn Transport>,
+    decoder: &dyn ServerDecoder,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    policy: &SamplingPolicy,
+    dropouts: &[Vec<usize>],
+    mut ledger: Option<&mut PrivacyLedger>,
+    cfg: &AsyncRunConfig,
+) -> (Vec<RoundReport>, AsyncStreamStats) {
+    let dim = cfg.dim;
+    assert!(window > 0, "a session window needs at least one round");
+    assert!(
+        window <= crate::mechanisms::session::MAX_WINDOW,
+        "session window of {window} rounds exceeds MAX_WINDOW ({}) — split the run into \
+         multiple windows",
+        crate::mechanisms::session::MAX_WINDOW,
+    );
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    assert_eq!(
+        dropouts.len(),
+        window,
+        "dropout schedule must cover every round of the window"
+    );
+    let n = pool.n_clients;
+    let cohorts: Vec<SurvivorSet> = policy.cohorts(root_seed, start_round, window, n);
+    // the deadline conversion runs BEFORE any task: a straggler past the
+    // deadline is never computed, never encoded, and is announced exactly
+    // like a pre-announced dropout
+    let (merged, converted) =
+        cfg.deadline.convert(root_seed, start_round, &cohorts, dropouts);
+    let survivor_sets = resolve_survivors(&cohorts, &merged, start_round);
+    let session_seed = derive_session_seed(root_seed, start_round);
+    let seeds: Arc<Vec<u64>> = Arc::new(
+        (0..window).map(|r| round_seed(root_seed, start_round + r as u64)).collect(),
+    );
+    let transports: Arc<Vec<Arc<dyn Transport>>> = Arc::new(session_round_transports_sampled(
+        transport.as_ref(),
+        session_seed,
+        &cohorts,
+    ));
+    let active: Arc<Vec<Vec<bool>>> =
+        Arc::new(survivor_sets.iter().map(|s| s.alive_mask().to_vec()).collect());
+    let state = Arc::new(state.to_vec());
+    let mut session = TransportSession::open_sampled_chunked(
+        transport.as_ref(),
+        session_seed,
+        n,
+        dim,
+        seeds.as_slice(),
+        &cohorts,
+        cfg.chunk,
+    );
+    let plan = session.plan();
+    let n_chunks = plan.n_chunks();
+    // announce (explicit + converted) dropouts up front so every chunk
+    // can recover + unmask the moment its last block fold lands
+    for (r, (survivors, dropped)) in survivor_sets.iter().zip(&merged).enumerate() {
+        session.announce_dropouts(
+            r,
+            &RoundDropouts::announce_among(session_seed, r as u64, survivors, dropped),
+        );
+    }
+    let blocks: Arc<Vec<Range<usize>>> = Arc::new(pool.ranges.clone());
+    let n_blocks = blocks.len();
+    let n_workers = cfg.workers.unwrap_or(n_blocks).max(1);
+    let ring = cfg.ring.max(1);
+    // lazily-computed per-block window vectors (client-side memory — a
+    // client always holds its own update): the block's FIRST task
+    // computes them under the block's mutex (a contending task waits
+    // instead of duplicating the work); the block's LAST task frees them
+    type BlockVecs = Vec<Vec<(usize, Vec<f64>)>>;
+    let store: Arc<Vec<Mutex<Option<Arc<BlockVecs>>>>> =
+        Arc::new((0..n_blocks).map(|_| Mutex::new(None)).collect());
+    let remaining: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..n_blocks).map(|_| AtomicUsize::new(n_chunks)).collect());
+    // bounded event channel: outstanding messages never exceed the
+    // admitted-but-unprocessed waves (≤ ring · blocks), so the capacity
+    // below means workers never block on send in a healthy run
+    let (events_tx, events_rx) =
+        mpsc::sync_channel::<AsyncChunkMsg>(n_blocks * (ring + 1));
+    let ws = {
+        let compute = pool.compute.clone();
+        let blocks = blocks.clone();
+        let state = state.clone();
+        let seeds = seeds.clone();
+        let active = active.clone();
+        let encoder = encoder.clone();
+        let transports = transports.clone();
+        let store = store.clone();
+        let remaining = remaining.clone();
+        WorkStealPool::spawn(n_workers, move |_worker, task: AsyncTask| {
+            let AsyncTask { block, chunk: k } = task;
+            let vecs = {
+                let mut slot = store[block].lock().unwrap();
+                match &*slot {
+                    Some(v) => v.clone(),
+                    None => {
+                        let computed: BlockVecs = (0..seeds.len())
+                            .map(|r| {
+                                let round = start_round + r as u64;
+                                blocks[block]
+                                    .clone()
+                                    .filter(|&c| active[r][c])
+                                    .map(|c| (c, compute.local_update(c, round, &state)))
+                                    .collect()
+                            })
+                            .collect();
+                        let arc = Arc::new(computed);
+                        *slot = Some(arc.clone());
+                        arc
+                    }
+                }
+            };
+            let range = plan.range(k);
+            let mut rounds_out = Vec::with_capacity(seeds.len());
+            for (r, (&seed, transport)) in seeds.iter().zip(transports.iter()).enumerate()
+            {
+                let shared = SharedRound::new(seed, n, dim);
+                let mut partial: Option<TransportPartial> = None;
+                let mut bits = BitsAccount::default();
+                let mut x_sum_chunk = vec![0.0f64; range.len()];
+                let mut clients: Vec<usize> = Vec::new();
+                for (c, x) in &vecs[r] {
+                    assert_eq!(x.len(), dim, "ragged client vectors");
+                    for (o, j) in x_sum_chunk.iter_mut().zip(range.clone()) {
+                        *o += x[j];
+                    }
+                    let msg = encoder.encode_chunk(*c, x, range.clone(), &shared);
+                    let part = partial.get_or_insert_with(|| transport.empty(&shared));
+                    transport.submit_chunk(part, *c, &msg, range.start, &shared);
+                    bits.merge(&msg.bits);
+                    clients.push(*c);
+                }
+                rounds_out.push(ShardChunkFold { partial, bits, x_sum_chunk, clients });
+            }
+            // a send error means the orchestrator already failed closed
+            // and is unwinding — nothing useful left for this task
+            let _ = events_tx.send(AsyncChunkMsg { block, chunk: k, rounds: rounds_out });
+            if remaining[block].fetch_sub(1, Ordering::AcqRel) == 1 {
+                // every chunk of this block is encoded: free the vectors
+                store[block].lock().unwrap().take();
+            }
+        })
+    };
+    // chunk-major initial admission: the ring starts with waves
+    // 0..min(ring, n_chunks) in flight
+    let initial = ring.min(n_chunks);
+    ws.inject(
+        (0..initial)
+            .flat_map(|k| (0..n_blocks).map(move |b| AsyncTask { block: b, chunk: k })),
+    );
+    let mut next_inject = initial;
+    let total_msgs = n_blocks * n_chunks;
+    // per-block reorder buffers: the session's streaming cursor requires
+    // each client's chunks folded in coordinate order, and stolen tasks
+    // of one block may complete out of order
+    let mut stash: Vec<BTreeMap<usize, AsyncChunkMsg>> =
+        (0..n_blocks).map(|_| BTreeMap::new()).collect();
+    let mut next_k: Vec<usize> = vec![0; n_blocks];
+    // per-chunk f64 wave buffers: the true-mean fold walks blocks in
+    // ascending order once every block's chunk-k sums arrived (f64
+    // addition is not associative; same fold tree as the barrier runners)
+    let mut x_wave: BTreeMap<usize, Vec<(usize, Vec<Vec<f64>>)>> = BTreeMap::new();
+    let mut x_sums = vec![vec![0.0f64; dim]; window];
+    let mut estimates: Vec<Vec<f64>> = vec![vec![0.0f64; dim]; window];
+    let mut sums: Vec<Vec<i64>> = if decoder.chunk_decodable() {
+        Vec::new()
+    } else {
+        vec![vec![0i64; dim]; window]
+    };
+    let shared: Vec<SharedRound> =
+        (0..window).map(|r| SharedRound::new(seeds[r], n, dim)).collect();
+    let mut processed = 0usize;
+    while processed < total_msgs {
+        let msg = match events_rx.recv() {
+            Ok(m) => m,
+            Err(_) => {
+                // every worker exited before the window completed: a task
+                // panicked (recorded by the scheduler) — name the worker
+                // and the cause instead of dying on a bare disconnect
+                let failures = ws.failures();
+                match failures.first() {
+                    Some(f) => panic!(
+                        "fail closed: async worker {} panicked while encoding the window \
+                         starting at round {start_round}: {}",
+                        f.worker, f.message
+                    ),
+                    None => panic!(
+                        "fail closed: the async event stream disconnected with {processed} \
+                         of {total_msgs} tasks reported and no recorded failure"
+                    ),
+                }
+            }
+        };
+        let b = msg.block;
+        stash[b].insert(msg.chunk, msg);
+        while let Some(m) = stash[b].remove(&next_k[b]) {
+            next_k[b] += 1;
+            processed += 1;
+            let k = m.chunk;
+            let range = plan.range(k);
+            let mut x_chunks: Vec<Vec<f64>> = Vec::with_capacity(window);
+            for (r, fold) in m.rounds.into_iter().enumerate() {
+                x_chunks.push(fold.x_sum_chunk);
+                match fold.partial {
+                    Some(p) => session.fold_chunk_partial(r, k, p, &fold.clients, &fold.bits),
+                    None => assert!(fold.clients.is_empty(), "block lost a partial"),
+                }
+                // the accumulator closes — and frees — the moment the
+                // last block's fold lands; no other block is waited on
+                if session.chunk_complete(r, k) {
+                    let payload = session.finish_chunk(r, k);
+                    if decoder.chunk_decodable() {
+                        let est = decoder.decode_survivors_chunk(
+                            &payload,
+                            range.start,
+                            &shared[r],
+                            &survivor_sets[r],
+                        );
+                        estimates[r][range.clone()].copy_from_slice(&est);
+                    } else {
+                        match payload {
+                            Payload::Sum(v) if !plan.is_whole() => {
+                                sums[r][range.clone()].copy_from_slice(&v)
+                            }
+                            p => {
+                                estimates[r] = decoder.decode_survivors(
+                                    &p,
+                                    &shared[r],
+                                    &survivor_sets[r],
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            let bufs = x_wave.entry(k).or_default();
+            bufs.push((b, x_chunks));
+            if bufs.len() == n_blocks {
+                assert!(
+                    session.chunk_fully_closed(k),
+                    "every block folded chunk {k} but the session reports unfinished rounds"
+                );
+                let mut wave = x_wave.remove(&k).expect("wave buffered above");
+                wave.sort_by_key(|&(blk, _)| blk);
+                for (_, block_chunks) in wave {
+                    for (r, chunk_sum) in block_chunks.into_iter().enumerate() {
+                        for (o, v) in x_sums[r][range.clone()].iter_mut().zip(&chunk_sum) {
+                            *o += v;
+                        }
+                    }
+                }
+                // ring advance: chunk k fully closed → admit the next wave
+                if next_inject < n_chunks {
+                    let admit = next_inject;
+                    ws.inject(
+                        (0..n_blocks).map(|blk| AsyncTask { block: blk, chunk: admit }),
+                    );
+                    next_inject += 1;
+                }
+            }
+        }
+    }
+    let failures = ws.join();
+    assert!(
+        failures.is_empty(),
+        "fail closed: async worker {} panicked after its last report: {}",
+        failures.first().map(|f| f.worker).unwrap_or(0),
+        failures.first().map(|f| f.message.as_str()).unwrap_or(""),
+    );
+    let stats = AsyncStreamStats {
+        peak_accumulator_bytes: session.peak_accumulator_bytes(),
+        chunk: plan.chunk(),
+        n_chunks,
+        tasks: total_msgs,
+        workers: n_workers,
+        converted_stragglers: converted,
+    };
+    let closed = session.close_streamed();
+    let reports = closed
+        .into_iter()
+        .enumerate()
+        .map(|(r, (bits, survivors))| {
+            let estimate = if !decoder.chunk_decodable()
+                && transport.sum_only()
+                && !plan.is_whole()
+            {
+                decoder.decode_survivors(
+                    &Payload::Sum(std::mem::take(&mut sums[r])),
+                    &shared[r],
+                    &survivors,
+                )
+            } else {
+                std::mem::take(&mut estimates[r])
+            };
+            let n_alive = survivors.n_alive();
+            let true_mean: Vec<f64> =
+                std::mem::take(&mut x_sums[r]).into_iter().map(|v| v / n_alive as f64).collect();
+            let round_id = start_round + r as u64;
+            let gamma = policy.amplification_gamma(n, round_id);
+            let tv = policy.conditioning_tv(n, round_id);
+            let privacy =
+                ledger.as_deref_mut().map(|l| l.record_with_tv_slack(round_id, gamma, tv));
+            RoundReport {
+                round: round_id,
+                output: RoundOutput { estimate, bits },
+                true_mean,
+                survivors: n_alive,
+                cohort: cohorts[r].n_alive(),
+                privacy,
+            }
+        })
+        .collect();
+    (reports, stats)
+}
+
+/// Async convenience wrapper for mechanisms implementing both pipeline
+/// ends (see [`run_rounds_encoded_async`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_mech_async<M>(
+    pool: &ClientPool,
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    start_round: u64,
+    window: usize,
+    state: &[f64],
+    root_seed: u64,
+    cfg: &AsyncRunConfig,
+) -> (Vec<RoundReport>, AsyncStreamStats)
+where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+    let none: Vec<Vec<usize>> = vec![Vec::new(); window];
+    run_rounds_encoded_async(
+        pool,
+        encoder,
+        transport,
+        mech,
+        start_round,
+        window,
+        state,
+        root_seed,
+        &SamplingPolicy::Full,
+        &none,
+        None,
+        cfg,
     )
 }
 
@@ -1402,6 +2048,13 @@ mod tests {
         (0..5).map(|_| rng.uniform(-3.0, 3.0)).collect()
     }
 
+    /// 64-dimensional sibling of [`round_varying_compute`] for the
+    /// streaming-memory tests, whose chunk plans need d >> c.
+    fn wide_compute(c: usize, r: u64, _: &[f64]) -> Vec<f64> {
+        let mut rng = crate::util::rng::Rng::derive(6100 + r, c as u64);
+        (0..64).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
     #[test]
     fn windowed_rounds_match_sequential_single_rounds() {
         // a W=4 window over Plain is bit-identical to 4 sequential W=1
@@ -1622,7 +2275,7 @@ mod tests {
         let schedule: Vec<Vec<usize>> = (0..3u64)
             .map(|r| {
                 let cohort = policy.cohort(77, r, n);
-                vec![cohort.alive_iter().next().unwrap()]
+                vec![cohort.alive_iter().next().expect("fixed-size cohorts are never empty")]
             })
             .collect();
         let mut ledger = PrivacyLedger::new(1.0, 1e-5);
@@ -1671,7 +2324,9 @@ mod tests {
         let policy = SamplingPolicy::FixedSize { k: 3 };
         // find a client that is NOT in round 0's cohort and announce it
         let cohort = policy.cohort(5, 0, n);
-        let outsider = (0..n).find(|&c| !cohort.is_alive(c)).unwrap();
+        let outsider = (0..n)
+            .find(|&c| !cohort.is_alive(c))
+            .expect("a k=3 cohort of 6 clients always leaves an outsider");
         let _ = run_rounds_mech_sampled(
             &pool,
             &mech,
@@ -1734,7 +2389,10 @@ mod tests {
                 if r == 1 {
                     let cohort = policy.cohort(77, r, n);
                     if cohort.n_alive() >= 2 {
-                        return vec![cohort.alive_iter().next().unwrap()];
+                        return vec![cohort
+                            .alive_iter()
+                            .next()
+                            .expect("a cohort with >= 2 members has a first survivor")];
                     }
                 }
                 Vec::new()
@@ -1790,7 +2448,7 @@ mod tests {
         let n = 8;
         let d = 64;
         let w = 4;
-        let pool = ClientPool::spawn_with_threads(n, Arc::new(round_varying_compute), Some(4));
+        let pool = ClientPool::spawn_with_threads(n, Arc::new(wide_compute), Some(4));
         let mech = IrwinHallMechanism::new(0.3, 8.0);
         let chunk = 4usize;
         let (_, small) = run_rounds_mech_chunked(
@@ -1882,5 +2540,336 @@ mod tests {
             assert_eq!(x.survivors, 7);
             assert_eq!(y.survivors, 7);
         }
+    }
+
+    #[test]
+    fn async_coordinator_matches_whole_d_runner_bit_for_bit() {
+        // the tentpole acceptance: the work-stealing runner equals the
+        // whole-d barrier runner — whole RoundReports, exact PartialEq —
+        // for every chunk size, with sampling and dropouts composed
+        let n = 9;
+        let d = 5;
+        let pool = ClientPool::spawn_with_threads(n, Arc::new(round_varying_compute), Some(3));
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let policy = SamplingPolicy::Poisson { gamma: 0.7 };
+        let schedule: Vec<Vec<usize>> = (0..3u64)
+            .map(|r| {
+                if r == 1 {
+                    let cohort = policy.cohort(77, r, n);
+                    if cohort.n_alive() >= 2 {
+                        return vec![cohort
+                            .alive_iter()
+                            .next()
+                            .expect("a cohort with >= 2 members has a first survivor")];
+                    }
+                }
+                Vec::new()
+            })
+            .collect();
+        let whole = run_rounds_mech_sampled(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            3,
+            &[],
+            77,
+            &policy,
+            &schedule,
+            None,
+        );
+        for chunk in [1usize, 2, d, d + 3] {
+            let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+            let cfg = AsyncRunConfig::new(d, chunk);
+            let (reports, stats) = run_rounds_encoded_async(
+                &pool,
+                encoder,
+                Arc::new(SecAgg::new()),
+                &mech,
+                0,
+                3,
+                &[],
+                77,
+                &policy,
+                &schedule,
+                None,
+                &cfg,
+            );
+            assert_eq!(stats.chunk, chunk.min(d));
+            assert_eq!(stats.n_chunks, d.div_ceil(chunk.min(d)));
+            assert_eq!(stats.tasks, stats.n_chunks * pool.shard_ranges().len());
+            assert_eq!(stats.converted_stragglers, 0);
+            assert_eq!(reports, whole, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn async_rounds_invariant_under_workers_and_ring() {
+        // scheduler geometry is not allowed to change any bit: every
+        // (workers, ring) pair reproduces the same reports on the same
+        // pool, and different pool partitions agree on the estimates
+        let mech = AggregateGaussian::new(0.4, 8.0);
+        let pool =
+            ClientPool::spawn_with_threads(11, Arc::new(round_varying_compute), Some(4));
+        let (base, _) = run_rounds_mech_async(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            1,
+            3,
+            &[],
+            77,
+            &AsyncRunConfig::new(5, 2),
+        );
+        for workers in [1usize, 3, 8] {
+            for ring in [1usize, 2, 4] {
+                let cfg = AsyncRunConfig::new(5, 2).with_workers(workers).with_ring(ring);
+                let (reps, stats) = run_rounds_mech_async(
+                    &pool,
+                    &mech,
+                    Arc::new(SecAgg::new()),
+                    1,
+                    3,
+                    &[],
+                    77,
+                    &cfg,
+                );
+                assert_eq!(stats.workers, workers);
+                assert_eq!(reps, base, "workers {workers} ring {ring}");
+            }
+        }
+        for threads in [1usize, 3, 7] {
+            let p2 = ClientPool::spawn_with_threads(
+                11,
+                Arc::new(round_varying_compute),
+                Some(threads),
+            );
+            let (reps, _) = run_rounds_mech_async(
+                &p2,
+                &mech,
+                Arc::new(SecAgg::new()),
+                1,
+                3,
+                &[],
+                77,
+                &AsyncRunConfig::new(5, 2),
+            );
+            for (a, b) in reps.iter().zip(&base) {
+                assert_eq!(a.output.estimate, b.output.estimate, "threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn async_deadline_infinite_is_the_barrier_runner_exactly() {
+        // deadline = ∞ draws nothing and converts nobody: the async
+        // window IS the barrier window, whole reports, exact equality
+        let pool = ClientPool::spawn_with_threads(9, Arc::new(round_varying_compute), Some(3));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let barrier = run_rounds_mech(&pool, &mech, Arc::new(SecAgg::new()), 2, 3, &[], 31);
+        let cfg = AsyncRunConfig::new(5, 2); // deadline: none
+        let (reps, stats) =
+            run_rounds_mech_async(&pool, &mech, Arc::new(SecAgg::new()), 2, 3, &[], 31, &cfg);
+        assert_eq!(stats.converted_stragglers, 0);
+        assert_eq!(reps, barrier);
+    }
+
+    #[test]
+    fn async_straggler_past_deadline_equals_preannounced_dropout() {
+        // the deadline-conversion identity: running the async coordinator
+        // WITH a deadline equals pre-announcing the converted stragglers
+        // explicitly on the barrier runner — the same schedule by
+        // construction, hence the same bits
+        let n = 10;
+        let w = 3;
+        let mech = AggregateGaussian::new(0.5, 8.0);
+        let policy = DeadlinePolicy::with_deadline(2.0, 0.4, 1.0);
+        let none: Vec<Vec<usize>> = vec![Vec::new(); w];
+        let mut checked = 0usize;
+        for seed in 0..50u64 {
+            let cohorts = vec![SurvivorSet::full(n); w];
+            let (merged, converted) = policy.convert(seed, 0, &cohorts, &none);
+            if converted == 0 {
+                continue;
+            }
+            let pool =
+                ClientPool::spawn_with_threads(n, Arc::new(round_varying_compute), Some(3));
+            let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+            let cfg = AsyncRunConfig::new(5, 2).with_deadline(policy);
+            let (with_deadline, stats) = run_rounds_encoded_async(
+                &pool,
+                encoder,
+                Arc::new(SecAgg::new()),
+                &mech,
+                0,
+                w,
+                &[],
+                seed,
+                &SamplingPolicy::Full,
+                &none,
+                None,
+                &cfg,
+            );
+            assert_eq!(stats.converted_stragglers, converted, "seed {seed}");
+            let reference = run_rounds_mech_with_dropouts(
+                &pool,
+                &mech,
+                Arc::new(SecAgg::new()),
+                0,
+                w,
+                &[],
+                seed,
+                &merged,
+            );
+            assert_eq!(with_deadline, reference, "seed {seed}");
+            checked += 1;
+            if checked >= 3 {
+                break;
+            }
+        }
+        assert!(checked >= 1, "no seed in 0..50 converted a straggler — retune the rate");
+    }
+
+    #[test]
+    #[should_panic(expected = "round 4 (window round 1) would close with zero survivors")]
+    fn dropping_an_entire_cohort_fails_closed_naming_the_round() {
+        // satellite-2 regression: emptying one round of a window must
+        // fail closed naming the GLOBAL round, before any shard works
+        let pool = ClientPool::spawn(5, Arc::new(round_varying_compute));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let schedule: Vec<Vec<usize>> = vec![Vec::new(), (0..5).collect(), Vec::new()];
+        let _ = run_rounds_mech_with_dropouts(
+            &pool, &mech, Arc::new(SecAgg::new()), 3, 3, &[], 9, &schedule,
+        );
+    }
+
+    fn exploding_compute(c: usize, _r: u64, _s: &[f64]) -> Vec<f64> {
+        if c == 5 {
+            panic!("client 5 compute exploded");
+        }
+        vec![1.0; 5]
+    }
+
+    #[test]
+    fn shard_panic_propagates_shard_id_and_message() {
+        // satellite-1 regression: the orchestrator's fail-closed panic
+        // names the shard and carries the original panic message instead
+        // of a bare "shard result" disconnect
+        let pool = ClientPool::spawn_with_threads(8, Arc::new(exploding_compute), Some(4));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_round(&pool, &mech, 0, &[], 1)
+        }))
+        .err()
+        .expect("a shard panic must fail the round closed");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("shard 2"), "unexpected message: {msg}");
+        assert!(msg.contains("panicked during local compute"), "unexpected message: {msg}");
+        assert!(msg.contains("client 5 compute exploded"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn encode_window_panic_propagates_shard_id_and_message() {
+        let pool = ClientPool::spawn_with_threads(8, Arc::new(exploding_compute), Some(4));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_rounds_mech(&pool, &mech, Arc::new(Plain), 0, 2, &[], 1)
+        }))
+        .err()
+        .expect("a shard panic must fail the window closed");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("shard 2"), "unexpected message: {msg}");
+        assert!(msg.contains("panicked while encoding"), "unexpected message: {msg}");
+        assert!(msg.contains("client 5 compute exploded"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn chunked_shard_panic_fails_closed_naming_shard_and_cause() {
+        let pool = ClientPool::spawn_with_threads(8, Arc::new(exploding_compute), Some(4));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_rounds_mech_chunked(&pool, &mech, Arc::new(Plain), 0, 2, &[], 1, 5, 2)
+        }))
+        .err()
+        .expect("a shard panic must fail the chunked window closed");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("shard 2"), "unexpected message: {msg}");
+        assert!(
+            msg.contains("panicked while encoding the chunked window"),
+            "unexpected message: {msg}"
+        );
+        assert!(msg.contains("client 5 compute exploded"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn async_worker_panic_propagates_worker_and_message() {
+        // a task panic poisons the scheduler and the orchestrator fails
+        // closed naming the worker and the original cause — never a hang,
+        // never a bare disconnect
+        let pool = ClientPool::spawn_with_threads(8, Arc::new(exploding_compute), Some(4));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_rounds_mech_async(
+                &pool,
+                &mech,
+                Arc::new(Plain),
+                0,
+                2,
+                &[],
+                1,
+                &AsyncRunConfig::new(5, 2),
+            )
+        }))
+        .err()
+        .expect("a worker panic must fail the async window closed");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("async worker"), "unexpected message: {msg}");
+        assert!(msg.contains("client 5 compute exploded"), "unexpected message: {msg}");
+    }
+
+    #[test]
+    fn async_peak_accumulator_bytes_scale_with_ring_and_chunk() {
+        // the memory-model acceptance: live accumulators are bounded by
+        // the ring — O(ring · W · c) — never O(d)
+        let n = 8;
+        let d = 64;
+        let w = 4;
+        let chunk = 4usize;
+        let ring = 2usize;
+        let pool = ClientPool::spawn_with_threads(n, Arc::new(wide_compute), Some(4));
+        let mech = IrwinHallMechanism::new(0.3, 8.0);
+        let (_, small) = run_rounds_mech_async(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            w,
+            &[],
+            5,
+            &AsyncRunConfig::new(d, chunk).with_ring(ring),
+        );
+        let (_, big) = run_rounds_mech_async(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            0,
+            w,
+            &[],
+            5,
+            &AsyncRunConfig::new(d, d),
+        );
+        assert!(
+            small.peak_accumulator_bytes < big.peak_accumulator_bytes / 4,
+            "small {} big {}",
+            small.peak_accumulator_bytes,
+            big.peak_accumulator_bytes
+        );
+        // ring waves of W rounds' O(c) accumulators, with fold slack
+        let budget = 3 * (ring + 1) * w * chunk * 8;
+        assert!(
+            small.peak_accumulator_bytes <= budget,
+            "peak {} exceeds O(ring·W·c) budget {budget}",
+            small.peak_accumulator_bytes,
+        );
     }
 }

@@ -1,0 +1,327 @@
+//! A std-only M:N work-stealing task pool — the execution substrate of the
+//! event-driven async coordinator ([`super::runtime::run_rounds_encoded_async`]).
+//!
+//! Shape: one global **injector** queue (the orchestrator feeds encode
+//! tasks into it as the accumulator ring admits chunk waves) plus one
+//! **local deque per worker**. A worker pops its own deque from the
+//! front; when empty it batch-grabs a slice of the injector; when the
+//! injector is dry it steals half of the richest sibling's deque from the
+//! back. Idle workers park on a condvar and are woken by injection,
+//! close, or poisoning — there is no spin loop and no global barrier
+//! anywhere.
+//!
+//! Honest scope note: the classic work-stealing runtime uses lock-free
+//! Chase–Lev deques; the offline registry has no `crossbeam`, so every
+//! queue here lives behind ONE mutex. That is entirely adequate for this
+//! coordinator's granularity (a task encodes a whole client-block ×
+//! chunk, i.e. milliseconds of work against nanoseconds of queue traffic)
+//! and it keeps the scheduler dependency-free. The determinism story does
+//! not care either way: which worker runs which task, and in which order,
+//! is explicitly allowed to vary — see `docs/determinism.md`, "Work
+//! stealing cannot change any drawn bit".
+//!
+//! Failure model (fail closed, never hang): a panicking task is caught,
+//! recorded as a [`WorkerFailure`] naming the worker and carrying the
+//! original panic message, and **poisons** the pool — every worker exits
+//! at its next dequeue instead of draining a doomed run. The worker
+//! threads dropping their shared run-closure is what disconnects any
+//! channels the closure held, so an orchestrator blocked on `recv()`
+//! observes the failure promptly and can name its cause from
+//! [`WorkStealPool::failures`] instead of dying on a bare "disconnected".
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Cap on how many tasks one injector batch-grab moves into a local
+/// deque: enough to amortize the lock, small enough that siblings still
+/// find injector work without stealing.
+const INJECTOR_BATCH: usize = 32;
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads cover every `panic!`/`assert!` in this crate).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One recorded task panic: which worker it died on and the original
+/// panic message — what the orchestrator surfaces instead of a bare
+/// channel-disconnect panic.
+#[derive(Clone, Debug)]
+pub struct WorkerFailure {
+    pub worker: usize,
+    pub message: String,
+}
+
+struct Queues<T> {
+    injector: VecDeque<T>,
+    locals: Vec<VecDeque<T>>,
+    /// more tasks may still be injected; workers park instead of exiting
+    open: bool,
+    /// a task panicked: abandon all queued work, every worker exits
+    poisoned: bool,
+    failures: Vec<WorkerFailure>,
+}
+
+struct Shared<T> {
+    queues: Mutex<Queues<T>>,
+    ready: Condvar,
+}
+
+/// The work-stealing pool. `T` is the task type; the run closure given to
+/// [`WorkStealPool::spawn`] executes each task on whichever worker
+/// dequeued or stole it.
+pub struct WorkStealPool<T: Send + 'static> {
+    shared: Arc<Shared<T>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> WorkStealPool<T> {
+    /// Spawn `workers` worker threads running `run(worker_id, task)` over
+    /// everything later passed to [`WorkStealPool::inject`].
+    pub fn spawn<F>(workers: usize, run: F) -> Self
+    where
+        F: Fn(usize, T) + Send + Sync + 'static,
+    {
+        assert!(workers > 0, "a work-stealing pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(Queues {
+                injector: VecDeque::new(),
+                locals: (0..workers).map(|_| VecDeque::new()).collect(),
+                open: true,
+                poisoned: false,
+                failures: Vec::new(),
+            }),
+            ready: Condvar::new(),
+        });
+        let run = Arc::new(run);
+        let handles = (0..workers)
+            .map(|me| {
+                let shared = shared.clone();
+                let run = run.clone();
+                std::thread::Builder::new()
+                    .name(format!("ws-worker-{me}"))
+                    .spawn(move || Self::worker_loop(me, shared, run))
+                    .expect("spawning work-stealing worker thread")
+            })
+            .collect();
+        Self { shared, workers: handles }
+    }
+
+    fn worker_loop<F>(me: usize, shared: Arc<Shared<T>>, run: Arc<F>)
+    where
+        F: Fn(usize, T) + Send + Sync + 'static,
+    {
+        loop {
+            let task = {
+                let mut q = shared.queues.lock().unwrap();
+                loop {
+                    if q.poisoned {
+                        break None;
+                    }
+                    if let Some(t) = q.locals[me].pop_front() {
+                        break Some(t);
+                    }
+                    // refill from the global injector: grab a fair share
+                    // (capped) so one worker cannot hoard the queue
+                    if !q.injector.is_empty() {
+                        let grab = q
+                            .injector
+                            .len()
+                            .div_ceil(q.locals.len())
+                            .clamp(1, INJECTOR_BATCH);
+                        for _ in 0..grab {
+                            if let Some(t) = q.injector.pop_front() {
+                                q.locals[me].push_back(t);
+                            }
+                        }
+                        continue;
+                    }
+                    // steal: take half of the richest sibling's deque from
+                    // the back (they keep working their front undisturbed)
+                    let victim = (0..q.locals.len())
+                        .filter(|&v| v != me && !q.locals[v].is_empty())
+                        .max_by_key(|&v| q.locals[v].len());
+                    if let Some(v) = victim {
+                        let take = q.locals[v].len().div_ceil(2);
+                        for _ in 0..take {
+                            let t = q.locals[v].pop_back().unwrap();
+                            // push_front preserves the stolen tasks'
+                            // relative order for the thief
+                            q.locals[me].push_front(t);
+                        }
+                        continue;
+                    }
+                    if !q.open {
+                        break None;
+                    }
+                    q = shared.ready.wait(q).unwrap();
+                }
+            };
+            let Some(task) = task else { return };
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(me, task)));
+            if let Err(p) = outcome {
+                let mut q = shared.queues.lock().unwrap();
+                q.failures
+                    .push(WorkerFailure { worker: me, message: panic_message(p.as_ref()) });
+                // fail closed: abandon queued work so siblings exit
+                // instead of completing a run whose result is already lost
+                q.poisoned = true;
+                drop(q);
+                shared.ready.notify_all();
+                return;
+            }
+        }
+    }
+
+    /// Feed tasks into the global injector (wakes parked workers). The
+    /// orchestrator calls this both at spawn (the initial chunk waves) and
+    /// from its event loop as the accumulator ring admits further waves.
+    ///
+    /// Panics if the pool was already closed — injecting after close is an
+    /// orchestrator bug and fails closed rather than silently dropping
+    /// work.
+    pub fn inject<I: IntoIterator<Item = T>>(&self, tasks: I) {
+        let mut q = self.shared.queues.lock().unwrap();
+        assert!(q.open, "fail closed: task injected into a closed work-stealing pool");
+        if q.poisoned {
+            // a failure is already pending; dropping the new tasks is
+            // fine — the orchestrator will observe the failure and panic
+            return;
+        }
+        q.injector.extend(tasks);
+        drop(q);
+        self.shared.ready.notify_all();
+    }
+
+    /// Snapshot of every recorded task panic so far (worker id + message).
+    pub fn failures(&self) -> Vec<WorkerFailure> {
+        self.shared.queues.lock().unwrap().failures.clone()
+    }
+
+    /// Close the injector, let the workers drain every queued task, join
+    /// them, and return the recorded failures (empty on a clean run).
+    pub fn join(mut self) -> Vec<WorkerFailure> {
+        {
+            let mut q = self.shared.queues.lock().unwrap();
+            q.open = false;
+        }
+        self.shared.ready.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.queues.lock().unwrap().failures.clone()
+    }
+}
+
+impl<T: Send + 'static> Drop for WorkStealPool<T> {
+    /// Dropping without [`WorkStealPool::join`] (the orchestrator
+    /// panicked mid-run) abandons queued tasks and joins the workers —
+    /// nothing hangs, nothing leaks a thread.
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queues.lock().unwrap();
+            q.open = false;
+            q.poisoned = true;
+        }
+        self.shared.ready.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn async_pool_runs_every_task_exactly_once() {
+        for workers in [1usize, 2, 7] {
+            let sum = Arc::new(AtomicU64::new(0));
+            let count = Arc::new(AtomicUsize::new(0));
+            let pool = {
+                let sum = sum.clone();
+                let count = count.clone();
+                WorkStealPool::spawn(workers, move |_w, t: u64| {
+                    sum.fetch_add(t, Ordering::SeqCst);
+                    count.fetch_add(1, Ordering::SeqCst);
+                })
+            };
+            pool.inject(1..=100u64);
+            let failures = pool.join();
+            assert!(failures.is_empty());
+            assert_eq!(count.load(Ordering::SeqCst), 100, "{workers} workers");
+            assert_eq!(sum.load(Ordering::SeqCst), 5050, "{workers} workers");
+        }
+    }
+
+    #[test]
+    fn async_pool_accepts_injection_while_running() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let count = count.clone();
+            WorkStealPool::spawn(3, move |_w, _t: usize| {
+                count.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        for wave in 0..10 {
+            pool.inject((0..8).map(|i| wave * 8 + i));
+        }
+        assert!(pool.join().is_empty());
+        assert_eq!(count.load(Ordering::SeqCst), 80);
+    }
+
+    #[test]
+    fn async_pool_records_panic_with_worker_and_message() {
+        let pool = WorkStealPool::spawn(2, |_w, t: usize| {
+            if t == 3 {
+                panic!("task {t} exploded");
+            }
+        });
+        pool.inject(0..6);
+        let failures = pool.join();
+        assert_eq!(failures.len(), 1, "exactly one recorded failure");
+        assert!(failures[0].worker < 2);
+        assert_eq!(failures[0].message, "task 3 exploded");
+    }
+
+    #[test]
+    fn async_pool_poisons_siblings_after_a_panic() {
+        // after the poisoned run, queued tasks are abandoned — the run
+        // count stays well below the injected total
+        let count = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let count = count.clone();
+            WorkStealPool::spawn(1, move |_w, t: usize| {
+                if t == 0 {
+                    panic!("first task dies");
+                }
+                count.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        pool.inject(0..1000);
+        let failures = pool.join();
+        assert_eq!(failures.len(), 1);
+        assert_eq!(
+            count.load(Ordering::SeqCst),
+            0,
+            "a single poisoned worker must abandon all queued tasks"
+        );
+    }
+
+    #[test]
+    fn async_pool_drop_without_join_does_not_hang() {
+        let pool = WorkStealPool::spawn(2, |_w, _t: usize| {});
+        pool.inject(0..10);
+        drop(pool);
+    }
+}

@@ -778,6 +778,25 @@ impl TransportSession {
         !c.finished && c.submitted == self.survivors(r).n_alive()
     }
 
+    /// Accumulator-ring close notification: how many of the window's
+    /// rounds have finished (unmasked + released) chunk k. Derived from
+    /// the per-chunk `finished` flags the snapshot format already
+    /// records, so it costs no session state.
+    pub fn chunk_rounds_closed(&self, k: usize) -> usize {
+        (0..self.window()).filter(|&r| self.slots[r].chunks[k].finished).count()
+    }
+
+    /// True when chunk k's accumulator is closed in EVERY round of the
+    /// window — the ring-advance signal of the event-driven coordinator
+    /// ([`crate::coordinator::runtime::run_rounds_encoded_async`]): the
+    /// runner admits encode tasks for chunk `k + ring` only once this
+    /// reports chunk `k` fully closed, which is what bounds live
+    /// accumulators to O(ring · W · c) bytes without any cross-shard
+    /// barrier.
+    pub fn chunk_fully_closed(&self, k: usize) -> bool {
+        self.chunk_rounds_closed(k) == self.window()
+    }
+
     /// Close ONE chunk: reconstruct any announced dropouts' mask slice for
     /// the chunk's coordinate range, unmask, release the accumulator, and
     /// surface the chunk's server view. This is the streaming memory

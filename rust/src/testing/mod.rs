@@ -16,7 +16,12 @@
 //!   with snapshot/resume), [`scenario`] (configuration presets, window
 //!   plans, the event log, the byzantine attack catalogue) and
 //!   [`snapshot`] (the versioned binary snapshot format) — see the
-//!   README's "Scenario engine & snapshots" section.
+//!   README's "Scenario engine & snapshots" section;
+//! * [`Watchdog`] — a wall-clock deadman's switch for tests that exercise
+//!   the async scheduler: a hung run aborts the whole process loudly
+//!   instead of letting CI idle until its global timeout. Wall-clock time
+//!   here OBSERVES progress, it never decides bits — the determinism lint
+//!   allows `Instant` for exactly this.
 //!
 //! Failing [`forall`] properties print the failing case's derived seed
 //! and a one-line reproduction command; set the `FORALL_REPLAY`
@@ -506,6 +511,71 @@ pub fn assert_chunked_window_matches_unchunked<M>(
 }
 
 // ---------------------------------------------------------------------------
+// wall-clock watchdog
+// ---------------------------------------------------------------------------
+
+/// A wall-clock deadman's switch: [`Watchdog::arm`] spawns a monitor
+/// thread that aborts the whole process (with a loud `WATCHDOG:` line
+/// naming the armed label) if the guarded section has not dropped the
+/// watchdog within the limit. The async-coordinator identity tests arm
+/// one around every scheduler run so a deadlocked event loop fails CI in
+/// seconds instead of hanging until the harness' global timeout.
+///
+/// `abort` (not `panic`) is deliberate: the failure mode being guarded is
+/// a thread stuck on a condvar or a channel `recv()`, which no unwind in
+/// the monitor thread can interrupt. Dropping the watchdog disarms it and
+/// joins the monitor, so a passing test leaves no thread behind.
+///
+/// Wall-clock time here only *observes* progress — it never feeds any
+/// decision that changes drawn bits, which is why the determinism lint
+/// bans epoch wall-clock time but allows `Instant`.
+pub struct Watchdog {
+    disarm: std::sync::Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Watchdog {
+    /// Arm a watchdog: unless dropped within `limit`, the process aborts.
+    pub fn arm(label: &str, limit: std::time::Duration) -> Self {
+        let label = label.to_string();
+        let disarm =
+            std::sync::Arc::new((std::sync::Mutex::new(false), std::sync::Condvar::new()));
+        let shared = disarm.clone();
+        let monitor = std::thread::Builder::new()
+            .name(format!("watchdog-{label}"))
+            .spawn(move || {
+                let deadline = std::time::Instant::now() + limit;
+                let (flag, cvar) = &*shared;
+                let mut disarmed = flag.lock().unwrap();
+                while !*disarmed {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        eprintln!(
+                            "WATCHDOG: `{label}` still running after {limit:?} — \
+                             aborting the process (suspected scheduler deadlock)"
+                        );
+                        std::process::abort();
+                    }
+                    disarmed = cvar.wait_timeout(disarmed, deadline - now).unwrap().0;
+                }
+            })
+            .expect("spawning watchdog monitor thread");
+        Self { disarm, monitor: Some(monitor) }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        let (flag, cvar) = &*self.disarm;
+        *flag.lock().unwrap() = true;
+        cvar.notify_all();
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // generators
 // ---------------------------------------------------------------------------
 
@@ -638,6 +708,15 @@ mod tests {
             true
         });
         assert_eq!(runs.get(), 0, "a foreign replay seed must skip the property");
+    }
+
+    #[test]
+    fn watchdog_disarms_on_drop_without_firing() {
+        // generous limits: the test only proves arm → drop terminates the
+        // monitor cleanly (a fired watchdog would abort the whole suite)
+        let wd = Watchdog::arm("unit-self-check", std::time::Duration::from_secs(120));
+        drop(wd);
+        drop(Watchdog::arm("unit-self-check-again", std::time::Duration::from_secs(120)));
     }
 
     #[test]

@@ -105,6 +105,28 @@ impl ScenarioConfig {
         }
     }
 
+    /// A calm fleet whose ONLY adversity is heavy-tailed stragglers
+    /// against a tight round deadline — the straggler column of the CI
+    /// scenario matrix. It isolates exactly the deadline-conversion path
+    /// the async coordinator mirrors through
+    /// [`crate::coordinator::deadline::DeadlinePolicy`]: rate 0.45
+    /// against a Pareto(α = 1) tail with deadline 2.5 converts roughly
+    /// one cohort member in five per tick, and nothing else happens.
+    pub fn straggler(
+        n_clients: usize,
+        dim: usize,
+        window: usize,
+        chunk: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            straggler_rate: 0.45,
+            straggler_scale: 1.0,
+            deadline: 2.5,
+            ..Self::calm(n_clients, dim, window, chunk, seed)
+        }
+    }
+
     /// The churn preset plus byzantine campaigns: most ticks also probe
     /// the session's fail-closed surface with a generated attack.
     pub fn byzantine(

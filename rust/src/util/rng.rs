@@ -47,6 +47,15 @@ pub mod seed_domain {
     /// `forall` run draws from `derive_domain(cfg.seed, PROP_CASE, k)`,
     /// which is the seed a failure report prints for `FORALL_REPLAY`.
     pub const PROP_CASE: u64 = 0xD0_0006;
+    /// The async coordinator's virtual straggler clock
+    /// ([`crate::coordinator::deadline::DeadlinePolicy`]): round r's
+    /// arrival-time draws come from
+    /// `derive(derive_domain(root_seed, DEADLINE, r), client)`, so
+    /// deadline outcomes are a pure function of the run's root seed —
+    /// replayable, and incapable of displacing any other stream (a run
+    /// with no deadline draws nothing from this domain and every other
+    /// domain is untouched either way).
+    pub const DEADLINE: u64 = 0xD0_0007;
 }
 
 /// SplitMix64's additive constant (the golden-ratio gamma).

@@ -1,0 +1,365 @@
+//! The async ≡ barrier property matrix (ISSUE 8): the event-driven
+//! work-stealing coordinator must be *bit-identical* — whole
+//! `RoundReport`s, ledger spends and all — to the chunk-barrier runner
+//! AND the whole-d batched runner on every straggler-free schedule,
+//! across mechanisms × {Plain, SecAgg} × chunk ∈ {1, 64, d} × sampling ×
+//! dropouts; invariant under worker count and ring depth; and with
+//! deadlines on, "straggler past the deadline" must equal
+//! "pre-announced dropout" exactly (the conversion happens before any
+//! bit is drawn — docs/determinism.md, "Work stealing cannot change any
+//! drawn bit", has the argument).
+//!
+//! Every scheduler run is armed with a [`Watchdog`]: a deadlocked event
+//! loop aborts the suite loudly in seconds instead of hanging CI.
+//! (`scripts/ci.sh` runs this suite by name; keep `async` in the test
+//! names.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use exact_comp::coordinator::deadline::DeadlinePolicy;
+use exact_comp::coordinator::runtime::{
+    run_rounds_encoded_async, run_rounds_encoded_chunked, run_rounds_encoded_sampled,
+    run_rounds_mech_async, run_rounds_mech_chunked, run_rounds_mech_with_dropouts,
+    AsyncRunConfig, ClientPool,
+};
+use exact_comp::coordinator::sampling::SamplingPolicy;
+use exact_comp::dp::PrivacyLedger;
+use exact_comp::mechanisms::pipeline::{
+    ClientEncoder, Plain, SecAgg, ServerDecoder, Transport,
+};
+use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
+use exact_comp::testing::{Fleet, Watchdog};
+
+/// One watchdog limit for every scheduler run in this suite: generous
+/// against slow CI hosts, still far below any harness-level timeout.
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+/// Mid-round dropout schedule: round 1 loses one member of its cohort.
+fn one_dropout_schedule(
+    policy: &SamplingPolicy,
+    session_seed: u64,
+    n: usize,
+    window: usize,
+) -> Vec<Vec<usize>> {
+    (0..window as u64)
+        .map(|r| {
+            if r == 1 {
+                let cohort = policy.cohort(session_seed, r, n);
+                if cohort.n_alive() >= 2 {
+                    let first = cohort
+                        .alive_iter()
+                        .next()
+                        .expect("a cohort with >= 2 members has a first survivor");
+                    return vec![first];
+                }
+            }
+            Vec::new()
+        })
+        .collect()
+}
+
+/// The acceptance matrix cell: run the SAME sampled window with the same
+/// dropouts three ways — whole-d batched, chunk-barrier streamed, and
+/// async work-stealing — and assert whole-report bit identity plus
+/// identical ledger spends.
+fn assert_async_cell<M>(
+    mech: &M,
+    transport: Arc<dyn Transport>,
+    policy: &SamplingPolicy,
+    n: usize,
+    dim: usize,
+    chunk: usize,
+    root_seed: u64,
+) where
+    M: ClientEncoder + ServerDecoder + Clone + 'static,
+{
+    let _wd = Watchdog::arm("async-matrix-cell", WATCHDOG);
+    let window = 3usize;
+    let fleet = Fleet::new(n, dim, root_seed ^ 0xDA7A);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let dropouts = one_dropout_schedule(policy, root_seed, n, window);
+    let encoder: Arc<dyn ClientEncoder> = Arc::new(mech.clone());
+
+    let mut ledger_whole = PrivacyLedger::new(1.0, 1e-5);
+    let whole = run_rounds_encoded_sampled(
+        &pool,
+        encoder.clone(),
+        transport.clone(),
+        mech,
+        0,
+        window,
+        &[],
+        root_seed,
+        policy,
+        &dropouts,
+        Some(&mut ledger_whole),
+    );
+    let mut ledger_chunked = PrivacyLedger::new(1.0, 1e-5);
+    let (chunked, _) = run_rounds_encoded_chunked(
+        &pool,
+        encoder.clone(),
+        transport.clone(),
+        mech,
+        0,
+        window,
+        &[],
+        root_seed,
+        policy,
+        &dropouts,
+        Some(&mut ledger_chunked),
+        dim,
+        chunk,
+    );
+    let mut ledger_async = PrivacyLedger::new(1.0, 1e-5);
+    let (async_reports, stats) = run_rounds_encoded_async(
+        &pool,
+        encoder,
+        transport.clone(),
+        mech,
+        0,
+        window,
+        &[],
+        root_seed,
+        policy,
+        &dropouts,
+        Some(&mut ledger_async),
+        &AsyncRunConfig::new(dim, chunk),
+    );
+
+    let tag = format!("{}/chunk={chunk}/seed={root_seed:#x}", transport.name());
+    assert_eq!(async_reports, whole, "{tag}: async runner != whole-d batched runner");
+    assert_eq!(async_reports, chunked, "{tag}: async runner != chunk-barrier runner");
+    assert_eq!(
+        ledger_async.snapshot(),
+        ledger_whole.snapshot(),
+        "{tag}: async ledger spends diverge from the whole-d runner"
+    );
+    assert_eq!(
+        ledger_async.snapshot(),
+        ledger_chunked.snapshot(),
+        "{tag}: async ledger spends diverge from the chunk-barrier runner"
+    );
+    assert_eq!(stats.converted_stragglers, 0, "{tag}: no deadline means no conversions");
+}
+
+/// The CI async identity matrix: both homomorphic mechanisms × {Plain,
+/// SecAgg} × chunk ∈ {1, 64 (clamps to whole-d), d} × {Full, FixedSize}
+/// sampling, with a mid-round dropout — every cell bit-identical to both
+/// barrier runners.
+#[test]
+fn async_matrix_matches_chunked_and_whole_d_runners() {
+    let (n, dim) = (6usize, 11usize);
+    let secagg: Arc<dyn Transport> = Arc::new(SecAgg::new());
+    let plain: Arc<dyn Transport> = Arc::new(Plain);
+    let ih = IrwinHallMechanism::new(0.4, 8.0);
+    let ag = AggregateGaussian::new(0.6, 8.0);
+    for chunk in [1usize, 64, dim] {
+        for (policy, seed) in [
+            (SamplingPolicy::Full, 0xA51u64),
+            (SamplingPolicy::FixedSize { k: 4 }, 0xA52),
+        ] {
+            assert_async_cell(&ih, plain.clone(), &policy, n, dim, chunk, seed);
+            assert_async_cell(&ih, secagg.clone(), &policy, n, dim, chunk, seed);
+            assert_async_cell(&ag, plain.clone(), &policy, n, dim, chunk, seed ^ 1);
+            assert_async_cell(&ag, secagg.clone(), &policy, n, dim, chunk, seed ^ 1);
+        }
+    }
+}
+
+/// Worker count and ring depth are pure scheduling knobs: every
+/// (workers, ring) pair produces the identical report vector. THE
+/// determinism claim of the work-stealing design, as an integration
+/// property.
+#[test]
+fn async_reports_invariant_under_workers_and_ring() {
+    let _wd = Watchdog::arm("async-workers-ring", WATCHDOG);
+    let (n, dim, chunk) = (7usize, 13usize, 3usize);
+    let fleet = Fleet::new(n, dim, 0x9A9A);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    let baseline = run_rounds_mech_async(
+        &pool,
+        &mech,
+        Arc::new(SecAgg::new()),
+        5,
+        3,
+        &[],
+        0xB00C,
+        &AsyncRunConfig::new(dim, chunk),
+    )
+    .0;
+    for workers in [1usize, 3, 8] {
+        for ring in [1usize, 2, 4] {
+            let cfg = AsyncRunConfig::new(dim, chunk).with_workers(workers).with_ring(ring);
+            let got = run_rounds_mech_async(
+                &pool,
+                &mech,
+                Arc::new(SecAgg::new()),
+                5,
+                3,
+                &[],
+                0xB00C,
+                &cfg,
+            )
+            .0;
+            assert_eq!(
+                got, baseline,
+                "workers={workers}, ring={ring}: scheduling knobs changed a bit"
+            );
+        }
+    }
+}
+
+/// `deadline = None` (∞) draws nothing from the DEADLINE domain, so the
+/// async runner IS the chunk-barrier runner exactly — the degenerate end
+/// of the deadline-identity family.
+#[test]
+fn async_infinite_deadline_is_the_barrier_runner_exactly() {
+    let _wd = Watchdog::arm("async-infinite-deadline", WATCHDOG);
+    let (n, dim, chunk) = (6usize, 9usize, 4usize);
+    let fleet = Fleet::new(n, dim, 0x1DEA);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let mech = AggregateGaussian::new(0.5, 8.0);
+    let (barrier, _) = run_rounds_mech_chunked(
+        &pool,
+        &mech,
+        Arc::new(SecAgg::new()),
+        2,
+        3,
+        &[],
+        0xFEED,
+        dim,
+        chunk,
+    );
+    let cfg = AsyncRunConfig::new(dim, chunk).with_deadline(DeadlinePolicy::none());
+    let (async_reports, stats) = run_rounds_mech_async(
+        &pool,
+        &mech,
+        Arc::new(SecAgg::new()),
+        2,
+        3,
+        &[],
+        0xFEED,
+        &cfg,
+    );
+    assert_eq!(async_reports, barrier);
+    assert_eq!(stats.converted_stragglers, 0, "an infinite deadline converts nobody");
+}
+
+/// The deadline identity: a straggler past the virtual deadline is a
+/// pre-announced dropout, bit for bit. The expected schedule comes from
+/// `DeadlinePolicy::convert` (the same pure function the runner calls),
+/// fed to the barrier runner as explicit announced dropouts.
+#[test]
+fn async_straggler_past_deadline_equals_preannounced_dropout() {
+    use exact_comp::mechanisms::pipeline::SurvivorSet;
+    let _wd = Watchdog::arm("async-deadline-identity", WATCHDOG);
+    let (n, dim, chunk, window) = (8usize, 7usize, 3usize, 3usize);
+    let policy = DeadlinePolicy::with_deadline(2.0, 0.35, 1.0);
+    let fleet = Fleet::new(n, dim, 0x57A6);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    let mut checked = 0u32;
+    for root_seed in 0x600u64..0x640 {
+        let cohorts = vec![SurvivorSet::full(n); window];
+        let none: Vec<Vec<usize>> = vec![Vec::new(); window];
+        let (merged, converted) = policy.convert(root_seed, 4, &cohorts, &none);
+        if converted == 0 {
+            continue;
+        }
+        let reference = run_rounds_mech_with_dropouts(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            4,
+            window,
+            &[],
+            root_seed,
+            &merged,
+        );
+        let cfg = AsyncRunConfig::new(dim, chunk).with_deadline(policy);
+        let (async_reports, stats) = run_rounds_mech_async(
+            &pool,
+            &mech,
+            Arc::new(SecAgg::new()),
+            4,
+            window,
+            &[],
+            root_seed,
+            &cfg,
+        );
+        assert_eq!(
+            async_reports, reference,
+            "seed {root_seed:#x}: deadline conversion != pre-announced dropout"
+        );
+        assert_eq!(stats.converted_stragglers, converted, "seed {root_seed:#x}");
+        checked += 1;
+        if checked >= 4 {
+            break;
+        }
+    }
+    assert!(
+        checked >= 4,
+        "rate 0.35 over 64 seeds must produce at least 4 windows with conversions"
+    );
+}
+
+/// A window whose every cohort member misses the deadline is an
+/// operational error, not a recoverable dropout: the runner fails closed
+/// naming the global round before any shard computes.
+#[test]
+#[should_panic(expected = "round 7 (window round 0) would close with zero survivors")]
+fn async_converting_every_survivor_fails_closed_naming_the_round() {
+    let n = 4usize;
+    let fleet = Fleet::new(n, 5, 0xDEAD);
+    let pool = ClientPool::spawn(n, Arc::new(fleet.compute()));
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    // rate 1 and a deadline below the Pareto scale: EVERY client misses
+    let cfg = AsyncRunConfig::new(5, 2)
+        .with_deadline(DeadlinePolicy::with_deadline(0.5, 1.0, 1.0));
+    let _ = run_rounds_mech_async(&pool, &mech, Arc::new(Plain), 7, 2, &[], 0x17, &cfg);
+}
+
+/// A panicking encode task must surface through the event loop as a
+/// named worker failure carrying the original message — never a bare
+/// channel-disconnect panic, never a hang (the watchdog proves the
+/// latter).
+#[test]
+fn async_worker_panic_propagates_worker_and_message() {
+    let _wd = Watchdog::arm("async-panic-propagation", WATCHDOG);
+    let n = 6usize;
+    let pool = ClientPool::spawn(
+        n,
+        Arc::new(|c: usize, _r: u64, _s: &[f64]| {
+            if c == 3 {
+                panic!("client 3 exploded in the async suite");
+            }
+            vec![1.0; 6]
+        }),
+    );
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_rounds_mech_async(
+            &pool,
+            &mech,
+            Arc::new(Plain),
+            0,
+            2,
+            &[],
+            0x30,
+            &AsyncRunConfig::new(6, 2),
+        )
+    }))
+    .expect_err("a panicking client must fail the async run");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .expect("panic payload is a string");
+    assert!(msg.contains("async worker"), "panic must name the worker: {msg}");
+    assert!(
+        msg.contains("client 3 exploded in the async suite"),
+        "panic must carry the original cause: {msg}"
+    );
+}

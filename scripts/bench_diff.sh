@@ -11,7 +11,11 @@
 #
 # Artifacts marked `"quick": true` (BENCH_QUICK smoke runs) or
 # `"pending": true` (committed placeholders awaiting a toolchain) carry no
-# comparable numbers: they are schema-checked only and the gate exits 0.
+# comparable numbers. A fresh artifact like that is schema-checked only;
+# as a BASELINE it is skipped and the search walks BACK to the most recent
+# comparable trajectory point — a committed placeholder must never eat the
+# regression gate for the whole history behind it. When no comparable
+# baseline exists at all, the gate exits 0 but says so LOUDLY on stderr.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -25,21 +29,21 @@ if [ -z "$fresh" ] || [ ! -f "$fresh" ]; then
     exit 1
 fi
 
-# baseline: the newest BENCH_*.json at the repo root that is not the fresh
-# artifact itself
-baseline=""
+# baseline candidates: every BENCH_*.json at the repo root that is not the
+# fresh artifact itself, newest first — the comparability walk-back
+# happens below, where "pending"/"quick" can actually be read
+candidates=()
 for f in $(ls BENCH_*.json 2>/dev/null | sort -t_ -k2 -n -r); do
     if [ "$(readlink -f "$f")" != "$(readlink -f "$fresh")" ]; then
-        baseline="$f"
-        break
+        candidates+=("$f")
     fi
 done
 
-python3 - "$fresh" "$baseline" <<'PY'
+python3 - "$fresh" ${candidates[@]+"${candidates[@]}"} <<'PY'
 import json
 import sys
 
-fresh_path, baseline_path = sys.argv[1], sys.argv[2]
+fresh_path, candidate_paths = sys.argv[1], sys.argv[2:]
 
 
 def load(path):
@@ -71,14 +75,27 @@ if reason:
     print(f"bench_diff: skipping comparison: {reason}")
     sys.exit(0)
 
-if not baseline_path:
-    print("bench_diff: no prior trajectory artifact — nothing to compare against")
-    sys.exit(0)
+# walk the candidates newest -> oldest to the first COMPARABLE baseline:
+# pending placeholders and quick artifacts are stepped over (loudly), not
+# silently accepted as "nothing to compare against"
+base, baseline_path = None, None
+for path in candidate_paths:
+    doc = load(path)
+    reason = incomparable(doc, path)
+    if reason:
+        print(f"bench_diff: skipping baseline candidate: {reason}")
+        continue
+    base, baseline_path = doc, path
+    break
 
-base = load(baseline_path)
-reason = incomparable(base, baseline_path)
-if reason:
-    print(f"bench_diff: skipping comparison: {reason}")
+if base is None:
+    print(
+        "bench_diff: WARNING — no comparable baseline among "
+        f"{len(candidate_paths)} candidate artifact(s); the regression gate "
+        "DID NOT RUN. Regenerate a full (non-quick) trajectory artifact to "
+        "restore the gate.",
+        file=sys.stderr,
+    )
     sys.exit(0)
 
 

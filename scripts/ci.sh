@@ -79,15 +79,32 @@ cargo test -q chunked
 echo "== lane-batched kernel property suite (batched == scalar bit-identity) =="
 cargo test -q kernels
 
+# Async-coordinator identity suite, run by name for the same visibility:
+# the event-driven work-stealing runner ≡ the chunk-barrier runner ≡ the
+# whole-d batched runner, bit for bit, across mechanisms × {Plain,
+# SecAgg} × chunk ∈ {1, 64, d} × sampling × dropouts; invariance under
+# worker count and ring depth; the deadline identities (∞ ≡ barrier
+# exactly; straggler-past-deadline ≡ pre-announced dropout); and the
+# fail-closed panic-propagation surface. Every scheduler run inside the
+# suite is armed with a wall-clock Watchdog (testing::Watchdog), so a
+# scheduler deadlock ABORTS loudly within its limit instead of idling CI
+# until the harness' global timeout. Redundant with the full
+# `cargo test -q` above by construction — a failure here names the async
+# contract directly.
+echo "== async-coordinator identity suite (async == barrier, watchdog-armed) =="
+cargo test -q async
+
 # Scenario-engine suite, run by name for the same visibility: the seeded
-# scenario matrix (3 seeds × {calm, churn, byzantine} presets) lives in
-# the engine's own tests plus `property_scenarios` — generated byzantine
-# campaigns (every probe closes exactly or panics fail-closed, no third
-# outcome), KS exactness of the decoded error law under hostile fleets,
-# and the scheduled-cohort ≡ policy-sampled coordinator identity.
-# Redundant with the full `cargo test -q` above by construction — a
-# failure here names the scenario contract directly.
-echo "== scenario-engine suite (3 seeds x {calm, churn, byzantine}) =="
+# scenario matrix (3 seeds × {calm, churn, straggler, byzantine} presets)
+# lives in the engine's own tests plus `property_scenarios` — generated
+# byzantine campaigns (every probe closes exactly or panics fail-closed,
+# no third outcome), the straggler preset isolating exactly the
+# deadline-conversion path the async coordinator mirrors, KS exactness of
+# the decoded error law under hostile fleets, and the scheduled-cohort ≡
+# policy-sampled coordinator identity. Redundant with the full
+# `cargo test -q` above by construction — a failure here names the
+# scenario contract directly.
+echo "== scenario-engine suite (3 seeds x {calm, churn, straggler, byzantine}) =="
 cargo test -q scenario
 
 # Snapshot/resume suite: byte round-trip losslessness of the versioned
@@ -100,10 +117,15 @@ cargo test -q snapshot
 
 # Bench smoke: every bench binary must still run end to end. BENCH_QUICK=1
 # shrinks warmup/measure so the three binaries finish in seconds;
-# bench_coordinator writes its artifact to target/BENCH_quick.json in this
-# mode (never the committed BENCH_N.json trajectory — quick numbers are
-# not trajectory points). bench_diff.sh then schema-checks the artifact;
-# it skips the regression comparison for quick artifacts by design.
+# bench_coordinator's smoke includes the coordinator/rounds_async series
+# (scaled down from the million-client headline) WITH its O(ring·W·c)
+# peak-accumulator assertion, so a scheduler or memory-model break fails
+# the smoke, not just the nightly full run. bench_coordinator writes its
+# artifact to target/BENCH_quick.json in this mode (never the committed
+# BENCH_N.json trajectory — quick numbers are not trajectory points).
+# bench_diff.sh then schema-checks the artifact; quick artifacts skip the
+# regression comparison, and as baselines they are walked PAST to the most
+# recent comparable trajectory point.
 echo "== bench smoke (BENCH_QUICK=1) =="
 BENCH_QUICK=1 cargo bench --bench bench_mechanisms
 BENCH_QUICK=1 cargo bench --bench bench_coordinator
