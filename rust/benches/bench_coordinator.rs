@@ -5,31 +5,38 @@
 //! Worker threads are pinned to 4 by default so numbers are comparable
 //! across machines; `BENCH_THREADS` overrides the pin and the effective
 //! value is recorded in the emitted JSON. A full run writes
-//! `BENCH_8.json` at the repo root (the trajectory artifact compared by
+//! `BENCH_9.json` at the repo root (the trajectory artifact compared by
 //! `scripts/bench_diff.sh`); `BENCH_QUICK=1` smoke runs write to
 //! `target/BENCH_quick.json` instead so a quick pass can never overwrite
 //! a recorded trajectory point.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
+use exact_comp::apps::driver::CoordinatorOpts;
+use exact_comp::apps::langevin::{qlsd_star_coordinator, GaussianPosterior, LangevinOpts};
+use exact_comp::apps::mean_estimation::{evaluate, evaluate_coordinator, gen_data, DataKind};
+use exact_comp::apps::smoothing::{drs_coordinator, L1Problem, SmoothingOpts};
 use exact_comp::coordinator::deadline::DeadlinePolicy;
 use exact_comp::coordinator::runtime::{
-    run_round, run_round_mech, run_rounds_mech, run_rounds_mech_async,
-    run_rounds_mech_chunked, run_rounds_mech_sampled, run_rounds_mech_with_dropouts,
-    AsyncRunConfig, ClientPool,
+    run_round, run_round_mech, run_rounds_encoded_chunked, run_rounds_mech,
+    run_rounds_mech_async, run_rounds_mech_chunked, run_rounds_mech_sampled,
+    run_rounds_mech_with_dropouts, AsyncRunConfig, ClientPool,
 };
 use exact_comp::coordinator::sampling::SamplingPolicy;
-use exact_comp::mechanisms::pipeline::{ClientEncoder, Plain, SecAgg, SharedRound};
+use exact_comp::mechanisms::pipeline::{ClientEncoder, LocalCompute, Plain, SecAgg, SharedRound};
+use exact_comp::mechanisms::traits::MeanMechanism;
 use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
 use exact_comp::quantizer::round_half_up;
 use exact_comp::secagg::{aggregate_masked, mask_descriptions, pair_seed, SecAggParams};
 use exact_comp::transforms::hadamard::{fwht, fwht_threaded, RandomizedRotation};
-use exact_comp::util::benchkit::{bench_threads, black_box, Suite};
+use exact_comp::util::benchkit::{bench_threads, black_box, Measurement, Suite};
 use exact_comp::util::rng::{fill_below_coords, fill_u01_coords, Rng};
 use exact_comp::util::stats::ks_test;
 
 /// Bump per PR: the trajectory artifact this bench emits on a full run.
-const TRAJECTORY_FILE: &str = "BENCH_8.json";
+const TRAJECTORY_FILE: &str = "BENCH_9.json";
 
 fn main() {
     let mut s = Suite::from_env();
@@ -439,15 +446,19 @@ fn main() {
 
         // mask expansion: the SecAgg pair-leg kernel (one below(m) per
         // coordinate) — the acceptance pair for the ≥4× batched speedup
+        // every kernels/* series carries bytes-per-iteration (d f64/u64
+        // lanes × 8) and its core count, so the trajectory's normalized
+        // bytes/sec/core line is machine- and thread-count-comparable
+        let dbytes = Some((d * 8) as u64);
         let mut masks = vec![0u64; d];
-        s.bench_elements(&format!("kernels/mask_expand_scalar(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/mask_expand_scalar(d={d})"), Some(d as u64), dbytes, 1, || {
             for (j, o) in masks.iter_mut().enumerate() {
                 *o = Rng::derive_coord(black_box(ps), j as u64).below(m);
             }
             black_box(&masks);
         });
         let scalar_mask = s.results.last().unwrap().throughput_mps();
-        s.bench_elements(&format!("kernels/mask_expand_batched(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/mask_expand_batched(d={d})"), Some(d as u64), dbytes, 1, || {
             fill_below_coords(black_box(ps), 0, m, &mut masks);
             black_box(&masks);
         });
@@ -459,13 +470,13 @@ fn main() {
         // dither fill: one u01 per coordinate stream (the IH/aggregate
         // encode and survivor-decode kernel)
         let mut dithers = vec![0.0f64; d];
-        s.bench_elements(&format!("kernels/dither_fill_scalar(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/dither_fill_scalar(d={d})"), Some(d as u64), dbytes, 1, || {
             for (j, o) in dithers.iter_mut().enumerate() {
                 *o = Rng::derive_coord(black_box(fam), j as u64).u01();
             }
             black_box(&dithers);
         });
-        s.bench_elements(&format!("kernels/dither_fill_batched(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/dither_fill_batched(d={d})"), Some(d as u64), dbytes, 1, || {
             fill_u01_coords(black_box(fam), 0, &mut dithers);
             black_box(&dithers);
         });
@@ -473,12 +484,14 @@ fn main() {
         // FWHT: blocked serial vs top-levels-threaded
         let mut rng = Rng::new(9);
         let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-        s.bench_elements(&format!("kernels/fwht(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/fwht(d={d})"), Some(d as u64), dbytes, 1, || {
             fwht(black_box(&mut v));
         });
-        s.bench_elements(
+        s.bench_throughput(
             &format!("kernels/fwht_threaded(d={d},threads={threads})"),
             Some(d as u64),
+            dbytes,
+            threads,
             || {
                 fwht_threaded(black_box(&mut v), threads);
             },
@@ -492,15 +505,203 @@ fn main() {
         let mech = IrwinHallMechanism::new(0.5, 4.0);
         let w = mech.step(n);
         let x: Vec<f64> = (0..d).map(|j| ((j % 97) as f64 - 48.0) / 24.0).collect();
-        s.bench_elements(&format!("kernels/quant_encode_scalar(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/quant_encode_scalar(d={d})"), Some(d as u64), dbytes, 1, || {
             let dither = round.client_coord_stream(3);
             let ms: Vec<i64> =
                 (0..d).map(|j| round_half_up(x[j] / w + dither.at(j).u01())).collect();
             black_box(ms);
         });
-        s.bench_elements(&format!("kernels/quant_encode_batched(d={d})"), Some(d as u64), || {
+        s.bench_throughput(&format!("kernels/quant_encode_batched(d={d})"), Some(d as u64), dbytes, 1, || {
             black_box(mech.encode(3, &x, &round));
         });
+    }
+
+    // apps-on-the-coordinator series: the paper's workloads end-to-end
+    // through the chunk-streamed runner (pool spawn + windowed sessions +
+    // decode included — these are whole-app numbers, not kernel numbers)
+    {
+        let n = 32usize;
+        let d = 256usize;
+        let runs = 4usize;
+        let xs = gen_data(DataKind::BoxUniform { c: 2.0 }, n, d, 0xA9);
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let bytes = Some((runs * n * d * 8) as u64);
+        s.bench_throughput(
+            &format!("apps/mean_eval_monolith(n={n},d={d},runs={runs})"),
+            Some((runs * n * d) as u64),
+            bytes,
+            1,
+            || {
+                black_box(evaluate(&mech, &xs, runs, 0xE0));
+            },
+        );
+        s.bench_throughput(
+            &format!("apps/mean_eval_coordinator(n={n},d={d},runs={runs},c=64)"),
+            Some((runs * n * d) as u64),
+            bytes,
+            threads,
+            || {
+                black_box(evaluate_coordinator(
+                    &mech,
+                    &xs,
+                    runs,
+                    0xE0,
+                    CoordinatorOpts {
+                        chunk: 64,
+                        threads: Some(threads),
+                        ..CoordinatorOpts::default()
+                    },
+                ));
+            },
+        );
+
+        let posterior = GaussianPosterior::generate(8, 64, 10, 0xA10);
+        let lopts = LangevinOpts {
+            gamma: 5e-4,
+            iters: 20,
+            burn_in: 10,
+            seed: 0xA11,
+            discount_compression_noise: true,
+        };
+        let agg = AggregateGaussian::new(1e-3, 4.0);
+        s.bench_throughput(
+            "apps/qlsd_coordinator(n=8,d=64,iters=20,c=16)",
+            Some((20 * 8 * 64) as u64),
+            Some((20 * 8 * 64 * 8) as u64),
+            threads,
+            || {
+                black_box(qlsd_star_coordinator(
+                    &posterior,
+                    &agg,
+                    lopts,
+                    CoordinatorOpts {
+                        chunk: 16,
+                        threads: Some(threads),
+                        ..CoordinatorOpts::default()
+                    },
+                ));
+            },
+        );
+
+        let l1 = L1Problem::generate(60, 10, 6, 0xA12);
+        let sopts = SmoothingOpts { iters: 20, lr: 0.25, sigma: 0.05, m_samples: 2, seed: 0xA13 };
+        s.bench_throughput(
+            "apps/drs_coordinator(n=6,d=10,iters=20)",
+            Some((20 * 2 * 6 * 10) as u64),
+            Some((20 * 2 * 6 * 10 * 8) as u64),
+            threads,
+            || {
+                black_box(drs_coordinator(
+                    &l1,
+                    &agg,
+                    sopts,
+                    CoordinatorOpts { threads: Some(threads), ..CoordinatorOpts::default() },
+                ));
+            },
+        );
+    }
+
+    // model-scale streamed-compute demo: a d ≥ 10⁶ model over an n = 10⁴
+    // fleet with a seed-sampled cohort, every client producing its vector
+    // per coordinate range — the acceptance run for the chunk-ranged
+    // LocalCompute tentpole. Two invariants are asserted hot:
+    //   1. no whole-d client vector is ever materialized (the compute's
+    //      local_update panics, and the max range seen stays ≤ c);
+    //   2. peak accumulator bytes stay within the O(shards·W·c) budget —
+    //      the orchestrator never holds O(d), let alone O(n·d).
+    {
+        let full = !Suite::quick_mode();
+        let d = if full { 1usize << 20 } else { 1usize << 16 };
+        let n = if full { 10_000usize } else { 1_000 };
+        let k = if full { 64usize } else { 16 };
+        let chunk = 4096usize.min(d);
+        let w = 1usize;
+
+        struct BigModelCompute {
+            dim: usize,
+            max_range: AtomicUsize,
+        }
+        impl LocalCompute for BigModelCompute {
+            fn local_update(&self, _client: usize, _round: u64, _state: &[f64]) -> Vec<f64> {
+                panic!("model-scale demo: a whole-d client vector was materialized");
+            }
+            fn compute_chunk(
+                &self,
+                client: usize,
+                _round: u64,
+                _state: &[f64],
+                range: std::ops::Range<usize>,
+                out: &mut [f64],
+            ) {
+                self.max_range.fetch_max(range.len(), Ordering::Relaxed);
+                for (o, j) in out.iter_mut().zip(range) {
+                    *o = ((client * 31 + j) % 255) as f64 / 64.0 - 2.0;
+                }
+            }
+            fn dim_hint(&self, _state: &[f64]) -> usize {
+                self.dim
+            }
+            fn streams_chunks(&self) -> bool {
+                true
+            }
+        }
+
+        let compute = Arc::new(BigModelCompute { dim: d, max_range: AtomicUsize::new(0) });
+        let pool = ClientPool::spawn_with_threads(n, compute.clone(), Some(threads));
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let parts = mech.pipeline_parts().expect("IH exposes pipeline parts");
+        let policy = SamplingPolicy::FixedSize { k };
+        let none: Vec<Vec<usize>> = vec![Vec::new(); w];
+        let t0 = Instant::now();
+        let (reps, stats) = run_rounds_encoded_chunked(
+            &pool,
+            parts.encoder.clone(),
+            parts.transport.clone(),
+            parts.decoder.as_ref(),
+            0,
+            w,
+            &[],
+            0xB16,
+            &policy,
+            &none,
+            None,
+            d,
+            chunk,
+        );
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        assert_eq!(reps.len(), w);
+        assert_eq!(reps[0].cohort, k, "FixedSize cohort size");
+        assert_eq!(reps[0].output.estimate.len(), d);
+        let max_range = compute.max_range.load(Ordering::Relaxed);
+        assert!(
+            max_range <= chunk,
+            "streamed compute saw a {max_range}-wide range (> c = {chunk})"
+        );
+        let budget = 3 * (threads + 1) * w * chunk * 8;
+        assert!(
+            stats.peak_accumulator_bytes <= budget,
+            "model-scale peak {} exceeds O(shards·W·c) budget {budget} at d = {d}",
+            stats.peak_accumulator_bytes
+        );
+        println!(
+            "  apps/model_scale_streamed(n={n},d={d},k={k},c={chunk}): {:.2}s, \
+             peak accumulator bytes = {} (budget {budget}), max range = {max_range}",
+            elapsed_ns / 1e9,
+            stats.peak_accumulator_bytes
+        );
+        // one-shot measurement: too heavy to loop, still worth a
+        // trajectory point (mean = the single run)
+        s.results.push(Measurement {
+            name: format!("apps/model_scale_streamed(n={n},d={d},k={k},c={chunk})"),
+            iters: 1,
+            mean_ns: elapsed_ns,
+            p50_ns: elapsed_ns,
+            p95_ns: elapsed_ns,
+            elements: Some((k * d) as u64),
+            bytes: Some((k * d * 8) as u64),
+            cores: threads,
+        });
+        black_box(reps);
     }
 
     s.report();

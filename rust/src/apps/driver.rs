@@ -1,0 +1,212 @@
+//! Apps-on-the-coordinator driver: run any [`MeanMechanism`] workload
+//! through the coordinator's chunk-streamed or async runners instead of
+//! the monolithic in-process `aggregate()`.
+//!
+//! Every app in this module family (mean estimation, FedSGD, QLSD*
+//! Langevin, randomized smoothing) produces per-round client vectors from
+//! a [`LocalCompute`] and needs the same plumbing: explode the mechanism
+//! into its pipeline stages ([`MeanMechanism::pipeline_parts`]), spawn a
+//! [`ClientPool`] over the compute, clamp the chunk size to what the
+//! mechanism's transport supports, split long runs into `MAX_WINDOW`-sized
+//! session windows, and thread sampling policy / dropout schedules /
+//! ledger accounting through. [`AppCoordinator`] packages exactly that.
+//!
+//! Seed contract (the apps-on-coordinator ≡ apps-on-`aggregate()`
+//! invariant): round k's shared randomness is
+//! `derive_domain(root_seed, seed_domain::ROUND, k)` — the same
+//! derivation [`crate::coordinator::runtime`] applies internally — so a
+//! monolithic reference path that calls
+//! `mech.aggregate(&xs, app_round_seed(root_seed, k))` sees bit-identical
+//! estimates and bit accounts at full cohort for every chunk size
+//! (property-tested per app in `rust/tests/property_apps.rs`).
+
+use std::sync::Arc;
+
+use crate::coordinator::runtime::{
+    run_rounds_encoded_async, run_rounds_encoded_chunked, AsyncRunConfig, ClientPool,
+    RoundReport,
+};
+use crate::coordinator::sampling::SamplingPolicy;
+use crate::dp::ledger::PrivacyLedger;
+use crate::mechanisms::pipeline::{LocalCompute, PipelineParts};
+use crate::mechanisms::session::MAX_WINDOW;
+use crate::mechanisms::traits::MeanMechanism;
+use crate::util::rng::{seed_domain, Rng};
+
+/// The round-k shared-randomness seed of an app run — the coordinator's
+/// own `ROUND`-domain derivation, exported so monolithic reference paths
+/// (and the figure sweeps' direct `aggregate()` calls) land on the exact
+/// seed the coordinator will re-derive. This replaces the ad-hoc
+/// `wrapping_add`/`wrapping_mul` seed mixing the apps used before the
+/// seed-format ADR (`docs/determinism.md`) reached this layer.
+pub fn app_round_seed(root_seed: u64, round: u64) -> u64 {
+    Rng::derive_domain(root_seed, seed_domain::ROUND, round)
+}
+
+/// How the driver executes windows.
+#[derive(Clone, Copy, Debug)]
+pub enum RunMode {
+    /// barrier-paced chunk streaming ([`run_rounds_encoded_chunked`])
+    Chunked,
+    /// work-stealing async runner ([`run_rounds_encoded_async`]) with the
+    /// given accumulator-ring depth
+    Async { ring: usize },
+}
+
+/// Driver knobs shared by every app.
+#[derive(Clone, Debug)]
+pub struct CoordinatorOpts {
+    /// chunk size c of the streaming plan; 0 means whole-d (one chunk).
+    /// Clamped to d — and forced to d when the mechanism's transport is
+    /// not chunk-capable (per-client [`crate::mechanisms::Unicast`]
+    /// delivery has no coordinate offsets).
+    pub chunk: usize,
+    /// worker/shard threads; `None` = available parallelism
+    pub threads: Option<usize>,
+    pub mode: RunMode,
+    /// per-round cohort sampling (client-side derived, no communication)
+    pub policy: SamplingPolicy,
+}
+
+impl Default for CoordinatorOpts {
+    fn default() -> Self {
+        Self { chunk: 0, threads: None, mode: RunMode::Chunked, policy: SamplingPolicy::Full }
+    }
+}
+
+/// One app workload wired onto the coordinator: a client pool over the
+/// app's [`LocalCompute`] plus the mechanism's pipeline stages.
+pub struct AppCoordinator {
+    pool: ClientPool,
+    parts: PipelineParts,
+    opts: CoordinatorOpts,
+    dim: usize,
+    chunk: usize,
+    /// accumulator high-water mark (bytes) across every window run so far
+    pub peak_accumulator_bytes: usize,
+}
+
+impl AppCoordinator {
+    /// Wire `mech` and `compute` together for an `n_clients` fleet and a
+    /// d-dimensional model. Panics for mechanisms that do not expose
+    /// pipeline parts (every mechanism in this crate does).
+    pub fn new(
+        mech: &dyn MeanMechanism,
+        compute: Arc<dyn LocalCompute>,
+        n_clients: usize,
+        dim: usize,
+        opts: CoordinatorOpts,
+    ) -> Self {
+        let parts = mech.pipeline_parts().unwrap_or_else(|| {
+            panic!(
+                "mechanism {} exposes no pipeline parts — it cannot run on the coordinator",
+                mech.name()
+            )
+        });
+        let requested = if opts.chunk == 0 { dim } else { opts.chunk.min(dim) };
+        // per-client transports carry no coordinate offsets: single-chunk
+        // plans only (the encode side still goes through the identical
+        // chunk cursor, at c = d)
+        let chunk = if parts.transport.chunk_capable() { requested } else { dim };
+        let pool = ClientPool::spawn_with_threads(n_clients, compute, opts.threads);
+        Self { pool, parts, opts, dim, chunk, peak_accumulator_bytes: 0 }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.pool.n_clients
+    }
+
+    /// The effective chunk size after transport clamping.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Run ONE session window (≤ [`MAX_WINDOW`] rounds) with explicit
+    /// per-round dropout schedules and optional ledger accounting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_window(
+        &mut self,
+        start_round: u64,
+        window: usize,
+        state: &[f64],
+        root_seed: u64,
+        dropouts: &[Vec<usize>],
+        ledger: Option<&mut PrivacyLedger>,
+    ) -> Vec<RoundReport> {
+        match self.opts.mode {
+            RunMode::Chunked => {
+                let (reports, stats) = run_rounds_encoded_chunked(
+                    &self.pool,
+                    self.parts.encoder.clone(),
+                    self.parts.transport.clone(),
+                    self.parts.decoder.as_ref(),
+                    start_round,
+                    window,
+                    state,
+                    root_seed,
+                    &self.opts.policy,
+                    dropouts,
+                    ledger,
+                    self.dim,
+                    self.chunk,
+                );
+                self.peak_accumulator_bytes =
+                    self.peak_accumulator_bytes.max(stats.peak_accumulator_bytes);
+                reports
+            }
+            RunMode::Async { ring } => {
+                let mut cfg = AsyncRunConfig::new(self.dim, self.chunk).with_ring(ring);
+                if let Some(t) = self.opts.threads {
+                    cfg = cfg.with_workers(t);
+                }
+                let (reports, stats) = run_rounds_encoded_async(
+                    &self.pool,
+                    self.parts.encoder.clone(),
+                    self.parts.transport.clone(),
+                    self.parts.decoder.as_ref(),
+                    start_round,
+                    window,
+                    state,
+                    root_seed,
+                    &self.opts.policy,
+                    dropouts,
+                    ledger,
+                    &cfg,
+                );
+                self.peak_accumulator_bytes =
+                    self.peak_accumulator_bytes.max(stats.peak_accumulator_bytes);
+                reports
+            }
+        }
+    }
+
+    /// Run `n_rounds` dropout-free rounds starting at `start_round`,
+    /// split into [`MAX_WINDOW`]-sized session windows. Round ids — and
+    /// hence every round's shared-randomness seed
+    /// ([`app_round_seed`]) — are absolute, so the window split is
+    /// invisible to the estimates.
+    pub fn run_rounds(
+        &mut self,
+        start_round: u64,
+        n_rounds: usize,
+        state: &[f64],
+        root_seed: u64,
+    ) -> Vec<RoundReport> {
+        let mut reports = Vec::with_capacity(n_rounds);
+        let mut done = 0usize;
+        while done < n_rounds {
+            let w = (n_rounds - done).min(MAX_WINDOW);
+            let none: Vec<Vec<usize>> = vec![Vec::new(); w];
+            reports.extend(self.run_window(
+                start_round + done as u64,
+                w,
+                state,
+                root_seed,
+                &none,
+                None,
+            ));
+            done += w;
+        }
+        reports
+    }
+}

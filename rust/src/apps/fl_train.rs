@@ -6,10 +6,21 @@
 //! gradients are per-coordinate clipped and aggregated through a
 //! [`MeanMechanism`] (Layer 3 — the paper's contribution), and the server
 //! applies the SGD step. Python never runs here.
+//!
+//! Aggregation runs on the coordinator: the clipped gradients sit behind a
+//! [`SliceCompute`] and each round is a one-round window of
+//! [`crate::coordinator::runtime::run_rounds_encoded_chunked`] via
+//! [`AppCoordinator`], with round `r`'s shared randomness derived as
+//! `derive_domain(seed, ROUND, r)` — bit-identical to calling
+//! `mech.aggregate(&grads, app_round_seed(seed, r))` directly.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::apps::driver::{AppCoordinator, CoordinatorOpts};
 use crate::coordinator::metrics::Metrics;
+use crate::mechanisms::pipeline::SliceCompute;
 use crate::mechanisms::traits::MeanMechanism;
 use crate::mechanisms::{AggregateGaussian, IndividualGaussian, IrwinHallMechanism, LayeredVariant};
 use crate::runtime::Engine;
@@ -40,6 +51,9 @@ pub struct TrainOpts {
     pub sigma: f64,
     pub eval_every: usize,
     pub seed: u64,
+    /// coordinator streaming chunk size (0 = whole parameter vector; the
+    /// driver clamps to d, and to d for non-chunkable transports)
+    pub chunk: usize,
 }
 
 impl Default for TrainOpts {
@@ -53,6 +67,7 @@ impl Default for TrainOpts {
             sigma: 1e-3,
             eval_every: 20,
             seed: 0xF1,
+            chunk: 0,
         }
     }
 }
@@ -127,6 +142,20 @@ pub fn train(engine: &Engine, data: &FlDataset, opts: TrainOpts) -> Result<Metri
     let mut rng = Rng::new(opts.seed);
     let mut params: Vec<f32> = (0..p).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect();
 
+    // The aggregation fleet: clipped gradients live behind a SliceCompute
+    // that is re-pointed (`set`) each round; the pool and pipeline stages
+    // spawn once for the whole run.
+    let slices = Arc::new(SliceCompute::new(&vec![vec![0.0f64; p]; opts.n_clients]));
+    let mut coord = mech.as_ref().map(|m| {
+        AppCoordinator::new(
+            m.as_ref(),
+            slices.clone() as Arc<dyn crate::mechanisms::pipeline::LocalCompute>,
+            opts.n_clients,
+            p,
+            CoordinatorOpts { chunk: opts.chunk, ..CoordinatorOpts::default() },
+        )
+    });
+
     for round in 0..opts.rounds {
         // clients: PJRT gradient computation (L2/L1 artifacts)
         let mut grads: Vec<Vec<f64>> = Vec::with_capacity(opts.n_clients);
@@ -143,13 +172,15 @@ pub fn train(engine: &Engine, data: &FlDataset, opts: TrainOpts) -> Result<Metri
         }
         let train_loss = loss_sum / opts.n_clients as f64;
 
-        // server: compressed aggregation + SGD step
-        let (update, bits_pc) = match &mech {
-            Some(mech) => {
-                let seed = opts.seed ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-                let out = mech.aggregate(&grads, seed);
-                let bits = out.bits.variable_per_client(opts.n_clients);
-                (out.estimate, bits)
+        // server: compressed aggregation on the coordinator + SGD step
+        let (update, bits_pc) = match &mut coord {
+            Some(coord) => {
+                slices.set(grads);
+                let state: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+                let mut reports = coord.run_rounds(round as u64, 1, &state, opts.seed);
+                let rep = reports.pop().expect("one-round window yields one report");
+                let bits = rep.output.bits.variable_per_client(opts.n_clients);
+                (rep.output.estimate, bits)
             }
             None => {
                 (crate::mechanisms::traits::true_mean(&grads), 64.0 * p as f64)

@@ -16,8 +16,13 @@
 //! covariance, so sampler quality is the MSE between the empirical
 //! post-burn-in mean and the exact posterior mean.
 
+use std::sync::Arc;
+
+use crate::apps::driver::{app_round_seed, AppCoordinator, CoordinatorOpts};
 use crate::baselines::{CompressedVec, VectorCompressor};
-use crate::util::rng::Rng;
+use crate::mechanisms::pipeline::LocalCompute;
+use crate::mechanisms::traits::MeanMechanism;
+use crate::util::rng::{seed_domain, Rng};
 
 /// The synthetic Gaussian FL problem of App. C.2.2.
 #[derive(Clone, Debug)]
@@ -223,6 +228,211 @@ pub enum Fig10Arm {
     QlsdUnbiased(u32),
     /// shifted layered quantizer (exact Gaussian error, discounted)
     QlsdMs(u32),
+}
+
+// ---------------------------------------------------------------------------
+// QLSD* on MeanMechanism aggregation — monolithic reference and the
+// coordinator-streamed production path, bit-identical by construction.
+// ---------------------------------------------------------------------------
+
+/// Shared QLSD* state-update arithmetic for the [`MeanMechanism`]-based
+/// paths: both [`qlsd_star_mech`] and [`qlsd_star_coordinator`] feed it
+/// the aggregated mean of H_i(θ) per iteration, so any divergence between
+/// them is an aggregation difference, never a chain-update difference.
+struct ChainAccumulator {
+    theta: Vec<f64>,
+    mean_acc: Vec<f64>,
+    sq_acc: Vec<f64>,
+    count: usize,
+    bits_total: f64,
+    trace: Vec<(usize, f64)>,
+}
+
+impl ChainAccumulator {
+    fn new(d: usize) -> Self {
+        Self {
+            theta: vec![0.0f64; d],
+            mean_acc: vec![0.0f64; d],
+            sq_acc: vec![0.0f64; d],
+            count: 0,
+            bits_total: 0.0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// One chain step: θ ← θ − γ·n·est + β·Z_k, with Z_k drawn from the
+    /// `APP_ROUND`-domain stream of iteration k (independent of the
+    /// aggregation's `ROUND`-domain randomness, and identical across the
+    /// monolithic and coordinator paths by derivation).
+    fn step(
+        &mut self,
+        k: usize,
+        est_mean: &[f64],
+        n_clients: usize,
+        opts: &LangevinOpts,
+        beta: f64,
+        posterior_mean: &[f64],
+    ) {
+        let d = self.theta.len();
+        let mut zrng = Rng::new(Rng::derive_domain(opts.seed, seed_domain::APP_ROUND, k as u64));
+        for j in 0..d {
+            self.theta[j] -= opts.gamma * n_clients as f64 * est_mean[j];
+            self.theta[j] += beta * zrng.normal();
+        }
+        if k >= opts.burn_in {
+            for j in 0..d {
+                self.mean_acc[j] += self.theta[j];
+                self.sq_acc[j] += self.theta[j] * self.theta[j];
+            }
+            self.count += 1;
+            if self.count % 1000 == 0 {
+                self.trace.push((k, self.mse(posterior_mean)));
+            }
+        }
+    }
+
+    fn mse(&self, posterior_mean: &[f64]) -> f64 {
+        let d = self.theta.len();
+        self.mean_acc
+            .iter()
+            .zip(posterior_mean)
+            .map(|(a, p)| (a / self.count as f64 - p).powi(2))
+            .sum::<f64>()
+            / d as f64
+    }
+
+    fn finish(self, n_clients: usize, posterior_mean: &[f64]) -> LangevinResult {
+        assert!(self.count > 0, "burn_in >= iters");
+        let d = self.theta.len();
+        let mse = self.mse(posterior_mean);
+        let chain_var = (0..d)
+            .map(|j| {
+                let m = self.mean_acc[j] / self.count as f64;
+                self.sq_acc[j] / self.count as f64 - m * m
+            })
+            .sum::<f64>()
+            / d as f64;
+        LangevinResult {
+            mse,
+            bits_per_client: self.bits_total / n_clients as f64,
+            trace: self.trace,
+            chain_var,
+        }
+    }
+}
+
+/// β for one iteration: the QLSD* discount applied to a mechanism whose
+/// aggregation error is exactly Gaussian. The mechanism's per-coordinate
+/// noise sd σ is on the *mean* estimate; the summed gradient g = n·Y
+/// carries variance n²σ², so β² = max(0, 2γ − γ²·n²·σ²). Mechanisms whose
+/// error is not Gaussian (no H3 guarantee) get no discount.
+fn beta_for_mech(mech: &dyn MeanMechanism, n_clients: usize, opts: &LangevinOpts) -> f64 {
+    let beta_sq = if opts.discount_compression_noise && mech.gaussian_noise() {
+        let sd_sum = n_clients as f64 * mech.noise_sd();
+        (2.0 * opts.gamma - opts.gamma * opts.gamma * sd_sum * sd_sum).max(0.0)
+    } else {
+        2.0 * opts.gamma
+    };
+    beta_sq.sqrt()
+}
+
+/// QLSD* where the per-iteration aggregation Σ_i 𝒞(H_i(θ)) runs through a
+/// [`MeanMechanism`] round (monolithic `aggregate()`, iteration k = round
+/// k with shared seed `derive_domain(seed, ROUND, k)`). This is the
+/// in-process reference for [`qlsd_star_coordinator`]; the property suite
+/// pins the two bit-identical.
+pub fn qlsd_star_mech(
+    problem: &GaussianPosterior,
+    mech: &dyn MeanMechanism,
+    opts: LangevinOpts,
+) -> LangevinResult {
+    let d = problem.dim;
+    let n = problem.n_clients;
+    let theta_star = problem.posterior_mean.clone();
+    let mut acc = ChainAccumulator::new(d);
+    let beta = beta_for_mech(mech, n, &opts);
+    for k in 0..opts.iters {
+        let hs: Vec<Vec<f64>> =
+            (0..n).map(|i| problem.h_client(i, &acc.theta, &theta_star)).collect();
+        let out = mech.aggregate(&hs, app_round_seed(opts.seed, k as u64));
+        acc.bits_total += out.bits.variable_total;
+        let est = out.estimate;
+        acc.step(k, &est, n, &opts, beta, &problem.posterior_mean);
+    }
+    acc.finish(n, &problem.posterior_mean)
+}
+
+/// The streaming producer for QLSD* on the coordinator: client i's
+/// iteration-k vector is H_i(θ_k) = N_i·(θ_k − θ*), computed **per
+/// coordinate range** directly from the broadcast state — no client ever
+/// materializes a whole-d gradient, which is what removes the last
+/// O(n·d) client-side residue from the Langevin app.
+pub struct HCompute {
+    n_obs: f64,
+    theta_star: Vec<f64>,
+    streams: bool,
+}
+
+impl HCompute {
+    pub fn new(problem: &GaussianPosterior, streams: bool) -> Self {
+        Self {
+            n_obs: problem.n_obs as f64,
+            theta_star: problem.posterior_mean.clone(),
+            streams,
+        }
+    }
+}
+
+impl LocalCompute for HCompute {
+    fn compute_chunk(
+        &self,
+        _client: usize,
+        _round: u64,
+        state: &[f64],
+        range: std::ops::Range<usize>,
+        out: &mut [f64],
+    ) {
+        for (o, j) in out.iter_mut().zip(range) {
+            *o = self.n_obs * (state[j] - self.theta_star[j]);
+        }
+    }
+
+    fn streams_chunks(&self) -> bool {
+        self.streams
+    }
+}
+
+/// [`qlsd_star_mech`] rewired onto the coordinator: each iteration is a
+/// one-round chunk-streamed window over an [`HCompute`] fleet (θ_k is the
+/// broadcast state), aggregated through the mechanism's pipeline stages.
+/// Bit-identical to [`qlsd_star_mech`] for every chunk size — at partial
+/// chunks the clients stream O(c) slices straight into
+/// `encode_chunk_slice` when the mechanism's encoder allows it.
+pub fn qlsd_star_coordinator(
+    problem: &GaussianPosterior,
+    mech: &dyn MeanMechanism,
+    opts: LangevinOpts,
+    copts: CoordinatorOpts,
+) -> LangevinResult {
+    let d = problem.dim;
+    let n = problem.n_clients;
+    let streams = mech
+        .pipeline_parts()
+        .map_or(false, |p| p.encoder.slice_chunkable() && copts.chunk != 0);
+    let compute = Arc::new(HCompute::new(problem, streams));
+    let mut coord = AppCoordinator::new(mech, compute, n, d, copts);
+    let mut acc = ChainAccumulator::new(d);
+    let beta = beta_for_mech(mech, n, &opts);
+    for k in 0..opts.iters {
+        // θ is sequential: every iteration depends on the previous round's
+        // estimate, so the window is one round wide by construction.
+        let mut reports = coord.run_rounds(k as u64, 1, &acc.theta, opts.seed);
+        let rep = reports.pop().expect("one-round window yields one report");
+        acc.bits_total += rep.output.bits.variable_total;
+        let est = rep.output.estimate;
+        acc.step(k, &est, n, &opts, beta, &problem.posterior_mean);
+    }
+    acc.finish(n, &problem.posterior_mean)
 }
 
 #[cfg(test)]

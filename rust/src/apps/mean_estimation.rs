@@ -1,6 +1,19 @@
 //! Distributed mean-estimation experiment harness: the workload generators
 //! and MSE/bits evaluation behind Figures 5–9.
+//!
+//! Two evaluation paths, bit-identical at full cohort:
+//! [`evaluate`] runs the monolithic [`MeanMechanism::aggregate`] in
+//! process; [`evaluate_coordinator`] runs the same rounds through the
+//! chunk-streamed coordinator ([`crate::apps::driver::AppCoordinator`])
+//! with the client dataset held behind a
+//! [`crate::mechanisms::pipeline::SliceCompute`] — each simulated client
+//! "computes" its row per coordinate range, so no whole-(n×d) residue
+//! crosses the orchestrator.
 
+use std::sync::Arc;
+
+use crate::apps::driver::{app_round_seed, AppCoordinator, CoordinatorOpts};
+use crate::mechanisms::pipeline::SliceCompute;
 use crate::mechanisms::traits::{true_mean, MeanMechanism};
 use crate::util::rng::Rng;
 use crate::util::stats::{l2_norm, OnlineStats};
@@ -69,7 +82,10 @@ pub fn evaluate(
     let mut bits_f = OnlineStats::new();
     let mut any_fixed = true;
     for r in 0..runs {
-        let out = mech.aggregate(xs, seed0.wrapping_add(r as u64).wrapping_mul(0x9E37_79B9));
+        // run r IS round r of a coordinator session: same ROUND-domain
+        // seed derivation, so evaluate() ≡ evaluate_coordinator() bit
+        // for bit at full cohort.
+        let out = mech.aggregate(xs, app_round_seed(seed0, r as u64));
         // squared l2 error of the d-dim estimate (the papers' MSE)
         let sq: f64 = out
             .estimate
@@ -90,6 +106,77 @@ pub fn evaluate(
         bits_var_per_client: bits_v.mean(),
         bits_fixed_per_client: (any_fixed && bits_f.count() > 0).then(|| bits_f.mean()),
         runs,
+    }
+}
+
+/// [`evaluate`], rewired onto the coordinator: the same `runs` rounds
+/// (round r uses shared seed `derive_domain(seed0, ROUND, r)`), but each
+/// client's vector is pulled per coordinate range from a
+/// [`SliceCompute`] by the chunk-streamed (or async) runner instead of
+/// being handed whole to `aggregate()`. At [`SamplingPolicy::Full`]
+/// cohorts the two paths are bit-identical for every chunk size — the
+/// property suite (`rust/tests/property_apps.rs`) pins this per
+/// mechanism.
+///
+/// Sampled policies are the production shape: rounds whose cohort came up
+/// empty are skipped in the MSE/bits averages (no estimate exists), which
+/// matches how a deployment would treat an empty round.
+///
+/// [`SamplingPolicy::Full`]: crate::coordinator::sampling::SamplingPolicy::Full
+pub fn evaluate_coordinator(
+    mech: &dyn MeanMechanism,
+    xs: &[Vec<f64>],
+    runs: usize,
+    seed0: u64,
+    copts: CoordinatorOpts,
+) -> EvalResult {
+    let n = xs.len();
+    let dim = xs[0].len();
+    let mean = true_mean(xs);
+    // Stream rows when the mechanism's encoder accepts chunk slices;
+    // mechanisms that need the whole client vector (Ddg rotation,
+    // ℓ∞-norm quantizers) get the materialized path, which the runners
+    // select via `streams_chunks()`.
+    let streams =
+        mech.pipeline_parts().map_or(false, |p| p.encoder.slice_chunkable() && copts.chunk != 0);
+    let compute = if streams {
+        Arc::new(SliceCompute::streamed(xs))
+    } else {
+        Arc::new(SliceCompute::new(xs))
+    };
+    let mut coord = AppCoordinator::new(mech, compute, n, dim, copts);
+    let state = vec![0.0f64; dim];
+    let reports = coord.run_rounds(0, runs, &state, seed0);
+
+    let mut mse = OnlineStats::new();
+    let mut bits_v = OnlineStats::new();
+    let mut bits_f = OnlineStats::new();
+    let mut any_fixed = true;
+    for rep in &reports {
+        let cohort = rep.cohort;
+        if cohort == 0 {
+            continue;
+        }
+        let sq: f64 = rep
+            .output
+            .estimate
+            .iter()
+            .zip(&mean)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        mse.push(sq);
+        bits_v.push(rep.output.bits.variable_per_client(cohort));
+        match rep.output.bits.fixed_per_client(cohort) {
+            Some(b) => bits_f.push(b),
+            None => any_fixed = false,
+        }
+    }
+    EvalResult {
+        mse_mean: mse.mean(),
+        mse_sem: mse.sem(),
+        bits_var_per_client: bits_v.mean(),
+        bits_fixed_per_client: (any_fixed && bits_f.count() > 0).then(|| bits_f.mean()),
+        runs: mse.count() as usize,
     }
 }
 

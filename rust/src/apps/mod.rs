@@ -8,8 +8,15 @@
 //!   *is* the smoother (App. D).
 //! * [`fl_train`] — end-to-end FL training through the PJRT runtime with
 //!   compressed + DP aggregation.
+//! * [`driver`] — the apps-on-the-coordinator driver: wires any app's
+//!   [`crate::mechanisms::pipeline::LocalCompute`] and any mechanism's
+//!   pipeline stages onto the chunk-streamed / async coordinator runners,
+//!   bit-identical to the monolithic `aggregate()` path at full cohort.
 
+pub mod driver;
 pub mod mean_estimation;
 pub mod langevin;
 pub mod smoothing;
 pub mod fl_train;
+
+pub use driver::{app_round_seed, AppCoordinator, CoordinatorOpts, RunMode};

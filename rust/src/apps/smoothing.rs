@@ -9,9 +9,14 @@
 //! plays the role of the smoothing perturbation, recovering DRS (Scaman et
 //! al. 2018) with bi-directional compression for free.
 
+use std::sync::Arc;
+
+use crate::apps::driver::{app_round_seed, AppCoordinator, CoordinatorOpts};
 use crate::dist::Gaussian;
+use crate::mechanisms::pipeline::LocalCompute;
+use crate::mechanisms::traits::MeanMechanism;
 use crate::quantizer::{DirectLayered, PointQuantizer};
-use crate::util::rng::Rng;
+use crate::util::rng::{seed_domain, Rng};
 
 /// The distributed L1 regression problem.
 #[derive(Clone, Debug)]
@@ -139,6 +144,128 @@ pub fn drs_compressed(p: &L1Problem, opts: SmoothingOpts) -> Vec<(usize, f64)> {
             }
         }
         // smoothed objective is (L/σ)-smooth: constant step works
+        for (t, gj) in theta.iter_mut().zip(&g) {
+            *t -= opts.lr * gj;
+        }
+        for (a, t) in avg.iter_mut().zip(&theta) {
+            *a = (*a * k as f64 + t) / (k + 1) as f64;
+        }
+        if k % 10 == 0 {
+            out.push((k, p.objective(&avg)));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// DRS on MeanMechanism aggregation — monolithic reference and the
+// coordinator path, bit-identical by construction.
+// ---------------------------------------------------------------------------
+
+/// The broadcast perturbed model of smoothing round `round_id`:
+/// 𝓔(θ) = θ + σξ with ξ re-derived from `(seed, APP_ROUND, round_id)`.
+/// Server and clients both derive it — shipping a seed instead of a
+/// perturbation is exactly how the broadcast compression's shared
+/// randomness works, and it is what lets a coordinator client re-create
+/// the perturbed model locally from the broadcast state alone.
+pub fn perturbed_model(seed: u64, round_id: u64, theta: &[f64], sigma: f64) -> Vec<f64> {
+    let mut rng = Rng::new(Rng::derive_domain(seed, seed_domain::APP_ROUND, round_id));
+    theta.iter().map(|&t| t + sigma * rng.normal()).collect()
+}
+
+/// DRS with the subgradient *aggregation* run through a [`MeanMechanism`]
+/// round: smoothing sample s of step k is aggregation round r = k·m + s
+/// (shared seed `derive_domain(seed, ROUND, r)`), and the perturbed model
+/// of round r comes from [`perturbed_model`]. In-process reference for
+/// [`drs_coordinator`]; the property suite pins the two bit-identical.
+pub fn drs_mech(
+    p: &L1Problem,
+    mech: &dyn MeanMechanism,
+    opts: SmoothingOpts,
+) -> Vec<(usize, f64)> {
+    let d = p.dim();
+    let n = p.n_clients;
+    let mut theta = vec![0.0; d];
+    let mut avg = vec![0.0; d];
+    let mut out = Vec::new();
+    for k in 0..opts.iters {
+        let mut g = vec![0.0; d];
+        for s in 0..opts.m_samples {
+            let r = (k * opts.m_samples + s) as u64;
+            let perturbed = perturbed_model(opts.seed, r, &theta, opts.sigma);
+            let gs: Vec<Vec<f64>> = (0..n).map(|c| p.subgrad_client(c, &perturbed)).collect();
+            let est = mech.aggregate(&gs, app_round_seed(opts.seed, r)).estimate;
+            for (gj, v) in g.iter_mut().zip(&est) {
+                // full subgradient = Σ_clients = n · aggregated mean
+                *gj += n as f64 * v / opts.m_samples as f64;
+            }
+        }
+        for (t, gj) in theta.iter_mut().zip(&g) {
+            *t -= opts.lr * gj;
+        }
+        for (a, t) in avg.iter_mut().zip(&theta) {
+            *a = (*a * k as f64 + t) / (k + 1) as f64;
+        }
+        if k % 10 == 0 {
+            out.push((k, p.objective(&avg)));
+        }
+    }
+    out
+}
+
+/// The coordinator producer for DRS: client c's round-r vector is its
+/// subgradient at the perturbed model of round r, which the client
+/// re-derives locally from the broadcast state θ and the round id (shared
+/// randomness — no perturbed vector crosses the wire). The subgradient
+/// needs the whole perturbed point (each data row spans all of θ), so
+/// this compute materializes per client rather than streaming chunks —
+/// the memory win here is at the *orchestrator* (O(shards·c)
+/// accumulators), not the client.
+pub struct DrsCompute {
+    problem: L1Problem,
+    sigma: f64,
+    root_seed: u64,
+}
+
+impl DrsCompute {
+    pub fn new(problem: &L1Problem, sigma: f64, root_seed: u64) -> Self {
+        Self { problem: problem.clone(), sigma, root_seed }
+    }
+}
+
+impl LocalCompute for DrsCompute {
+    fn local_update(&self, client: usize, round: u64, state: &[f64]) -> Vec<f64> {
+        let perturbed = perturbed_model(self.root_seed, round, state, self.sigma);
+        self.problem.subgrad_client(client, &perturbed)
+    }
+}
+
+/// [`drs_mech`] rewired onto the coordinator: step k's m smoothing
+/// samples are one m-round window (the broadcast state θ_k is constant
+/// across them), each round's subgradients produced by a [`DrsCompute`]
+/// fleet and aggregated through the mechanism's pipeline stages.
+/// Bit-identical to [`drs_mech`].
+pub fn drs_coordinator(
+    p: &L1Problem,
+    mech: &dyn MeanMechanism,
+    opts: SmoothingOpts,
+    copts: CoordinatorOpts,
+) -> Vec<(usize, f64)> {
+    let d = p.dim();
+    let n = p.n_clients;
+    let compute = Arc::new(DrsCompute::new(p, opts.sigma, opts.seed));
+    let mut coord = AppCoordinator::new(mech, compute, n, d, copts);
+    let mut theta = vec![0.0; d];
+    let mut avg = vec![0.0; d];
+    let mut out = Vec::new();
+    for k in 0..opts.iters {
+        let reports = coord.run_rounds((k * opts.m_samples) as u64, opts.m_samples, &theta, opts.seed);
+        let mut g = vec![0.0; d];
+        for rep in &reports {
+            for (gj, v) in g.iter_mut().zip(&rep.output.estimate) {
+                *gj += n as f64 * v / opts.m_samples as f64;
+            }
+        }
         for (t, gj) in theta.iter_mut().zip(&g) {
             *t -= opts.lr * gj;
         }

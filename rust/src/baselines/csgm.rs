@@ -86,6 +86,25 @@ impl ClientEncoder for Csgm {
         range: std::ops::Range<usize>,
         round: &SharedRound,
     ) -> Descriptions {
+        self.encode_chunk_slice(client, &x[range.clone()], range, round)
+    }
+
+    /// Slice-ranged encode — selection and dither are per-coordinate
+    /// streams addressed by the absolute coordinate j, and the data is
+    /// read from the chunk slice (`encode_chunk` is the `&x[range]`
+    /// delegation above).
+    fn slice_chunkable(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_slice(
+        &self,
+        client: usize,
+        x_chunk: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
+        assert_eq!(x_chunk.len(), range.len(), "chunk slice does not match its range");
         let w = self.step();
         // the client touches only ITS OWN per-coordinate streams — O(c)
         // work for the chunk, no cached O(n·d) matrix anywhere
@@ -94,14 +113,15 @@ impl ClientEncoder for Csgm {
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
         let ms: Vec<i64> = range
-            .map(|j| {
+            .zip(x_chunk.iter())
+            .map(|(j, &xj)| {
                 if !select.at(j).bernoulli(self.gamma) {
                     // unselected coordinates transmit nothing; a zero in
                     // the dense vector leaves Σm untouched
                     return 0;
                 }
                 let u = dither.at(j).u01();
-                let m = round_half_up(x[j] / w + u);
+                let m = round_half_up(xj / w + u);
                 bits.add_description(m);
                 fixed_total += self.bits as f64;
                 m

@@ -69,7 +69,7 @@ pub use runtime::{
     run_rounds_encoded_scheduled, run_rounds_encoded_with_dropouts, run_rounds_mech,
     run_rounds_mech_async, run_rounds_mech_chunked, run_rounds_mech_sampled,
     run_rounds_mech_with_dropouts, AsyncRunConfig, AsyncStreamStats, ChunkStreamStats,
-    ClientPool, LocalCompute, RoundReport,
+    ClientPool, LocalCompute, RoundReport, SliceCompute,
 };
 pub use sampling::SamplingPolicy;
 pub use scheduler::{WorkStealPool, WorkerFailure};

@@ -106,28 +106,16 @@ use crate::mechanisms::pipeline::{
     ChunkPlan, ClientEncoder, Payload, ServerDecoder, SharedRound, SurvivorSet, Transport,
     TransportPartial,
 };
+// The client-compute abstraction moved to the pipeline layer (it is the
+// producer side of encode/transport/decode); re-exported here so every
+// existing `coordinator::runtime::LocalCompute` / `coordinator::
+// LocalCompute` import keeps working.
+pub use crate::mechanisms::pipeline::{LocalCompute, SliceCompute};
 use crate::mechanisms::session::{
     derive_session_seed, session_round_transports_sampled, RoundDropouts, TransportSession,
 };
 use crate::mechanisms::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::util::rng::{seed_domain, Rng};
-
-/// Client-local computation: produce this round's vector from the broadcast
-/// global state. Implementations must be deterministic in (round, state)
-/// for reproducible runs.
-pub trait LocalCompute: Send + Sync + 'static {
-    /// `client` is the global client index.
-    fn local_update(&self, client: usize, round: u64, state: &[f64]) -> Vec<f64>;
-}
-
-impl<F> LocalCompute for F
-where
-    F: Fn(usize, u64, &[f64]) -> Vec<f64> + Send + Sync + 'static,
-{
-    fn local_update(&self, client: usize, round: u64, state: &[f64]) -> Vec<f64> {
-        self(client, round, state)
-    }
-}
 
 enum ShardMsg {
     Compute {
@@ -442,6 +430,18 @@ impl ClientPool {
                                 // naming the shard and the cause, exactly
                                 // like the non-chunked path does.
                                 let window = seeds.len();
+                                // a streaming compute skips the window
+                                // materialization entirely — the per-chunk
+                                // loop below pulls O(c) slices straight
+                                // from compute_chunk, so NO whole-d client
+                                // vector is ever allocated; materialized
+                                // computes (the compatibility case) build
+                                // the window vectors once, as before.
+                                // Either path is bit-identical: the
+                                // compute is pure, and slice-capable
+                                // encoders define encode_chunk(x, range)
+                                // as encode_chunk_slice(&x[range], range).
+                                let streams = compute.streams_chunks();
                                 let computed = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(|| {
                                         (0..window)
@@ -451,12 +451,14 @@ impl ClientPool {
                                                     .clone()
                                                     .filter(|&c| active[r][c])
                                                     .map(|c| {
-                                                        (
-                                                            c,
+                                                        let x = if streams {
+                                                            Vec::new()
+                                                        } else {
                                                             compute.local_update(
                                                                 c, round, &state,
-                                                            ),
-                                                        )
+                                                            )
+                                                        };
+                                                        (c, x)
                                                     })
                                                     .collect::<Vec<(usize, Vec<f64>)>>()
                                             })
@@ -500,23 +502,52 @@ impl ClientPool {
                                                 let mut x_sum_chunk =
                                                     vec![0.0f64; range.len()];
                                                 let mut clients: Vec<usize> = Vec::new();
+                                                let round = start_round + r as u64;
+                                                let mut buf = if streams {
+                                                    vec![0.0f64; range.len()]
+                                                } else {
+                                                    Vec::new()
+                                                };
                                                 for (c, x) in &vecs[r] {
-                                                    assert_eq!(
-                                                        x.len(),
-                                                        dim,
-                                                        "ragged client vectors"
-                                                    );
-                                                    for (o, j) in
-                                                        x_sum_chunk.iter_mut().zip(range.clone())
-                                                    {
-                                                        *o += x[j];
-                                                    }
-                                                    let msg = encoder.encode_chunk(
-                                                        *c,
-                                                        x,
-                                                        range.clone(),
-                                                        &shared,
-                                                    );
+                                                    let msg = if streams {
+                                                        compute.compute_chunk(
+                                                            *c,
+                                                            round,
+                                                            &state,
+                                                            range.clone(),
+                                                            &mut buf,
+                                                        );
+                                                        for (o, v) in x_sum_chunk
+                                                            .iter_mut()
+                                                            .zip(buf.iter())
+                                                        {
+                                                            *o += v;
+                                                        }
+                                                        encoder.encode_chunk_slice(
+                                                            *c,
+                                                            &buf,
+                                                            range.clone(),
+                                                            &shared,
+                                                        )
+                                                    } else {
+                                                        assert_eq!(
+                                                            x.len(),
+                                                            dim,
+                                                            "ragged client vectors"
+                                                        );
+                                                        for (o, j) in x_sum_chunk
+                                                            .iter_mut()
+                                                            .zip(range.clone())
+                                                        {
+                                                            *o += x[j];
+                                                        }
+                                                        encoder.encode_chunk(
+                                                            *c,
+                                                            x,
+                                                            range.clone(),
+                                                            &shared,
+                                                        )
+                                                    };
                                                     let part =
                                                         partial.get_or_insert_with(|| {
                                                             transport.empty(&shared)
@@ -1563,7 +1594,17 @@ pub fn run_rounds_encoded_async(
         let remaining = remaining.clone();
         WorkStealPool::spawn(n_workers, move |_worker, task: AsyncTask| {
             let AsyncTask { block, chunk: k } = task;
-            let vecs = {
+            // a streaming compute never materializes the block's window
+            // vectors — each task pulls O(c) slices straight from
+            // compute_chunk below; the materialized path keeps the lazy
+            // per-block store (first task computes under the block mutex,
+            // last task frees). Bit-identical either way: the compute is
+            // pure, and slice-capable encoders define
+            // encode_chunk(x, range) as encode_chunk_slice(&x[range]).
+            let streams = compute.streams_chunks();
+            let vecs: Arc<BlockVecs> = if streams {
+                Arc::new(Vec::new())
+            } else {
                 let mut slot = store[block].lock().unwrap();
                 match &*slot {
                     Some(v) => v.clone(),
@@ -1586,30 +1627,46 @@ pub fn run_rounds_encoded_async(
             };
             let range = plan.range(k);
             let mut rounds_out = Vec::with_capacity(seeds.len());
+            let mut buf = if streams { vec![0.0f64; range.len()] } else { Vec::new() };
             for (r, (&seed, transport)) in seeds.iter().zip(transports.iter()).enumerate()
             {
                 let shared = SharedRound::new(seed, n, dim);
+                let round = start_round + r as u64;
                 let mut partial: Option<TransportPartial> = None;
                 let mut bits = BitsAccount::default();
                 let mut x_sum_chunk = vec![0.0f64; range.len()];
                 let mut clients: Vec<usize> = Vec::new();
-                for (c, x) in &vecs[r] {
-                    assert_eq!(x.len(), dim, "ragged client vectors");
-                    for (o, j) in x_sum_chunk.iter_mut().zip(range.clone()) {
-                        *o += x[j];
+                if streams {
+                    for c in blocks[block].clone().filter(|&c| active[r][c]) {
+                        compute.compute_chunk(c, round, &state, range.clone(), &mut buf);
+                        for (o, v) in x_sum_chunk.iter_mut().zip(buf.iter()) {
+                            *o += v;
+                        }
+                        let msg = encoder.encode_chunk_slice(c, &buf, range.clone(), &shared);
+                        let part = partial.get_or_insert_with(|| transport.empty(&shared));
+                        transport.submit_chunk(part, c, &msg, range.start, &shared);
+                        bits.merge(&msg.bits);
+                        clients.push(c);
                     }
-                    let msg = encoder.encode_chunk(*c, x, range.clone(), &shared);
-                    let part = partial.get_or_insert_with(|| transport.empty(&shared));
-                    transport.submit_chunk(part, *c, &msg, range.start, &shared);
-                    bits.merge(&msg.bits);
-                    clients.push(*c);
+                } else {
+                    for (c, x) in &vecs[r] {
+                        assert_eq!(x.len(), dim, "ragged client vectors");
+                        for (o, j) in x_sum_chunk.iter_mut().zip(range.clone()) {
+                            *o += x[j];
+                        }
+                        let msg = encoder.encode_chunk(*c, x, range.clone(), &shared);
+                        let part = partial.get_or_insert_with(|| transport.empty(&shared));
+                        transport.submit_chunk(part, *c, &msg, range.start, &shared);
+                        bits.merge(&msg.bits);
+                        clients.push(*c);
+                    }
                 }
                 rounds_out.push(ShardChunkFold { partial, bits, x_sum_chunk, clients });
             }
             // a send error means the orchestrator already failed closed
             // and is unwinding — nothing useful left for this task
             let _ = events_tx.send(AsyncChunkMsg { block, chunk: k, rounds: rounds_out });
-            if remaining[block].fetch_sub(1, Ordering::AcqRel) == 1 {
+            if !streams && remaining[block].fetch_sub(1, Ordering::AcqRel) == 1 {
                 // every chunk of this block is encoded: free the vectors
                 store[block].lock().unwrap().take();
             }

@@ -10,6 +10,7 @@
 use super::FigOpts;
 use crate::apps::langevin::{fig10_arm, Fig10Arm, GaussianPosterior, LangevinOpts};
 use crate::util::json::Csv;
+use crate::util::rng::{seed_domain, Rng};
 use crate::util::stats::OnlineStats;
 
 pub fn run(opts: &FigOpts) {
@@ -32,12 +33,17 @@ pub fn run(opts: &FigOpts) {
         let mut bpc = OnlineStats::new();
         let mut cvar = OnlineStats::new();
         for r in 0..runs {
-            let problem = GaussianPosterior::generate(20, 50, 50, opts.seed + r as u64);
+            // repeat r's data and chain roots: REPLICATE-domain derivations
+            // at distinct indices (never ad-hoc seed arithmetic)
+            let data_seed = Rng::derive_domain(opts.seed, seed_domain::REPLICATE, 2 * r as u64);
+            let chain_seed =
+                Rng::derive_domain(opts.seed, seed_domain::REPLICATE, 2 * r as u64 + 1);
+            let problem = GaussianPosterior::generate(20, 50, 50, data_seed);
             let o = LangevinOpts {
                 gamma: 5e-4,
                 iters,
                 burn_in: burn,
-                seed: opts.seed ^ (0xFA + r as u64),
+                seed: chain_seed,
                 discount_compression_noise: true,
             };
             let res = fig10_arm(&problem, *arm, o);

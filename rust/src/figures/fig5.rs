@@ -11,7 +11,8 @@
 //! analytic Gaussian mechanism at ℓ2 sensitivity √(γd)·c/(γn), c = 1/√d.
 
 use super::FigOpts;
-use crate::apps::mean_estimation::{evaluate, gen_data, DataKind};
+use crate::apps::driver::{app_round_seed, CoordinatorOpts};
+use crate::apps::mean_estimation::{evaluate_coordinator, gen_data, DataKind};
 use crate::baselines::Csgm;
 use crate::dp::accountant::analytic_gaussian_sigma;
 use crate::mechanisms::traits::MeanMechanism;
@@ -53,13 +54,25 @@ pub fn eval_point(
     // coordinate-subsampling matrix identically from the round seed, so
     // the subsampling noise realization is SHARED and the MSE difference
     // isolates quantization-vs-noise-shaping (the figure's comparison).
-    let res_sigm = evaluate(&sigm, &xs, runs, seed ^ 0x51);
+    //
+    // Both arms run on the coordinator: SIGM's per-client (Unicast)
+    // transport clamps to whole-d plans, while CSGM's sum transport
+    // streams 128-coordinate chunks with clients producing slices —
+    // bit-identical to the monolithic evaluate() either way.
+    let res_sigm =
+        evaluate_coordinator(&sigm, &xs, runs, seed ^ 0x51, CoordinatorOpts::default());
     // match CSGM's bit budget to SIGM's fixed-length bits per message
-    let probe = sigm.aggregate(&xs, seed ^ 0x52);
+    let probe = sigm.aggregate(&xs, app_round_seed(seed ^ 0x52, 0));
     let bits_per_msg =
         probe.bits.fixed_total.unwrap_or(8.0) / probe.bits.messages.max(1) as f64;
     let csgm = Csgm::new(sigma, gamma, c, (bits_per_msg.ceil() as u32).max(1));
-    let res_csgm = evaluate(&csgm, &xs, runs, seed ^ 0x51);
+    let res_csgm = evaluate_coordinator(
+        &csgm,
+        &xs,
+        runs,
+        seed ^ 0x51,
+        CoordinatorOpts { chunk: 128, ..CoordinatorOpts::default() },
+    );
 
     Fig5Point {
         n,
@@ -112,6 +125,7 @@ pub fn run(opts: &FigOpts, fig7: bool) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apps::mean_estimation::evaluate;
 
     #[test]
     fn sigm_never_worse_than_csgm() {

@@ -10,6 +10,7 @@
 //!  * fixed length  — mechanism flag + bounded observed description support.
 
 use super::FigOpts;
+use crate::apps::driver::app_round_seed;
 use crate::apps::mean_estimation::{gen_data, DataKind};
 use crate::dist::{Continuous, Gaussian};
 use crate::mechanisms::traits::{true_mean, MeanMechanism};
@@ -37,7 +38,9 @@ fn gaussian_noise_verified(mech: &dyn MeanMechanism, sigma: f64, seed: u64) -> b
     let mean = true_mean(&xs);
     let mut errs = Vec::new();
     for r in 0..5000u64 {
-        let out = mech.aggregate(&xs, seed ^ (r * 7919));
+        // ROUND-domain derivation (not ad-hoc xor mixing): repetition r is
+        // round r of a virtual session rooted at `seed`
+        let out = mech.aggregate(&xs, app_round_seed(seed, r));
         for j in 0..mean.len() {
             errs.push(out.estimate[j] - mean[j]);
         }

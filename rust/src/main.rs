@@ -109,6 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         sigma: args.f64_or("sigma", 1e-3),
         eval_every: args.usize_or("eval-every", 20),
         seed: args.u64_or("seed", 0xF1),
+        chunk: args.usize_or("chunk", 0),
     };
     let data = fl_train::gen_dataset(&engine, opts.n_clients, opts.seed);
     println!("training: {opts:?}");

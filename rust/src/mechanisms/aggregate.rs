@@ -142,6 +142,24 @@ impl ClientEncoder for AggregateGaussian {
         range: std::ops::Range<usize>,
         round: &SharedRound,
     ) -> Descriptions {
+        self.encode_chunk_slice(client, &x[range.clone()], range, round)
+    }
+
+    /// Slice-ranged encode — the streaming producer's entry point: every
+    /// draw is purely per-coordinate, so the chunk slice alone suffices
+    /// and `encode_chunk` is just the `&x[range]` delegation above.
+    fn slice_chunkable(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_slice(
+        &self,
+        client: usize,
+        x_chunk: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
+        assert_eq!(x_chunk.len(), range.len(), "chunk slice does not match its range");
         let w = self.step(round.n_clients);
         let ab = self.ab_range(round, &range);
         // lane-batched centred-dither fill (u01 − ½ per coordinate
@@ -151,11 +169,12 @@ impl ClientEncoder for AggregateGaussian {
         let mut dithers = vec![0.0f64; range.len()];
         round.client_coord_stream(client).fill_dither(range.start, &mut dithers);
         let mut bits = BitsAccount::default();
-        let ms: Vec<i64> = range
+        let ms: Vec<i64> = x_chunk
+            .iter()
             .zip(ab.iter().zip(dithers.iter()))
-            .map(|(j, (&(a, _), &s))| {
+            .map(|(&xj, (&(a, _), &s))| {
                 let inv_aw = 1.0 / (a * w);
-                let m = round_half_up(x[j] * inv_aw + s);
+                let m = round_half_up(xj * inv_aw + s);
                 bits.add_description(m);
                 m
             })

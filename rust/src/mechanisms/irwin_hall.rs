@@ -76,6 +76,24 @@ impl ClientEncoder for IrwinHallMechanism {
         range: std::ops::Range<usize>,
         round: &SharedRound,
     ) -> Descriptions {
+        self.encode_chunk_slice(client, &x[range.clone()], range, round)
+    }
+
+    /// Slice-ranged encode — purely per-coordinate draws, so the chunk
+    /// slice alone suffices (`encode_chunk` is the `&x[range]`
+    /// delegation above).
+    fn slice_chunkable(&self) -> bool {
+        true
+    }
+
+    fn encode_chunk_slice(
+        &self,
+        client: usize,
+        x_chunk: &[f64],
+        range: std::ops::Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
+        assert_eq!(x_chunk.len(), range.len(), "chunk slice does not match its range");
         let w = self.step(round.n_clients);
         let code_bits = FixedCode::from_support_bound(self.input_range_t, w).bits() as f64;
         // lane-batched dither fill: one u01 per coordinate stream,
@@ -84,10 +102,11 @@ impl ClientEncoder for IrwinHallMechanism {
         round.client_coord_stream(client).fill_u01(range.start, &mut dithers);
         let mut bits = BitsAccount::default();
         let mut fixed_total = 0.0;
-        let ms: Vec<i64> = range
+        let ms: Vec<i64> = x_chunk
+            .iter()
             .zip(dithers.iter())
-            .map(|(j, &s)| {
-                let m = round_half_up(x[j] / w + s);
+            .map(|(&xj, &s)| {
+                let m = round_half_up(xj / w + s);
                 bits.add_description(m);
                 fixed_total += code_bits;
                 m

@@ -45,14 +45,14 @@ pub use decompose::Decomposer;
 pub use individual::{IndividualGaussian, LayeredVariant};
 pub use irwin_hall::IrwinHallMechanism;
 pub use pipeline::{
-    run_pipeline, ChunkCache, ChunkPlan, ClientEncoder, CoordStream, Descriptions, MechSpec,
-    Payload, Pipeline, Plain, RoundCache, SecAgg, ServerDecoder, SharedRound, SurvivorSet,
-    Transport, TransportPartial, Unicast,
+    run_pipeline, ChunkCache, ChunkPlan, ClientEncoder, CoordStream, Descriptions, LocalCompute,
+    MechSpec, Payload, Pipeline, PipelineParts, Plain, RoundCache, SecAgg, ServerDecoder,
+    SharedRound, SliceCompute, SurvivorSet, Transport, TransportPartial, Unicast,
 };
 pub use session::{
-    derive_session_seed, run_window, run_window_chunked, run_window_sampled,
-    run_window_with_dropouts, session_recovery_share, ChunkSlotState, RoundDropouts,
-    RoundSlotState, SessionState, TransportSession,
+    derive_session_seed, run_window, run_window_chunked, run_window_chunked_from,
+    run_window_sampled, run_window_with_dropouts, session_recovery_share, ChunkSlotState,
+    RoundDropouts, RoundSlotState, SessionState, TransportSession,
 };
 pub use sigm::Sigm;
 pub use traits::{BitsAccount, MeanMechanism, RoundOutput};

@@ -57,7 +57,7 @@
 //! tests per mechanism, both per round and for whole windowed sessions.
 
 use std::ops::Range;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
 use crate::secagg::{self, SecAggParams};
@@ -500,6 +500,190 @@ pub trait ClientEncoder: Send + Sync {
             "encoder fails closed under chunking: it is not chunk-capable"
         );
         self.encode(client, x, round)
+    }
+
+    /// Encode coordinates `range` from the *chunk slice alone*: `x_chunk`
+    /// holds exactly the coordinates of `range` (`x_chunk[i]` is
+    /// coordinate `range.start + i`), so a streaming producer
+    /// ([`LocalCompute::compute_chunk`]) can feed the encoder O(c) data
+    /// without ever materializing the client's whole-d vector.
+    ///
+    /// Slice-capable encoders (the purely per-coordinate ones: aggregate
+    /// Gaussian, Irwin–Hall, CSGM) override this with the slice-indexed
+    /// body and implement [`ClientEncoder::encode_chunk`] by delegation,
+    /// so `encode_chunk_slice(c, &x[range], range, round)` ≡
+    /// `encode_chunk(c, x, range, round)` bit for bit by construction.
+    /// Data-dependent encoders that need the full vector per chunk — DDG's
+    /// clip + rotation, the unbiased quantizer's ℓ∞ norm — keep this
+    /// default, which fails closed on partial ranges (a full-range slice
+    /// IS the whole vector and delegates safely).
+    fn encode_chunk_slice(
+        &self,
+        client: usize,
+        x_chunk: &[f64],
+        range: Range<usize>,
+        round: &SharedRound,
+    ) -> Descriptions {
+        assert_eq!(x_chunk.len(), range.len(), "chunk slice does not match its range");
+        assert!(
+            range.start == 0,
+            "encoder fails closed under sliced chunking: it needs the full client vector"
+        );
+        self.encode_chunk(client, x_chunk, range, round)
+    }
+
+    /// Whether [`ClientEncoder::encode_chunk_slice`] accepts interior
+    /// ranges — i.e. the encoder is purely per-coordinate and never needs
+    /// the client's whole vector. Drivers use this to decide whether a
+    /// streaming [`LocalCompute`] may be paired with this encoder at
+    /// partial chunk sizes; encoders keeping the fail-closed default above
+    /// must leave this `false`.
+    fn slice_chunkable(&self) -> bool {
+        false
+    }
+}
+
+/// Client-local computation — the *producer* side of the pipeline: given
+/// the broadcast global state, produce this round's client vector (a
+/// gradient, a Langevin potential difference, a subgradient at a
+/// perturbed point, or just the client's stored data row).
+/// Implementations must be deterministic in `(client, round, state)` for
+/// reproducible runs, and pure: `compute_chunk` over any partition of
+/// `0..d` must concatenate to exactly `local_update`'s vector.
+///
+/// Implement **at least one** of [`LocalCompute::local_update`] /
+/// [`LocalCompute::compute_chunk`] — each has a default written in terms
+/// of the other (a type overriding neither would recurse forever):
+///
+/// * materialized computes (the compatibility case, e.g. [`SliceCompute`]
+///   or any closure) override `local_update`; the default `compute_chunk`
+///   materializes and copies the range — O(d) per call, correct but not
+///   streaming.
+/// * chunk-ranged computes override `compute_chunk` (and
+///   [`LocalCompute::dim_hint`] when d is not the broadcast-state length)
+///   and set [`LocalCompute::streams_chunks`] to `true`: the chunked and
+///   async runners then never materialize a whole-d client vector —
+///   per (chunk, round, client) they fill one O(c) buffer and hand it to
+///   [`ClientEncoder::encode_chunk_slice`]. This removes the last O(n·d)
+///   client-side residue at model scale (d ≥ 10⁶).
+pub trait LocalCompute: Send + Sync + 'static {
+    /// The client's whole round vector. `client` is the global client
+    /// index. Default: materialize via [`LocalCompute::compute_chunk`]
+    /// over the full range.
+    fn local_update(&self, client: usize, round: u64, state: &[f64]) -> Vec<f64> {
+        let d = self.dim_hint(state);
+        let mut out = vec![0.0f64; d];
+        self.compute_chunk(client, round, state, 0..d, &mut out);
+        out
+    }
+
+    /// Fill `out` (length `range.len()`) with coordinates `range` of the
+    /// client's round vector. Default: materialize the whole vector and
+    /// copy the range — the O(d) compatibility adapter.
+    fn compute_chunk(
+        &self,
+        client: usize,
+        round: u64,
+        state: &[f64],
+        range: Range<usize>,
+        out: &mut [f64],
+    ) {
+        let x = self.local_update(client, round, state);
+        out.copy_from_slice(&x[range]);
+    }
+
+    /// The model dimension d of this compute's vectors. The default
+    /// assumes the broadcast state IS the model (true for FedSGD and
+    /// Langevin); data-backed computes override it.
+    fn dim_hint(&self, state: &[f64]) -> usize {
+        state.len()
+    }
+
+    /// Whether the runners should pull per-chunk ([`Self::compute_chunk`]
+    /// + [`ClientEncoder::encode_chunk_slice`]) instead of materializing
+    /// whole-d vectors. Opt-in: `true` requires a native `compute_chunk`
+    /// AND slice-capable encoders. Either value produces bit-identical
+    /// rounds (the compute is pure) — this only selects the memory model.
+    fn streams_chunks(&self) -> bool {
+        false
+    }
+}
+
+impl<F> LocalCompute for F
+where
+    F: Fn(usize, u64, &[f64]) -> Vec<f64> + Send + Sync + 'static,
+{
+    fn local_update(&self, client: usize, round: u64, state: &[f64]) -> Vec<f64> {
+        self(client, round, state)
+    }
+}
+
+/// The slice-backed [`LocalCompute`] compatibility adapter: clients
+/// "compute" by reading their stored data row — the shape of the mean-
+/// estimation workload (the dataset inherently lives in memory) and of
+/// FedSGD harnesses that produce gradients outside the pool (e.g. through
+/// the PJRT engine on the orchestrator thread). `set` swaps in a new
+/// round's rows, which is how a training loop reuses one pool across
+/// rounds. `compute_chunk` copies O(c) per call, so the chunked runners
+/// add no whole-d clones on top of the stored data itself.
+pub struct SliceCompute {
+    data: RwLock<Vec<Vec<f64>>>,
+    streams: bool,
+}
+
+impl SliceCompute {
+    /// Adapter over stored rows, materialized-path flavor (safe for every
+    /// encoder, including the full-vector-per-chunk ones like DDG).
+    pub fn new(xs: &[Vec<f64>]) -> Self {
+        assert!(!xs.is_empty(), "slice compute needs at least one client row");
+        Self { data: RwLock::new(xs.to_vec()), streams: false }
+    }
+
+    /// Streaming-path flavor: the runners copy O(c) per (client, chunk)
+    /// and call [`ClientEncoder::encode_chunk_slice`] — valid only with
+    /// slice-capable encoders (see that method's docs).
+    pub fn streamed(xs: &[Vec<f64>]) -> Self {
+        assert!(!xs.is_empty(), "slice compute needs at least one client row");
+        Self { data: RwLock::new(xs.to_vec()), streams: true }
+    }
+
+    /// Replace every client's row (a training loop's next round of
+    /// gradients). The row count and dimension may not change — the pool
+    /// was spawned for a fixed fleet and model.
+    pub fn set(&self, xs: Vec<Vec<f64>>) {
+        let mut data = self.data.write().unwrap();
+        assert_eq!(xs.len(), data.len(), "slice compute fleet size is fixed");
+        assert!(!xs.is_empty() && xs[0].len() == data[0].len(), "slice compute dim is fixed");
+        *data = xs;
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.read().unwrap()[0].len()
+    }
+}
+
+impl LocalCompute for SliceCompute {
+    fn local_update(&self, client: usize, _round: u64, _state: &[f64]) -> Vec<f64> {
+        self.data.read().unwrap()[client].clone()
+    }
+
+    fn compute_chunk(
+        &self,
+        client: usize,
+        _round: u64,
+        _state: &[f64],
+        range: Range<usize>,
+        out: &mut [f64],
+    ) {
+        out.copy_from_slice(&self.data.read().unwrap()[client][range]);
+    }
+
+    fn dim_hint(&self, _state: &[f64]) -> usize {
+        self.dim()
+    }
+
+    fn streams_chunks(&self) -> bool {
+        self.streams
     }
 }
 
@@ -1091,6 +1275,22 @@ pub trait ServerDecoder: Send + Sync {
     }
 }
 
+/// A mechanism exploded into its three shareable pipeline stages — what
+/// [`crate::mechanisms::traits::MeanMechanism::pipeline_parts`] returns,
+/// and what lets the apps and figure sweeps drive any `&dyn
+/// MeanMechanism` through the coordinator's windowed/chunked/async
+/// runners instead of the monolithic in-process `aggregate()`. The
+/// encoder and decoder are the mechanism itself (every mechanism in this
+/// crate implements both ends); the transport is the one its
+/// `impl_mean_mechanism!` invocation names, so `aggregate()` and a
+/// coordinator run over these parts see identical wire behavior.
+#[derive(Clone)]
+pub struct PipelineParts {
+    pub encoder: Arc<dyn ClientEncoder>,
+    pub transport: Arc<dyn Transport>,
+    pub decoder: Arc<dyn ServerDecoder>,
+}
+
 /// Static mechanism metadata (the Table 1 property matrix) shared by the
 /// pipeline wrapper and the direct [`MeanMechanism`] impls.
 pub trait MechSpec {
@@ -1163,6 +1363,17 @@ macro_rules! impl_mean_mechanism {
                     xs,
                     seed,
                 )
+            }
+
+            fn pipeline_parts(
+                &self,
+            ) -> Option<$crate::mechanisms::pipeline::PipelineParts> {
+                let $mech = self;
+                Some($crate::mechanisms::pipeline::PipelineParts {
+                    encoder: std::sync::Arc::new(<$ty as Clone>::clone(self)),
+                    transport: std::sync::Arc::new($transport),
+                    decoder: std::sync::Arc::new(<$ty as Clone>::clone(self)),
+                })
             }
         }
     };

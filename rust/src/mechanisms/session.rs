@@ -74,8 +74,8 @@
 use std::sync::Arc;
 
 use super::pipeline::{
-    ChunkPlan, ClientEncoder, Descriptions, Payload, ServerDecoder, SharedRound, SurvivorSet,
-    Transport, TransportPartial,
+    ChunkPlan, ClientEncoder, Descriptions, LocalCompute, Payload, ServerDecoder, SharedRound,
+    SurvivorSet, Transport, TransportPartial,
 };
 use super::traits::{BitsAccount, RoundOutput};
 use crate::secagg::{self, RecoveryShare, SecAggParams};
@@ -1393,6 +1393,164 @@ pub fn run_window_chunked(
             {
                 // whole-d decode over the assembled sum (e.g. DDG's
                 // inverse rotation needs every coordinate at once)
+                decoder.decode_survivors(
+                    &Payload::Sum(std::mem::take(&mut sums[r])),
+                    &round,
+                    &survivors,
+                )
+            } else {
+                std::mem::take(&mut estimates[r])
+            };
+            RoundOutput { estimate, bits }
+        })
+        .collect()
+}
+
+/// [`run_window_chunked`] with the client data PULLED from a
+/// [`LocalCompute`] instead of handed over as stored window vectors — the
+/// session-level form of the coordinator's streamed chunk cursors. Round
+/// r is described by `(round_id, round_seed)`: the id keys the compute
+/// (and any APP_ROUND-derived app streams), the seed keys the round's
+/// shared randomness, exactly as the coordinator derives both from one
+/// root seed.
+///
+/// For a streaming compute ([`LocalCompute::streams_chunks`]) the cursor
+/// fills one O(c) buffer per (chunk, round, survivor) and encodes it via
+/// [`ClientEncoder::encode_chunk_slice`] — no whole-d client vector
+/// exists at any point. A materialized compute is evaluated once per
+/// (round, survivor) up front and then streamed exactly like
+/// [`run_window_chunked`]'s stored vectors. Both paths are bit-identical
+/// to `run_window_chunked` over `compute`'s materialized vectors, for
+/// every chunk size (property-tested): the compute is pure and
+/// slice-capable encoders define `encode_chunk(x, range)` as
+/// `encode_chunk_slice(&x[range], range)`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_window_chunked_from(
+    encoder: &dyn ClientEncoder,
+    transport: &dyn Transport,
+    decoder: &dyn ServerDecoder,
+    compute: &dyn LocalCompute,
+    state: &[f64],
+    rounds: &[(u64, u64)],
+    session_seed: u64,
+    n: usize,
+    dim: usize,
+    cohorts: &[SurvivorSet],
+    dropouts: &[Vec<usize>],
+    chunk: usize,
+) -> Vec<RoundOutput> {
+    assert!(!rounds.is_empty(), "a session window needs at least one round");
+    assert!(n > 0, "need at least one client");
+    assert_eq!(
+        cohorts.len(),
+        rounds.len(),
+        "cohort schedule must cover every round of the window"
+    );
+    assert_eq!(
+        dropouts.len(),
+        rounds.len(),
+        "dropout schedule must cover every round of the window"
+    );
+    assert!(
+        !transport.sum_only() || decoder.sum_decodable(),
+        "mechanism is not homomorphic: it cannot decode from a sum-only transport"
+    );
+    let seeds: Vec<u64> = rounds.iter().map(|&(_, seed)| seed).collect();
+    let mut session = TransportSession::open_sampled_chunked(
+        transport,
+        session_seed,
+        n,
+        dim,
+        &seeds,
+        cohorts,
+        chunk,
+    );
+    let plan = session.plan();
+    let survivor_sets: Vec<SurvivorSet> = (0..rounds.len())
+        .map(|r| {
+            let survivors = cohorts[r].drop_cohort_members(&dropouts[r], r);
+            session.announce_dropouts(
+                r,
+                &RoundDropouts::announce_among(session_seed, r as u64, &survivors, &dropouts[r]),
+            );
+            survivors
+        })
+        .collect();
+    let streams = compute.streams_chunks();
+    // compatibility path: materialize each survivor's round vector ONCE
+    // (not once per chunk) — the cursor then walks stored vectors exactly
+    // like run_window_chunked
+    let materialized: Vec<Vec<(usize, Vec<f64>)>> = if streams {
+        Vec::new()
+    } else {
+        rounds
+            .iter()
+            .enumerate()
+            .map(|(r, &(round_id, _))| {
+                survivor_sets[r]
+                    .alive_iter()
+                    .map(|i| {
+                        let x = compute.local_update(i, round_id, state);
+                        assert_eq!(x.len(), dim, "ragged client vectors");
+                        (i, x)
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let mut estimates: Vec<Vec<f64>> = vec![vec![0.0f64; dim]; rounds.len()];
+    let mut sums: Vec<Vec<i64>> = if decoder.chunk_decodable() {
+        Vec::new()
+    } else {
+        vec![vec![0i64; dim]; rounds.len()]
+    };
+    for k in 0..plan.n_chunks() {
+        let range = plan.range(k);
+        let mut buf = if streams { vec![0.0f64; range.len()] } else { Vec::new() };
+        for (r, &(round_id, _)) in rounds.iter().enumerate() {
+            let round = *session.round(r);
+            if streams {
+                for i in survivor_sets[r].alive_iter() {
+                    compute.compute_chunk(i, round_id, state, range.clone(), &mut buf);
+                    let msg = encoder.encode_chunk_slice(i, &buf, range.clone(), &round);
+                    session.submit_chunk(r, k, i, &msg);
+                }
+            } else {
+                for (i, x) in &materialized[r] {
+                    let msg = encoder.encode_chunk(*i, x, range.clone(), &round);
+                    session.submit_chunk(r, k, *i, &msg);
+                }
+            }
+            debug_assert!(session.chunk_complete(r, k));
+            let payload = session.finish_chunk(r, k);
+            if decoder.chunk_decodable() {
+                let est =
+                    decoder.decode_survivors_chunk(&payload, range.start, &round, &survivor_sets[r]);
+                assert_eq!(est.len(), range.len(), "chunk decode length mismatch");
+                estimates[r][range.clone()].copy_from_slice(&est);
+            } else {
+                match payload {
+                    Payload::Sum(v) if !plan.is_whole() => {
+                        sums[r][range.clone()].copy_from_slice(&v)
+                    }
+                    p => {
+                        estimates[r] =
+                            decoder.decode_survivors(&p, &round, &survivor_sets[r]);
+                    }
+                }
+            }
+        }
+    }
+    let closed = session.close_streamed();
+    closed
+        .into_iter()
+        .enumerate()
+        .map(|(r, (bits, survivors))| {
+            let round = SharedRound::new(seeds[r], n, dim);
+            let estimate = if !decoder.chunk_decodable()
+                && transport.sum_only()
+                && !plan.is_whole()
+            {
                 decoder.decode_survivors(
                     &Payload::Sum(std::mem::take(&mut sums[r])),
                     &round,

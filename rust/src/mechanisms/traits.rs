@@ -82,6 +82,17 @@ pub trait MeanMechanism: Send + Sync {
     /// One aggregation round over `xs[n][d]`; `seed` is the round's shared
     /// randomness (identical on all clients and the server).
     fn aggregate(&self, xs: &[Vec<f64>], seed: u64) -> RoundOutput;
+
+    /// The mechanism exploded into its pipeline stages
+    /// ([`crate::mechanisms::pipeline::PipelineParts`]), for driving it
+    /// through the coordinator's windowed/chunked/async runners. Every
+    /// mechanism declared via `impl_mean_mechanism!` overrides this with
+    /// `Some` (cloning itself into the encoder and decoder ends and
+    /// constructing its declared transport); the `None` default covers
+    /// ad-hoc test mechanisms that only implement `aggregate`.
+    fn pipeline_parts(&self) -> Option<crate::mechanisms::pipeline::PipelineParts> {
+        None
+    }
 }
 
 /// Exact mean of client vectors (test/metric helper).

@@ -21,11 +21,24 @@ pub struct Measurement {
     pub p95_ns: f64,
     /// optional elements-per-iteration for throughput reporting
     pub elements: Option<u64>,
+    /// optional bytes-per-iteration for normalized throughput reporting
+    pub bytes: Option<u64>,
+    /// worker threads the measured operation used (1 for single-threaded
+    /// kernels) — the denominator of the per-core normalization
+    pub cores: usize,
 }
 
 impl Measurement {
     pub fn throughput_mps(&self) -> Option<f64> {
         self.elements.map(|e| e as f64 / self.mean_ns * 1e3)
+    }
+
+    /// Normalized throughput: bytes processed per second per worker core.
+    /// This is the machine-comparable series the trajectory gate watches —
+    /// raw ns/iter confounds thread-count changes with kernel changes.
+    pub fn bytes_per_sec_per_core(&self) -> Option<f64> {
+        self.bytes
+            .map(|b| b as f64 / (self.mean_ns * 1e-9) / self.cores.max(1) as f64)
     }
 }
 
@@ -101,6 +114,20 @@ impl Suite {
         elements: Option<u64>,
         mut f: impl FnMut(),
     ) -> &Measurement {
+        self.bench_throughput(name, elements, None, 1, move || f())
+    }
+
+    /// Benchmark with full throughput annotation: elements and bytes per
+    /// iteration plus the worker-core count, enabling the normalized
+    /// `bytes/sec/core` series in the trajectory JSON.
+    pub fn bench_throughput(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        bytes: Option<u64>,
+        cores: usize,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
         // Warmup and calibrate batch size so one batch is ~1ms.
         let w0 = Instant::now();
         let mut calib_iters = 0u64;
@@ -137,15 +164,20 @@ impl Suite {
             p50_ns: p(0.5),
             p95_ns: p(0.95),
             elements,
+            bytes,
+            cores,
         };
         println!(
-            "bench {:44} mean {}  p50 {}  p95 {}{}",
+            "bench {:44} mean {}  p50 {}  p95 {}{}{}",
             m.name,
             fmt_ns(m.mean_ns),
             fmt_ns(m.p50_ns),
             fmt_ns(m.p95_ns),
             m.throughput_mps()
                 .map(|t| format!("  thrpt {t:9.2} Melem/s"))
+                .unwrap_or_default(),
+            m.bytes_per_sec_per_core()
+                .map(|t| format!("  {:9.1} MB/s/core", t / 1e6))
                 .unwrap_or_default()
         );
         self.results.push(m);
@@ -174,6 +206,12 @@ impl Suite {
                     .push(
                         "throughput_meps",
                         m.throughput_mps().map(Json::Num).unwrap_or(Json::Null),
+                    )
+                    .push("bytes", m.bytes.map(|b| Json::Int(b as i64)).unwrap_or(Json::Null))
+                    .push("cores", m.cores as i64)
+                    .push(
+                        "bytes_per_sec_per_core",
+                        m.bytes_per_sec_per_core().map(Json::Num).unwrap_or(Json::Null),
                     )
             })
             .collect();
@@ -290,6 +328,46 @@ mod tests {
         if std::env::var("BENCH_THREADS").is_err() {
             assert_eq!(bench_threads(4), 4);
         }
+    }
+
+    #[test]
+    fn bytes_per_core_normalization() {
+        let m = Measurement {
+            name: "kernels/demo".into(),
+            iters: 1,
+            mean_ns: 1e9, // 1 second per iteration
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            elements: None,
+            bytes: Some(8_000_000),
+            cores: 4,
+        };
+        // 8 MB per second over 4 cores = 2 MB/s/core
+        assert!((m.bytes_per_sec_per_core().unwrap() - 2e6).abs() < 1.0);
+        // un-annotated measurements stay out of the normalized series
+        let bare = Measurement { bytes: None, ..m };
+        assert!(bare.bytes_per_sec_per_core().is_none());
+    }
+
+    #[test]
+    fn bench_throughput_json_fields() {
+        let mut s = Suite {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(10),
+            min_samples: 2,
+            results: Vec::new(),
+        };
+        s.bench_throughput("kernels/bytes", Some(64), Some(512), 2, || {
+            black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join("benchkit_bytes_json_test.json");
+        let path = path.to_str().unwrap();
+        s.write_json(path, "bench_test", 2).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(text.contains(r#""bytes":512"#), "{text}");
+        assert!(text.contains(r#""cores":2"#));
+        assert!(text.contains(r#""bytes_per_sec_per_core":"#));
     }
 
     #[test]

@@ -56,6 +56,23 @@ pub mod seed_domain {
     /// with no deadline draws nothing from this domain and every other
     /// domain is untouched either way).
     pub const DEADLINE: u64 = 0xD0_0007;
+    /// App-layer auxiliary streams keyed by absolute round id: the
+    /// Langevin injected noise β·Z of round k and the smoothing broadcast
+    /// perturbation of round k both draw from
+    /// `Rng::new(derive_domain(app_seed, APP_ROUND, k))` — domain-separated
+    /// from the aggregation pipeline's [`ROUND`] family, so an app's own
+    /// randomness can never alias (or be displaced by) the shared
+    /// encode/transport streams, and both the monolithic `aggregate()`
+    /// path and the coordinator path of an app re-derive the identical
+    /// stream from (app seed, round id) alone.
+    pub const APP_ROUND: u64 = 0xD0_0008;
+    /// Figure-sweep replicate seeds: repeat r of a sweep derives its data
+    /// and chain roots from `derive_domain(sweep_seed, REPLICATE, i(r))`
+    /// with distinct indices per stream — replacing the ad-hoc
+    /// `seed + r` / `seed ^ (const + r)` mixing the sweeps used before
+    /// (which collides across arms whenever the XOR'd constants differ by
+    /// a small additive offset).
+    pub const REPLICATE: u64 = 0xD0_0009;
 }
 
 /// SplitMix64's additive constant (the golden-ratio gamma).

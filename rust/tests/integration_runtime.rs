@@ -105,6 +105,7 @@ fn fl_training_e2e_loss_decreases() {
         sigma: 5e-4,
         eval_every: 10,
         seed: 0xE2E,
+        chunk: 0,
     };
     let data = fl_train::gen_dataset(&e, opts.n_clients, opts.seed);
     let metrics = fl_train::train(&e, &data, opts).unwrap();
@@ -129,6 +130,7 @@ fn fl_training_compressed_tracks_uncompressed() {
         sigma: 5e-4,
         eval_every: 25,
         seed: 0xBEE,
+        chunk: 0,
     };
     let data = fl_train::gen_dataset(&e, base.n_clients, base.seed);
     let plain = fl_train::train(&e, &data, base).unwrap();

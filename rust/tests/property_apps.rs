@@ -1,0 +1,382 @@
+//! Apps-on-the-coordinator property matrix: every workload of the paper
+//! (mean estimation, QLSD* Langevin, DRS smoothing) run through the
+//! chunk-streamed / async coordinator must be **bit-identical** to its
+//! monolithic `aggregate()` reference at full cohort, for every chunk
+//! size, with streamed (slice-fed) and stored (materialized) client
+//! computes agreeing exactly. The KS companions check that the exact
+//! error laws — the paper's whole point — survive the sampled + chunked
+//! apps path verbatim: the aggregate Gaussian aggregation error stays
+//! exactly N(0, σ²) per coordinate, the QLSD* discounted injected noise
+//! composes back to exactly N(0, 2γ), and the smoothing broadcast
+//! perturbation stays exactly N(0, σ²).
+//!
+//! All test names are `apps_`-prefixed so `cargo test -q apps_` names the
+//! suite from CI.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use exact_comp::apps::driver::{app_round_seed, AppCoordinator, CoordinatorOpts, RunMode};
+use exact_comp::apps::langevin::{
+    qlsd_star_coordinator, qlsd_star_mech, GaussianPosterior, HCompute, LangevinOpts,
+};
+use exact_comp::apps::mean_estimation::{evaluate, evaluate_coordinator, gen_data, DataKind};
+use exact_comp::apps::smoothing::{
+    drs_coordinator, drs_mech, perturbed_model, L1Problem, SmoothingOpts,
+};
+use exact_comp::baselines::Csgm;
+use exact_comp::coordinator::sampling::SamplingPolicy;
+use exact_comp::dist::{Continuous, Gaussian};
+use exact_comp::mechanisms::pipeline::LocalCompute;
+use exact_comp::mechanisms::traits::MeanMechanism;
+use exact_comp::mechanisms::{
+    AggregateGaussian, IndividualGaussian, IrwinHallMechanism, LayeredVariant, Sigm,
+};
+use exact_comp::util::stats::ks_test;
+
+fn opts_chunk(chunk: usize) -> CoordinatorOpts {
+    CoordinatorOpts { chunk, threads: Some(3), ..CoordinatorOpts::default() }
+}
+
+/// Exact (bit-level) equality of two evaluation results.
+fn assert_eval_identical(a: &exact_comp::apps::mean_estimation::EvalResult,
+                         b: &exact_comp::apps::mean_estimation::EvalResult,
+                         ctx: &str) {
+    assert_eq!(a.runs, b.runs, "{ctx}: runs");
+    assert_eq!(a.mse_mean.to_bits(), b.mse_mean.to_bits(), "{ctx}: mse");
+    assert_eq!(a.mse_sem.to_bits(), b.mse_sem.to_bits(), "{ctx}: sem");
+    assert_eq!(
+        a.bits_var_per_client.to_bits(),
+        b.bits_var_per_client.to_bits(),
+        "{ctx}: variable bits"
+    );
+    assert_eq!(
+        a.bits_fixed_per_client.map(f64::to_bits),
+        b.bits_fixed_per_client.map(f64::to_bits),
+        "{ctx}: fixed bits"
+    );
+}
+
+// ---------------------------------------------------------------------
+// mean estimation: evaluate() ≡ evaluate_coordinator(), per mechanism,
+// for whole-d, partial-chunk (streamed where the encoder allows), and
+// async execution.
+// ---------------------------------------------------------------------
+
+fn mean_eval_matrix(mech: &dyn MeanMechanism, seed: u64) {
+    let (n, d, runs) = (6usize, 11usize, 5usize);
+    let xs = gen_data(DataKind::BoxUniform { c: 2.0 }, n, d, seed);
+    let reference = evaluate(mech, &xs, runs, seed ^ 0x7E);
+    // chunk = 0 (whole-d, materialized), interior chunks (streamed for
+    // slice-capable encoders), oversize chunk (clamped)
+    for chunk in [0usize, 1, 7, d, d + 3] {
+        let res = evaluate_coordinator(mech, &xs, runs, seed ^ 0x7E, opts_chunk(chunk));
+        assert_eval_identical(&reference, &res, &format!("{} c={chunk}", mech.name()));
+    }
+    // async runner: same window, work-stealing execution
+    let res = evaluate_coordinator(
+        mech,
+        &xs,
+        runs,
+        seed ^ 0x7E,
+        CoordinatorOpts { mode: RunMode::Async { ring: 2 }, ..opts_chunk(7) },
+    );
+    assert_eval_identical(&reference, &res, &format!("{} async", mech.name()));
+}
+
+#[test]
+fn apps_mean_eval_irwin_hall_matches_monolith() {
+    mean_eval_matrix(&IrwinHallMechanism::new(0.4, 8.0), 0xC1);
+}
+
+#[test]
+fn apps_mean_eval_aggregate_gaussian_matches_monolith() {
+    mean_eval_matrix(&AggregateGaussian::new(0.6, 8.0), 0xC2);
+}
+
+#[test]
+fn apps_mean_eval_csgm_matches_monolith() {
+    mean_eval_matrix(&Csgm::new(0.5, 0.6, 2.0, 4), 0xC3);
+}
+
+#[test]
+fn apps_mean_eval_sigm_matches_monolith() {
+    // Unicast transport: the driver clamps every plan to whole-d
+    mean_eval_matrix(&Sigm::new(0.5, 0.6, 2.0), 0xC4);
+}
+
+#[test]
+fn apps_mean_eval_individual_gaussian_matches_monolith() {
+    mean_eval_matrix(&IndividualGaussian::new(0.5, LayeredVariant::Shifted, 8.0), 0xC5);
+}
+
+// ---------------------------------------------------------------------
+// QLSD* Langevin: mech reference ≡ coordinator, whole-d and streamed
+// partial chunks.
+// ---------------------------------------------------------------------
+
+fn qlsd_opts(iters: usize, seed: u64) -> LangevinOpts {
+    LangevinOpts { gamma: 5e-4, iters, burn_in: iters / 2, seed, discount_compression_noise: true }
+}
+
+fn assert_langevin_identical(
+    a: &exact_comp::apps::langevin::LangevinResult,
+    b: &exact_comp::apps::langevin::LangevinResult,
+    ctx: &str,
+) {
+    assert_eq!(a.mse.to_bits(), b.mse.to_bits(), "{ctx}: mse");
+    assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits(), "{ctx}: bits");
+    assert_eq!(a.chain_var.to_bits(), b.chain_var.to_bits(), "{ctx}: chain var");
+    assert_eq!(a.trace.len(), b.trace.len(), "{ctx}: trace length");
+    for ((ka, va), (kb, vb)) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(ka, kb, "{ctx}: trace iteration");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: trace value");
+    }
+}
+
+#[test]
+fn apps_qlsd_coordinator_matches_mech() {
+    let p = GaussianPosterior::generate(5, 8, 10, 0xD1);
+    let o = qlsd_opts(60, 0xD2);
+    for mech in [
+        &AggregateGaussian::new(1e-3, 8.0) as &dyn MeanMechanism,
+        &IrwinHallMechanism::new(1e-3, 8.0),
+    ] {
+        let reference = qlsd_star_mech(&p, mech, o);
+        for chunk in [0usize, 3, 8] {
+            let res = qlsd_star_coordinator(&p, mech, o, opts_chunk(chunk));
+            assert_langevin_identical(&reference, &res, &format!("{} c={chunk}", mech.name()));
+        }
+    }
+}
+
+#[test]
+fn apps_qlsd_discount_keeps_chain_at_temperature_on_coordinator() {
+    // the paper's Fig. 10 claim, on the coordinator path: with the
+    // exactly-Gaussian aggregate mechanism the discounted chain's
+    // stationary variance matches the discretized posterior
+    let p = GaussianPosterior::generate(4, 16, 50, 0xD3);
+    let gamma = 5e-4;
+    let o = LangevinOpts { gamma, iters: 12_000, burn_in: 2_000, seed: 0xD4,
+                           discount_compression_noise: true };
+    let mech = AggregateGaussian::new(0.05, 64.0);
+    let res = qlsd_star_coordinator(&p, &mech, o, opts_chunk(5));
+    let prec = p.precision();
+    let var_exact = 2.0 * gamma / (1.0 - (1.0 - gamma * prec).powi(2));
+    let rel = (res.chain_var - var_exact).abs() / var_exact;
+    assert!(rel < 0.08, "chain var {} vs exact {var_exact} (rel {rel})", res.chain_var);
+}
+
+// ---------------------------------------------------------------------
+// DRS smoothing: mech reference ≡ coordinator.
+// ---------------------------------------------------------------------
+
+#[test]
+fn apps_drs_coordinator_matches_mech() {
+    let p = L1Problem::generate(40, 9, 5, 0xE1);
+    let o = SmoothingOpts { iters: 40, lr: 0.25, sigma: 0.05, m_samples: 3, seed: 0xE2 };
+    let mech = AggregateGaussian::new(1e-3, 8.0);
+    let reference = drs_mech(&p, &mech, o);
+    for chunk in [0usize, 4] {
+        let trace = drs_coordinator(&p, &mech, o, opts_chunk(chunk));
+        assert_eq!(reference.len(), trace.len(), "c={chunk}: trace length");
+        for ((ka, va), (kb, vb)) in reference.iter().zip(&trace) {
+            assert_eq!(ka, kb, "c={chunk}: trace iteration");
+            assert_eq!(va.to_bits(), vb.to_bits(), "c={chunk}: trace value");
+        }
+    }
+}
+
+#[test]
+fn apps_drs_still_optimizes_on_coordinator() {
+    let p = L1Problem::generate(60, 10, 6, 0xE3);
+    let o = SmoothingOpts { iters: 300, lr: 0.25, sigma: 0.05, m_samples: 2, seed: 0xE4 };
+    let trace = drs_coordinator(&p, &AggregateGaussian::new(1e-3, 8.0), o, opts_chunk(0));
+    let first = trace.first().unwrap().1;
+    let last = trace.last().unwrap().1;
+    assert!(last < first * 0.7, "first={first} last={last}");
+}
+
+// ---------------------------------------------------------------------
+// KS: exact error laws on the sampled + chunked apps path.
+// ---------------------------------------------------------------------
+
+#[test]
+fn apps_ks_aggregate_gaussian_error_exact_on_sampled_chunked_path() {
+    // FixedSize-sampled cohorts, partial chunks, streamed slice compute:
+    // per coordinate, estimate − (cohort's exact mean) must stay exactly
+    // N(0, σ²). RoundReport.true_mean is the cohort's exact mean.
+    let (n, d, sigma) = (8usize, 16usize, 0.5f64);
+    let xs = gen_data(DataKind::BoxUniform { c: 2.0 }, n, d, 0xF1);
+    let mech = AggregateGaussian::new(sigma, 8.0);
+    let parts = mech.pipeline_parts().unwrap();
+    assert!(parts.encoder.slice_chunkable());
+    let compute = Arc::new(exact_comp::mechanisms::pipeline::SliceCompute::streamed(&xs));
+    let mut coord = AppCoordinator::new(
+        &mech,
+        compute,
+        n,
+        d,
+        CoordinatorOpts {
+            chunk: 5,
+            threads: Some(3),
+            policy: SamplingPolicy::FixedSize { k: 4 },
+            ..CoordinatorOpts::default()
+        },
+    );
+    let state = vec![0.0f64; d];
+    let reports = coord.run_rounds(0, 160, &state, 0xF2);
+    let mut errs = Vec::with_capacity(160 * d);
+    for rep in &reports {
+        assert_eq!(rep.cohort, 4);
+        for j in 0..d {
+            errs.push(rep.output.estimate[j] - rep.true_mean[j]);
+        }
+    }
+    let g = Gaussian::new(0.0, sigma);
+    let ks = ks_test(&errs, |e| g.cdf(e));
+    assert!(ks.p_value > 1e-3, "KS p = {} (stat {})", ks.p_value, ks.statistic);
+}
+
+#[test]
+fn apps_ks_qlsd_discounted_noise_exact_on_sampled_chunked_path() {
+    // The QLSD* discount composes the chain's injected noise β·Z with the
+    // mechanism's exactly-Gaussian aggregation error −γ·k·(Y − mean):
+    // together they must be exactly N(0, 2γ) per coordinate — the law the
+    // sampler's stationary temperature depends on. Run the aggregation
+    // leg on the sampled + chunked coordinator at a fixed θ and compose
+    // with the APP_ROUND-domain injected noise, exactly as the chain does.
+    let p = GaussianPosterior::generate(8, 12, 10, 0x101);
+    let (d, k_cohort) = (p.dim, 4usize);
+    let gamma = 1e-3;
+    let sigma_mech = 0.01;
+    let mech = AggregateGaussian::new(sigma_mech, 64.0);
+    let compute = Arc::new(HCompute::new(&p, true));
+    let mut coord = AppCoordinator::new(
+        &mech,
+        compute,
+        p.n_clients,
+        d,
+        CoordinatorOpts {
+            chunk: 5,
+            threads: Some(3),
+            policy: SamplingPolicy::FixedSize { k: k_cohort },
+            ..CoordinatorOpts::default()
+        },
+    );
+    // fixed chain point: θ ≠ θ* so the H vectors are non-trivial
+    let theta: Vec<f64> = p.posterior_mean.iter().map(|m| m + 0.25).collect();
+    let reports = coord.run_rounds(0, 160, &theta, 0x102);
+    let beta_sq = 2.0 * gamma
+        - gamma * gamma * (k_cohort as f64 * sigma_mech) * (k_cohort as f64 * sigma_mech);
+    let beta = beta_sq.sqrt();
+    let mut samples = Vec::with_capacity(reports.len() * d);
+    for rep in &reports {
+        let mut zrng = exact_comp::util::rng::Rng::new(exact_comp::util::rng::Rng::derive_domain(
+            0x103,
+            exact_comp::util::rng::seed_domain::APP_ROUND,
+            rep.round,
+        ));
+        for j in 0..d {
+            let agg_err = -gamma * k_cohort as f64 * (rep.output.estimate[j] - rep.true_mean[j]);
+            samples.push(agg_err + beta * zrng.normal());
+        }
+    }
+    let g = Gaussian::new(0.0, (2.0 * gamma).sqrt());
+    let ks = ks_test(&samples, |e| g.cdf(e));
+    assert!(ks.p_value > 1e-3, "KS p = {} (stat {})", ks.p_value, ks.statistic);
+}
+
+#[test]
+fn apps_ks_smoothing_perturbation_exact_gaussian() {
+    // the broadcast compression error that *is* the smoothing kernel:
+    // (𝓔(θ)_j − θ_j)/σ over rounds and coordinates ~ N(0, 1) exactly
+    let d = 24usize;
+    let sigma = 0.07;
+    let theta: Vec<f64> = (0..d).map(|j| (j as f64 * 0.31).sin()).collect();
+    let mut samples = Vec::with_capacity(400 * d);
+    for r in 0..400u64 {
+        let pert = perturbed_model(0x111, r, &theta, sigma);
+        for j in 0..d {
+            samples.push((pert[j] - theta[j]) / sigma);
+        }
+    }
+    let g = Gaussian::new(0.0, 1.0);
+    let ks = ks_test(&samples, |e| g.cdf(e));
+    assert!(ks.p_value > 1e-3, "KS p = {} (stat {})", ks.p_value, ks.statistic);
+}
+
+// ---------------------------------------------------------------------
+// The memory-model invariant, scaled down: a streaming compute must
+// never be asked for a whole-d vector on the chunked path.
+// ---------------------------------------------------------------------
+
+#[test]
+fn apps_streamed_compute_never_materializes_whole_d() {
+    struct NoWholeD {
+        dim: usize,
+        max_range: AtomicUsize,
+    }
+    impl LocalCompute for NoWholeD {
+        fn local_update(&self, _c: usize, _r: u64, _s: &[f64]) -> Vec<f64> {
+            panic!("streamed path materialized a whole-d client vector");
+        }
+        fn compute_chunk(
+            &self,
+            client: usize,
+            round: u64,
+            _state: &[f64],
+            range: std::ops::Range<usize>,
+            out: &mut [f64],
+        ) {
+            self.max_range.fetch_max(range.len(), Ordering::Relaxed);
+            for (o, j) in out.iter_mut().zip(range) {
+                *o = ((client as f64) - 2.0) * 0.1 + (j as f64) * 1e-3 + round as f64 * 1e-4;
+            }
+        }
+        fn dim_hint(&self, _state: &[f64]) -> usize {
+            self.dim
+        }
+        fn streams_chunks(&self) -> bool {
+            true
+        }
+    }
+
+    let (n, d, chunk) = (16usize, 64usize, 8usize);
+    let compute = Arc::new(NoWholeD { dim: d, max_range: AtomicUsize::new(0) });
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    let mut coord = AppCoordinator::new(
+        &mech,
+        compute.clone(),
+        n,
+        d,
+        CoordinatorOpts {
+            chunk,
+            threads: Some(3),
+            policy: SamplingPolicy::FixedSize { k: 6 },
+            ..CoordinatorOpts::default()
+        },
+    );
+    let reports = coord.run_rounds(0, 4, &[], 0x121);
+    assert_eq!(reports.len(), 4);
+    assert_eq!(reports[0].output.estimate.len(), d);
+    let seen = compute.max_range.load(Ordering::Relaxed);
+    assert!(seen > 0 && seen <= chunk, "max range seen = {seen}, chunk = {chunk}");
+    assert!(coord.peak_accumulator_bytes > 0);
+}
+
+// ---------------------------------------------------------------------
+// Seed-domain sanity: the exported app_round_seed IS the coordinator's
+// ROUND derivation (the bit-identity tests above depend on it, but this
+// pins the contract directly).
+// ---------------------------------------------------------------------
+
+#[test]
+fn apps_round_seed_is_round_domain_derivation() {
+    use exact_comp::util::rng::{seed_domain, Rng};
+    for (root, r) in [(0u64, 0u64), (0xABCD, 3), (u64::MAX, 1 << 40)] {
+        assert_eq!(app_round_seed(root, r), Rng::derive_domain(root, seed_domain::ROUND, r));
+        // distinct rounds must give distinct seeds (no wrapping collisions)
+        assert_ne!(app_round_seed(root, r), app_round_seed(root, r + 1));
+    }
+}

@@ -27,6 +27,24 @@ lint() {
         exit 1
     fi
     echo "ok: no thread_rng / SystemTime / rand:: references"
+
+    echo "== seed-derivation lint (rust/src/apps, rust/src/figures) =="
+    # The app/figure layers must derive every seed through
+    # Rng::derive_domain (docs/determinism.md "Streamed client compute"):
+    # ad-hoc mixing — wrapping arithmetic on seeds, golden-ratio constants,
+    # prime-multiply round mixing like `seed ^ (r * 7919)` — collides
+    # across domains and silently breaks the apps-on-coordinator ≡
+    # apps-on-aggregate() bit-identity contract. The RNG core (util/rng.rs)
+    # and test scaffolding own the primitive mixers; apps and figures may
+    # not re-invent them.
+    local seed_pattern='wrapping_(add|mul|sub)\(|0x9E37|\* 7919|\^ \(0x[0-9A-Fa-f]+ \+|\^ \([a-z_]+ \* [0-9]'
+    hits=$(grep -rnE "$seed_pattern" rust/src/apps rust/src/figures --include='*.rs' || true)
+    if [ -n "$hits" ]; then
+        echo "FORBIDDEN ad-hoc seed mixing in app/figure layer (use Rng::derive_domain):" >&2
+        echo "$hits" >&2
+        exit 1
+    fi
+    echo "ok: apps/figures derive seeds via Rng::derive_domain only"
 }
 
 lint
@@ -37,6 +55,8 @@ fi
 
 echo "== tier-1 verify =="
 cargo build --release
+# the examples are documentation that compiles — keep all five building
+cargo build --examples
 cargo test -q
 
 # Dropout property suite, run by name for visibility: the fixed seed
@@ -107,6 +127,19 @@ cargo test -q async
 echo "== scenario-engine suite (3 seeds x {calm, churn, straggler, byzantine}) =="
 cargo test -q scenario
 
+# Apps-on-the-coordinator suite, run by name for the same visibility:
+# every workload of the paper (mean estimation, QLSD* Langevin, DRS
+# smoothing) through the chunk-streamed AND async coordinator ≡ its
+# monolithic aggregate() reference, bit for bit, at full cohort across
+# mechanisms × chunk ∈ {0, 1, 7, d, d+3}; the KS exactness of the
+# aggregate-Gaussian error law, the QLSD* discounted-noise composition
+# and the smoothing perturbation on the sampled + chunked path; and the
+# streamed-compute memory-model test (a whole-d client materialization
+# panics). Redundant with the full `cargo test -q` above by construction —
+# a failure here names the apps-on-coordinator contract directly.
+echo "== apps-on-coordinator suite (apps == aggregate() bit-identity + KS laws) =="
+cargo test -q apps_
+
 # Snapshot/resume suite: byte round-trip losslessness of the versioned
 # snapshot format, fail-closed corruption handling, and checkpoint+resume
 # bit-identity at EVERY tick across mechanisms × {Plain, SecAgg} × chunk
@@ -120,7 +153,11 @@ cargo test -q snapshot
 # bench_coordinator's smoke includes the coordinator/rounds_async series
 # (scaled down from the million-client headline) WITH its O(ring·W·c)
 # peak-accumulator assertion, so a scheduler or memory-model break fails
-# the smoke, not just the nightly full run. bench_coordinator writes its
+# the smoke, not just the nightly full run. The same binary smokes the
+# apps/model_scale_demo series (d = 2^16, n = 1000 sampled in quick mode;
+# d = 2^20, n = 10^4 in the full run) with its own assertions that no
+# whole-d client vector is ever materialized and the accumulator
+# high-water mark stays O(shards·chunk). bench_coordinator writes its
 # artifact to target/BENCH_quick.json in this mode (never the committed
 # BENCH_N.json trajectory — quick numbers are not trajectory points).
 # bench_diff.sh then schema-checks the artifact; quick artifacts skip the
