@@ -5,7 +5,7 @@
 //! Worker threads are pinned to 4 by default so numbers are comparable
 //! across machines; `BENCH_THREADS` overrides the pin and the effective
 //! value is recorded in the emitted JSON. A full run writes
-//! `BENCH_9.json` at the repo root (the trajectory artifact compared by
+//! `BENCH_10.json` at the repo root (the trajectory artifact compared by
 //! `scripts/bench_diff.sh`); `BENCH_QUICK=1` smoke runs write to
 //! `target/BENCH_quick.json` instead so a quick pass can never overwrite
 //! a recorded trajectory point.
@@ -24,6 +24,7 @@ use exact_comp::coordinator::runtime::{
     run_rounds_mech_async, run_rounds_mech_chunked, run_rounds_mech_sampled,
     run_rounds_mech_with_dropouts, AsyncRunConfig, ClientPool,
 };
+use exact_comp::coding::packed::PackedZm;
 use exact_comp::coordinator::sampling::SamplingPolicy;
 use exact_comp::mechanisms::pipeline::{ClientEncoder, LocalCompute, Plain, SecAgg, SharedRound};
 use exact_comp::mechanisms::traits::MeanMechanism;
@@ -36,7 +37,7 @@ use exact_comp::util::rng::{fill_below_coords, fill_u01_coords, Rng};
 use exact_comp::util::stats::ks_test;
 
 /// Bump per PR: the trajectory artifact this bench emits on a full run.
-const TRAJECTORY_FILE: &str = "BENCH_9.json";
+const TRAJECTORY_FILE: &str = "BENCH_10.json";
 
 fn main() {
     let mut s = Suite::from_env();
@@ -264,6 +265,69 @@ fn main() {
         );
     }
 
+    // packed ℤ_m wire-format series: the same chunked SecAgg window,
+    // recorded as its own trajectory line with the TIGHTENED acceptance —
+    // peak accumulator bytes must fit the packed ⌈c·w/64⌉·8 per-slot
+    // budget (w = 40 bits at the default 2⁴⁰ modulus, a 64/40 = 1.6×
+    // cut vs the u64 layout), and the measured channel traffic
+    // (`ChunkStreamStats::wire_bytes`) is printed alongside
+    {
+        let n = 16usize;
+        let d = 4096usize;
+        let w = 4usize;
+        let pool = ClientPool::spawn_with_threads(
+            n,
+            Arc::new(move |c: usize, r: u64, _s: &[f64]| {
+                let mut rng = Rng::derive(r, c as u64);
+                (0..d).map(|_| rng.uniform(-2.0, 2.0)).collect::<Vec<f64>>()
+            }),
+            Some(threads),
+        );
+        let mech = IrwinHallMechanism::new(0.5, 4.0);
+        let modulus = SecAggParams::default().modulus;
+        for chunk in [64usize, 1024] {
+            let mut start = 0u64;
+            let mut peak = 0usize;
+            let mut wire = 0usize;
+            s.bench_elements(
+                &format!("coordinator/rounds_chunked_packed(n={n},d={d},W={w},c={chunk})"),
+                Some((n * d * w) as u64),
+                || {
+                    let (reps, stats) = run_rounds_mech_chunked(
+                        &pool,
+                        &mech,
+                        Arc::new(SecAgg::new()),
+                        start,
+                        w,
+                        &[],
+                        42,
+                        d,
+                        chunk,
+                    );
+                    start += w as u64;
+                    peak = peak.max(stats.peak_accumulator_bytes);
+                    wire = stats.wire_bytes;
+                    black_box(reps);
+                },
+            );
+            let slot = PackedZm::byte_len_for(chunk, modulus);
+            assert!(
+                slot <= chunk * 8,
+                "packed slot {slot} not below the u64 slot at c = {chunk}"
+            );
+            let packed_budget = 3 * (threads + 1) * w * slot;
+            assert!(
+                peak <= packed_budget,
+                "packed chunked peak {peak} exceeds O(shards·W·⌈c·w/64⌉·8) budget \
+                 {packed_budget}"
+            );
+            println!(
+                "  coordinator/rounds_chunked_packed(c={chunk}): peak = {peak} \
+                 (packed budget {packed_budget}), wire bytes/window = {wire}"
+            );
+        }
+    }
+
     // event-driven work-stealing coordinator (no chunk barrier): the
     // headline series is a million-client Plain round — the fleet scale
     // the barrier runners cannot reach in a bench budget — recording wall
@@ -384,6 +448,42 @@ fn main() {
             },
         );
         println!("  coordinator/rounds_async_deadline: {converted} stragglers converted");
+
+        // packed variant of the async SecAgg line: same shape, tightened
+        // packed per-slot acceptance + measured wire traffic
+        let mut start = 0u64;
+        let mut peak = 0usize;
+        let mut wire = 0usize;
+        s.bench_elements(
+            &format!("coordinator/rounds_async_secagg_packed(n={n},d={d},W={w},c={chunk})"),
+            Some((n * d * w) as u64),
+            || {
+                let (reps, stats) = run_rounds_mech_async(
+                    &pool,
+                    &mech,
+                    Arc::new(SecAgg::new()),
+                    start,
+                    w,
+                    &[],
+                    42,
+                    &cfg,
+                );
+                start += w as u64;
+                peak = peak.max(stats.peak_accumulator_bytes);
+                wire = stats.wire_bytes;
+                black_box(reps);
+            },
+        );
+        let slot = PackedZm::byte_len_for(chunk, SecAggParams::default().modulus);
+        let packed_budget = 3 * (cfg.ring + 1) * w * slot;
+        assert!(
+            peak <= packed_budget,
+            "packed async peak {peak} exceeds O(ring·W·⌈c·w/64⌉·8) budget {packed_budget}"
+        );
+        println!(
+            "  coordinator/rounds_async_secagg_packed: peak = {peak} (packed budget \
+             {packed_budget}), wire bytes/window = {wire}"
+        );
     }
 
     // SecAgg masking
@@ -514,6 +614,38 @@ fn main() {
         s.bench_throughput(&format!("kernels/quant_encode_batched(d={d})"), Some(d as u64), dbytes, 1, || {
             black_box(mech.encode(3, &x, &round));
         });
+
+        // ℤ_m pack/unpack: the packed wire-format kernel. Scalar baseline
+        // is a BitWriter/BitReader stream (one push_bits/read_bits per
+        // residue, bit-cursor bookkeeping per call); the lane path is
+        // PackedZm's word-streaming block kernels over the same residues
+        let wbits = exact_comp::coding::packed::width_for_modulus(m) as usize;
+        let mut residues = vec![0u64; d];
+        fill_below_coords(ps, 0, m, &mut residues);
+        let mut scratch = vec![0u64; d];
+        s.bench_throughput(&format!("kernels/pack_unpack_scalar(d={d})"), Some(d as u64), dbytes, 1, || {
+            let mut bw = exact_comp::coding::BitWriter::new();
+            for &r in black_box(&residues).iter() {
+                bw.push_bits(r, wbits);
+            }
+            let bytes = bw.into_bytes();
+            let mut br = exact_comp::coding::BitReader::new(&bytes);
+            for o in scratch.iter_mut() {
+                *o = br.read_bits(wbits).expect("short packed stream");
+            }
+            black_box(&scratch);
+        });
+        let scalar_pack = s.results.last().unwrap().throughput_mps();
+        s.bench_throughput(&format!("kernels/pack_unpack_lane(d={d})"), Some(d as u64), dbytes, 1, || {
+            let packed = PackedZm::from_residues(black_box(&residues), m);
+            packed.unpack_into(&mut scratch);
+            black_box(&scratch);
+        });
+        let lane_pack = s.results.last().unwrap().throughput_mps();
+        assert_eq!(scratch, residues, "pack/unpack is not a bit identity");
+        if let (Some(a), Some(b)) = (scalar_pack, lane_pack) {
+            println!("  kernels/pack_unpack lane-vs-scalar speedup: {:.2}x", b / a);
+        }
     }
 
     // apps-on-the-coordinator series: the paper's workloads end-to-end
@@ -601,17 +733,20 @@ fn main() {
         );
     }
 
-    // model-scale streamed-compute demo: a d ≥ 10⁶ model over an n = 10⁴
-    // fleet with a seed-sampled cohort, every client producing its vector
-    // per coordinate range — the acceptance run for the chunk-ranged
-    // LocalCompute tentpole. Two invariants are asserted hot:
+    // model-scale streamed-compute demo at FedSZ scale: a d = 10⁷ model
+    // (full runs; 2¹⁶ for the BENCH_QUICK smoke) over an n = 10⁴ fleet
+    // with a FixedSize seed-sampled cohort, every client producing its
+    // vector per coordinate range, the uplink under EXPLICIT SecAgg so
+    // the accumulators ride the packed ℤ_m wire format. Invariants
+    // asserted hot:
     //   1. no whole-d client vector is ever materialized (the compute's
     //      local_update panics, and the max range seen stays ≤ c);
-    //   2. peak accumulator bytes stay within the O(shards·W·c) budget —
-    //      the orchestrator never holds O(d), let alone O(n·d).
+    //   2. the packed accumulator high-water mark stays within the
+    //      O(shards·W·⌈c·w/64⌉·8) budget — the orchestrator never holds
+    //      O(d) residues, let alone O(n·d), and each live slot is packed.
     {
         let full = !Suite::quick_mode();
-        let d = if full { 1usize << 20 } else { 1usize << 16 };
+        let d = if full { 10_000_000usize } else { 1usize << 16 };
         let n = if full { 10_000usize } else { 1_000 };
         let k = if full { 64usize } else { 16 };
         let chunk = 4096usize.min(d);
@@ -656,7 +791,7 @@ fn main() {
         let (reps, stats) = run_rounds_encoded_chunked(
             &pool,
             parts.encoder.clone(),
-            parts.transport.clone(),
+            Arc::new(SecAgg::new()),
             parts.decoder.as_ref(),
             0,
             w,
@@ -677,17 +812,23 @@ fn main() {
             max_range <= chunk,
             "streamed compute saw a {max_range}-wide range (> c = {chunk})"
         );
-        let budget = 3 * (threads + 1) * w * chunk * 8;
+        // packed high-water mark: every live slot is a packed ℤ_m chunk,
+        // so the budget is the packed per-slot size, not c·8
+        let slot = PackedZm::byte_len_for(chunk, SecAggParams::default().modulus);
+        assert!(slot <= chunk * 8, "packed slot {slot} not below the u64 slot");
+        let budget = 3 * (threads + 1) * w * slot;
         assert!(
             stats.peak_accumulator_bytes <= budget,
-            "model-scale peak {} exceeds O(shards·W·c) budget {budget} at d = {d}",
+            "model-scale peak {} exceeds O(shards·W·⌈c·w/64⌉·8) budget {budget} at d = {d}",
             stats.peak_accumulator_bytes
         );
         println!(
             "  apps/model_scale_streamed(n={n},d={d},k={k},c={chunk}): {:.2}s, \
-             peak accumulator bytes = {} (budget {budget}), max range = {max_range}",
+             peak accumulator bytes = {} (packed budget {budget}), wire bytes = {}, \
+             max range = {max_range}",
             elapsed_ns / 1e9,
-            stats.peak_accumulator_bytes
+            stats.peak_accumulator_bytes,
+            stats.wire_bytes
         );
         // one-shot measurement: too heavy to loop, still worth a
         // trajectory point (mean = the single run)

@@ -5,12 +5,16 @@
 //! step size, Prop. 2), variable-length codes (Huffman on p_{M|S}, within
 //! 1 bit of H(M|S)), and Elias gamma codes (used for the Fig. 6/9
 //! measurements). [`entropy`] computes the exact conditional entropies the
-//! figures report.
+//! figures report. [`packed`] is the fixed-width ℤ_m wire format every
+//! masked transport payload and session accumulator slot actually rides —
+//! ⌈log₂ m⌉ bits per residue, not a whole u64.
 
 pub mod bitio;
 pub mod elias;
 pub mod fixed;
 pub mod huffman;
 pub mod entropy;
+pub mod packed;
 
 pub use bitio::{BitReader, BitWriter};
+pub use packed::PackedZm;

@@ -1,0 +1,456 @@
+//! Bit-packed ℤ_m residue vectors: the wire format of every masked
+//! transport payload and session accumulator slot.
+//!
+//! The paper's whole point is cutting communication, yet a residue mod
+//! m = 2⁴⁰ carried in a `u64` wastes 24 of its 64 bits — and quantizer
+//! description spaces are narrower still. [`PackedZm`] stores `len`
+//! residues at their fixed width w = ⌈log₂ m⌉ in `⌈len·w/64⌉` little-
+//! endian u64 words (LSB-first within each word, the word-oriented
+//! sibling of the byte-MSB [`super::bitio`] codecs), shrinking payload
+//! and accumulator bytes by 64/w. [`PackedZm::byte_len`] is the single
+//! source of truth for wire size: ⌈len·w/64⌉·8 bytes, exactly the
+//! per-slot bound the session and coordinator memory models assert.
+//!
+//! Arithmetic never happens on packed words. The accumulate paths
+//! ([`PackedZm::fold_residues`], [`PackedZm::add_assign_mod`]) unpack a
+//! fixed [`PACK_BLOCK`]-residue block into on-stack scratch, add on the
+//! proven u64 path, and repack — the same SoA scratch discipline as the
+//! `CoordLanes` kernels (`util::rng`), with [`PACK_BLOCK`] a multiple of
+//! 64 so every block starts word-aligned for ANY width. Packing is a
+//! pure re-layout of already-drawn residues, so packed ≡ unpacked is a
+//! bit identity on every residue (docs/determinism.md, "Packed words
+//! cannot change any drawn bit").
+
+/// Residues per pack/unpack kernel block. A multiple of 64, so a block
+/// boundary `b·PACK_BLOCK·w` bits is word-aligned for every width w —
+/// blocks pack and repack independently without read-modify-write of a
+/// neighbour's word. 1024 residues = 8 KiB of u64 scratch, L1-resident.
+pub const PACK_BLOCK: usize = 1024;
+
+/// Fixed residue width for modulus m: w = ⌈log₂ m⌉ bits represent every
+/// residue in [0, m). Deterministic in m alone — both ends of a wire
+/// derive the same layout from the transport's modulus, no negotiation.
+///
+/// Panics on m < 2 (a zero/unit modulus has no residues to pack).
+pub fn width_for_modulus(modulus: u64) -> u32 {
+    assert!(modulus >= 2, "packed ℤ_m needs a modulus >= 2, got {modulus}");
+    64 - (modulus - 1).leading_zeros()
+}
+
+#[inline]
+fn width_mask(width: u32) -> u64 {
+    if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// a + b mod m for a, b < m, carry-aware: correct for every m ≥ 2 (the
+/// intermediate sum may wrap u64; the wrap implies exactly one
+/// subtraction of m is due).
+#[inline]
+fn add_mod_residue(a: u64, b: u64, m: u64) -> u64 {
+    debug_assert!(a < m && b < m);
+    let (s, carry) = a.overflowing_add(b);
+    if carry || s >= m {
+        s.wrapping_sub(m)
+    } else {
+        s
+    }
+}
+
+/// A fixed-width packed vector of residues mod m.
+///
+/// Representation is canonical: every residue is < m (asserted on every
+/// ingest path) and the bits past `len·w` in the last word are zero — so
+/// the derived `PartialEq` is exactly residue-sequence equality, which
+/// is what the snapshot round-trip and bit-identity tests compare.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedZm {
+    modulus: u64,
+    width: u32,
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedZm {
+    /// Packed word count for `len` residues mod `modulus`: ⌈len·w/64⌉.
+    fn word_count(len: usize, width: u32) -> usize {
+        len.checked_mul(width as usize)
+            .expect("packed bit length overflows usize")
+            .div_ceil(64)
+    }
+
+    /// The wire size in bytes of `len` residues mod `modulus` —
+    /// ⌈len·w/64⌉·8 — without constructing a vector. This is the
+    /// per-slot accumulator bound the memory-model tests and benches
+    /// assert against.
+    pub fn byte_len_for(len: usize, modulus: u64) -> usize {
+        Self::word_count(len, width_for_modulus(modulus)) * 8
+    }
+
+    /// All-zero residue vector (the identity of `add_assign_mod`).
+    pub fn zeros(len: usize, modulus: u64) -> Self {
+        let width = width_for_modulus(modulus);
+        Self { modulus, width, len, words: vec![0u64; Self::word_count(len, width)] }
+    }
+
+    /// Pack a residue slice. Every residue must already be reduced
+    /// (< modulus) — packing is a re-layout, never arithmetic, so an
+    /// unreduced input fails loudly instead of silently truncating.
+    pub fn from_residues(residues: &[u64], modulus: u64) -> Self {
+        let mut out = Self::zeros(residues.len(), modulus);
+        if !residues.is_empty() {
+            out.pack_block(0, residues);
+        }
+        out
+    }
+
+    /// Reassemble from externalized parts (the snapshot read path).
+    /// Fails closed on a word count that disagrees with (len, modulus),
+    /// a dirty tail (bits past len·w set), or an unreduced residue —
+    /// a corrupt snapshot must never yield a plausible-but-wrong vector.
+    pub fn from_raw_parts(modulus: u64, len: usize, words: Vec<u64>) -> Self {
+        let width = width_for_modulus(modulus);
+        let expect = Self::word_count(len, width);
+        assert!(
+            words.len() == expect,
+            "packed ℤ_m fails closed: {} words for {len} residues of width {width} \
+             (expected {expect})",
+            words.len(),
+        );
+        let tail_bits = (len * width as usize) % 64;
+        if tail_bits != 0 {
+            let last = *words.last().expect("tail_bits != 0 implies a last word");
+            assert!(
+                last >> tail_bits == 0,
+                "packed ℤ_m fails closed: dirty bits past the final residue"
+            );
+        }
+        let out = Self { modulus, width, len, words };
+        for i in 0..len {
+            let r = out.get(i);
+            assert!(r < modulus, "packed ℤ_m fails closed: residue {r} >= modulus {modulus}");
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn modulus(&self) -> u64 {
+        self.modulus
+    }
+
+    /// Fixed residue width w = ⌈log₂ m⌉.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// The packed words (what the snapshot format serializes).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Payload bytes on the wire / in an accumulator slot:
+    /// ⌈len·w/64⌉·8. The single source of truth every byte-accounting
+    /// path (`TransportPartial::wire_bytes`, session peaks, runner
+    /// `wire_bytes` counters) routes through.
+    pub fn byte_len(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Residue i.
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        assert!(i < self.len, "index {i} out of bounds for {} residues", self.len);
+        let w = self.width as usize;
+        let bit = i * w;
+        let (wi, off) = (bit / 64, bit % 64);
+        let mut v = self.words[wi] >> off;
+        if off + w > 64 {
+            v |= self.words[wi + 1] << (64 - off);
+        }
+        v & width_mask(self.width)
+    }
+
+    /// Unpack the whole vector into `out` (length must match).
+    pub fn unpack_into(&self, out: &mut [u64]) {
+        assert_eq!(out.len(), self.len, "unpack buffer length mismatch");
+        if self.len > 0 {
+            self.unpack_block(0, out);
+        }
+    }
+
+    /// Unpack into a fresh buffer.
+    pub fn to_residues(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.len];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Streaming unpack of `out.len()` residues starting at residue `lo`;
+    /// `lo` must be block-aligned (`lo % PACK_BLOCK == 0`) so the read
+    /// starts on a word boundary.
+    fn unpack_block(&self, lo: usize, out: &mut [u64]) {
+        debug_assert!(lo % PACK_BLOCK == 0, "block start {lo} not PACK_BLOCK-aligned");
+        debug_assert!(lo + out.len() <= self.len);
+        let w = self.width as usize;
+        if w == 64 {
+            out.copy_from_slice(&self.words[lo..lo + out.len()]);
+            return;
+        }
+        let mask = width_mask(self.width);
+        let mut wi = lo * w / 64;
+        let mut off = 0usize;
+        for o in out.iter_mut() {
+            let mut v = self.words[wi] >> off;
+            if off + w > 64 {
+                v |= self.words[wi + 1] << (64 - off);
+            }
+            *o = v & mask;
+            off += w;
+            if off >= 64 {
+                off -= 64;
+                wi += 1;
+            }
+        }
+    }
+
+    /// Streaming pack of `block` residues starting at residue `lo`; `lo`
+    /// must be block-aligned and the write must either fill whole words
+    /// or end at the vector's tail (both hold for PACK_BLOCK blocks and
+    /// the final partial block), so no neighbouring bits need preserving.
+    fn pack_block(&mut self, lo: usize, block: &[u64]) {
+        debug_assert!(lo % PACK_BLOCK == 0, "block start {lo} not PACK_BLOCK-aligned");
+        let w = self.width as usize;
+        debug_assert!(
+            lo + block.len() == self.len || (block.len() * w) % 64 == 0,
+            "pack_block must end at the vector tail or on a word boundary"
+        );
+        let m = self.modulus;
+        if w == 64 {
+            for &r in block {
+                assert!(r < m, "residue {r} out of range for modulus {m}");
+            }
+            self.words[lo..lo + block.len()].copy_from_slice(block);
+            return;
+        }
+        let mut wi = lo * w / 64;
+        let mut acc = 0u64;
+        let mut fill = 0usize;
+        for &r in block {
+            assert!(r < m, "residue {r} out of range for modulus {m}");
+            acc |= r << fill;
+            if fill + w >= 64 {
+                self.words[wi] = acc;
+                wi += 1;
+                acc = if fill > 0 { r >> (64 - fill) } else { 0 };
+                fill = fill + w - 64;
+            } else {
+                fill += w;
+            }
+        }
+        if fill > 0 {
+            // the vector tail: bits past len·w stay zero (canonical form)
+            self.words[wi] = acc;
+        }
+    }
+
+    /// Masked accumulation against an unpacked residue slice: unpack one
+    /// PACK_BLOCK of self into on-stack scratch, add mod m on the u64
+    /// path, repack — O(PACK_BLOCK) live scratch however long the
+    /// vector. The summing transports fold every client's masked chunk
+    /// through this, so accumulator slots stay packed between folds.
+    pub fn fold_residues(&mut self, residues: &[u64]) {
+        assert_eq!(
+            residues.len(),
+            self.len,
+            "residue length changed mid-accumulation"
+        );
+        let m = self.modulus;
+        let mut scratch = [0u64; PACK_BLOCK];
+        let mut lo = 0usize;
+        while lo < self.len {
+            let take = PACK_BLOCK.min(self.len - lo);
+            let s = &mut scratch[..take];
+            self.unpack_block(lo, s);
+            for (a, &v) in s.iter_mut().zip(&residues[lo..lo + take]) {
+                assert!(v < m, "residue {v} out of range for modulus {m}");
+                *a = add_mod_residue(*a, v, m);
+            }
+            self.pack_block(lo, s);
+            lo += take;
+        }
+    }
+
+    /// Merge another packed accumulator: self[i] = (self[i] + other[i])
+    /// mod m, blockwise through the same scratch discipline.
+    pub fn add_assign_mod(&mut self, other: &PackedZm) {
+        assert_eq!(self.modulus, other.modulus, "modulus mismatch in packed merge");
+        assert_eq!(self.len, other.len, "length mismatch in packed merge");
+        let m = self.modulus;
+        let mut sa = [0u64; PACK_BLOCK];
+        let mut sb = [0u64; PACK_BLOCK];
+        let mut lo = 0usize;
+        while lo < self.len {
+            let take = PACK_BLOCK.min(self.len - lo);
+            self.unpack_block(lo, &mut sa[..take]);
+            other.unpack_block(lo, &mut sb[..take]);
+            for (a, &b) in sa[..take].iter_mut().zip(&sb[..take]) {
+                *a = add_mod_residue(*a, b, m);
+            }
+            self.pack_block(lo, &sa[..take]);
+            lo += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const MODULI: [u64; 5] = [1 << 8, 1 << 12, 1 << 40, 999_983, 77];
+
+    fn random_residues(rng: &mut Rng, len: usize, m: u64) -> Vec<u64> {
+        (0..len).map(|_| rng.below(m)).collect()
+    }
+
+    #[test]
+    fn packed_width_formula() {
+        assert_eq!(width_for_modulus(2), 1);
+        assert_eq!(width_for_modulus(3), 2);
+        assert_eq!(width_for_modulus(256), 8);
+        assert_eq!(width_for_modulus(257), 9);
+        assert_eq!(width_for_modulus(1 << 40), 40);
+        assert_eq!(width_for_modulus((1 << 40) + 1), 41);
+        assert_eq!(width_for_modulus(u64::MAX), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "modulus >= 2")]
+    fn packed_width_rejects_unit_modulus() {
+        let _ = width_for_modulus(1);
+    }
+
+    #[test]
+    fn packed_roundtrip_every_modulus_and_ragged_length() {
+        let mut rng = Rng::new(0x9AC7);
+        for &m in &MODULI {
+            for len in [0usize, 1, 7, 63, 64, 65, PACK_BLOCK - 1, PACK_BLOCK, PACK_BLOCK + 3] {
+                let rs = random_residues(&mut rng, len, m);
+                let p = PackedZm::from_residues(&rs, m);
+                assert_eq!(p.len(), len);
+                assert_eq!(p.to_residues(), rs, "m={m} len={len}");
+                for (i, &r) in rs.iter().enumerate() {
+                    assert_eq!(p.get(i), r, "m={m} len={len} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_byte_len_is_the_ceil_formula() {
+        for &m in &MODULI {
+            let w = width_for_modulus(m) as usize;
+            for len in [0usize, 1, 7, 64, 100, 1025] {
+                let p = PackedZm::zeros(len, m);
+                assert_eq!(p.byte_len(), (len * w).div_ceil(64) * 8, "m={m} len={len}");
+                assert_eq!(p.byte_len(), PackedZm::byte_len_for(len, m));
+            }
+        }
+        // the headline shrink: 2^40 residues ride 40 bits, not 64
+        assert_eq!(PackedZm::byte_len_for(64, 1 << 40), 40 * 8);
+    }
+
+    #[test]
+    fn packed_width_64_degenerates_to_plain_words() {
+        let mut rng = Rng::new(3);
+        let rs = random_residues(&mut rng, 130, u64::MAX);
+        let p = PackedZm::from_residues(&rs, u64::MAX);
+        assert_eq!(p.width(), 64);
+        assert_eq!(p.words(), &rs[..]);
+        assert_eq!(p.to_residues(), rs);
+    }
+
+    #[test]
+    fn packed_fold_matches_scalar_mod_arithmetic() {
+        let mut rng = Rng::new(0xF01D);
+        for &m in &MODULI {
+            for len in [1usize, 7, 64, PACK_BLOCK + 5] {
+                let a = random_residues(&mut rng, len, m);
+                let b = random_residues(&mut rng, len, m);
+                let mut p = PackedZm::from_residues(&a, m);
+                p.fold_residues(&b);
+                let want: Vec<u64> =
+                    a.iter().zip(&b).map(|(&x, &y)| add_mod_residue(x, y, m)).collect();
+                assert_eq!(p.to_residues(), want, "m={m} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_merge_matches_fold() {
+        let mut rng = Rng::new(0x3E6);
+        for &m in &MODULI {
+            let len = PACK_BLOCK + 17;
+            let a = random_residues(&mut rng, len, m);
+            let b = random_residues(&mut rng, len, m);
+            let mut via_merge = PackedZm::from_residues(&a, m);
+            via_merge.add_assign_mod(&PackedZm::from_residues(&b, m));
+            let mut via_fold = PackedZm::from_residues(&a, m);
+            via_fold.fold_residues(&b);
+            assert_eq!(via_merge, via_fold, "m={m}");
+            let mut zero = PackedZm::zeros(len, m);
+            zero.add_assign_mod(&via_merge);
+            assert_eq!(zero, via_merge, "zeros is the merge identity, m={m}");
+        }
+    }
+
+    #[test]
+    fn packed_equality_is_residue_equality() {
+        // canonical form: two packings of the same residues are equal as
+        // words, so PartialEq on PackedZm == equality of residue vectors
+        let mut rng = Rng::new(44);
+        let rs = random_residues(&mut rng, 99, 1 << 12);
+        let a = PackedZm::from_residues(&rs, 1 << 12);
+        let mut b = PackedZm::zeros(99, 1 << 12);
+        b.fold_residues(&rs);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn packed_raw_parts_roundtrip() {
+        let mut rng = Rng::new(0x5AF);
+        let rs = random_residues(&mut rng, 130, 999_983);
+        let p = PackedZm::from_residues(&rs, 999_983);
+        let q = PackedZm::from_raw_parts(p.modulus(), p.len(), p.words().to_vec());
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    #[should_panic(expected = "fails closed")]
+    fn packed_raw_parts_rejects_word_count_mismatch() {
+        let _ = PackedZm::from_raw_parts(1 << 8, 100, vec![0u64; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dirty bits")]
+    fn packed_raw_parts_rejects_dirty_tail() {
+        // 3 residues of width 8 occupy 24 bits of one word; bit 60 is junk
+        let _ = PackedZm::from_raw_parts(1 << 8, 3, vec![1u64 << 60]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn packed_rejects_unreduced_residue() {
+        let _ = PackedZm::from_residues(&[256], 1 << 8);
+    }
+}

@@ -1113,8 +1113,13 @@ fn run_rounds_encoded_cohorts(
 #[derive(Clone, Copy, Debug)]
 pub struct ChunkStreamStats {
     /// high-water mark of the orchestrator session's live accumulator
-    /// payload bytes — O(shards-in-flight · c), never O(d)
+    /// payload bytes — O(shards-in-flight · c), never O(d), and measured
+    /// at the packed ⌈c·w/64⌉·8 width for masked transports
     pub peak_accumulator_bytes: usize,
+    /// total payload bytes shipped over the shard→orchestrator channel
+    /// this window, summed via [`TransportPartial::wire_bytes`] — the
+    /// measured (packed) wire traffic, not a ×8-per-residue estimate
+    pub wire_bytes: usize,
     /// the chunk size actually used (clamped to d)
     pub chunk: usize,
     pub n_chunks: usize,
@@ -1246,6 +1251,8 @@ pub fn run_rounds_encoded_chunked(
     // buffered until every shard's chunk-k message landed, which the
     // chunk barrier guarantees happens before any chunk-k+1 message
     let mut x_pending: Vec<(usize, usize, Vec<Vec<f64>>)> = Vec::with_capacity(n_shards);
+    // measured channel traffic: every shard partial's packed payload size
+    let mut wire_bytes = 0usize;
     for _ in 0..total_msgs {
         let msg = match chunk_rx.recv() {
             Ok(ChunkStreamMsg::Window(w)) => w,
@@ -1264,7 +1271,10 @@ pub fn run_rounds_encoded_chunked(
         for (r, fold) in msg.rounds.into_iter().enumerate() {
             x_chunks.push(fold.x_sum_chunk);
             match fold.partial {
-                Some(p) => session.fold_chunk_partial(r, k, p, &fold.clients, &fold.bits),
+                Some(p) => {
+                    wire_bytes += p.wire_bytes();
+                    session.fold_chunk_partial(r, k, p, &fold.clients, &fold.bits)
+                }
                 None => assert!(fold.clients.is_empty(), "shard lost a partial"),
             }
             // the chunk closes — and its accumulator frees — the moment
@@ -1311,6 +1321,7 @@ pub fn run_rounds_encoded_chunked(
     }
     let stats = ChunkStreamStats {
         peak_accumulator_bytes: session.peak_accumulator_bytes(),
+        wire_bytes,
         chunk: plan.chunk(),
         n_chunks: plan.n_chunks(),
     };
@@ -1440,8 +1451,13 @@ impl AsyncRunConfig {
 #[derive(Clone, Copy, Debug)]
 pub struct AsyncStreamStats {
     /// high-water mark of the session's live accumulator payload bytes —
-    /// O(ring · W · c) by the ring admission rule, never O(d)
+    /// O(ring · W · c) by the ring admission rule, never O(d), measured
+    /// at the packed ⌈c·w/64⌉·8 width for masked transports
     pub peak_accumulator_bytes: usize,
+    /// total payload bytes shipped over the task→orchestrator channel
+    /// this window ([`TransportPartial::wire_bytes`]) — measured packed
+    /// wire traffic
+    pub wire_bytes: usize,
     /// the chunk size actually used (clamped to d)
     pub chunk: usize,
     pub n_chunks: usize,
@@ -1701,6 +1717,8 @@ pub fn run_rounds_encoded_async(
     let shared: Vec<SharedRound> =
         (0..window).map(|r| SharedRound::new(seeds[r], n, dim)).collect();
     let mut processed = 0usize;
+    // measured channel traffic: every task partial's packed payload size
+    let mut wire_bytes = 0usize;
     while processed < total_msgs {
         let msg = match events_rx.recv() {
             Ok(m) => m,
@@ -1733,7 +1751,10 @@ pub fn run_rounds_encoded_async(
             for (r, fold) in m.rounds.into_iter().enumerate() {
                 x_chunks.push(fold.x_sum_chunk);
                 match fold.partial {
-                    Some(p) => session.fold_chunk_partial(r, k, p, &fold.clients, &fold.bits),
+                    Some(p) => {
+                        wire_bytes += p.wire_bytes();
+                        session.fold_chunk_partial(r, k, p, &fold.clients, &fold.bits)
+                    }
                     None => assert!(fold.clients.is_empty(), "block lost a partial"),
                 }
                 // the accumulator closes — and frees — the moment the
@@ -1800,6 +1821,7 @@ pub fn run_rounds_encoded_async(
     );
     let stats = AsyncStreamStats {
         peak_accumulator_bytes: session.peak_accumulator_bytes(),
+        wire_bytes,
         chunk: plan.chunk(),
         n_chunks,
         tasks: total_msgs,
@@ -2524,6 +2546,40 @@ mod tests {
             "peak {} exceeds O(shards·W·c) budget {budget}",
             small.peak_accumulator_bytes,
         );
+        // the packed wire format tightens the per-slot bound from c·8 to
+        // ⌈c·w_bits/64⌉·8 — the same budget scaled by the packed ratio
+        let slot = crate::coding::packed::PackedZm::byte_len_for(
+            chunk,
+            crate::secagg::SecAggParams::default().modulus,
+        );
+        assert!(slot <= chunk * 8, "packed slot {slot} exceeds the u64 slot");
+        let packed_budget = 3 * (4 + 1) * w * slot;
+        assert!(
+            small.peak_accumulator_bytes <= packed_budget,
+            "peak {} exceeds the PACKED O(shards·W·⌈c·w/64⌉·8) budget {packed_budget}",
+            small.peak_accumulator_bytes,
+        );
+        // measured channel traffic: every shard ships one packed O(c)
+        // partial per (round, chunk) — shards with no cohort clients ship
+        // none, so the measured total is bounded by the full-shard count
+        assert!(small.wire_bytes > 0, "chunked window moved no payload bytes");
+        let n_shards = pool.shard_ranges().len();
+        let max_wire: usize = (0..d.div_ceil(chunk))
+            .map(|k| {
+                let len = chunk.min(d - k * chunk);
+                n_shards
+                    * w
+                    * crate::coding::packed::PackedZm::byte_len_for(
+                        len,
+                        crate::secagg::SecAggParams::default().modulus,
+                    )
+            })
+            .sum();
+        assert!(
+            small.wire_bytes <= max_wire,
+            "wire {} exceeds shards×rounds×packed-chunk bound {max_wire}",
+            small.wire_bytes,
+        );
     }
 
     #[test]
@@ -2927,6 +2983,45 @@ mod tests {
             small.peak_accumulator_bytes <= budget,
             "peak {} exceeds O(ring·W·c) budget {budget}",
             small.peak_accumulator_bytes,
+        );
+        // packed per-slot bound: the same budget at ⌈c·w_bits/64⌉·8
+        let slot = crate::coding::packed::PackedZm::byte_len_for(
+            chunk,
+            crate::secagg::SecAggParams::default().modulus,
+        );
+        assert!(slot <= chunk * 8, "packed slot {slot} exceeds the u64 slot");
+        let packed_budget = 3 * (ring + 1) * w * slot;
+        assert!(
+            small.peak_accumulator_bytes <= packed_budget,
+            "peak {} exceeds the PACKED O(ring·W·⌈c·w/64⌉·8) budget {packed_budget}",
+            small.peak_accumulator_bytes,
+        );
+        // measured packed traffic: one packed O(c) partial per (block,
+        // round, chunk). Chunking can only add per-chunk word-boundary
+        // rounding on top of the whole-d payload, never remove bytes
+        assert!(small.wire_bytes > 0, "async window moved no payload bytes");
+        assert!(
+            small.wire_bytes >= big.wire_bytes,
+            "chunked wire {} fell below the whole-d packed payload {}",
+            small.wire_bytes,
+            big.wire_bytes,
+        );
+        let n_blocks = pool.shard_ranges().len();
+        let max_wire: usize = (0..d.div_ceil(chunk))
+            .map(|k| {
+                let len = chunk.min(d - k * chunk);
+                n_blocks
+                    * w
+                    * crate::coding::packed::PackedZm::byte_len_for(
+                        len,
+                        crate::secagg::SecAggParams::default().modulus,
+                    )
+            })
+            .sum();
+        assert!(
+            small.wire_bytes <= max_wire,
+            "wire {} exceeds blocks×rounds×packed-chunk bound {max_wire}",
+            small.wire_bytes,
         );
     }
 }

@@ -60,6 +60,7 @@ use std::ops::Range;
 use std::sync::{Arc, Mutex, RwLock};
 
 use super::traits::{BitsAccount, MeanMechanism, RoundOutput};
+use crate::coding::packed::PackedZm;
 use crate::secagg::{self, SecAggParams};
 use crate::util::rng::{seed_domain, Rng};
 
@@ -699,10 +700,37 @@ impl LocalCompute for SliceCompute {
 pub enum TransportPartial {
     /// running Σ mᵢ (None until the first submit fixes the length)
     Sum(Option<Vec<i64>>),
-    /// running Σ masked(mᵢ) over ℤ_modulus
-    Masked { sum: Option<Vec<u64>>, modulus: u64 },
+    /// running Σ masked(mᵢ) over ℤ_modulus, stored at its true packed
+    /// ⌈log₂ modulus⌉-bit width ([`PackedZm`]) — the wire format a real
+    /// deployment ships and the accumulator footprint a server pays
+    Masked { sum: Option<PackedZm>, modulus: u64 },
     /// collected (client, ms, aux) messages
     List(Vec<(usize, Vec<i64>, Vec<f64>)>),
+}
+
+impl TransportPartial {
+    /// The bytes this accumulator occupies on the wire — the single
+    /// source of truth for payload sizing (channel messages, the session
+    /// ring's `peak_accumulator_bytes`, the runners' `wire_bytes`
+    /// counters). Masked partials report their true packed size via
+    /// [`PackedZm::byte_len`]; the unmasked variants report the plain
+    /// in-memory widths they actually ship in this simulation.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            TransportPartial::Sum(Some(v)) => std::mem::size_of_val(v.as_slice()),
+            TransportPartial::Sum(None) => 0,
+            TransportPartial::Masked { sum: Some(p), .. } => p.byte_len(),
+            TransportPartial::Masked { sum: None, .. } => 0,
+            TransportPartial::List(list) => list
+                .iter()
+                .map(|(_, ms, aux)| {
+                    std::mem::size_of::<usize>()
+                        + std::mem::size_of_val(ms.as_slice())
+                        + std::mem::size_of_val(aux.as_slice())
+                })
+                .sum(),
+        }
+    }
 }
 
 /// The delivery channel between clients and server.
@@ -829,15 +857,14 @@ fn add_i64(acc: &mut Option<Vec<i64>>, ms: &[i64]) {
     }
 }
 
-fn add_mod(acc: &mut Option<Vec<u64>>, ms: &[u64], modulus: u64) {
+/// Fold a freshly masked residue slice into a packed ℤ_m accumulator.
+/// The first submit fixes length and width; later submits accumulate
+/// blockwise through [`PackedZm::fold_residues`] (unpack-to-scratch →
+/// add mod m → repack), so the arithmetic itself stays on the u64 path.
+fn add_mod_packed(acc: &mut Option<PackedZm>, ms: &[u64], modulus: u64) {
     match acc {
-        None => *acc = Some(ms.to_vec()),
-        Some(v) => {
-            assert_eq!(v.len(), ms.len(), "description length changed mid-round");
-            for (a, &m) in v.iter_mut().zip(ms) {
-                *a = (*a + m) % modulus;
-            }
-        }
+        None => *acc = Some(PackedZm::from_residues(ms, modulus)),
+        Some(p) => p.fold_residues(ms),
     }
 }
 
@@ -1118,7 +1145,7 @@ impl Transport for SecAgg {
             ),
         };
         match part {
-            TransportPartial::Masked { sum, modulus } => add_mod(sum, &masked, *modulus),
+            TransportPartial::Masked { sum, modulus } => add_mod_packed(sum, &masked, *modulus),
             _ => panic!("SecAgg transport got a foreign partial"),
         }
     }
@@ -1130,7 +1157,11 @@ impl Transport for SecAgg {
                 TransportPartial::Masked { sum: Some(v), modulus: mb },
             ) => {
                 assert_eq!(*modulus, mb);
-                add_mod(sum, &v, *modulus);
+                match sum {
+                    // word-level merge: both sides are already packed
+                    Some(p) => p.add_assign_mod(&v),
+                    None => *sum = Some(v),
+                }
             }
             (TransportPartial::Masked { .. }, TransportPartial::Masked { sum: None, .. }) => {}
             _ => panic!("SecAgg transport got a foreign partial"),
@@ -1142,7 +1173,9 @@ impl Transport for SecAgg {
             TransportPartial::Masked { sum: Some(v), modulus } => {
                 // masks cancel over the full client set: the signed
                 // representative of the field sum is Σ mᵢ mod m
-                Payload::Sum(v.into_iter().map(|x| secagg::from_field(x, modulus)).collect())
+                Payload::Sum(
+                    v.to_residues().into_iter().map(|x| secagg::from_field(x, modulus)).collect(),
+                )
             }
             TransportPartial::Masked { sum: None, .. } => panic!("no clients submitted"),
             _ => panic!("SecAgg transport got a foreign partial"),
@@ -2165,7 +2198,7 @@ mod tests {
             t.submit(&mut whole, i, &enc.encode(i, x, &round), &round);
         }
         let whole_sum = match whole {
-            TransportPartial::Masked { sum: Some(v), .. } => v,
+            TransportPartial::Masked { sum: Some(v), .. } => v.to_residues(),
             _ => panic!("wrong partial shape"),
         };
         for c in [1usize, 2, d] {
@@ -2184,7 +2217,7 @@ mod tests {
                 }
                 match part {
                     TransportPartial::Masked { sum: Some(v), .. } => {
-                        got[r].copy_from_slice(&v)
+                        got[r].copy_from_slice(&v.to_residues())
                     }
                     _ => panic!("wrong partial shape"),
                 }

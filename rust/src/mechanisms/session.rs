@@ -317,18 +317,12 @@ pub struct TransportSession {
 }
 
 /// Payload bytes a partial currently pins (the quantity the streaming
-/// memory bound is about — tracking metadata is excluded).
+/// memory bound is about — tracking metadata is excluded). Delegates to
+/// [`TransportPartial::wire_bytes`], the single source of truth for
+/// payload sizing: masked slots report their packed ⌈c·w/64⌉·8 bytes,
+/// not the 64-bit-per-residue fiction this function used to hardcode.
 fn partial_bytes(p: &TransportPartial) -> usize {
-    match p {
-        TransportPartial::Sum(Some(v)) => v.len() * std::mem::size_of::<i64>(),
-        TransportPartial::Sum(None) => 0,
-        TransportPartial::Masked { sum: Some(v), .. } => v.len() * std::mem::size_of::<u64>(),
-        TransportPartial::Masked { sum: None, .. } => 0,
-        TransportPartial::List(l) => l
-            .iter()
-            .map(|(_, ms, aux)| std::mem::size_of_val(&ms[..]) + std::mem::size_of_val(&aux[..]))
-            .sum(),
-    }
+    p.wire_bytes()
 }
 
 impl TransportSession {
@@ -839,21 +833,25 @@ impl TransportSession {
             if let TransportPartial::Masked { sum: Some(v), modulus } = &mut partial {
                 let params = SecAggParams { modulus: *modulus };
                 // one lane-expansion scratch for ALL dropouts of the chunk:
-                // the reconstructed legs fold straight into the masked
-                // accumulator, so recovery allocates no per-dropout vector
+                // the reconstructed legs fold into the packed accumulator
+                // through ONE unpack → fold-every-dropout → repack cycle
+                // (`add_reconstructed_masks_packed`), so recovery touches
+                // u64 scratch only for the O(c) chunk range
                 let mut scratch = secagg::MaskScratch::default();
-                for &j in &a.dropped {
-                    let shares: Vec<RecoveryShare> =
-                        a.shares.iter().filter(|s| s.dropped == j).copied().collect();
-                    secagg::add_reconstructed_masks_range(
-                        v,
-                        j,
-                        &shares,
-                        range.start,
-                        params,
-                        &mut scratch,
-                    );
-                }
+                let dropped_shares: Vec<(usize, Vec<RecoveryShare>)> = a
+                    .dropped
+                    .iter()
+                    .map(|&j| {
+                        (j, a.shares.iter().filter(|s| s.dropped == j).copied().collect())
+                    })
+                    .collect();
+                secagg::add_reconstructed_masks_packed(
+                    v,
+                    &dropped_shares,
+                    range.start,
+                    params,
+                    &mut scratch,
+                );
             }
         }
         self.note_bytes(before, 0);
@@ -1567,6 +1565,7 @@ pub fn run_window_chunked_from(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::packed::PackedZm;
     use crate::mechanisms::pipeline::{run_pipeline, MechSpec, Plain, SecAgg, Unicast};
     use crate::quantizer::round_half_up;
 
@@ -2322,7 +2321,7 @@ mod tests {
     #[test]
     fn chunked_streaming_peak_memory_is_o_chunk_not_o_d() {
         // drive two sessions over the same window: the whole-d batched
-        // session peaks at W·d accumulator bytes (every round's full
+        // session peaks at W packed full-d slots (every round's full
         // vector is live at close), the streamed c-chunked one at O(c)
         let mech = CoordJitter;
         let inputs = window_inputs();
@@ -2343,7 +2342,9 @@ mod tests {
             }
         }
         let _ = whole.close();
-        assert_eq!(whole.peak_accumulator_bytes(), w * d * 8);
+        // W full-d packed ℤ_m slots live at close: ⌈d·w_bits/64⌉·8 each
+        let packed_d = PackedZm::byte_len_for(d, SecAggParams::default().modulus);
+        assert_eq!(whole.peak_accumulator_bytes(), w * packed_d);
 
         let chunk = 1usize;
         let mut streamed = TransportSession::open_sampled_chunked(
@@ -2362,8 +2363,11 @@ mod tests {
             }
         }
         let _ = streamed.close_streamed();
-        // one c-sized masked accumulator live at a time
-        assert_eq!(streamed.peak_accumulator_bytes(), chunk * 8);
+        // one c-sized packed masked accumulator live at a time — the
+        // per-slot bound the packed wire format guarantees
+        let packed_c = PackedZm::byte_len_for(chunk, SecAggParams::default().modulus);
+        assert_eq!(streamed.peak_accumulator_bytes(), packed_c);
+        assert!(streamed.peak_accumulator_bytes() <= chunk.max(1) * 8);
     }
 
     #[test]

@@ -63,6 +63,7 @@
 //! is the consumer; it fails closed unless every dropped client's share
 //! set covers exactly the survivor set.
 
+use crate::coding::packed::PackedZm;
 use crate::util::rng::{fill_below_coords, Rng};
 
 /// Stream tag separating the session mask schedule from every other use of
@@ -407,6 +408,54 @@ pub fn mask_descriptions_among_range(
     out
 }
 
+/// [`mask_descriptions_range`] straight into the packed ℤ_m wire format:
+/// the masked field vector leaves this function at its true
+/// ⌈log₂ m⌉-bit width ([`crate::coding::packed::PackedZm`]). Packing is
+/// a pure re-layout AFTER every mask draw, so the packed payload decodes
+/// to the exact field vector the u64 path produces (bit identity;
+/// docs/determinism.md, "Packed words cannot change any drawn bit").
+pub fn mask_descriptions_range_packed(
+    ms: &[i64],
+    client: usize,
+    n_clients: usize,
+    root_seed: u64,
+    params: SecAggParams,
+    lo: usize,
+) -> PackedZm {
+    PackedZm::from_residues(
+        &mask_descriptions_range(ms, client, n_clients, root_seed, params, lo),
+        params.modulus,
+    )
+}
+
+/// Bonawitz recovery over a PACKED accumulator: unpack the O(c) chunk
+/// slot to u64 scratch once, fold every announced dropout's
+/// reconstructed mask legs via [`add_reconstructed_masks_range`] (the
+/// proven path — arithmetic never runs on packed words), and repack.
+/// `dropped_shares` carries each dropped client with the survivor shares
+/// offered for it; `acc_lo` is the accumulator's coordinate offset.
+pub fn add_reconstructed_masks_packed(
+    acc: &mut PackedZm,
+    dropped_shares: &[(usize, Vec<RecoveryShare>)],
+    acc_lo: usize,
+    params: SecAggParams,
+    scratch: &mut MaskScratch,
+) {
+    assert_eq!(
+        acc.modulus(),
+        params.modulus,
+        "packed accumulator modulus disagrees with the recovery params"
+    );
+    if dropped_shares.is_empty() {
+        return;
+    }
+    let mut residues = acc.to_residues();
+    for (dropped, shares) in dropped_shares {
+        add_reconstructed_masks_range(&mut residues, *dropped, shares, acc_lo, params, scratch);
+    }
+    *acc = PackedZm::from_residues(&residues, params.modulus);
+}
+
 /// Server-side: sum masked vectors mod m; masks cancel, leaving Σ ms.
 pub fn aggregate_masked(masked: &[Vec<u64>], params: SecAggParams) -> Vec<i64> {
     assert!(!masked.is_empty());
@@ -451,6 +500,82 @@ mod tests {
             let want: i64 = descriptions.iter().map(|m| m[j]).sum();
             assert_eq!(agg[j], want, "j={j}");
         }
+    }
+
+    #[test]
+    fn packed_masking_is_the_unpacked_masking_relaid() {
+        // the packed producer must be the unpacked producer followed by a
+        // pure re-layout — every residue, every modulus shape, offset or not
+        for modulus in [1u64 << 8, 1 << 12, 1 << 40, 999_983] {
+            let params = SecAggParams { modulus };
+            let (n, d) = (5usize, 23usize);
+            let mut rng = Rng::new(0xACC ^ modulus);
+            let ms: Vec<i64> = (0..d).map(|_| rng.below(11) as i64 - 5).collect();
+            for lo in [0usize, 7] {
+                let unpacked = mask_descriptions_range(&ms, 2, n, 0xFEED, params, lo);
+                let packed = mask_descriptions_range_packed(&ms, 2, n, 0xFEED, params, lo);
+                assert_eq!(
+                    packed,
+                    PackedZm::from_residues(&unpacked, modulus),
+                    "modulus={modulus} lo={lo}"
+                );
+                assert_eq!(packed.to_residues(), unpacked);
+                assert_eq!(packed.byte_len(), PackedZm::byte_len_for(d, modulus));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_recovery_matches_unpacked_recovery() {
+        // survivors' masked sum, two announced dropouts (one pair among
+        // the dropped — its legs appear in no submission and must never
+        // be expanded): the packed one-unpack-fold-repack recovery must
+        // land on exactly the residues of the proven u64 recovery
+        let params = SecAggParams::default();
+        let (n, d) = (6usize, 17usize);
+        let root = 0x5EC0_4E3;
+        let dropped = [1usize, 4];
+        let survivors: Vec<usize> = (0..n).filter(|i| !dropped.contains(i)).collect();
+        let mut rng = Rng::new(0xD0_0D);
+        let descriptions: Vec<Vec<i64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.below(2000) as i64 - 1000).collect())
+            .collect();
+        let m = params.modulus;
+        let mut acc = vec![0u64; d];
+        for &i in &survivors {
+            let masked = mask_descriptions(&descriptions[i], i, n, root, params);
+            for (a, v) in acc.iter_mut().zip(masked) {
+                *a = (*a + v) % m;
+            }
+        }
+        let mut packed = PackedZm::from_residues(&acc, m);
+        let dropped_shares: Vec<(usize, Vec<RecoveryShare>)> = dropped
+            .iter()
+            .map(|&j| (j, survivors.iter().map(|&i| recovery_share(root, i, j)).collect()))
+            .collect();
+        let mut scratch = MaskScratch::default();
+        for (j, shares) in &dropped_shares {
+            add_reconstructed_masks_range(&mut acc, *j, shares, 0, params, &mut scratch);
+        }
+        add_reconstructed_masks_packed(&mut packed, &dropped_shares, 0, params, &mut scratch);
+        assert_eq!(packed.to_residues(), acc);
+        // and the residual masks cancelled: the signed lift is the
+        // survivors' exact sum
+        for k in 0..d {
+            let want: i64 = survivors.iter().map(|&i| descriptions[i][k]).sum();
+            assert_eq!(from_field(packed.get(k), m), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn packed_recovery_with_no_dropouts_is_a_no_op() {
+        let params = SecAggParams::default();
+        let residues: Vec<u64> = (0..9).map(|k| k * 31 % params.modulus).collect();
+        let mut packed = PackedZm::from_residues(&residues, params.modulus);
+        let before = packed.clone();
+        let mut scratch = MaskScratch::default();
+        add_reconstructed_masks_packed(&mut packed, &[], 0, params, &mut scratch);
+        assert_eq!(packed, before);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! bad tag, trailing bytes, implausible length — fails closed with a
 //! panic rather than yielding a plausible-but-wrong scenario state.
 
+use crate::coding::packed::PackedZm;
 use crate::dp::{LedgerSnapshot, PrivacySpend};
 use crate::mechanisms::pipeline::TransportPartial;
 use crate::mechanisms::session::{ChunkSlotState, RoundSlotState, SessionState};
@@ -29,7 +30,10 @@ use crate::util::rng::RngState;
 use super::scenario::{slot, Attack, ScenarioConfig, ScenarioEvent, WindowPlan};
 
 /// Bumped on any change to the wire format below.
-pub const FORMAT_VERSION: u32 = 1;
+/// v2: masked partials serialize their packed ℤ_m words
+/// (modulus, residue count, raw words) instead of one u64 per residue —
+/// v1 snapshots are rejected by the version check, not migrated.
+pub const FORMAT_VERSION: u32 = 2;
 
 const MAGIC: [u8; 4] = *b"XSCN";
 
@@ -281,9 +285,12 @@ fn put_partial(b: &mut Vec<u8>, p: &TransportPartial) {
             put_u64(b, *modulus);
         }
         TransportPartial::Masked { sum: Some(v), modulus } => {
+            // the packed words ARE the wire format: modulus (width
+            // derivation), residue count, then the raw ⌈len·w/64⌉ words
             put_u8(b, 3);
-            put_u64s(b, v);
             put_u64(b, *modulus);
+            put_usize(b, v.len());
+            put_u64s(b, v.words());
         }
         TransportPartial::List(entries) => {
             put_u8(b, 4);
@@ -549,7 +556,19 @@ fn get_partial(r: &mut Reader) -> TransportPartial {
         0 => TransportPartial::Sum(None),
         1 => TransportPartial::Sum(Some(r.i64s())),
         2 => TransportPartial::Masked { sum: None, modulus: r.u64() },
-        3 => TransportPartial::Masked { sum: Some(r.u64s()), modulus: r.u64() },
+        3 => {
+            // v2 packed layout: modulus, residue count, raw words.
+            // `from_raw_parts` fails closed on word-count mismatches,
+            // dirty tail bits, and out-of-range residues — a corrupted
+            // snapshot cannot smuggle in a non-canonical accumulator.
+            let modulus = r.u64();
+            let len = r.usize();
+            let words = r.u64s();
+            TransportPartial::Masked {
+                sum: Some(PackedZm::from_raw_parts(modulus, len, words)),
+                modulus,
+            }
+        }
         4 => {
             let n = r.len(24);
             TransportPartial::List(

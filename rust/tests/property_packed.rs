@@ -1,0 +1,307 @@
+//! The packed ℤ_m wire-format property matrix. Two layers of guarantees:
+//!
+//! 1. **Packed ≡ unpacked is a bit identity on every residue.** A
+//!    [`PackedZm`] is a pure re-layout of a u64 residue vector — pack,
+//!    unpack, blockwise masked folds and word-level merges must reproduce
+//!    the scalar mod-m arithmetic exactly, across moduli
+//!    {2⁸, 2¹², 2⁴⁰, non-power-of-two} × lengths {1, 7, 64, d, d + 3}.
+//! 2. **The pipeline on the packed path keeps its contracts.** With
+//!    `TransportPartial::Masked` carrying packed words, Plain ≡ SecAgg,
+//!    chunked ≡ unchunked (dropouts and sampled cohorts included) and the
+//!    exact decoded error laws (KS) must all hold verbatim — packing
+//!    happens after every RNG draw, so it cannot change any drawn bit
+//!    (docs/determinism.md, "Packed words cannot change any drawn bit").
+//!
+//! The third block cross-checks the *measured* byte accounting: the
+//! coordinator's `wire_bytes` counter must equal shards × rounds × the
+//! packed per-chunk payload, stay within the BitsAccount message count ×
+//! per-message packed payload, and respect the ⌈c·w/64⌉·8 per-slot bound.
+
+use exact_comp::coding::packed::{width_for_modulus, PackedZm};
+use exact_comp::coordinator::runtime::{run_rounds_mech_chunked, ClientPool};
+use exact_comp::coordinator::sampling::SamplingPolicy;
+use exact_comp::dist::{Continuous, Gaussian, IrwinHall};
+use exact_comp::mechanisms::pipeline::{Plain, SecAgg, SurvivorSet};
+use exact_comp::mechanisms::session::run_window_chunked;
+use exact_comp::mechanisms::{AggregateGaussian, IrwinHallMechanism};
+use exact_comp::secagg::SecAggParams;
+use exact_comp::testing::{assert_chunked_window_matches_unchunked, dropout_schedule, Fleet};
+use exact_comp::util::rng::Rng;
+use std::sync::Arc;
+
+const MODULI: [u64; 4] = [1 << 8, 1 << 12, 1 << 40, 999_983];
+
+/// The length/chunk axis of the acceptance matrix for a given d.
+fn matrix_lens(d: usize) -> Vec<usize> {
+    vec![1, 7, 64, d, d + 3]
+}
+
+fn seeded_residues(len: usize, modulus: u64, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(modulus)).collect()
+}
+
+#[test]
+fn packed_roundtrip_is_a_bit_identity_across_moduli_and_lengths() {
+    let d = 96;
+    for modulus in MODULI {
+        for len in matrix_lens(d) {
+            let residues = seeded_residues(len, modulus, 0xF00 ^ modulus ^ len as u64);
+            let packed = PackedZm::from_residues(&residues, modulus);
+            assert_eq!(packed.to_residues(), residues, "m={modulus} len={len}");
+            for (k, &r) in residues.iter().enumerate() {
+                assert_eq!(packed.get(k), r, "m={modulus} len={len} k={k}");
+            }
+            // byte_len is the single source of truth — ⌈len·w/64⌉·8,
+            // never worse than the u64 layout
+            let w = width_for_modulus(modulus) as usize;
+            assert_eq!(packed.byte_len(), (len * w).div_ceil(64) * 8);
+            assert_eq!(packed.byte_len(), PackedZm::byte_len_for(len, modulus));
+            assert!(packed.byte_len() <= len * 8);
+        }
+    }
+}
+
+#[test]
+fn packed_folds_and_merges_match_scalar_mod_arithmetic() {
+    let d = 96;
+    for modulus in MODULI {
+        for len in matrix_lens(d) {
+            let a = seeded_residues(len, modulus, 0xA ^ modulus ^ len as u64);
+            let b = seeded_residues(len, modulus, 0xB ^ modulus ^ len as u64);
+            let c = seeded_residues(len, modulus, 0xC ^ modulus ^ len as u64);
+            let want: Vec<u64> = (0..len)
+                .map(|k| {
+                    // u128 reference: the packed path must agree even
+                    // when a + b + c would overflow u64
+                    ((a[k] as u128 + b[k] as u128 + c[k] as u128) % modulus as u128) as u64
+                })
+                .collect();
+            // residue-slice folds (the submit path)
+            let mut folded = PackedZm::from_residues(&a, modulus);
+            folded.fold_residues(&b);
+            folded.fold_residues(&c);
+            assert_eq!(folded.to_residues(), want, "fold m={modulus} len={len}");
+            // word-level merge (the shard-merge path) lands identically
+            let mut merged = PackedZm::from_residues(&a, modulus);
+            let mut other = PackedZm::from_residues(&b, modulus);
+            other.fold_residues(&c);
+            merged.add_assign_mod(&other);
+            assert_eq!(merged, folded, "merge m={modulus} len={len}");
+        }
+    }
+}
+
+/// Chunked ≡ unchunked through the packed accumulators, over Plain AND
+/// SecAgg at the default 2⁴⁰ modulus, with dropouts and a sampled cohort.
+#[test]
+fn packed_chunked_matrix_matches_unchunked_with_dropouts_and_sampling() {
+    let (n, d) = (7usize, 96usize);
+    let fleet = Fleet::new(n, d, 0x9AC7);
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    for (policy, seed) in [
+        (SamplingPolicy::Full, 0x9A1u64),
+        (SamplingPolicy::FixedSize { k: 5 }, 0x9A2),
+    ] {
+        let dropouts = schedule_for(&policy, seed, n);
+        assert_chunked_window_matches_unchunked(
+            &mech, &Plain, &fleet, &policy, &dropouts, seed, &matrix_lens(d),
+        );
+        assert_chunked_window_matches_unchunked(
+            &mech, &SecAgg::new(), &fleet, &policy, &dropouts, seed, &matrix_lens(d),
+        );
+    }
+}
+
+/// The same matrix over a NON-power-of-two modulus: width derivation and
+/// the carry-aware packed adds cannot rely on power-of-two wrap.
+#[test]
+fn packed_chunked_matrix_holds_at_a_non_power_of_two_modulus() {
+    let (n, d) = (6usize, 96usize);
+    let fleet = Fleet::new(n, d, 0x9AC8);
+    let mech = AggregateGaussian::new(0.5, 8.0);
+    let transport = SecAgg::with_params(SecAggParams { modulus: (1 << 40) - 3 });
+    for (policy, seed) in [
+        (SamplingPolicy::Full, 0x9B1u64),
+        (SamplingPolicy::FixedSize { k: 4 }, 0x9B2),
+    ] {
+        let dropouts = schedule_for(&policy, seed, n);
+        assert_chunked_window_matches_unchunked(
+            &mech, &transport, &fleet, &policy, &dropouts, seed, &matrix_lens(d),
+        );
+    }
+}
+
+/// W=2 dropout schedule valid under the policy: round 0 clean, round 1
+/// loses one cohort member.
+fn schedule_for(policy: &SamplingPolicy, session_seed: u64, n: usize) -> Vec<Vec<usize>> {
+    (0..2u64)
+        .map(|r| {
+            if r == 1 {
+                let cohort = policy.cohort(session_seed, r, n);
+                if cohort.n_alive() >= 2 {
+                    return vec![cohort.alive_iter().next().unwrap()];
+                }
+            }
+            Vec::new()
+        })
+        .collect()
+}
+
+/// Plain ≡ SecAgg re-proved THROUGH the packed path: same seeds, same
+/// dropouts, bit-identical estimates and accounting — at the default and
+/// a non-power-of-two modulus.
+#[test]
+fn packed_plain_equals_secagg_under_dropouts() {
+    let (n, d) = (8usize, 33usize);
+    for seed in [0xE11u64, 0xE12, 0xE13] {
+        let fleet = Fleet::new(n, d, seed);
+        let schedule = dropout_schedule(n, 3, n.div_ceil(4), seed ^ 0x9);
+        let mech = IrwinHallMechanism::new(0.5, 8.0);
+        let datasets: Vec<Vec<Vec<f64>>> = (0..3).map(|r| fleet.round_data(r)).collect();
+        let rounds: Vec<(&[Vec<f64>], u64)> = datasets
+            .iter()
+            .enumerate()
+            .map(|(r, xs)| (xs.as_slice(), seed ^ ((r as u64) << 8)))
+            .collect();
+        let cohorts = vec![SurvivorSet::full(n); 3];
+        let plain = run_window_chunked(
+            &mech, &Plain, &mech, &rounds, seed, &cohorts, &schedule, 7,
+        );
+        for modulus in [1u64 << 40, (1 << 40) - 3] {
+            let secagg = SecAgg::with_params(SecAggParams { modulus });
+            let masked = run_window_chunked(
+                &mech, &secagg, &mech, &rounds, seed, &cohorts, &schedule, 7,
+            );
+            for (p, s) in plain.iter().zip(&masked) {
+                assert_eq!(p.estimate, s.estimate, "seed={seed:#x} m={modulus}");
+                assert_eq!(p.bits.messages, s.bits.messages);
+            }
+        }
+    }
+}
+
+/// KS exactness on the packed SecAgg path: the decoded aggregate-Gaussian
+/// survivor error is STILL exactly N(0, (σ·n/n′)²) with packed masked
+/// accumulators, decoded chunk by chunk under an announced dropout.
+#[test]
+fn packed_secagg_gaussian_error_stays_exactly_gaussian() {
+    let sigma = 0.5;
+    let (n, d) = (6usize, 4usize);
+    let fleet = Fleet::new(n, d, 0x9AC0);
+    let xs = fleet.round_data(0);
+    let dropped = vec![2usize];
+    let survivors = SurvivorSet::with_dropped(n, &dropped);
+    let smean = fleet.survivor_mean(0, &survivors);
+    let mech = AggregateGaussian::new(sigma, 8.0);
+    let mut errs = Vec::new();
+    for r in 0..800u64 {
+        let seed = 130_000 + r;
+        let out = run_window_chunked(
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            &[(xs.as_slice(), seed)],
+            seed,
+            &[SurvivorSet::full(n)],
+            &[dropped.clone()],
+            3,
+        );
+        for j in 0..d {
+            errs.push(out[0].estimate[j] - smean[j]);
+        }
+    }
+    let rescaled_sd = sigma * n as f64 / survivors.n_alive() as f64;
+    let g = Gaussian::new(0.0, rescaled_sd);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| g.cdf(e));
+    assert!(res.p_value > 0.003, "packed exactness violated: p={}", res.p_value);
+}
+
+/// Irwin–Hall companion at chunk 1 (every coordinate its own packed slot).
+#[test]
+fn packed_secagg_irwin_hall_error_stays_exactly_irwin_hall() {
+    let sigma = 0.6;
+    let (n, d) = (7usize, 4usize);
+    let fleet = Fleet::new(n, d, 0x1DF0);
+    let xs = fleet.round_data(0);
+    let dropped = vec![4usize];
+    let survivors = SurvivorSet::with_dropped(n, &dropped);
+    let smean = fleet.survivor_mean(0, &survivors);
+    let mech = IrwinHallMechanism::new(sigma, 8.0);
+    let mut errs = Vec::new();
+    for r in 0..800u64 {
+        let seed = 210_000 + r;
+        let out = run_window_chunked(
+            &mech,
+            &SecAgg::new(),
+            &mech,
+            &[(xs.as_slice(), seed)],
+            seed,
+            &[SurvivorSet::full(n)],
+            &[dropped.clone()],
+            1,
+        );
+        for j in 0..d {
+            errs.push(out[0].estimate[j] - smean[j]);
+        }
+    }
+    let scale = sigma * n as f64 / survivors.n_alive() as f64;
+    let ih = IrwinHall::new(n as u64, 0.0, scale);
+    let res = exact_comp::util::stats::ks_test(&errs, |e| ih.cdf(e));
+    assert!(res.p_value > 0.003, "packed IH exactness violated: p={}", res.p_value);
+}
+
+/// The measured-bytes cross-check (the byte-accounting satellite): the
+/// coordinator's `wire_bytes` equals shards × rounds × the packed
+/// per-chunk payload exactly, stays within the BitsAccount message count
+/// × per-message packed payload (folding only shrinks traffic), and the
+/// session peak respects the packed ⌈c·w/64⌉·8 per-slot bound.
+#[test]
+fn packed_wire_bytes_agree_with_bits_accounting() {
+    let (n, d, w, chunk) = (8usize, 40usize, 3usize, 7usize);
+    let fleet = Fleet::new(n, d, 0xB17E);
+    let pool = ClientPool::spawn_with_threads(n, Arc::new(fleet.compute()), Some(4));
+    let mech = IrwinHallMechanism::new(0.4, 8.0);
+    let (reports, stats) = run_rounds_mech_chunked(
+        &pool,
+        &mech,
+        Arc::new(SecAgg::new()),
+        0,
+        w,
+        &[],
+        0xB17E,
+        d,
+        chunk,
+    );
+    let modulus = SecAggParams::default().modulus;
+    let n_shards = pool.shard_ranges().len();
+    // every shard ships one packed O(c) partial per (round, chunk) under
+    // the full cohort: the measured total is exactly shards × W × Σ_k
+    // ⌈len_k·w_bits/64⌉·8
+    let per_window_per_shard: usize = (0..d.div_ceil(chunk))
+        .map(|k| PackedZm::byte_len_for(chunk.min(d - k * chunk), modulus))
+        .sum();
+    assert_eq!(stats.wire_bytes, n_shards * w * per_window_per_shard);
+    // BitsAccount cross-check: each round counts n client messages; a
+    // shard partial folds ≥ 1 client messages, so the measured channel
+    // bytes are bounded by messages × the per-message packed payload
+    for report in &reports {
+        assert_eq!(report.output.bits.messages, n as u64);
+        let per_message = per_window_per_shard; // one client's full-d packed chunks
+        assert!(
+            (stats.wire_bytes / w) <= report.output.bits.messages as usize * per_message,
+            "round {}: channel bytes {} exceed messages × packed payload {}",
+            report.round,
+            stats.wire_bytes / w,
+            report.output.bits.messages as usize * per_message,
+        );
+    }
+    // the packed per-slot bound, asserted against the true high-water mark
+    let slot = PackedZm::byte_len_for(chunk, modulus);
+    assert_eq!(slot, (chunk * width_for_modulus(modulus) as usize).div_ceil(64) * 8);
+    assert!(
+        stats.peak_accumulator_bytes <= 3 * (n_shards + 1) * w * slot,
+        "peak {} exceeds the packed O(shards·W·⌈c·w/64⌉·8) budget",
+        stats.peak_accumulator_bytes,
+    );
+}

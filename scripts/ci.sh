@@ -140,6 +140,18 @@ cargo test -q scenario
 echo "== apps-on-coordinator suite (apps == aggregate() bit-identity + KS laws) =="
 cargo test -q apps_
 
+# Packed wire-format suite, run by name for the same visibility: the
+# packed ≡ unpacked bit identity (roundtrip across moduli — powers of two
+# and not — × chunk geometries {1, 7, 64, d, d+3}), the packed fold/merge
+# ≡ scalar mod-arithmetic checks, the chunked ≡ unchunked and Plain ≡
+# SecAgg re-proofs THROUGH packed accumulators under dropouts and sampled
+# cohorts, KS exactness of the error laws on packed SecAgg, and the
+# wire-bytes ≡ BitsAccount cross-check. Redundant with the full
+# `cargo test -q` above by construction — a failure here names the packed
+# wire-format contract directly.
+echo "== packed wire-format suite (packed == unpacked bit-identity + wire bytes) =="
+cargo test -q packed
+
 # Snapshot/resume suite: byte round-trip losslessness of the versioned
 # snapshot format, fail-closed corruption handling, and checkpoint+resume
 # bit-identity at EVERY tick across mechanisms × {Plain, SecAgg} × chunk
@@ -157,7 +169,10 @@ cargo test -q snapshot
 # apps/model_scale_demo series (d = 2^16, n = 1000 sampled in quick mode;
 # d = 2^20, n = 10^4 in the full run) with its own assertions that no
 # whole-d client vector is ever materialized and the accumulator
-# high-water mark stays O(shards·chunk). bench_coordinator writes its
+# high-water mark stays O(shards·chunk) — now the PACKED ⌈c·w/64⌉·8
+# per-slot bound, with the kernels/pack_unpack_* pair and the packed
+# rounds_chunked/rounds_async_secagg variants asserting the packed budget
+# and the measured wire-bytes counters. bench_coordinator writes its
 # artifact to target/BENCH_quick.json in this mode (never the committed
 # BENCH_N.json trajectory — quick numbers are not trajectory points).
 # bench_diff.sh then schema-checks the artifact; quick artifacts skip the
